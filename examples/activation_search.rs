@@ -1,0 +1,50 @@
+//! Activation-precision search (paper Sec. 5.5.2 / Fig. 9): open the
+//! layer-wise activation precision set {2,4,8} under the bitops cost
+//! model and compare with the weights-only search at fixed a8.
+//!
+//! ```sh
+//! cargo run --release --example activation_search
+//! ```
+
+use mixprec::assignment::PrecisionMasks;
+use mixprec::coordinator::{Context, PipelineConfig};
+use mixprec::util::table::{f4, Table};
+
+fn main() -> mixprec::Result<()> {
+    let ctx = Context::load_default(0.25)?;
+    let model = "resnet8";
+    let runner = ctx.runner(model)?;
+
+    let mut base = PipelineConfig::quick(model);
+    base.reg = "bitops".into();
+    base.lambda = 1.0;
+    base.warmup_steps = 80;
+    base.search_steps = 80;
+    base.finetune_steps = 30;
+
+    let mut t = Table::new(
+        "weights-only vs joint weight+activation MPS (bitops)",
+        &["P_X", "Gbitops", "test acc", "per-layer act bits"],
+    );
+    for (label, masks) in [
+        ("a8 fixed", PrecisionMasks::joint()),
+        ("{2,4,8} searched", PrecisionMasks::joint_act()),
+    ] {
+        let mut cfg = base.clone();
+        cfg.masks = masks;
+        let r = runner.run(&cfg)?;
+        t.row(vec![
+            label.into(),
+            format!("{:.3}", r.bitops / 1e9),
+            f4(r.test_acc),
+            r.assignment
+                .delta_bits
+                .iter()
+                .map(|b| b.to_string())
+                .collect::<Vec<_>>()
+                .join(","),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! End-to-end validation driver (DESIGN.md deliverable): run the FULL
+//! three-phase joint search on the CIFAR-like workload at realistic
+//! step counts, logging the loss curve, then sweep three strengths to
+//! build a Pareto front and compare against the w8a8 / w2a8 baselines.
+//! Results are appended to reports/ and recorded in EXPERIMENTS.md.
+//!
+//! ```sh
+//! cargo run --release --example joint_search_e2e             # ~10 min on 1 CPU
+//! MIXPREC_E2E_FAST=1 cargo run --release --example joint_search_e2e
+//! ```
+
+use mixprec::baselines::{fixed_baselines, Method};
+use mixprec::coordinator::{sweep_lambdas, Context, PipelineConfig};
+use mixprec::report;
+
+fn main() -> mixprec::Result<()> {
+    let fast = std::env::var("MIXPREC_E2E_FAST").is_ok();
+    let ctx = Context::load_default(if fast { 0.25 } else { 1.0 })?;
+    let model = "resnet8";
+    let runner = ctx.runner(model)?;
+
+    let mut cfg = PipelineConfig::quick(model);
+    if fast {
+        cfg.warmup_steps = 60;
+        cfg.search_steps = 96;
+        cfg.finetune_steps = 24;
+    } else {
+        cfg.warmup_steps = 300;
+        cfg.search_steps = 300;
+        cfg.finetune_steps = 100;
+    }
+    cfg.verbose = true;
+
+    // headline run: one full pipeline with the loss curve logged
+    println!("== full pipeline (lambda = {}) ==", cfg.lambda);
+    let main_run = runner.run(&cfg)?;
+    let hist = report::history_table(&main_run);
+    println!("{}", hist.to_markdown());
+    hist.write_csv(std::path::Path::new("reports"), "e2e_loss_curve.csv")
+        .ok();
+
+    // strength sweep -> Pareto front
+    let lambdas = if fast {
+        vec![1.0, 20.0]
+    } else {
+        vec![0.1, 1.0, 6.0, 20.0]
+    };
+    let sw = sweep_lambdas(&runner, &Method::Joint.configure(&cfg), &lambdas, "size", 1)?;
+    let baselines = fixed_baselines(&runner, &cfg, &[2, 8])?;
+
+    let mut rows: Vec<(String, &_)> = sw
+        .runs
+        .iter()
+        .map(|r| (format!("Ours lam={}", r.lambda), r))
+        .collect();
+    rows.push(("w2a8".into(), &baselines[0]));
+    rows.push(("w8a8".into(), &baselines[1]));
+    let t = report::runs_table("e2e joint search vs fixed baselines", &rows);
+    println!("{}", t.to_markdown());
+    t.write_csv(std::path::Path::new("reports"), "e2e_results.csv").ok();
+
+    let front = sw.front_test();
+    for (label, b) in [("w8a8", &baselines[1]), ("w2a8", &baselines[0])] {
+        if let Some((red, cost)) =
+            report::iso_accuracy_reduction(&front, b.test_acc, b.size_kb)
+        {
+            println!(
+                "HEADLINE size reduction at iso-accuracy vs {label}: {:.2}% \
+                 ({cost:.2} kB vs {:.2} kB)",
+                red * 100.0,
+                b.size_kb
+            );
+        } else {
+            println!("HEADLINE no front point reaches {label} accuracy ({:.4})", b.test_acc);
+        }
+    }
+    println!(
+        "total wall time: {:.1}s across {} pipeline runs",
+        sw.total_search_time_s() + main_run.timing.total_s(),
+        sw.runs.len() + 1
+    );
+    Ok(())
+}

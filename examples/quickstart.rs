@@ -1,0 +1,42 @@
+//! Quickstart: load the AOT artifacts, run a short joint
+//! pruning + channel-wise mixed-precision search on the CIFAR-like
+//! benchmark, and print the discovered assignment.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use mixprec::assignment::per_layer_histogram;
+use mixprec::coordinator::{Context, PipelineConfig};
+use mixprec::report;
+
+fn main() -> mixprec::Result<()> {
+    // 1. load engine + manifest + graphs + synthetic dataset
+    let ctx = Context::load_default(0.25)?;
+    println!("PJRT platform: {}", ctx.eng.platform());
+
+    // 2. configure a short pipeline (bench scale; bump the step counts
+    //    for real runs)
+    let mut cfg = PipelineConfig::quick("resnet8");
+    cfg.lambda = 1.0;
+    cfg.warmup_steps = 80;
+    cfg.search_steps = 80;
+    cfg.finetune_steps = 30;
+    cfg.verbose = true;
+
+    // 3. run warmup -> joint search -> fine-tune
+    let runner = ctx.runner("resnet8")?;
+    let result = runner.run(&cfg)?;
+
+    // 4. inspect the result
+    let rows = [("Ours".to_string(), &result)];
+    println!("{}", report::runs_table("quickstart result", &rows).to_markdown());
+    println!("per-layer assignment (channels at 0/2/4/8 bits):");
+    for h in per_layer_histogram(ctx.graph("resnet8"), &result.assignment) {
+        println!(
+            "  {:10} pruned={:3} 2b={:3} 4b={:3} 8b={:3}",
+            h.layer, h.counts[0], h.counts[1], h.counts[2], h.counts[3]
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,292 @@
+"""AOT lowering: JAX -> HLO text artifacts + manifest (build-time only).
+
+Emits, per model in ``models.BUILDERS``:
+
+* ``init_<m>.hlo.txt``    -- seed -> full initial search state
+* ``warmup_<m>.hlo.txt``  -- float training step
+* ``search_<m>_<reg>.hlo.txt`` -- joint search step (Eq. 2)
+* ``eval_<m>.hlo.txt``    -- forward-only eval (soft or discretized)
+* ``graph_<m>.json``      -- layer topology for Rust cost/deploy
+* plus one ``qdemo.hlo.txt`` integer-conv kernel demo,
+* and ``manifest.json`` describing every artifact's I/O contract.
+
+HLO **text** is the interchange format, not ``.serialize()``: the
+``xla`` crate links xla_extension 0.5.1, which rejects jax>=0.5 protos
+(64-bit instruction ids); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import models as M
+from . import train as T
+
+REG_SETS = {
+    # regularizer variants lowered per model (DESIGN.md Sec. 5)
+    "resnet8": ["size", "mpic", "ne16", "bitops"],
+    "dscnn": ["size"],
+    "resnet10": ["size"],
+}
+
+_DTYPE = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _leaf_descs(prefix, tree):
+    leaves, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in leaves:
+        name = prefix + jax.tree_util.keystr(path)
+        out.append({
+            "name": name,
+            "shape": list(leaf.shape),
+            "dtype": _DTYPE[leaf.dtype],
+        })
+    return out
+
+
+def _scalar(name, dtype="f32"):
+    return {"name": name, "shape": [], "dtype": dtype}
+
+
+def _write(path, text):
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text) // 1024} KiB)")
+
+
+def lower_model(name: str, outdir: str, manifest: dict) -> None:
+    print(f"[aot] model {name}")
+    spec, init_params, apply = M.BUILDERS[name]()
+    batch = spec["batch"]
+    h, w, c = spec["in_shape"]
+    ncls = spec["num_classes"]
+
+    key = jax.random.PRNGKey(0)
+    params0 = init_params(key)
+    theta0 = T.theta_init(spec)
+    state0 = {
+        "params": params0,
+        "opt_w": T.adam_init(params0),
+        "theta": theta0,
+        "opt_th": T.sgdm_init(theta0),
+    }
+    sections = {k: _leaf_descs(k, v) for k, v in state0.items()}
+    treedefs = {k: jax.tree_util.tree_structure(v) for k, v in state0.items()}
+    counts = {k: len(sections[k]) for k in sections}
+
+    def unflat(section, flat):
+        return jax.tree_util.tree_unflatten(treedefs[section], list(flat))
+
+    x_spec = jax.ShapeDtypeStruct((batch, h, w, c), jnp.float32)
+    y_spec = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    f32 = jax.ShapeDtypeStruct((), jnp.float32)
+    i32 = jax.ShapeDtypeStruct((), jnp.int32)
+    pwm = jax.ShapeDtypeStruct((4,), jnp.float32)
+    pxm = jax.ShapeDtypeStruct((3,), jnp.float32)
+
+    def specs_of(section):
+        return [jax.ShapeDtypeStruct(tuple(d["shape"]),
+                                     jnp.float32 if d["dtype"] == "f32"
+                                     else jnp.int32)
+                for d in sections[section]]
+
+    arts = {}
+
+    # ---- init: seed -> full state -------------------------------------
+    def init_fn(seed):
+        p = init_params(jax.random.PRNGKey(seed.astype(jnp.uint32)))
+        th = T.theta_init(spec)
+        st = {"params": p, "opt_w": T.adam_init(p),
+              "theta": th, "opt_th": T.sgdm_init(th)}
+        flat = []
+        for k in ("params", "opt_w", "theta", "opt_th"):
+            flat += jax.tree_util.tree_leaves(st[k])
+        return tuple(flat)
+
+    _write(os.path.join(outdir, f"init_{name}.hlo.txt"),
+           to_hlo_text(jax.jit(init_fn).lower(i32)))
+    arts["init"] = {
+        "file": f"init_{name}.hlo.txt",
+        "state_sections": [],
+        "extra_inputs": [_scalar("seed", "i32")],
+        "outputs": ["params", "opt_w", "theta", "opt_th"],
+        "metrics": [],
+    }
+
+    # ---- warmup step ---------------------------------------------------
+    warm = T.build_warmup_step(spec, apply, ncls)
+    np_, no = counts["params"], counts["opt_w"]
+
+    def warm_flat(*args):
+        p = unflat("params", args[:np_])
+        o = unflat("opt_w", args[np_:np_ + no])
+        x, y, lr, t = args[np_ + no:]
+        p, o, loss, acc = warm(p, o, x, y, lr, t)
+        return tuple(jax.tree_util.tree_leaves(p)
+                     + jax.tree_util.tree_leaves(o)) + (loss, acc)
+
+    warm_specs = specs_of("params") + specs_of("opt_w") + [
+        x_spec, y_spec, f32, f32]
+    _write(os.path.join(outdir, f"warmup_{name}.hlo.txt"),
+           to_hlo_text(jax.jit(warm_flat).lower(*warm_specs)))
+    arts["warmup"] = {
+        "file": f"warmup_{name}.hlo.txt",
+        "state_sections": ["params", "opt_w"],
+        "extra_inputs": [
+            {"name": "x", "shape": [batch, h, w, c], "dtype": "f32"},
+            {"name": "y", "shape": [batch], "dtype": "i32"},
+            _scalar("lr"), _scalar("t"),
+        ],
+        "outputs": ["params", "opt_w"],
+        "metrics": ["loss", "acc"],
+    }
+
+    # ---- search steps (one per regularizer) ----------------------------
+    nth, nto = counts["theta"], counts["opt_th"]
+    state_specs = (specs_of("params") + specs_of("opt_w")
+                   + specs_of("theta") + specs_of("opt_th"))
+    for reg in REG_SETS[name]:
+        search = T.build_search_step(spec, apply, ncls, reg)
+
+        def search_flat(*args, _search=search):
+            i = 0
+            p = unflat("params", args[i:i + np_]); i += np_
+            ow = unflat("opt_w", args[i:i + no]); i += no
+            th = unflat("theta", args[i:i + nth]); i += nth
+            ot = unflat("opt_th", args[i:i + nto]); i += nto
+            (x, y, lr_w, lr_th, tau, lam, hard_flag, noise_scale,
+             seed, t, pw_mask, px_mask) = args[i:]
+            p, ow, th, ot, loss, acc, cost = _search(
+                p, ow, th, ot, x, y, lr_w, lr_th, tau, lam,
+                hard_flag, noise_scale, seed, t, pw_mask, px_mask)
+            flat = (jax.tree_util.tree_leaves(p)
+                    + jax.tree_util.tree_leaves(ow)
+                    + jax.tree_util.tree_leaves(th)
+                    + jax.tree_util.tree_leaves(ot))
+            return tuple(flat) + (loss, acc, cost)
+
+        s_specs = state_specs + [x_spec, y_spec, f32, f32, f32, f32,
+                                 f32, f32, i32, f32, pwm, pxm]
+        _write(os.path.join(outdir, f"search_{name}_{reg}.hlo.txt"),
+               to_hlo_text(jax.jit(search_flat).lower(*s_specs)))
+        arts[f"search_{reg}"] = {
+            "file": f"search_{name}_{reg}.hlo.txt",
+            "state_sections": ["params", "opt_w", "theta", "opt_th"],
+            "extra_inputs": [
+                {"name": "x", "shape": [batch, h, w, c], "dtype": "f32"},
+                {"name": "y", "shape": [batch], "dtype": "i32"},
+                _scalar("lr_w"), _scalar("lr_th"), _scalar("tau"),
+                _scalar("lambda"), _scalar("hard_flag"),
+                _scalar("noise_scale"), _scalar("seed", "i32"),
+                _scalar("t"),
+                {"name": "pw_mask", "shape": [4], "dtype": "f32"},
+                {"name": "px_mask", "shape": [3], "dtype": "f32"},
+            ],
+            "outputs": ["params", "opt_w", "theta", "opt_th"],
+            "metrics": ["loss", "acc", "cost"],
+        }
+
+    # ---- eval step -------------------------------------------------------
+    ev = T.build_eval_step(spec, apply, ncls)
+
+    def eval_flat(*args):
+        p = unflat("params", args[:np_])
+        th = unflat("theta", args[np_:np_ + nth])
+        x, y, tau, hard_flag, pw_mask, px_mask = args[np_ + nth:]
+        loss, acc, cost = ev(p, th, x, y, tau, hard_flag, pw_mask, px_mask)
+        return (loss, acc, cost)
+
+    e_specs = (specs_of("params") + specs_of("theta")
+               + [x_spec, y_spec, f32, f32, pwm, pxm])
+    _write(os.path.join(outdir, f"eval_{name}.hlo.txt"),
+           to_hlo_text(jax.jit(eval_flat).lower(*e_specs)))
+    arts["eval"] = {
+        "file": f"eval_{name}.hlo.txt",
+        "state_sections": ["params", "theta"],
+        "extra_inputs": [
+            {"name": "x", "shape": [batch, h, w, c], "dtype": "f32"},
+            {"name": "y", "shape": [batch], "dtype": "i32"},
+            _scalar("tau"), _scalar("hard_flag"),
+            {"name": "pw_mask", "shape": [4], "dtype": "f32"},
+            {"name": "px_mask", "shape": [3], "dtype": "f32"},
+        ],
+        "outputs": [],
+        "metrics": ["loss", "acc", "cost"],
+    }
+
+    with open(os.path.join(outdir, f"graph_{name}.json"), "w") as f:
+        json.dump(spec, f, indent=1)
+
+    manifest["models"][name] = {
+        "graph": f"graph_{name}.json",
+        "batch": batch,
+        "in_shape": [h, w, c],
+        "num_classes": ncls,
+        "sections": sections,
+        "artifacts": arts,
+    }
+
+
+def lower_qdemo(outdir: str, manifest: dict) -> None:
+    """Integer-conv Pallas kernel as a standalone artifact, proving the
+    deployment-path kernel loads and runs from Rust."""
+    from .kernels.qconv import qconv_int_pallas
+
+    m, ck, n = 64, 72, 32
+    xq = jax.ShapeDtypeStruct((m, ck), jnp.int32)
+    wq = jax.ShapeDtypeStruct((ck, n), jnp.int32)
+    sc = jax.ShapeDtypeStruct((n,), jnp.float32)
+
+    def fn(x, w, s):
+        return (qconv_int_pallas(x, w, s),)
+
+    _write(os.path.join(outdir, "qdemo.hlo.txt"),
+           to_hlo_text(jax.jit(fn).lower(xq, wq, sc)))
+    manifest["qdemo"] = {
+        "file": "qdemo.hlo.txt",
+        "inputs": [
+            {"name": "xq", "shape": [m, ck], "dtype": "i32"},
+            {"name": "wq", "shape": [ck, n], "dtype": "i32"},
+            {"name": "scale", "shape": [n], "dtype": "f32"},
+        ],
+        "outputs": [{"name": "out", "shape": [m, n], "dtype": "f32"}],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="resnet8,dscnn,resnet10")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {
+        "pw_set": [0, 2, 4, 8],
+        "px_set": [2, 4, 8],
+        "models": {},
+    }
+    for name in args.models.split(","):
+        lower_model(name, args.out, manifest)
+    lower_qdemo(args.out, manifest)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest with {len(manifest['models'])} models")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""L1 Pallas kernels (interpret=True; build-time only)."""
+
+from .act_quant import effective_act_pallas
+from .effective_weights import effective_weights_pallas
+from .qconv import qconv_int_pallas
+
+__all__ = [
+    "effective_act_pallas",
+    "effective_weights_pallas",
+    "qconv_int_pallas",
+]

@@ -1,0 +1,63 @@
+"""L1 Pallas kernel: PACT fake-quant + delta-blend for activations
+(paper Eq. 4).
+
+Activations are quantized layer-wise (Sec. 4.5), so one ``dhat`` vector
+and one PACT ``alpha`` apply to the whole tensor.  The tensor is
+flattened and tiled into ``(BLOCK_R, LANES)`` VMEM blocks; the three
+candidate precisions are produced in the same pass from one load.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_R = 32
+LANES = 128
+
+_PX_SET = (2, 4, 8)
+
+
+def _kernel(x_ref, d_ref, a_ref, o_ref, *, px_set):
+    x = x_ref[...]            # (BLOCK_R, LANES)
+    d = d_ref[...]            # (1, |P_X|)
+    alpha = a_ref[0, 0]
+    y = jnp.clip(x, 0.0, alpha)
+    acc = jnp.zeros_like(x)
+    for j, p in enumerate(px_set):
+        qmax = float(2**p - 1)
+        step = alpha / qmax
+        acc = acc + d[0, j] * (jnp.round(y / step) * step)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("px_set",))
+def effective_act_pallas(x: jnp.ndarray, dhat: jnp.ndarray,
+                         alpha: jnp.ndarray, px_set=_PX_SET) -> jnp.ndarray:
+    """Blend PACT-quantized activation variants; shape-preserving."""
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    tile = BLOCK_R * LANES
+    rows = pl.cdiv(n, tile) * BLOCK_R
+    pad = rows * LANES - n
+    x2d = jnp.pad(flat, (0, pad)).reshape(rows, LANES)
+    d2d = dhat.reshape(1, -1).astype(x.dtype)
+    a2d = jnp.asarray(alpha, x.dtype).reshape(1, 1)
+    npx = d2d.shape[1]
+    out = pl.pallas_call(
+        functools.partial(_kernel, px_set=px_set),
+        grid=(rows // BLOCK_R,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_R, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, npx), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_R, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), x.dtype),
+        interpret=True,
+    )(x2d, d2d, a2d)
+    return out.reshape(-1)[:n].reshape(shape)

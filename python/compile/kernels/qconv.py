@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: deployment-path integer convolution.
+
+After the search discretizes the assignment, inference runs on integer
+arithmetic (paper Sec. 2.1).  This kernel is the im2col matmul form:
+``acc[i, c] = sum_k xq[i, k] * wq[k, c]`` with i32 accumulation, then a
+per-channel requantization ``acc * (s_x * s_w[c])``.
+
+TPU mapping: the matmul is blocked ``(BLOCK_M x CK) . (CK x BLOCK_N)``
+-- MXU-shaped tiles with the reduction kept whole in VMEM (edge-model
+CK is small); accumulation in i32 mirrors the NE16/MPIC datapaths.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_M = 8
+BLOCK_N = 128
+
+
+def _kernel(x_ref, w_ref, s_ref, o_ref):
+    x = x_ref[...]                      # (BLOCK_M, CK) i32
+    w = w_ref[...]                      # (CK, BLOCK_N) i32
+    s = s_ref[...]                      # (1, BLOCK_N)  f32 (s_x * s_w)
+    acc = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    o_ref[...] = acc.astype(jnp.float32) * s
+
+
+@jax.jit
+def qconv_int_pallas(xq: jnp.ndarray, wq: jnp.ndarray,
+                     scale: jnp.ndarray) -> jnp.ndarray:
+    """Integer matmul + requantize.
+
+    ``xq``: (M, CK) i32 quantized im2col patches; ``wq``: (CK, N) i32
+    quantized weights; ``scale``: (N,) f32 combined requantization
+    scale. Returns f32 (M, N) dequantized outputs.
+    """
+    m, ck = xq.shape
+    n = wq.shape[1]
+    mp = pl.cdiv(m, BLOCK_M) * BLOCK_M
+    np_ = pl.cdiv(n, BLOCK_N) * BLOCK_N
+    xp = jnp.pad(xq, ((0, mp - m), (0, 0)))
+    wp = jnp.pad(wq, ((0, 0), (0, np_ - n)))
+    sp = jnp.pad(scale.reshape(1, -1), ((0, 0), (0, np_ - n)))
+    out = pl.pallas_call(
+        _kernel,
+        grid=(mp // BLOCK_M, np_ // BLOCK_N),
+        in_specs=[
+            pl.BlockSpec((BLOCK_M, ck), lambda i, j: (i, 0)),
+            pl.BlockSpec((ck, BLOCK_N), lambda i, j: (0, j)),
+            pl.BlockSpec((1, BLOCK_N), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_M, BLOCK_N), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, sp)
+    return out[:m, :n]

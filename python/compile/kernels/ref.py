@@ -1,0 +1,41 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Kept dependency-free of the kernels themselves so pytest compares two
+independent implementations.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+PW_SET = (0, 2, 4, 8)
+PX_SET = (2, 4, 8)
+
+
+def effective_weights_ref(w2d, ghat, pw_set=PW_SET):
+    out = jnp.zeros_like(w2d)
+    absmax = jnp.max(jnp.abs(w2d), axis=1, keepdims=True)
+    absmax = jnp.where(absmax == 0.0, 1.0, absmax)
+    for j, p in enumerate(pw_set):
+        if p == 0:
+            continue
+        qmax = float(2 ** (p - 1) - 1)
+        s = absmax / qmax
+        q = jnp.clip(jnp.round(w2d / s), -qmax, qmax) * s
+        out = out + ghat[:, j:j + 1] * q
+    return out
+
+
+def effective_act_ref(x, dhat, alpha, px_set=PX_SET):
+    y = jnp.clip(x, 0.0, alpha)
+    out = jnp.zeros_like(x)
+    for j, p in enumerate(px_set):
+        qmax = float(2**p - 1)
+        step = alpha / qmax
+        out = out + dhat[j] * (jnp.round(y / step) * step)
+    return out
+
+
+def qconv_int_ref(xq, wq, scale):
+    acc = jnp.matmul(xq.astype(jnp.int64), wq.astype(jnp.int64))
+    return acc.astype(jnp.float32) * scale.reshape(1, -1)

@@ -1,0 +1,103 @@
+"""Model-graph building blocks: mixed-precision conv / depthwise /
+linear layers plus the layer-spec metadata consumed by the Rust cost
+models and deploy transforms.
+
+A *LayerSpec* is a plain dict (JSON-serializable for graph_<model>.json):
+
+``name, kind (conv|dw|linear), cin, cout, k, stride, out_h, out_w,
+gamma_group, in_group, delta_idx, in_delta, prunable, macs``
+
+``gamma_group`` identifies the shared bit-width selection tensor
+(paper Sec. 4.1: residual reconvergence and conv->depthwise pairs
+share their gamma), ``in_group`` the producer group of this layer's
+input (for C_in_eff in the regularizers, Eq. 9).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import quantlib as ql
+
+
+def make_spec(name, kind, cin, cout, k, stride, out_h, out_w,
+              gamma_group, in_group, delta_idx, in_delta, prunable=True):
+    if kind == "dw":
+        macs = k * k * out_h * out_w * cout
+    else:
+        macs = k * k * cin * out_h * out_w * cout
+    return dict(name=name, kind=kind, cin=cin, cout=cout, k=k,
+                stride=stride, out_h=out_h, out_w=out_w,
+                gamma_group=gamma_group, in_group=in_group,
+                delta_idx=delta_idx, in_delta=in_delta,
+                prunable=prunable, macs=macs)
+
+
+def w2d_of(w: jnp.ndarray, kind: str) -> jnp.ndarray:
+    """View a weight tensor as (C_out, C_in*K*K) channel-major rows."""
+    if kind == "linear":
+        return w.T  # stored (in, out)
+    if kind == "dw":
+        k1, k2, c, _ = w.shape
+        return jnp.transpose(w, (2, 3, 0, 1)).reshape(c, k1 * k2)
+    k1, k2, cin, cout = w.shape
+    return jnp.transpose(w, (3, 0, 1, 2)).reshape(cout, k1 * k2 * cin)
+
+
+def w_from_2d(w2d: jnp.ndarray, kind: str, shape) -> jnp.ndarray:
+    """Inverse of :func:`w2d_of`."""
+    if kind == "linear":
+        return w2d.T
+    if kind == "dw":
+        k1, k2, c, _ = shape
+        return jnp.transpose(w2d.reshape(c, 1, k1, k2), (2, 3, 0, 1))
+    k1, k2, cin, cout = shape
+    return jnp.transpose(w2d.reshape(cout, k1, k2, cin), (1, 2, 3, 0))
+
+
+def conv2d(x, w, stride, kind):
+    dn = jax.lax.conv_dimension_numbers(x.shape, w.shape, ("NHWC", "HWIO", "NHWC"))
+    groups = w.shape[2] if kind == "dw" else 1
+    if kind == "dw":
+        # HWIO for depthwise: (k, k, 1, C) with feature_group_count=C
+        w = jnp.transpose(w, (0, 1, 3, 2))
+        groups = x.shape[-1]
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=dn,
+        feature_group_count=groups)
+
+
+def mp_conv(x, w, b, ghat, spec, quant: bool):
+    """One mixed-precision layer (paper Eq. 6): effective weights from
+    the Pallas blend kernel, then a single convolution."""
+    if quant:
+        w2 = w2d_of(w, spec["kind"])
+        w2 = ql.effective_weights(w2, ghat)
+        w = w_from_2d(w2, spec["kind"], w.shape)
+    if spec["kind"] == "linear":
+        return x @ w + b
+    return conv2d(x, w, spec["stride"], spec["kind"]) + b
+
+
+def act_quant(x, dhat, alpha, quant: bool):
+    """Layer-wise effective activation (paper Eq. 4); identity in the
+    float warmup graph."""
+    if not quant:
+        return x
+    return ql.effective_act(x, dhat, alpha)
+
+
+def init_conv(key, k, cin, cout, kind):
+    if kind == "linear":
+        fan_in = cin
+        shape = (cin, cout)
+    elif kind == "dw":
+        fan_in = k * k
+        shape = (k, k, cout, 1)
+    else:
+        fan_in = k * k * cin
+        shape = (k, k, cin, cout)
+    std = (2.0 / fan_in) ** 0.5
+    w = jax.random.normal(key, shape, jnp.float32) * std
+    return {"w": w, "b": jnp.zeros((cout,), jnp.float32)}

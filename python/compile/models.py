@@ -1,0 +1,346 @@
+"""The three reference networks (paper Sec. 5.1), in folded form.
+
+* ``resnet8``  -- CIFAR-10-like  benchmark (custom ResNet, [44])
+* ``dscnn``    -- Google-Speech-Commands-like (DS-CNN, [44])
+* ``resnet10`` -- Tiny-ImageNet-like (ResNet family, scaled to the CPU
+  budget of this testbed; see DESIGN.md Sec. 3 substitutions)
+
+Networks are defined directly in their *BN-folded* form (conv + bias):
+the paper folds batch-norm into the preceding conv before the search
+phase (Sec. 4.2), so the searched/deployed graph is exactly this one.
+
+Gamma sharing (paper Sec. 4.1):
+* residual blocks with a projection shortcut share the gamma of the two
+  reconvergent convs;
+* identity-skip blocks chain the block-output conv onto the block's
+  input group;
+* a depthwise conv shares its predecessor's group (pw->dw pairing).
+
+Each builder returns ``(spec, init_params, apply)`` where ``apply``
+runs in ``float`` (warmup) or ``search`` mode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+PW_SET = (0, 2, 4, 8)
+PX_SET = (2, 4, 8)
+
+
+class _Builder:
+    """Accumulates LayerSpecs + gamma groups while the net is defined."""
+
+    def __init__(self):
+        self.layers = []
+        self.groups = {}   # group id -> n_channels
+        self.deltas = 0
+
+    def group(self, n_ch):
+        gid = len(self.groups)
+        self.groups[gid] = n_ch
+        return gid
+
+    def delta(self):
+        self.deltas += 1
+        return self.deltas - 1
+
+    def add(self, **kw):
+        self.layers.append(L.make_spec(**kw))
+        return self.layers[-1]
+
+
+def _spec_dict(b: _Builder, name, in_shape, num_classes, batch):
+    return dict(model=name, in_shape=list(in_shape), num_classes=num_classes,
+                batch=batch, layers=b.layers,
+                gamma_groups=[b.groups[i] for i in range(len(b.groups))],
+                num_deltas=b.deltas, pw_set=list(PW_SET), px_set=list(PX_SET))
+
+
+# ---------------------------------------------------------------------------
+# resnet8 (CIFAR-10-like)
+# ---------------------------------------------------------------------------
+
+
+def build_resnet8(in_hw=16, in_ch=3, width=16, num_classes=10, batch=32):
+    b = _Builder()
+    w1, w2, w3 = width, width * 2, width * 4
+    hw = in_hw
+
+    g_stem = b.group(w1)
+    d_stem = b.delta()
+    b.add(name="stem", kind="conv", cin=in_ch, cout=w1, k=3, stride=1,
+          out_h=hw, out_w=hw, gamma_group=g_stem, in_group=-1,
+          delta_idx=d_stem, in_delta=-1)
+
+    # block1: identity skip, 16->16 s1. conv2 chains onto the stem group.
+    g_b1a = b.group(w1)
+    d_b1a = b.delta()
+    b.add(name="b1_conv1", kind="conv", cin=w1, cout=w1, k=3, stride=1,
+          out_h=hw, out_w=hw, gamma_group=g_b1a, in_group=g_stem,
+          delta_idx=d_b1a, in_delta=d_stem)
+    d_b1 = b.delta()
+    b.add(name="b1_conv2", kind="conv", cin=w1, cout=w1, k=3, stride=1,
+          out_h=hw, out_w=hw, gamma_group=g_stem, in_group=g_b1a,
+          delta_idx=d_b1, in_delta=d_b1a)
+
+    # block2: projection shortcut, 16->32 s2. conv2 + shortcut share.
+    hw //= 2
+    g_b2a, g_b2 = b.group(w2), b.group(w2)
+    d_b2a = b.delta()
+    b.add(name="b2_conv1", kind="conv", cin=w1, cout=w2, k=3, stride=2,
+          out_h=hw, out_w=hw, gamma_group=g_b2a, in_group=g_stem,
+          delta_idx=d_b2a, in_delta=d_b1)
+    d_b2 = b.delta()
+    b.add(name="b2_conv2", kind="conv", cin=w2, cout=w2, k=3, stride=1,
+          out_h=hw, out_w=hw, gamma_group=g_b2, in_group=g_b2a,
+          delta_idx=d_b2, in_delta=d_b2a)
+    b.add(name="b2_short", kind="conv", cin=w1, cout=w2, k=1, stride=2,
+          out_h=hw, out_w=hw, gamma_group=g_b2, in_group=g_stem,
+          delta_idx=d_b2, in_delta=d_b1)
+
+    # block3: projection shortcut, 32->64 s2.
+    hw //= 2
+    g_b3a, g_b3 = b.group(w3), b.group(w3)
+    d_b3a = b.delta()
+    b.add(name="b3_conv1", kind="conv", cin=w2, cout=w3, k=3, stride=2,
+          out_h=hw, out_w=hw, gamma_group=g_b3a, in_group=g_b2,
+          delta_idx=d_b3a, in_delta=d_b2)
+    d_b3 = b.delta()
+    b.add(name="b3_conv2", kind="conv", cin=w3, cout=w3, k=3, stride=1,
+          out_h=hw, out_w=hw, gamma_group=g_b3, in_group=g_b3a,
+          delta_idx=d_b3, in_delta=d_b3a)
+    b.add(name="b3_short", kind="conv", cin=w2, cout=w3, k=1, stride=2,
+          out_h=hw, out_w=hw, gamma_group=g_b3, in_group=g_b2,
+          delta_idx=d_b3, in_delta=d_b2)
+
+    g_fc = b.group(num_classes)
+    b.add(name="fc", kind="linear", cin=w3, cout=num_classes, k=1, stride=1,
+          out_h=1, out_w=1, gamma_group=g_fc, in_group=g_b3,
+          delta_idx=-1, in_delta=d_b3, prunable=False)
+
+    spec = _spec_dict(b, "resnet8", (in_hw, in_hw, in_ch), num_classes, batch)
+
+    def init_params(key):
+        ks = jax.random.split(key, 10)
+        return {
+            "stem": L.init_conv(ks[0], 3, in_ch, w1, "conv"),
+            "b1_conv1": L.init_conv(ks[1], 3, w1, w1, "conv"),
+            "b1_conv2": L.init_conv(ks[2], 3, w1, w1, "conv"),
+            "b2_conv1": L.init_conv(ks[3], 3, w1, w2, "conv"),
+            "b2_conv2": L.init_conv(ks[4], 3, w2, w2, "conv"),
+            "b2_short": L.init_conv(ks[5], 1, w1, w2, "conv"),
+            "b3_conv1": L.init_conv(ks[6], 3, w2, w3, "conv"),
+            "b3_conv2": L.init_conv(ks[7], 3, w3, w3, "conv"),
+            "b3_short": L.init_conv(ks[8], 1, w2, w3, "conv"),
+            "fc": L.init_conv(ks[9], 1, w3, num_classes, "linear"),
+            "alphas": jnp.full((b.deltas,), 6.0, jnp.float32),
+        }
+
+    sp = {s["name"]: s for s in spec["layers"]}
+
+    def apply(params, ghats, dhats, x, quant):
+        def aq(h, spec_name):
+            di = sp[spec_name]["delta_idx"]
+            return L.act_quant(h, dhats[di] if quant else None,
+                               params["alphas"][di], quant)
+
+        def cv(h, name):
+            s = sp[name]
+            return L.mp_conv(h, params[name]["w"], params[name]["b"],
+                             ghats[s["gamma_group"]] if quant else None, s, quant)
+
+        h = jax.nn.relu(cv(x, "stem"))
+        h = aq(h, "stem")
+        # block1 (identity)
+        r = aq(jax.nn.relu(cv(h, "b1_conv1")), "b1_conv1")
+        h = aq(jax.nn.relu(cv(r, "b1_conv2") + h), "b1_conv2")
+        # block2 (projection)
+        r = aq(jax.nn.relu(cv(h, "b2_conv1")), "b2_conv1")
+        h = aq(jax.nn.relu(cv(r, "b2_conv2") + cv(h, "b2_short")), "b2_conv2")
+        # block3 (projection)
+        r = aq(jax.nn.relu(cv(h, "b3_conv1")), "b3_conv1")
+        h = aq(jax.nn.relu(cv(r, "b3_conv2") + cv(h, "b3_short")), "b3_conv2")
+        h = jnp.mean(h, axis=(1, 2))
+        s = sp["fc"]
+        return L.mp_conv(h, params["fc"]["w"], params["fc"]["b"],
+                         ghats[s["gamma_group"]] if quant else None, s, quant)
+
+    return spec, init_params, apply
+
+
+# ---------------------------------------------------------------------------
+# dscnn (GSC-like keyword spotting)
+# ---------------------------------------------------------------------------
+
+
+def build_dscnn(in_h=25, in_w=5, in_ch=1, width=32, num_classes=12,
+                n_blocks=3, batch=32):
+    b = _Builder()
+    h, w = (in_h + 1) // 2, in_w
+
+    g0 = b.group(width)
+    d0 = b.delta()
+    b.add(name="conv0", kind="conv", cin=in_ch, cout=width, k=3, stride=1,
+          out_h=h, out_w=w, gamma_group=g0, in_group=-1,
+          delta_idx=d0, in_delta=-1)
+    # stride (2,1) is approximated with stride 2 on square kernels and
+    # SAME padding on both axes; spatial dims recorded in the spec.
+    prev_g, prev_d = g0, d0
+    names = []
+    for i in range(n_blocks):
+        d_dw = b.delta()
+        b.add(name=f"dw{i}", kind="dw", cin=width, cout=width, k=3, stride=1,
+              out_h=h, out_w=w, gamma_group=prev_g, in_group=prev_g,
+              delta_idx=d_dw, in_delta=prev_d)
+        g_pw = b.group(width)
+        d_pw = b.delta()
+        b.add(name=f"pw{i}", kind="conv", cin=width, cout=width, k=1, stride=1,
+              out_h=h, out_w=w, gamma_group=g_pw, in_group=prev_g,
+              delta_idx=d_pw, in_delta=d_dw)
+        names.append((f"dw{i}", f"pw{i}"))
+        prev_g, prev_d = g_pw, d_pw
+
+    g_fc = b.group(num_classes)
+    b.add(name="fc", kind="linear", cin=width, cout=num_classes, k=1,
+          stride=1, out_h=1, out_w=1, gamma_group=g_fc, in_group=prev_g,
+          delta_idx=-1, in_delta=prev_d, prunable=False)
+
+    spec = _spec_dict(b, "dscnn", (in_h, in_w, in_ch), num_classes, batch)
+    sp = {s["name"]: s for s in spec["layers"]}
+
+    def init_params(key):
+        ks = jax.random.split(key, 2 + 2 * n_blocks)
+        p = {"conv0": L.init_conv(ks[0], 3, in_ch, width, "conv")}
+        for i in range(n_blocks):
+            p[f"dw{i}"] = L.init_conv(ks[1 + 2 * i], 3, width, width, "dw")
+            p[f"pw{i}"] = L.init_conv(ks[2 + 2 * i], 1, width, width, "conv")
+        p["fc"] = L.init_conv(ks[-1], 1, width, num_classes, "linear")
+        p["alphas"] = jnp.full((b.deltas,), 6.0, jnp.float32)
+        return p
+
+    def apply(params, ghats, dhats, x, quant):
+        def aq(hh, name):
+            di = sp[name]["delta_idx"]
+            return L.act_quant(hh, dhats[di] if quant else None,
+                               params["alphas"][di], quant)
+
+        def cv(hh, name):
+            s = sp[name]
+            return L.mp_conv(hh, params[name]["w"], params[name]["b"],
+                             ghats[s["gamma_group"]] if quant else None, s, quant)
+
+        # stem with stride (2,1):
+        s0 = sp["conv0"]
+        w0 = params["conv0"]["w"]
+        if quant:
+            from . import quantlib as ql
+            w2 = L.w2d_of(w0, "conv")
+            w2 = ql.effective_weights(w2, ghats[s0["gamma_group"]])
+            w0 = L.w_from_2d(w2, "conv", w0.shape)
+        dn = jax.lax.conv_dimension_numbers(x.shape, w0.shape,
+                                            ("NHWC", "HWIO", "NHWC"))
+        hh = jax.lax.conv_general_dilated(x, w0, (2, 1), "SAME",
+                                          dimension_numbers=dn)
+        hh = aq(jax.nn.relu(hh + params["conv0"]["b"]), "conv0")
+        for dw, pw in names:
+            hh = aq(jax.nn.relu(cv(hh, dw)), dw)
+            hh = aq(jax.nn.relu(cv(hh, pw)), pw)
+        hh = jnp.mean(hh, axis=(1, 2))
+        s = sp["fc"]
+        return L.mp_conv(hh, params["fc"]["w"], params["fc"]["b"],
+                         ghats[s["gamma_group"]] if quant else None, s, quant)
+
+    return spec, init_params, apply
+
+
+# ---------------------------------------------------------------------------
+# resnet10 (Tiny-ImageNet-like)
+# ---------------------------------------------------------------------------
+
+
+def build_resnet10(in_hw=32, in_ch=3, width=16, num_classes=64, batch=16):
+    b = _Builder()
+    widths = [width, width * 2, width * 4, width * 8]
+    hw = in_hw
+
+    g_stem = b.group(widths[0])
+    d_stem = b.delta()
+    b.add(name="stem", kind="conv", cin=in_ch, cout=widths[0], k=3, stride=1,
+          out_h=hw, out_w=hw, gamma_group=g_stem, in_group=-1,
+          delta_idx=d_stem, in_delta=-1)
+
+    prev_g, prev_d, prev_c = g_stem, d_stem, widths[0]
+    block_meta = []
+    for bi, c in enumerate(widths):
+        stride = 1 if bi == 0 else 2
+        ident = (stride == 1 and c == prev_c)
+        if not ident:
+            hw //= 2
+        g_a = b.group(c)
+        d_a = b.delta()
+        b.add(name=f"s{bi}_conv1", kind="conv", cin=prev_c, cout=c, k=3,
+              stride=stride, out_h=hw, out_w=hw, gamma_group=g_a,
+              in_group=prev_g, delta_idx=d_a, in_delta=prev_d)
+        g_out = prev_g if ident else b.group(c)
+        d_out = b.delta()
+        b.add(name=f"s{bi}_conv2", kind="conv", cin=c, cout=c, k=3, stride=1,
+              out_h=hw, out_w=hw, gamma_group=g_out, in_group=g_a,
+              delta_idx=d_out, in_delta=d_a)
+        if not ident:
+            b.add(name=f"s{bi}_short", kind="conv", cin=prev_c, cout=c, k=1,
+                  stride=stride, out_h=hw, out_w=hw, gamma_group=g_out,
+                  in_group=prev_g, delta_idx=d_out, in_delta=prev_d)
+        block_meta.append((bi, ident))
+        prev_g, prev_d, prev_c = g_out, d_out, c
+
+    g_fc = b.group(num_classes)
+    b.add(name="fc", kind="linear", cin=prev_c, cout=num_classes, k=1,
+          stride=1, out_h=1, out_w=1, gamma_group=g_fc, in_group=prev_g,
+          delta_idx=-1, in_delta=prev_d, prunable=False)
+
+    spec = _spec_dict(b, "resnet10", (in_hw, in_hw, in_ch), num_classes, batch)
+    sp = {s["name"]: s for s in spec["layers"]}
+
+    def init_params(key):
+        n = len(spec["layers"])
+        ks = jax.random.split(key, n)
+        p = {}
+        for i, s in enumerate(spec["layers"]):
+            p[s["name"]] = L.init_conv(ks[i], s["k"], s["cin"], s["cout"],
+                                       s["kind"])
+        p["alphas"] = jnp.full((b.deltas,), 6.0, jnp.float32)
+        return p
+
+    def apply(params, ghats, dhats, x, quant):
+        def aq(hh, name):
+            di = sp[name]["delta_idx"]
+            return L.act_quant(hh, dhats[di] if quant else None,
+                               params["alphas"][di], quant)
+
+        def cv(hh, name):
+            s = sp[name]
+            return L.mp_conv(hh, params[name]["w"], params[name]["b"],
+                             ghats[s["gamma_group"]] if quant else None, s, quant)
+
+        hh = aq(jax.nn.relu(cv(x, "stem")), "stem")
+        for bi, ident in block_meta:
+            r = aq(jax.nn.relu(cv(hh, f"s{bi}_conv1")), f"s{bi}_conv1")
+            sc = hh if ident else cv(hh, f"s{bi}_short")
+            hh = aq(jax.nn.relu(cv(r, f"s{bi}_conv2") + sc), f"s{bi}_conv2")
+        hh = jnp.mean(hh, axis=(1, 2))
+        s = sp["fc"]
+        return L.mp_conv(hh, params["fc"]["w"], params["fc"]["b"],
+                         ghats[s["gamma_group"]] if quant else None, s, quant)
+
+    return spec, init_params, apply
+
+
+BUILDERS = {
+    "resnet8": build_resnet8,
+    "dscnn": build_dscnn,
+    "resnet10": build_resnet10,
+}

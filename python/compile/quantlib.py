@@ -1,0 +1,173 @@
+"""Quantization primitives shared by the L2 model graphs.
+
+Implements the paper's quantization choices (Sec. 5.1):
+
+* weights  -- symmetric per-channel min-max affine quantization at
+  ``p`` bits (signed range ``[-(2^{p-1}-1), 2^{p-1}-1]``),
+* activations -- PACT [14]: learnable clipping value ``alpha`` and
+  unsigned affine quantization on ``[0, alpha]``.
+
+Both are *fake* quantizers (quantize -> dequantize in float) so the
+search graph stays in f32 while matching integer inference numerics.
+Gradients use the straight-through estimator (STE); PACT's ``alpha``
+receives the exact clip gradient as in the PACT paper.
+
+Everything here is pure ``jnp`` -- these are the *reference* semantics.
+The Pallas kernels in ``kernels/`` implement the fused hot-path version
+and are tested against these functions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Candidate precision sets (paper Sec. 5.1): 0-bit == structured pruning.
+PW_SET = (0, 2, 4, 8)
+PX_SET = (2, 4, 8)
+
+
+def qmax_signed(bits: int) -> float:
+    """Largest magnitude representable by a signed ``bits``-wide integer
+    under symmetric quantization (``2^{bits-1} - 1``)."""
+    return float(2 ** (bits - 1) - 1)
+
+
+def qmax_unsigned(bits: int) -> float:
+    """Number of positive steps of an unsigned ``bits``-wide integer."""
+    return float(2**bits - 1)
+
+
+def weight_scale(w2d: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Per-output-channel symmetric min-max scale.
+
+    ``w2d`` has shape ``(C_out, C_in * K * K)``; returns ``(C_out, 1)``.
+    """
+    absmax = jnp.max(jnp.abs(w2d), axis=1, keepdims=True)
+    # Guard fully-zero channels: scale 1 quantizes them to exact zeros.
+    absmax = jnp.where(absmax == 0.0, 1.0, absmax)
+    return absmax / qmax_signed(bits)
+
+
+def fake_quant_weight(w2d: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Symmetric per-channel fake quantization of a 2-D weight matrix."""
+    if bits == 0:
+        return jnp.zeros_like(w2d)
+    s = weight_scale(w2d, bits)
+    q = jnp.clip(jnp.round(w2d / s), -qmax_signed(bits), qmax_signed(bits))
+    return q * s
+
+
+def int_quant_weight(w2d: jnp.ndarray, bits: int):
+    """Integer quantization: returns ``(q_int, scale)`` with
+    ``w ~= q_int * scale``; the deployment-path twin of
+    :func:`fake_quant_weight`."""
+    s = weight_scale(w2d, bits)
+    q = jnp.clip(jnp.round(w2d / s), -qmax_signed(bits), qmax_signed(bits))
+    return q.astype(jnp.int32), s
+
+
+def fake_quant_act(x: jnp.ndarray, alpha: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """PACT fake quantization of a (non-negative) activation tensor."""
+    y = jnp.clip(x, 0.0, alpha)
+    step = alpha / qmax_unsigned(bits)
+    return jnp.round(y / step) * step
+
+
+def effective_weights_ref(w2d: jnp.ndarray, ghat: jnp.ndarray,
+                          pw_set=PW_SET) -> jnp.ndarray:
+    """Paper Eq. 5: blend of per-precision fake-quantized weights.
+
+    ``ghat`` has shape ``(C_out, |P_W|)`` (rows sum to 1); column order
+    follows ``pw_set``. 0-bit contributes zeros, i.e. channel pruning.
+    """
+    out = jnp.zeros_like(w2d)
+    for j, p in enumerate(pw_set):
+        if p == 0:
+            continue
+        out = out + ghat[:, j:j + 1] * fake_quant_weight(w2d, p)
+    return out
+
+
+def effective_act_ref(x: jnp.ndarray, dhat: jnp.ndarray, alpha: jnp.ndarray,
+                      px_set=PX_SET) -> jnp.ndarray:
+    """Paper Eq. 4 for activations: blend of PACT-quantized variants."""
+    out = jnp.zeros_like(x)
+    for j, p in enumerate(px_set):
+        out = out + dhat[j] * fake_quant_act(x, alpha, p)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# STE wrappers used by the training graphs.
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def _ste_effective_weights(w2d, ghat):
+    from .kernels.effective_weights import effective_weights_pallas
+
+    return effective_weights_pallas(w2d, ghat)
+
+
+def _ste_w_fwd(w2d, ghat):
+    out = _ste_effective_weights(w2d, ghat)
+    return out, (w2d, ghat)
+
+
+def _ste_w_bwd(res, g):
+    w2d, ghat = res
+    # dW: STE through round/clip per precision; the blend is linear in
+    # ghat so each branch passes ghat[:, j] through.  0-bit passes 0.
+    keep = jnp.zeros((w2d.shape[0], 1), w2d.dtype)
+    dghat = []
+    for j, p in enumerate(PW_SET):
+        if p == 0:
+            dghat.append(jnp.zeros((w2d.shape[0],), w2d.dtype))
+            continue
+        keep = keep + ghat[:, j:j + 1]
+        dghat.append(jnp.sum(fake_quant_weight(w2d, p) * g, axis=1))
+    dw = keep * g
+    return dw, jnp.stack(dghat, axis=1)
+
+
+_ste_effective_weights.defvjp(_ste_w_fwd, _ste_w_bwd)
+
+
+def effective_weights(w2d: jnp.ndarray, ghat: jnp.ndarray) -> jnp.ndarray:
+    """Differentiable effective-weight construction (Pallas forward,
+    STE backward). The hot op of the search phase."""
+    return _ste_effective_weights(w2d, ghat)
+
+
+@jax.custom_vjp
+def _ste_effective_act(x, dhat, alpha):
+    from .kernels.act_quant import effective_act_pallas
+
+    return effective_act_pallas(x, dhat, alpha)
+
+
+def _ste_a_fwd(x, dhat, alpha):
+    return _ste_effective_act(x, dhat, alpha), (x, dhat, alpha)
+
+
+def _ste_a_bwd(res, g):
+    x, dhat, alpha = res
+    inside = jnp.logical_and(x > 0.0, x < alpha).astype(x.dtype)
+    above = (x >= alpha).astype(x.dtype)
+    dsum = jnp.sum(dhat)
+    dx = dsum * inside * g
+    dalpha = jnp.sum(dsum * above * g).reshape(alpha.shape)
+    ddhat = jnp.stack(
+        [jnp.sum(fake_quant_act(x, alpha, p) * g) for p in PX_SET]
+    )
+    return dx, ddhat, dalpha
+
+
+_ste_effective_act.defvjp(_ste_a_fwd, _ste_a_bwd)
+
+
+def effective_act(x: jnp.ndarray, dhat: jnp.ndarray,
+                  alpha: jnp.ndarray) -> jnp.ndarray:
+    """Differentiable effective-activation construction (PACT + blend)."""
+    return _ste_effective_act(x, dhat, alpha)

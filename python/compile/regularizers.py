@@ -1,0 +1,235 @@
+"""Differentiable complexity regularizers (paper Sec. 4.3).
+
+Four cost models, all functions of the sampled selection coefficients
+``ghats`` (list indexed by gamma group, each ``(C, |P_W|)``) and
+``dhats`` (``(num_deltas, |P_X|)``):
+
+* ``size``   -- Eq. 9: parameter memory in bits, with the effective
+  (un-pruned) input-channel count chained through the gamma groups.
+* ``bitops`` -- MACs x pw x px (EdMIPS-style hardware-agnostic proxy).
+* ``mpic``   -- Eq. 10/11: cycles on the MPIC RISC-V core from a
+  MACs/cycle LUT (sub-byte SIMD; shape documented in DESIGN.md Sec. 3).
+* ``ne16``   -- analytical cycle model of the NE16 accelerator:
+  288 b/cycle weight streamer, 3x3 PE array with 32-output-channel
+  granularity and bit-serial weight precision, 64 b/cycle L1 store.
+  The 32-channel ``ceil`` is kept in the forward value and bypassed
+  with a straight-through gradient so the search feels the steps.
+
+Every model returns cost normalized by its own all-8-bit value so that
+``lambda`` sweeps are comparable across models and benchmarks.
+
+The exact integer twins of these models live in ``rust/src/cost`` and
+``rust/src/hwsim``; `python/tests/test_regularizers.py` pins shared
+reference values that the Rust tests assert against, keeping the two
+implementations in lock-step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+PW_SET = (0, 2, 4, 8)
+PX_SET = (2, 4, 8)
+
+# MACs/cycle on MPIC, indexed [px][pw] (px, pw in {2,4,8}).  Synthetic
+# LUT with the published shape: throughput tracks 16/max(px,pw) SIMD
+# lanes with ~70% issue efficiency, plus a small fetch bonus when the
+# co-operand is narrower.  See DESIGN.md Sec. 3.
+MPIC_LUT = {
+    (2, 2): 11.2, (2, 4): 6.4, (2, 8): 3.4,
+    (4, 2): 6.4, (4, 4): 5.6, (4, 8): 3.2,
+    (8, 2): 3.4, (8, 4): 3.2, (8, 8): 2.8,
+}
+
+MPIC_FREQ_HZ = 250.0e6
+MPIC_POWER_W = 5.4e-3
+NE16_FREQ_HZ = 370.0e6
+
+NE16_STREAMER_BITS = 288.0   # weight-load bandwidth, bits/cycle
+NE16_STORE_BITS = 64.0       # L1 store bandwidth, bits/cycle
+NE16_PE_SPATIAL = 3          # 3x3 PE array
+NE16_PE_COUT = 32            # output channels per PE invocation
+NE16_PE_CIN = 16             # input channels consumed per pass
+
+
+@jax.custom_vjp
+def ste_ceil(x):
+    return jnp.ceil(x)
+
+
+def _ste_ceil_fwd(x):
+    return jnp.ceil(x), None
+
+
+def _ste_ceil_bwd(_, g):
+    return (g,)
+
+
+ste_ceil.defvjp(_ste_ceil_fwd, _ste_ceil_bwd)
+
+
+def _keep_frac(ghat):
+    """Per-channel probability of NOT being pruned (1 - gamma_hat_0)."""
+    return 1.0 - ghat[:, 0]
+
+
+def cin_eff(spec_layer, ghats):
+    """Effective input channel count (Eq. 9's C_in,eff)."""
+    g = spec_layer["in_group"]
+    if g < 0:
+        return float(spec_layer["cin"])
+    return jnp.sum(_keep_frac(ghats[g]))
+
+
+def _px_eff(spec_layer, dhats, px_set=PX_SET):
+    d = spec_layer["in_delta"]
+    if d < 0:
+        return 8.0
+    return jnp.sum(dhats[d] * jnp.array(px_set, jnp.float32))
+
+
+def size_bits(spec, ghats, dhats):
+    """Eq. 9 summed over layers: expected parameter bits."""
+    total = 0.0
+    for s in spec["layers"]:
+        g = ghats[s["gamma_group"]]
+        pw_bits = jnp.sum(g * jnp.array(PW_SET, jnp.float32)[None, :], axis=1)
+        if s["kind"] == "dw":
+            total = total + s["k"] * s["k"] * jnp.sum(pw_bits)
+        else:
+            ce = cin_eff(s, ghats)
+            total = total + ce * s["k"] * s["k"] * jnp.sum(pw_bits)
+    return total
+
+
+def size_bits_max(spec):
+    """All-8-bit parameter bits (normalization constant; also the w8a8
+    baseline's exact size)."""
+    total = 0.0
+    for s in spec["layers"]:
+        if s["kind"] == "dw":
+            total += s["k"] * s["k"] * s["cout"] * 8.0
+        else:
+            total += s["cin"] * s["k"] * s["k"] * s["cout"] * 8.0
+    return total
+
+
+def bitops(spec, ghats, dhats):
+    total = 0.0
+    for s in spec["layers"]:
+        g = ghats[s["gamma_group"]]
+        pw_bits = jnp.sum(g * jnp.array(PW_SET, jnp.float32)[None, :], axis=1)
+        px = _px_eff(s, dhats)
+        macs_per_ch = s["k"] * s["k"] * s["out_h"] * s["out_w"]
+        if s["kind"] != "dw":
+            macs_per_ch = macs_per_ch * cin_eff(s, ghats)
+        total = total + macs_per_ch * jnp.sum(pw_bits) * px
+    return total
+
+
+def bitops_max(spec):
+    total = 0.0
+    for s in spec["layers"]:
+        total += s["macs"] * 8.0 * 8.0
+    return total
+
+
+def mpic_cycles(spec, ghats, dhats):
+    """Eq. 10/11: sum over (px, pw) combos of MACs / LUT throughput."""
+    total = 0.0
+    for s in spec["layers"]:
+        g = ghats[s["gamma_group"]]
+        ce = (cin_eff(s, ghats) if s["kind"] != "dw"
+              else jnp.sum(_keep_frac(g)))
+        d = s["in_delta"]
+        dvec = (dhats[d] if d >= 0
+                else jnp.array([0.0, 0.0, 1.0], jnp.float32))
+        spatial = s["out_h"] * s["out_w"] * s["k"] * s["k"]
+        for xi, px in enumerate(PX_SET):
+            for wi, pw in enumerate(PW_SET):
+                if pw == 0:
+                    continue
+                n_ch = jnp.sum(g[:, wi])
+                if s["kind"] == "dw":
+                    macs = spatial * n_ch * dvec[xi]
+                else:
+                    macs = spatial * ce * n_ch * dvec[xi]
+                total = total + macs / MPIC_LUT[(px, pw)]
+    return total
+
+
+def mpic_cycles_max(spec):
+    return sum(s["macs"] / MPIC_LUT[(8, 8)] for s in spec["layers"])
+
+
+def _ne16_layer_cycles(s, n_pw, ce):
+    """Cycles for one layer, given soft per-precision channel counts
+    ``n_pw[wi]`` and effective input channels ``ce``."""
+    sp_tiles = (ste_ceil(s["out_h"] / NE16_PE_SPATIAL)
+                * ste_ceil(s["out_w"] / NE16_PE_SPATIAL))
+    cin_passes = ste_ceil(ce / NE16_PE_CIN)
+    total = 0.0
+    kept = 0.0
+    for wi, pw in enumerate(PW_SET):
+        if pw == 0:
+            continue
+        subtiles = ste_ceil(n_pw[wi] / NE16_PE_COUT)
+        kept = kept + n_pw[wi]
+        # bit-serial weights: cycles scale with pw
+        if s["kind"] == "dw":
+            compute = sp_tiles * subtiles * s["k"] * s["k"] * pw
+            w_bits = s["k"] * s["k"] * n_pw[wi] * pw
+        else:
+            compute = sp_tiles * subtiles * cin_passes * s["k"] * s["k"] * pw
+            w_bits = ce * s["k"] * s["k"] * n_pw[wi] * pw
+        total = total + compute + w_bits / NE16_STREAMER_BITS
+    store = s["out_h"] * s["out_w"] * kept * 8.0 / NE16_STORE_BITS
+    return total + store
+
+
+def ne16_cycles(spec, ghats, dhats):
+    total = 0.0
+    for s in spec["layers"]:
+        g = ghats[s["gamma_group"]]
+        n_pw = [jnp.sum(g[:, wi]) for wi in range(len(PW_SET))]
+        ce = (cin_eff(s, ghats) if s["kind"] != "dw"
+              else jnp.sum(_keep_frac(g)))
+        total = total + _ne16_layer_cycles(s, n_pw, ce)
+    return total
+
+
+def ne16_cycles_max(spec):
+    """Pure-python all-8-bit twin of :func:`ne16_cycles` (cannot reuse
+    ``ste_ceil`` -- a custom_vjp call stages a tracer even on constants
+    when evaluated under an outer jit trace)."""
+    import math
+
+    total = 0.0
+    for s in spec["layers"]:
+        sp_tiles = (math.ceil(s["out_h"] / NE16_PE_SPATIAL)
+                    * math.ceil(s["out_w"] / NE16_PE_SPATIAL))
+        subtiles = math.ceil(s["cout"] / NE16_PE_COUT)
+        if s["kind"] == "dw":
+            compute = sp_tiles * subtiles * s["k"] * s["k"] * 8.0
+            w_bits = s["k"] * s["k"] * s["cout"] * 8.0
+        else:
+            cin_passes = math.ceil(s["cin"] / NE16_PE_CIN)
+            compute = sp_tiles * subtiles * cin_passes * s["k"] * s["k"] * 8.0
+            w_bits = s["cin"] * s["k"] * s["k"] * s["cout"] * 8.0
+        store = s["out_h"] * s["out_w"] * s["cout"] * 8.0 / NE16_STORE_BITS
+        total += compute + w_bits / NE16_STREAMER_BITS + store
+    return total
+
+
+REGULARIZERS = {
+    "size": (size_bits, size_bits_max),
+    "bitops": (bitops, bitops_max),
+    "mpic": (mpic_cycles, mpic_cycles_max),
+    "ne16": (ne16_cycles, ne16_cycles_max),
+}
+
+
+def normalized_cost(reg: str, spec, ghats, dhats):
+    fn, fmax = REGULARIZERS[reg]
+    return fn(spec, ghats, dhats) / fmax(spec)

@@ -1,0 +1,57 @@
+"""Bit-width selection parameter sampling (paper Eq. 3).
+
+Three methods share one lowered graph so a single HLO artifact serves
+all of them, selected by *runtime scalars*:
+
+* softmax (SM):          ``hard_flag = 0``
+* argmax (AM):           ``hard_flag = 1, noise_scale = 0``
+* hard Gumbel-softmax:   ``hard_flag = 1, noise_scale = 1``
+
+The hard variants use the straight-through trick: forward is the
+one-hot argmax, backward flows through the tempered softmax.
+
+``mask`` (1 = precision allowed) is how the Rust coordinator restricts
+the candidate set at run time -- masked logits get ``-1e9`` before
+sampling.  This single mechanism implements every baseline in
+DESIGN.md Sec. 2 (fixed precision, MixPrec w/o pruning, PIT, ...).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+MASK_NEG = -1.0e9
+
+
+def sample(logits: jnp.ndarray, tau: jnp.ndarray, mask: jnp.ndarray,
+           hard_flag: jnp.ndarray, noise: jnp.ndarray) -> jnp.ndarray:
+    """Sample selection coefficients along the last axis.
+
+    ``logits``: (..., P); ``mask``: (P,); ``noise``: gumbel noise of
+    ``logits``' shape (already scaled by ``noise_scale``); ``tau`` and
+    ``hard_flag`` are scalars.
+    """
+    masked = logits + (mask - 1.0) * (-MASK_NEG)
+    soft = jax.nn.softmax(masked / tau, axis=-1)
+    z = masked + noise
+    hard = jax.nn.one_hot(
+        jnp.argmax(z, axis=-1), logits.shape[-1], dtype=logits.dtype
+    )
+    hard_st = soft + jax.lax.stop_gradient(hard - soft)
+    return soft + hard_flag * (hard_st - soft)
+
+
+def gumbel_noise(seed: jnp.ndarray, shape, scale: jnp.ndarray) -> jnp.ndarray:
+    """Gumbel(0,1) noise from an integer seed carried as a runtime input,
+    so Rust owns the randomness and lowering stays deterministic."""
+    key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+    return jax.random.gumbel(key, shape) * scale
+
+
+def init_logits(n_rows: int, pset, dtype=jnp.float32) -> jnp.ndarray:
+    """Paper Eq. 13: logits proportional to ``p / max(P)`` so high
+    precisions start dominant and 0-bit (pruning) starts weakest."""
+    pmax = max(pset)
+    row = jnp.array([p / pmax for p in pset], dtype=dtype)
+    return jnp.tile(row, (n_rows, 1))

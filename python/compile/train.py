@@ -1,0 +1,167 @@
+"""Step-function builders lowered by ``aot.py`` (paper Sec. 4.2/4.4).
+
+Optimizers are hand-rolled (Adam for weights, SGD+momentum for the
+bit-width selection parameters theta, as in the paper's recipe); every
+schedule quantity (learning rates, temperature tau, strength lambda,
+sampling mode, precision masks, RNG seed, Adam step t) is a *runtime
+input*, so one lowered artifact serves the whole experiment matrix and
+Python never re-enters the loop.
+
+State layout (the order Rust threads buffers through ``execute_b``):
+``(params, opt_w, theta, opt_th)`` flattened by jax pytree order; the
+manifest records every leaf's path/shape/dtype.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import regularizers as R
+from . import sampling
+
+PW_SET = (0, 2, 4, 8)
+PX_SET = (2, 4, 8)
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params)}
+
+
+def adam_update(params, grads, opt, t, lr, wd=1e-4,
+                b1=0.9, b2=0.999, eps=1e-8):
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt["v"], grads)
+    bc1 = 1.0 - jnp.power(b1, t)
+    bc2 = 1.0 - jnp.power(b2, t)
+
+    def upd(p, m_, v_):
+        step = lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+        return p - step - lr * wd * p
+
+    return jax.tree.map(upd, params, m, v), {"m": m, "v": v}
+
+
+def sgdm_init(params):
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def sgdm_update(params, grads, mom, lr, beta=0.9):
+    mom = jax.tree.map(lambda m_, g: beta * m_ + g, mom, grads)
+    params = jax.tree.map(lambda p, m_: p - lr * m_, params, mom)
+    return params, mom
+
+
+# ---------------------------------------------------------------------------
+# Loss / metrics
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits, labels, num_classes):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, num_classes, dtype=logits.dtype)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels)
+                    .astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Theta (bit-width selection parameters)
+# ---------------------------------------------------------------------------
+
+
+def theta_init(spec):
+    """Paper Eq. 13 ordering for gamma and delta logits."""
+    gammas = [sampling.init_logits(n, PW_SET)
+              for n in spec["gamma_groups"]]
+    delta = sampling.init_logits(max(spec["num_deltas"], 1), PX_SET)
+    return {"gamma": gammas, "delta": delta}
+
+
+def sample_theta(theta, spec, tau, hard_flag, noise_scale, seed,
+                 pw_mask, px_mask):
+    """Sample all selection coefficients for one step."""
+    ghats = []
+    for i, g in enumerate(theta["gamma"]):
+        mask = pw_mask
+        if not _group_prunable(spec, i):
+            mask = mask * jnp.array([0.0, 1.0, 1.0, 1.0], jnp.float32)
+        noise = sampling.gumbel_noise(seed + i, g.shape, noise_scale)
+        ghats.append(sampling.sample(g, tau, mask, hard_flag, noise))
+    dn = sampling.gumbel_noise(seed + 1000, theta["delta"].shape, noise_scale)
+    dhats = sampling.sample(theta["delta"], tau, px_mask, hard_flag, dn)
+    return ghats, dhats
+
+
+def _group_prunable(spec, gid):
+    return all(s["prunable"] for s in spec["layers"]
+               if s["gamma_group"] == gid)
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+
+def build_warmup_step(spec, apply, num_classes):
+    """Float training step (task loss only; no theta, no quantizers)."""
+
+    def step(params, opt, x, y, lr, t):
+        def loss_fn(p):
+            logits = apply(p, None, None, x, quant=False)
+            return cross_entropy(logits, y, num_classes), logits
+
+        (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt = adam_update(params, grads, opt, t, lr)
+        return params, opt, loss, accuracy(logits, y)
+
+    return step
+
+
+def build_search_step(spec, apply, num_classes, reg: str):
+    """Joint weight + theta step minimizing Eq. 2 with regularizer ``reg``."""
+
+    def step(params, opt_w, theta, opt_th, x, y,
+             lr_w, lr_th, tau, lam, hard_flag, noise_scale, seed, t,
+             pw_mask, px_mask):
+        def loss_fn(p, th):
+            ghats, dhats = sample_theta(th, spec, tau, hard_flag,
+                                        noise_scale, seed, pw_mask, px_mask)
+            logits = apply(p, ghats, dhats, x, quant=True)
+            task = cross_entropy(logits, y, num_classes)
+            cost = R.normalized_cost(reg, spec, ghats, dhats)
+            return task + lam * cost, (logits, task, cost)
+
+        grad_fn = jax.value_and_grad(loss_fn, argnums=(0, 1), has_aux=True)
+        (_, (logits, task, cost)), (gw, gth) = grad_fn(params, theta)
+        params, opt_w = adam_update(params, gw, opt_w, t, lr_w)
+        theta, opt_th = sgdm_update(theta, gth, opt_th, lr_th)
+        return (params, opt_w, theta, opt_th,
+                task, accuracy(logits, y), cost)
+
+    return step
+
+
+def build_eval_step(spec, apply, num_classes, reg: str = "size"):
+    """Forward-only evaluation with the current theta (soft or one-hot
+    discretized -- pass ``hard_flag=1`` for the deployed model)."""
+
+    def step(params, theta, x, y, tau, hard_flag, pw_mask, px_mask):
+        ghats, dhats = sample_theta(theta, spec, tau, hard_flag,
+                                    jnp.float32(0.0), jnp.int32(0),
+                                    pw_mask, px_mask)
+        logits = apply(params, ghats, dhats, x, quant=True)
+        loss = cross_entropy(logits, y, num_classes)
+        cost = R.normalized_cost(reg, spec, ghats, dhats)
+        return loss, accuracy(logits, y), cost
+
+    return step

@@ -1,0 +1,133 @@
+"""L1 Pallas kernels vs pure-jnp oracles — the core correctness
+signal. Hypothesis sweeps shapes and value ranges; every kernel must
+match ref.py to float32 tolerance under interpret=True."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import (
+    effective_act_pallas,
+    effective_weights_pallas,
+    qconv_int_pallas,
+)
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow],
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def rand(key, shape, lo=-3.0, hi=3.0):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape,
+                              minval=lo, maxval=hi)
+
+
+def softmax_rows(key, rows, cols):
+    return jax.nn.softmax(rand(key, (rows, cols)), axis=-1)
+
+
+class TestEffectiveWeights:
+    @given(cout=st.integers(1, 40), ck=st.integers(1, 200),
+           seed=st.integers(0, 2**16))
+    def test_matches_ref(self, cout, ck, seed):
+        w = rand(seed, (cout, ck))
+        g = softmax_rows(seed + 1, cout, 4)
+        out = effective_weights_pallas(w, g)
+        expect = ref.effective_weights_ref(w, g)
+        np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+    def test_pure_prune_is_zero(self):
+        w = rand(0, (8, 16))
+        g = jnp.tile(jnp.array([[1.0, 0.0, 0.0, 0.0]]), (8, 1))
+        out = effective_weights_pallas(w, g)
+        np.testing.assert_array_equal(np.asarray(out), np.zeros((8, 16)))
+
+    def test_one_hot_8bit_close_to_float(self):
+        w = rand(1, (8, 64))
+        g = jnp.tile(jnp.array([[0.0, 0.0, 0.0, 1.0]]), (8, 1))
+        out = effective_weights_pallas(w, g)
+        # 8-bit symmetric quantization error <= scale/2 per element
+        scale = np.abs(np.asarray(w)).max(axis=1, keepdims=True) / 127.0
+        assert np.all(np.abs(np.asarray(out - w)) <= scale / 2 + 1e-7)
+
+    def test_zero_channel_guard(self):
+        w = jnp.zeros((4, 10))
+        g = softmax_rows(3, 4, 4)
+        out = effective_weights_pallas(w, g)
+        assert np.all(np.isfinite(np.asarray(out)))
+        np.testing.assert_array_equal(np.asarray(out), np.zeros((4, 10)))
+
+    @given(cout=st.integers(1, 16), ck=st.integers(1, 64),
+           seed=st.integers(0, 2**16))
+    def test_blend_is_convex_in_magnitude(self, cout, ck, seed):
+        # |effective| can never exceed the max quantized magnitude,
+        # which is bounded by |w|_max per channel (+ half step)
+        w = rand(seed, (cout, ck))
+        g = softmax_rows(seed + 7, cout, 4)
+        out = np.asarray(effective_weights_pallas(w, g))
+        wmax = np.abs(np.asarray(w)).max(axis=1, keepdims=True)
+        assert np.all(np.abs(out) <= wmax * (1.0 + 1.0 / 1.5) + 1e-6)
+
+
+class TestEffectiveAct:
+    @given(n=st.integers(1, 3000), alpha=st.floats(0.5, 8.0),
+           seed=st.integers(0, 2**16))
+    def test_matches_ref(self, n, alpha, seed):
+        x = rand(seed, (n,), lo=-1.0, hi=8.0)
+        d = jax.nn.softmax(rand(seed + 1, (3,)))
+        out = effective_act_pallas(x, d, jnp.float32(alpha))
+        expect = ref.effective_act_ref(x, d, jnp.float32(alpha))
+        np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+    @given(shape=st.sampled_from([(2, 5, 5, 3), (1, 1), (7,), (3, 128)]))
+    def test_shape_preserved(self, shape):
+        x = rand(9, shape, lo=0.0, hi=4.0)
+        d = jnp.array([0.2, 0.3, 0.5])
+        out = effective_act_pallas(x, d, jnp.float32(6.0))
+        assert out.shape == x.shape
+
+    def test_clipping_range(self):
+        x = jnp.array([-5.0, 0.0, 2.0, 100.0])
+        d = jnp.array([0.0, 0.0, 1.0])
+        out = np.asarray(effective_act_pallas(x, d, jnp.float32(4.0)))
+        assert out.min() >= 0.0 and out.max() <= 4.0 + 1e-6
+
+    def test_8bit_one_hot_quantizes_to_grid(self):
+        x = rand(5, (100,), lo=0.0, hi=4.0)
+        d = jnp.array([0.0, 0.0, 1.0])
+        alpha = jnp.float32(4.0)
+        out = np.asarray(effective_act_pallas(x, d, alpha))
+        step = 4.0 / 255.0
+        k = np.round(out / step)
+        np.testing.assert_allclose(out, k * step, atol=1e-6)
+
+
+class TestQConv:
+    @given(m=st.integers(1, 40), ck=st.integers(1, 64), n=st.integers(1, 40),
+           seed=st.integers(0, 2**16))
+    def test_matches_ref(self, m, ck, n, seed):
+        k = jax.random.PRNGKey(seed)
+        k1, k2, k3 = jax.random.split(k, 3)
+        xq = jax.random.randint(k1, (m, ck), -127, 128)
+        wq = jax.random.randint(k2, (ck, n), -127, 128)
+        s = jax.random.uniform(k3, (n,), minval=1e-4, maxval=0.1)
+        out = qconv_int_pallas(xq, wq, s)
+        expect = ref.qconv_int_ref(xq, wq, s)
+        np.testing.assert_allclose(out, expect, rtol=1e-5)
+
+    def test_i32_accumulation_no_overflow_at_bound(self):
+        # 127*127*512 = 8.2e6 << 2^31: exact in i32
+        m, ck, n = 4, 512, 4
+        xq = jnp.full((m, ck), 127, jnp.int32)
+        wq = jnp.full((ck, n), 127, jnp.int32)
+        s = jnp.ones((n,), jnp.float32)
+        out = np.asarray(qconv_int_pallas(xq, wq, s))
+        np.testing.assert_array_equal(out, np.full((m, n), 127 * 127 * ck,
+                                                   np.float32))

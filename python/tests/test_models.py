@@ -1,0 +1,109 @@
+"""Model builders: shapes, gamma-group wiring, float/search parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import models as M
+from compile import train as T
+
+
+@pytest.mark.parametrize("name", ["resnet8", "dscnn", "resnet10"])
+class TestBuilders:
+    def test_spec_consistency(self, name):
+        spec, init_params, _ = M.BUILDERS[name]()
+        # every layer's gamma group matches its cout
+        for l in spec["layers"]:
+            assert spec["gamma_groups"][l["gamma_group"]] == l["cout"], l
+            if l["in_group"] >= 0:
+                assert spec["gamma_groups"][l["in_group"]] == l["cin"] \
+                    or l["kind"] == "dw"
+        # final layer never prunable
+        assert not spec["layers"][-1]["prunable"]
+
+    def test_param_shapes(self, name):
+        spec, init_params, _ = M.BUILDERS[name]()
+        p = init_params(jax.random.PRNGKey(0))
+        for l in spec["layers"]:
+            w = p[l["name"]]["w"]
+            if l["kind"] == "linear":
+                assert w.shape == (l["cin"], l["cout"])
+            elif l["kind"] == "dw":
+                assert w.shape == (l["k"], l["k"], l["cout"], 1)
+            else:
+                assert w.shape == (l["k"], l["k"], l["cin"], l["cout"])
+            assert p[l["name"]]["b"].shape == (l["cout"],)
+        assert p["alphas"].shape == (spec["num_deltas"],)
+
+    def test_forward_shapes(self, name):
+        spec, init_params, apply = M.BUILDERS[name]()
+        b, (h, w, c) = 4, spec["in_shape"]
+        p = init_params(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (b, h, w, c)) * 0.3 + 0.5
+        logits = apply(p, None, None, x, quant=False)
+        assert logits.shape == (b, spec["num_classes"])
+        assert np.all(np.isfinite(np.asarray(logits)))
+
+    def test_search_mode_8bit_close_to_float(self, name):
+        spec, init_params, apply = M.BUILDERS[name]()
+        b, (h, w, c) = 2, spec["in_shape"]
+        p = init_params(jax.random.PRNGKey(0))
+        x = jnp.clip(
+            jax.random.normal(jax.random.PRNGKey(1), (b, h, w, c)) * 0.3 + 0.5,
+            0.0, 1.5)
+        fl = apply(p, None, None, x, quant=False)
+        g8 = []
+        for n in spec["gamma_groups"]:
+            g = np.zeros((n, 4), np.float32)
+            g[:, 3] = 1.0
+            g8.append(jnp.asarray(g))
+        d8 = np.zeros((spec["num_deltas"], 3), np.float32)
+        d8[:, 2] = 1.0
+        q = apply(p, g8, jnp.asarray(d8), x, quant=True)
+        # logits order agreement (quantization noise must not flip the
+        # relative structure at init)
+        corr = np.corrcoef(np.asarray(fl).ravel(), np.asarray(q).ravel())[0, 1]
+        assert corr > 0.98, corr
+
+    def test_full_pruning_of_one_group_keeps_finite(self, name):
+        spec, init_params, apply = M.BUILDERS[name]()
+        b, (h, w, c) = 2, spec["in_shape"]
+        p = init_params(jax.random.PRNGKey(0))
+        x = jnp.ones((b, h, w, c)) * 0.5
+        gs = []
+        for i, n in enumerate(spec["gamma_groups"]):
+            g = np.zeros((n, 4), np.float32)
+            g[:, 0 if i == 0 else 3] = 1.0  # prune group 0 entirely
+            gs.append(jnp.asarray(g))
+        d8 = np.zeros((spec["num_deltas"], 3), np.float32)
+        d8[:, 2] = 1.0
+        out = apply(p, gs, jnp.asarray(d8), x, quant=True)
+        assert np.all(np.isfinite(np.asarray(out)))
+
+
+class TestSharing:
+    def test_resnet8_identity_block_shares_stem_group(self):
+        spec, _, _ = M.BUILDERS["resnet8"]()
+        by_name = {l["name"]: l for l in spec["layers"]}
+        assert by_name["b1_conv2"]["gamma_group"] == by_name["stem"]["gamma_group"]
+        # projection blocks share conv2 + shortcut
+        assert by_name["b2_conv2"]["gamma_group"] == by_name["b2_short"]["gamma_group"]
+        assert by_name["b3_conv2"]["gamma_group"] == by_name["b3_short"]["gamma_group"]
+
+    def test_dscnn_dw_shares_predecessor_group(self):
+        spec, _, _ = M.BUILDERS["dscnn"]()
+        by_name = {l["name"]: l for l in spec["layers"]}
+        assert by_name["dw0"]["gamma_group"] == by_name["conv0"]["gamma_group"]
+        assert by_name["dw1"]["gamma_group"] == by_name["pw0"]["gamma_group"]
+        assert by_name["dw2"]["gamma_group"] == by_name["pw1"]["gamma_group"]
+
+
+class TestThetaInit:
+    def test_shapes_match_groups(self):
+        spec, _, _ = M.BUILDERS["resnet8"]()
+        th = T.theta_init(spec)
+        assert len(th["gamma"]) == len(spec["gamma_groups"])
+        for g, n in zip(th["gamma"], spec["gamma_groups"]):
+            assert g.shape == (n, 4)
+        assert th["delta"].shape == (spec["num_deltas"], 3)

@@ -1,0 +1,96 @@
+"""Quantization primitives + STE gradient semantics."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from compile import quantlib as ql
+
+
+class TestWeightQuant:
+    @given(bits=st.sampled_from([2, 4, 8]), seed=st.integers(0, 1000))
+    @settings(deadline=None, max_examples=20)
+    def test_roundtrip_error_bounded(self, bits, seed):
+        w = jax.random.normal(jax.random.PRNGKey(seed), (6, 30))
+        q = ql.fake_quant_weight(w, bits)
+        scale = np.abs(np.asarray(w)).max(axis=1, keepdims=True) / (
+            2 ** (bits - 1) - 1
+        )
+        assert np.all(np.abs(np.asarray(q - w)) <= scale / 2 + 1e-7)
+
+    def test_int_fake_consistency(self):
+        w = jax.random.normal(jax.random.PRNGKey(3), (5, 20))
+        for bits in (2, 4, 8):
+            qi, s = ql.int_quant_weight(w, bits)
+            fq = ql.fake_quant_weight(w, bits)
+            np.testing.assert_allclose(np.asarray(qi) * np.asarray(s),
+                                       np.asarray(fq), rtol=1e-6, atol=1e-6)
+            qmax = 2 ** (bits - 1) - 1
+            assert np.abs(np.asarray(qi)).max() <= qmax
+
+    def test_levels_count(self):
+        w = jnp.linspace(-1, 1, 1000).reshape(1, -1)
+        q = np.unique(np.asarray(ql.fake_quant_weight(w, 2)))
+        assert len(q) <= 3  # symmetric 2-bit: {-1, 0, +1} * scale
+
+    def test_zero_bits_is_pruning(self):
+        w = jax.random.normal(jax.random.PRNGKey(0), (4, 9))
+        np.testing.assert_array_equal(
+            np.asarray(ql.fake_quant_weight(w, 0)), np.zeros((4, 9)))
+
+
+class TestPact:
+    def test_quant_grid(self):
+        x = jnp.linspace(-1, 7, 200)
+        for bits in (2, 4, 8):
+            q = np.asarray(ql.fake_quant_act(x, jnp.float32(6.0), bits))
+            step = 6.0 / (2**bits - 1)
+            np.testing.assert_allclose(q, np.round(q / step) * step,
+                                       atol=1e-5)
+            assert q.min() >= 0.0 and q.max() <= 6.0 + 1e-6
+
+
+class TestSTE:
+    def test_weight_grad_scales_with_keep_probability(self):
+        w = jax.random.normal(jax.random.PRNGKey(1), (3, 10))
+        # full pruning -> zero gradient to weights
+        g0 = jnp.tile(jnp.array([[1.0, 0.0, 0.0, 0.0]]), (3, 1))
+        dw = jax.grad(lambda w_: jnp.sum(ql.effective_weights(w_, g0)))(w)
+        np.testing.assert_array_equal(np.asarray(dw), np.zeros_like(dw))
+        # no pruning -> unit pass-through
+        g1 = jnp.tile(jnp.array([[0.0, 0.0, 0.0, 1.0]]), (3, 1))
+        dw = jax.grad(lambda w_: jnp.sum(ql.effective_weights(w_, g1)))(w)
+        np.testing.assert_allclose(np.asarray(dw), np.ones_like(dw))
+
+    def test_gamma_grad_is_quantized_correlation(self):
+        w = jax.random.normal(jax.random.PRNGKey(2), (2, 12))
+        g = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(3), (2, 4)))
+        dg = jax.grad(
+            lambda g_: jnp.sum(ql.effective_weights(w, g_)), argnums=0
+        )(g)
+        # column p equals sum_k fq(w, p)[c, k]; column 0 (pruning) is 0
+        np.testing.assert_array_equal(np.asarray(dg[:, 0]), np.zeros(2))
+        for j, p in enumerate((2, 4, 8), start=1):
+            expect = np.asarray(ql.fake_quant_weight(w, p)).sum(axis=1)
+            np.testing.assert_allclose(np.asarray(dg[:, j]), expect,
+                                       rtol=1e-5, atol=1e-5)
+
+    def test_pact_alpha_gradient(self):
+        # elements above alpha push alpha's gradient
+        x = jnp.array([0.5, 1.0, 5.0, 9.0])
+        d = jnp.array([0.0, 0.0, 1.0])
+        alpha = jnp.float32(4.0)
+        da = jax.grad(
+            lambda a: jnp.sum(ql.effective_act(x, d, a)), argnums=0
+        )(alpha)
+        assert float(da) == 2.0  # two elements >= alpha
+
+    def test_act_input_gradient_masks_clip(self):
+        x = jnp.array([-1.0, 2.0, 9.0])
+        d = jnp.array([0.0, 0.0, 1.0])
+        dx = jax.grad(
+            lambda x_: jnp.sum(ql.effective_act(x_, d, jnp.float32(4.0)))
+        )(x)
+        np.testing.assert_allclose(np.asarray(dx), [0.0, 1.0, 0.0])

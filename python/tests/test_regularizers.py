@@ -1,0 +1,130 @@
+"""Differentiable regularizers (Eq. 9-11 + NE16): exactness against
+one-hot assignments, monotonicity, gradients, and the pinned
+cross-language reference values shared with the Rust cost models
+(rust/tests/cross_consistency.rs asserts the same numbers)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import models as M
+from compile import regularizers as R
+
+PW = (0, 2, 4, 8)
+
+
+def one_hot_gammas(spec, bits):
+    j = PW.index(bits)
+    out = []
+    for n in spec["gamma_groups"]:
+        g = np.zeros((n, 4), np.float32)
+        g[:, j] = 1.0
+        out.append(jnp.asarray(g))
+    return out
+
+
+def a8_dhats(spec):
+    d = np.zeros((max(spec["num_deltas"], 1), 3), np.float32)
+    d[:, 2] = 1.0
+    return jnp.asarray(d)
+
+
+@pytest.fixture(scope="module")
+def r8():
+    spec, _, _ = M.build_resnet8()
+    return spec
+
+
+class TestSize:
+    def test_w8_equals_total_param_bits(self, r8):
+        g = one_hot_gammas(r8, 8)
+        got = float(R.size_bits(r8, g, a8_dhats(r8)))
+        assert got == R.size_bits_max(r8)
+
+    def test_monotone_in_bits(self, r8):
+        d = a8_dhats(r8)
+        costs = [float(R.size_bits(r8, one_hot_gammas(r8, b), d))
+                 for b in (8, 4, 2)]
+        assert costs[0] > costs[1] > costs[2]
+
+    def test_pruning_credits_consumers(self, r8):
+        d = a8_dhats(r8)
+        g = one_hot_gammas(r8, 8)
+        full = float(R.size_bits(r8, g, d))
+        # prune half the stem group (group 0)
+        gp = [x.copy() for x in g]
+        arr = np.asarray(gp[0]).copy()
+        arr[: len(arr) // 2] = [1.0, 0.0, 0.0, 0.0]
+        gp[0] = jnp.asarray(arr)
+        pruned = float(R.size_bits(r8, gp, d))
+        # savings exceed the pruned channels' own weights (consumers too)
+        stem = r8["layers"][0]
+        own = stem["cin"] * 9 * (len(arr) // 2) * 8
+        assert full - pruned > own
+
+    def test_gradient_nonzero(self, r8):
+        d = a8_dhats(r8)
+        g = one_hot_gammas(r8, 8)
+        grads = jax.grad(
+            lambda g0: R.size_bits(r8, [g0] + g[1:], d) / R.size_bits_max(r8)
+        )(g[0])
+        assert float(jnp.abs(grads).sum()) > 0
+
+
+class TestMpic:
+    def test_w8a8_cycles(self, r8):
+        g = one_hot_gammas(r8, 8)
+        got = float(R.mpic_cycles(r8, g, a8_dhats(r8)))
+        total_macs = sum(l["macs"] for l in r8["layers"])
+        np.testing.assert_allclose(got, total_macs / 2.8, rtol=1e-6)
+
+    def test_lut_symmetry(self):
+        for a in (2, 4, 8):
+            for b in (2, 4, 8):
+                assert R.MPIC_LUT[(a, b)] == R.MPIC_LUT[(b, a)]
+
+    def test_weak_pw_differentiation(self, r8):
+        d = a8_dhats(r8)
+        c8 = float(R.mpic_cycles(r8, one_hot_gammas(r8, 8), d))
+        c2 = float(R.mpic_cycles(r8, one_hot_gammas(r8, 2), d))
+        assert (c8 - c2) / c8 < 0.25  # the paper's Fig. 8 driver
+
+
+class TestNe16:
+    def test_w8a8_matches_pure_python_max(self, r8):
+        g = one_hot_gammas(r8, 8)
+        got = float(R.ne16_cycles(r8, g, a8_dhats(r8)))
+        np.testing.assert_allclose(got, R.ne16_cycles_max(r8), rtol=1e-6)
+
+    def test_bit_serial_scaling(self, r8):
+        d = a8_dhats(r8)
+        c8 = float(R.ne16_cycles(r8, one_hot_gammas(r8, 8), d))
+        c2 = float(R.ne16_cycles(r8, one_hot_gammas(r8, 2), d))
+        assert c2 < c8 / 2
+
+    def test_ste_ceil_gradient(self):
+        g = jax.grad(lambda x: R.ste_ceil(x / 32.0) * 32.0)(33.0)
+        assert float(g) == 1.0  # identity backward through the step
+
+
+class TestBitops:
+    def test_w8a8(self, r8):
+        g = one_hot_gammas(r8, 8)
+        got = float(R.bitops(r8, g, a8_dhats(r8)))
+        np.testing.assert_allclose(got, R.bitops_max(r8), rtol=1e-6)
+
+
+class TestCrossLanguagePins:
+    """Reference values shared with rust/tests/cross_consistency.rs.
+    If these change, regenerate the Rust pins too."""
+
+    def test_pinned_maxima(self, r8):
+        assert R.size_bits_max(r8) == 618880.0
+        total_macs = sum(l["macs"] for l in r8["layers"])
+        assert total_macs == 3125888
+        np.testing.assert_allclose(R.bitops_max(r8), 200056832.0)
+        np.testing.assert_allclose(R.ne16_cycles_max(r8), 18246.13888888889,
+                                   rtol=1e-9)
+        np.testing.assert_allclose(total_macs / R.MPIC_LUT[(8, 8)],
+                                   1116388.5714285716, rtol=1e-12)

@@ -1,0 +1,85 @@
+"""Sampling (Eq. 3) semantics: soft/hard variants, masks, init."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import sampling
+
+
+def logits(rows=5):
+    return jax.random.normal(jax.random.PRNGKey(0), (rows, 4))
+
+
+class TestSample:
+    def test_soft_rows_sum_to_one(self):
+        out = sampling.sample(logits(), jnp.float32(1.0), jnp.ones(4),
+                              jnp.float32(0.0), jnp.zeros((5, 4)))
+        np.testing.assert_allclose(np.asarray(out).sum(axis=-1),
+                                   np.ones(5), rtol=1e-6)
+
+    def test_hard_is_one_hot(self):
+        out = sampling.sample(logits(), jnp.float32(1.0), jnp.ones(4),
+                              jnp.float32(1.0), jnp.zeros((5, 4)))
+        o = np.asarray(out)
+        np.testing.assert_allclose(o.sum(axis=-1), np.ones(5), rtol=1e-6)
+        assert np.all((o.max(axis=-1) > 0.999))
+
+    def test_mask_zeroes_forbidden(self):
+        mask = jnp.array([0.0, 1.0, 1.0, 1.0])  # no pruning
+        out = sampling.sample(logits(), jnp.float32(1.0), mask,
+                              jnp.float32(0.0), jnp.zeros((5, 4)))
+        assert np.asarray(out)[:, 0].max() < 1e-6
+
+    def test_hard_respects_mask(self):
+        l = jnp.array([[100.0, 0.0, 0.0, 0.0]])  # wants pruning
+        mask = jnp.array([0.0, 1.0, 1.0, 1.0])
+        out = sampling.sample(l, jnp.float32(1.0), mask,
+                              jnp.float32(1.0), jnp.zeros((1, 4)))
+        assert float(out[0, 0]) < 1e-6
+
+    def test_low_tau_approaches_argmax(self):
+        l = logits()
+        soft = sampling.sample(l, jnp.float32(0.01), jnp.ones(4),
+                               jnp.float32(0.0), jnp.zeros((5, 4)))
+        hard = sampling.sample(l, jnp.float32(1.0), jnp.ones(4),
+                               jnp.float32(1.0), jnp.zeros((5, 4)))
+        np.testing.assert_allclose(np.asarray(soft), np.asarray(hard),
+                                   atol=1e-3)
+
+    def test_hard_gradient_flows_via_soft(self):
+        l = logits()
+        g = jax.grad(lambda l_: jnp.sum(
+            sampling.sample(l_, jnp.float32(1.0), jnp.ones(4),
+                            jnp.float32(1.0), jnp.zeros((5, 4))) ** 2
+        ))(l)
+        assert np.abs(np.asarray(g)).sum() > 0.0
+
+    def test_gumbel_noise_changes_selection(self):
+        l = jnp.zeros((32, 4))
+        n1 = sampling.gumbel_noise(jnp.int32(1), (32, 4), jnp.float32(1.0))
+        n2 = sampling.gumbel_noise(jnp.int32(2), (32, 4), jnp.float32(1.0))
+        s1 = sampling.sample(l, jnp.float32(1.0), jnp.ones(4),
+                             jnp.float32(1.0), n1)
+        s2 = sampling.sample(l, jnp.float32(1.0), jnp.ones(4),
+                             jnp.float32(1.0), n2)
+        assert not np.array_equal(np.asarray(s1), np.asarray(s2))
+
+    def test_noise_scale_zero_is_deterministic(self):
+        n = sampling.gumbel_noise(jnp.int32(5), (4, 4), jnp.float32(0.0))
+        np.testing.assert_array_equal(np.asarray(n), np.zeros((4, 4)))
+
+
+class TestInit:
+    def test_eq13_ordering(self):
+        l = sampling.init_logits(3, (0, 2, 4, 8))
+        row = np.asarray(l)[0]
+        assert row[0] < row[1] < row[2] < row[3]
+        np.testing.assert_allclose(row, [0.0, 0.25, 0.5, 1.0])
+
+    def test_highest_precision_dominates_at_init(self):
+        l = sampling.init_logits(4, (0, 2, 4, 8))
+        probs = sampling.sample(l, jnp.float32(1.0), jnp.ones(4),
+                                jnp.float32(0.0), jnp.zeros((4, 4)))
+        p = np.asarray(probs)[0]
+        assert p[3] == p.max() and p[0] == p.min()

@@ -1,0 +1,135 @@
+"""Train-step builders: optimizers, loss decrease, mask plumbing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import models as M
+from compile import train as T
+
+
+def setup(name="resnet8"):
+    spec, init_params, apply = M.BUILDERS[name]()
+    p = init_params(jax.random.PRNGKey(0))
+    th = T.theta_init(spec)
+    return spec, apply, p, th
+
+
+def batch(spec, seed=0):
+    b = 8
+    h, w, c = spec["in_shape"]
+    k = jax.random.PRNGKey(seed)
+    x = jnp.clip(jax.random.normal(k, (b, h, w, c)) * 0.3 + 0.5, 0, 1.5)
+    y = jax.random.randint(k, (b,), 0, spec["num_classes"])
+    return x, y
+
+
+class TestOptimizers:
+    def test_adam_moves_towards_minimum(self):
+        p = {"w": jnp.array([5.0])}
+        opt = T.adam_init(p)
+        for t in range(1, 200):
+            g = jax.tree.map(lambda w: 2 * w, p)  # grad of w^2
+            p, opt = T.adam_update(p, g, opt, float(t), 0.1, wd=0.0)
+        assert abs(float(p["w"][0])) < 0.5
+
+    def test_sgdm_momentum_accumulates(self):
+        p = {"w": jnp.array([0.0])}
+        mom = T.sgdm_init(p)
+        g = {"w": jnp.array([1.0])}
+        p1, mom = T.sgdm_update(p, g, mom, 0.1)
+        p2, mom = T.sgdm_update(p1, g, mom, 0.1)
+        # second step larger than first (momentum 0.9)
+        d1 = -float(p1["w"][0])
+        d2 = float(p1["w"][0] - p2["w"][0])
+        np.testing.assert_allclose(d2 / d1, 1.9, rtol=1e-5)
+
+
+class TestCrossEntropy:
+    def test_matches_manual(self):
+        logits = jnp.array([[2.0, 0.0, -1.0]])
+        y = jnp.array([0])
+        got = float(T.cross_entropy(logits, y, 3))
+        p = np.exp([2.0, 0.0, -1.0])
+        expect = -np.log(p[0] / p.sum())
+        np.testing.assert_allclose(got, expect, rtol=1e-6)
+
+    def test_accuracy(self):
+        logits = jnp.array([[1.0, 0.0], [0.0, 1.0]])
+        assert float(T.accuracy(logits, jnp.array([0, 1]))) == 1.0
+        assert float(T.accuracy(logits, jnp.array([1, 0]))) == 0.0
+
+
+class TestWarmup:
+    def test_loss_decreases(self):
+        spec, apply, p, _ = setup("dscnn")
+        step = jax.jit(T.build_warmup_step(spec, apply, spec["num_classes"]))
+        opt = T.adam_init(p)
+        x, y = batch(spec)
+        losses = []
+        for t in range(1, 25):
+            p, opt, loss, _ = step(p, opt, x, y, 3e-3, float(t))
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] * 0.7, losses[::6]
+
+
+class TestSearch:
+    @pytest.fixture(scope="class")
+    def jitted(self):
+        spec, apply, p, th = setup("dscnn")
+        step = jax.jit(T.build_search_step(spec, apply, spec["num_classes"],
+                                           "size"))
+        return spec, step, p, th
+
+    def test_cost_decreases_under_strength(self, jitted):
+        spec, step, p, th = jitted
+        ow, ot = T.adam_init(p), T.sgdm_init(th)
+        x, y = batch(spec)
+        pwm, pxm = jnp.ones(4), jnp.array([0.0, 0.0, 1.0])
+        costs = []
+        st = (p, ow, th, ot)
+        for t in range(1, 31):
+            out = step(*st, x, y, 1e-3, 5e-2, 1.0, 5.0, 0.0, 0.0, t, float(t),
+                       pwm, pxm)
+            st = out[:4]
+            costs.append(float(out[6]))
+        assert costs[-1] < costs[0], (costs[0], costs[-1])
+
+    def test_fixed_mask_keeps_cost_constant(self, jitted):
+        spec, step, p, th = jitted
+        ow, ot = T.adam_init(p), T.sgdm_init(th)
+        x, y = batch(spec)
+        pwm = jnp.array([0.0, 0.0, 0.0, 1.0])  # w8 only
+        pxm = jnp.array([0.0, 0.0, 1.0])
+        st = (p, ow, th, ot)
+        costs = []
+        for t in range(1, 6):
+            out = step(*st, x, y, 1e-3, 1e-2, 1.0, 1.0, 1.0, 0.0, t, float(t),
+                       pwm, pxm)
+            st = out[:4]
+            costs.append(float(out[6]))
+        np.testing.assert_allclose(costs, costs[0], rtol=1e-5)
+        np.testing.assert_allclose(costs[0], 1.0, rtol=1e-5)  # w8a8 == max
+
+    def test_theta_frozen_when_lr_zero(self, jitted):
+        spec, step, p, th = jitted
+        ow, ot = T.adam_init(p), T.sgdm_init(th)
+        x, y = batch(spec)
+        pwm, pxm = jnp.ones(4), jnp.array([0.0, 0.0, 1.0])
+        out = step(p, ow, th, ot, x, y, 1e-3, 0.0, 1.0, 1.0, 0.0, 0.0, 1, 1.0,
+                   pwm, pxm)
+        new_th = out[2]
+        for a, b in zip(jax.tree.leaves(th), jax.tree.leaves(new_th)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestEval:
+    def test_eval_deterministic(self):
+        spec, apply, p, th = setup("dscnn")
+        ev = jax.jit(T.build_eval_step(spec, apply, spec["num_classes"]))
+        x, y = batch(spec)
+        pwm, pxm = jnp.ones(4), jnp.array([0.0, 0.0, 1.0])
+        a = ev(p, th, x, y, 1.0, 1.0, pwm, pxm)
+        b = ev(p, th, x, y, 1.0, 1.0, pwm, pxm)
+        assert float(a[0]) == float(b[0]) and float(a[1]) == float(b[1])

@@ -1,0 +1,78 @@
+//! Paper Fig. 4: accuracy-vs-size Pareto fronts per sampling method
+//! (softmax / argmax / hard Gumbel-softmax) against the FP seed and
+//! w2/w4/w8 fixed-precision baselines, plus the Sec. 5.2 headline
+//! iso-accuracy size reductions.
+//!
+//! Bench scale by default; set MIXPREC_FULL=1 (and optionally
+//! MIXPREC_MODELS=resnet8,dscnn,resnet10) for the long version.
+
+use mixprec::baselines::{fixed_baselines, Method};
+use mixprec::coordinator::{default_lambdas, sweep_lambdas, Sampling};
+use mixprec::report::{self, benchkit};
+use mixprec::util::table::{f4, pct, Table};
+
+fn main() {
+    benchkit::run_bench("fig4_sampling", |ctx, scale| {
+        let models: Vec<String> = std::env::var("MIXPREC_MODELS")
+            .map(|v| v.split(',').map(|s| s.to_string()).collect())
+            .unwrap_or_else(|_| vec!["dscnn".into()]);
+        let lambdas = default_lambdas(scale.points);
+        let mut table = Table::new(
+            "Fig. 4 — accuracy vs size by sampling method",
+            &["model", "method", "lambda", "size kB", "test acc"],
+        );
+        for model in &models {
+            let runner = ctx.runner(model)?;
+            let base = scale.config(model);
+
+            // fixed-precision baselines (w2/w4/w8 a8)
+            let fixed = fixed_baselines(&runner, &base, &[2, 4, 8])?;
+            for (b, r) in [2, 4, 8].iter().zip(&fixed) {
+                table.row(vec![
+                    model.clone(),
+                    format!("w{b}a8"),
+                    "-".into(),
+                    format!("{:.2}", r.size_kb),
+                    f4(r.test_acc),
+                ]);
+            }
+
+            let mut headline: Vec<String> = Vec::new();
+            for sampling in [Sampling::Softmax, Sampling::Argmax, Sampling::Gumbel] {
+                let mut cfg = Method::Joint.configure(&base);
+                cfg.sampling = sampling;
+                let sw = sweep_lambdas(&runner, &cfg, &lambdas, "size", scale.workers)?;
+                for r in &sw.runs {
+                    table.row(vec![
+                        model.clone(),
+                        sampling.label().into(),
+                        format!("{:.3}", r.lambda),
+                        format!("{:.2}", r.size_kb),
+                        f4(r.test_acc),
+                    ]);
+                }
+                // Sec. 5.2 headline: iso-accuracy reduction vs w8a8/w2a8
+                if sampling == Sampling::Softmax {
+                    let front = sw.front_test();
+                    for (b, r) in [8usize, 2].iter().zip([&fixed[2], &fixed[0]]) {
+                        if let Some((red, cost)) =
+                            report::iso_accuracy_reduction(&front, r.test_acc, r.size_kb)
+                        {
+                            headline.push(format!(
+                                "{model}: {} smaller than w{b}a8 at iso-accuracy \
+                                 ({cost:.2} vs {:.2} kB; paper: 47.50% vs w8, 69.54% vs w2)",
+                                pct(red),
+                                r.size_kb
+                            ));
+                        }
+                    }
+                }
+            }
+            for h in &headline {
+                println!("HEADLINE {h}");
+            }
+        }
+        table.emit("fig4_sampling.csv");
+        Ok(())
+    });
+}

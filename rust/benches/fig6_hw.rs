@@ -1,0 +1,77 @@
+//! Paper Fig. 6: accuracy vs execution cycles when training with the
+//! MPIC or NE16 latency regularizer, each model then *deployed* on
+//! both targets (the cost-model-mismatch experiment).
+//!
+//! Shape to reproduce: NE16-regularized models win on NE16 (the MPIC
+//! regularizer's assignments waste NE16's 32-channel PE granularity),
+//! while MPIC deployment is tolerant of either regularizer.
+
+use mixprec::baselines::Method;
+use mixprec::coordinator::{default_lambdas, sweep_lambdas};
+use mixprec::report::benchkit;
+use mixprec::util::table::{f4, Table};
+
+fn main() {
+    benchkit::run_bench("fig6_hw", |ctx, scale| {
+        let model = std::env::var("MIXPREC_MODEL").unwrap_or_else(|_| "resnet8".into());
+        let runner = ctx.runner(&model)?;
+        let base = scale.config(&model);
+        let lambdas = default_lambdas(scale.points);
+        let mut table = Table::new(
+            &format!("Fig. 6 — HW-aware cost models ({model})"),
+            &[
+                "trained with",
+                "lambda",
+                "test acc",
+                "MPIC Mcycles",
+                "NE16 kcycles",
+            ],
+        );
+        let mut per_reg: Vec<(String, Vec<(f64, f64, f64)>)> = Vec::new();
+        for reg in ["mpic", "ne16"] {
+            let mut cfg = Method::Joint.configure(&base);
+            cfg.reg = reg.to_string();
+            let sw = sweep_lambdas(&runner, &cfg, &lambdas, reg, scale.workers)?;
+            let mut pts = Vec::new();
+            for r in &sw.runs {
+                table.row(vec![
+                    reg.to_uppercase(),
+                    format!("{:.3}", r.lambda),
+                    f4(r.test_acc),
+                    format!("{:.3}", r.mpic_cycles / 1e6),
+                    format!("{:.1}", r.ne16_cycles / 1e3),
+                ]);
+                pts.push((r.test_acc, r.mpic_cycles, r.ne16_cycles));
+            }
+            per_reg.push((reg.to_string(), pts));
+        }
+        table.emit("fig6_hw.csv");
+
+        // mismatch check: among accuracy-comparable points, the model
+        // trained with the matching regularizer should be faster on
+        // that target (averaged over the sweep).
+        let avg = |pts: &[(f64, f64, f64)], idx: usize| -> f64 {
+            pts.iter()
+                .map(|p| if idx == 0 { p.1 } else { p.2 })
+                .sum::<f64>()
+                / pts.len().max(1) as f64
+        };
+        let (mpic_pts, ne16_pts) = (&per_reg[0].1, &per_reg[1].1);
+        println!(
+            "SHAPE on NE16: ne16-trained avg {:.1} kcyc vs mpic-trained {:.1} kcyc -> {}",
+            avg(ne16_pts, 1) / 1e3,
+            avg(mpic_pts, 1) / 1e3,
+            if avg(ne16_pts, 1) <= avg(mpic_pts, 1) {
+                "HOLDS (matching cost model wins on NE16)"
+            } else {
+                "check"
+            }
+        );
+        println!(
+            "SHAPE on MPIC: mpic-trained avg {:.3} Mcyc vs ne16-trained {:.3} Mcyc",
+            avg(mpic_pts, 0) / 1e6,
+            avg(ne16_pts, 0) / 1e6,
+        );
+        Ok(())
+    });
+}

@@ -1,0 +1,67 @@
+//! Paper Fig. 9: joint weight+activation precision search (layer-wise
+//! P_X = {2,4,8}) vs weights-only search with 8-bit activations, both
+//! under the bitops cost model, on CIFAR-10 (resnet8).
+//!
+//! Shape to reproduce: opening the activation precisions improves the
+//! bitops trade-off, but less dramatically than for pure-MPS methods —
+//! pruning weight channels already buys what cheaper activations would
+//! (the paper's Sec. 5.5.2 argument).
+
+use mixprec::assignment::PrecisionMasks;
+use mixprec::baselines::Method;
+use mixprec::coordinator::{default_lambdas, sweep_lambdas};
+use mixprec::report::benchkit;
+use mixprec::util::table::{f4, Table};
+
+fn main() {
+    benchkit::run_bench("fig9_act", |ctx, scale| {
+        let model = std::env::var("MIXPREC_MODEL").unwrap_or_else(|_| "resnet8".into());
+        let runner = ctx.runner(&model)?;
+        let base = scale.config(&model);
+        let lambdas = default_lambdas(scale.points);
+        let mut table = Table::new(
+            &format!("Fig. 9 — activation MPS under bitops ({model})"),
+            &["P_X", "lambda", "Gbitops", "test acc", "act bits"],
+        );
+        let mut avg_bitops = Vec::new();
+        for (label, masks) in [
+            ("a8 fixed", PrecisionMasks::joint()),
+            ("{2,4,8} searched", PrecisionMasks::joint_act()),
+        ] {
+            let mut cfg = Method::Joint.configure(&base);
+            cfg.reg = "bitops".into();
+            cfg.masks = masks;
+            let sw = sweep_lambdas(&runner, &cfg, &lambdas, "bitops", scale.workers)?;
+            let mut tot = 0.0;
+            for r in &sw.runs {
+                let act_bits: Vec<String> = r
+                    .assignment
+                    .delta_bits
+                    .iter()
+                    .map(|b| b.to_string())
+                    .collect();
+                table.row(vec![
+                    label.to_string(),
+                    format!("{:.3}", r.lambda),
+                    format!("{:.3}", r.bitops / 1e9),
+                    f4(r.test_acc),
+                    act_bits.join(","),
+                ]);
+                tot += r.bitops;
+            }
+            avg_bitops.push(tot / sw.runs.len().max(1) as f64);
+        }
+        table.emit("fig9_act.csv");
+        println!(
+            "SHAPE searched activations avg {:.3} Gbitops vs fixed a8 {:.3} -> {}",
+            avg_bitops[1] / 1e9,
+            avg_bitops[0] / 1e9,
+            if avg_bitops[1] <= avg_bitops[0] * 1.05 {
+                "HOLDS (comparable or better trade-off)"
+            } else {
+                "check"
+            }
+        );
+        Ok(())
+    });
+}

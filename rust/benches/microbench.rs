@@ -1,0 +1,120 @@
+//! L3 micro-benchmarks (hand-rolled harness; no criterion offline):
+//! the coordinator hot paths — step-function invocation latency,
+//! cost-model evaluation, discretization, reorder/split, JSON parse —
+//! with simple mean/min/max timing. Feeds EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+use mixprec::assignment::{self, Assignment, PrecisionMasks};
+use mixprec::cost::by_name;
+use mixprec::data::Split;
+use mixprec::deploy::{reorder_assignment, split_layers};
+use mixprec::report::benchkit;
+use mixprec::runtime::{StepFn, TrainState};
+use mixprec::util::rng::Pcg64;
+use mixprec::util::tensor::Tensor;
+
+fn time_it(name: &str, iters: usize, mut f: impl FnMut()) {
+    // warmup
+    f();
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let min = samples.iter().cloned().fold(f64::MAX, f64::min);
+    let max = samples.iter().cloned().fold(0.0f64, f64::max);
+    println!("bench {name:40} mean {mean:9.3} ms  min {min:9.3}  max {max:9.3}  (n={iters})");
+}
+
+fn main() {
+    benchkit::run_bench("microbench", |ctx, _scale| {
+        let model = "resnet8";
+        let mm = ctx.man.model(model)?;
+        let graph = ctx.graph(model);
+        let data = ctx.dataset(model);
+        let masks = PrecisionMasks::joint();
+
+        // ---- step latency: warmup vs search vs eval ---------------------
+        let mut state = TrainState::init(&ctx.eng, &ctx.man, mm, 7)?;
+        let warm = StepFn::bind(&ctx.eng, &ctx.man, mm, "warmup")?;
+        let search = StepFn::bind(&ctx.eng, &ctx.man, mm, "search_size")?;
+        let eval = StepFn::bind(&ctx.eng, &ctx.man, mm, "eval")?;
+        let idx: Vec<usize> = (0..mm.batch).collect();
+        let (x, y) = data.batch(Split::Train, &idx, mm.batch);
+
+        let mut t = 0f32;
+        time_it("warmup step (B=32)", 30, || {
+            t += 1.0;
+            warm.step(
+                &mut state,
+                &[x.clone(), y.clone(), Tensor::scalar_f32(1e-3), Tensor::scalar_f32(t)],
+            )
+            .unwrap();
+        });
+        let mut rng = Pcg64::new(1);
+        time_it("search step (B=32, size reg)", 30, || {
+            t += 1.0;
+            search
+                .step(
+                    &mut state,
+                    &[
+                        x.clone(),
+                        y.clone(),
+                        Tensor::scalar_f32(1e-3),
+                        Tensor::scalar_f32(1e-2),
+                        Tensor::scalar_f32(1.0),
+                        Tensor::scalar_f32(0.5),
+                        Tensor::scalar_f32(0.0),
+                        Tensor::scalar_f32(0.0),
+                        Tensor::scalar_i32(rng.next_u64() as i32),
+                        Tensor::scalar_f32(t),
+                        masks.pw_tensor(),
+                        masks.px_tensor(),
+                    ],
+                )
+                .unwrap();
+        });
+        time_it("eval step (B=32, hard)", 30, || {
+            eval.step(
+                &mut state,
+                &[
+                    x.clone(),
+                    y.clone(),
+                    Tensor::scalar_f32(0.02),
+                    Tensor::scalar_f32(1.0),
+                    masks.pw_tensor(),
+                    masks.px_tensor(),
+                ],
+            )
+            .unwrap();
+        });
+
+        // ---- host-side hot paths ----------------------------------------
+        let asg = assignment::discretize(&state, mm, graph, &masks)?;
+        time_it("discretize theta", 200, || {
+            assignment::discretize(&state, mm, graph, &masks).unwrap();
+        });
+        for reg in ["size", "bitops", "mpic", "ne16"] {
+            let m = by_name(reg).unwrap();
+            time_it(&format!("cost model eval ({reg})"), 500, || {
+                std::hint::black_box(m.cost(graph, &asg));
+            });
+        }
+        time_it("reorder + split", 500, || {
+            let plan = reorder_assignment(&asg);
+            std::hint::black_box(split_layers(graph, &plan));
+        });
+        let manifest_text =
+            std::fs::read_to_string(ctx.man.dir.join("manifest.json")).unwrap();
+        time_it("manifest JSON parse", 50, || {
+            std::hint::black_box(
+                mixprec::util::json::Json::parse(&manifest_text).unwrap(),
+            );
+        });
+        let _ = Assignment::uniform(graph, 8);
+        Ok(())
+    });
+}

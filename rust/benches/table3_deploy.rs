@@ -1,0 +1,93 @@
+//! Paper Table 3: High / Medium / Low models from the MPIC- and
+//! NE16-regularized Pareto fronts, deployed on both targets with
+//! accuracy, size, cycles, latency and energy — plus the w8/w4/w2
+//! fixed-precision baselines.
+
+use mixprec::baselines::{fixed_baselines, Method};
+use mixprec::coordinator::{default_lambdas, sweep_lambdas, RunResult};
+use mixprec::cost::mpic::{MPIC_FREQ_HZ, MPIC_POWER_W};
+use mixprec::cost::ne16::NE16_FREQ_HZ;
+use mixprec::report::benchkit;
+use mixprec::util::table::{f2, Table};
+
+fn row_of(label: &str, r: &RunResult) -> Vec<String> {
+    let mpic_ms = r.mpic_cycles / MPIC_FREQ_HZ * 1e3;
+    let ne16_ms = r.ne16_cycles / NE16_FREQ_HZ * 1e3;
+    vec![
+        label.to_string(),
+        format!("{:.2}", 100.0 * r.test_acc),
+        f2(r.size_kb),
+        format!("{:.3}", r.mpic_cycles / 1e6),
+        format!("{mpic_ms:.3}"),
+        format!("{:.2}", mpic_ms * MPIC_POWER_W * 1e3),
+        format!("{:.1}", r.ne16_cycles / 1e3),
+        format!("{ne16_ms:.4}"),
+    ]
+}
+
+/// Select High (most cycles on the front), Low (fastest above an
+/// accuracy floor) and Medium (closest to their midpoint), as in the
+/// paper.
+fn pick_hml<'a>(runs: &'a [RunResult], metric: &str, floor: f64) -> Vec<(&'static str, &'a RunResult)> {
+    let mut out = Vec::new();
+    let hi = runs
+        .iter()
+        .max_by(|a, b| a.cost_of(metric).partial_cmp(&b.cost_of(metric)).unwrap());
+    let lo = runs
+        .iter()
+        .filter(|r| r.val_acc >= floor)
+        .min_by(|a, b| a.cost_of(metric).partial_cmp(&b.cost_of(metric)).unwrap())
+        .or_else(|| {
+            runs.iter()
+                .min_by(|a, b| a.cost_of(metric).partial_cmp(&b.cost_of(metric)).unwrap())
+        });
+    if let (Some(hi), Some(lo)) = (hi, lo) {
+        let mid_target = (hi.cost_of(metric) + lo.cost_of(metric)) / 2.0;
+        let mid = runs.iter().min_by(|a, b| {
+            (a.cost_of(metric) - mid_target)
+                .abs()
+                .partial_cmp(&(b.cost_of(metric) - mid_target).abs())
+                .unwrap()
+        });
+        out.push(("High", hi));
+        if let Some(m) = mid {
+            out.push(("Medium", m));
+        }
+        out.push(("Low", lo));
+    }
+    out
+}
+
+fn main() {
+    benchkit::run_bench("table3_deploy", |ctx, scale| {
+        let model = std::env::var("MIXPREC_MODEL").unwrap_or_else(|_| "resnet8".into());
+        let runner = ctx.runner(&model)?;
+        let base = scale.config(&model);
+        let lambdas = default_lambdas(scale.points);
+        let mut table = Table::new(
+            &format!("Table 3 — deployment on MPIC / NE16 ({model})"),
+            &[
+                "model", "acc %", "size kB", "MPIC Mcyc", "MPIC ms", "MPIC uJ",
+                "NE16 kcyc", "NE16 ms",
+            ],
+        );
+        // accuracy floor analogous to the paper's 70%: chance * 7
+        let floor = 7.0 / ctx.graph(&model).num_classes as f64;
+        for reg in ["mpic", "ne16"] {
+            let mut cfg = Method::Joint.configure(&base);
+            cfg.reg = reg.into();
+            let sw = sweep_lambdas(&runner, &cfg, &lambdas, reg, scale.workers)?;
+            for (band, r) in pick_hml(&sw.runs, reg, floor) {
+                table.row(row_of(&format!("{band}_{}", reg.to_uppercase()), r));
+            }
+        }
+        for (b, r) in [2u32, 4, 8]
+            .iter()
+            .zip(fixed_baselines(&runner, &base, &[2, 4, 8])?)
+        {
+            table.row(row_of(&format!("w{b}a8"), &r));
+        }
+        table.emit("table3_deploy.csv");
+        Ok(())
+    });
+}

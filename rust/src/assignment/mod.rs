@@ -1,0 +1,406 @@
+//! Bit-width selection parameter (theta) bookkeeping on the host:
+//! precision-set masks, Eq. 12 weight rescaling, Eq. 7/8
+//! discretization, per-layer bit-width histograms, and the final
+//! `Assignment` consumed by the exact cost models and deploy
+//! transforms.
+
+use crate::error::{Error, Result};
+use crate::graph::ModelGraph;
+use crate::runtime::{ModelManifest, TrainState};
+use crate::util::tensor::{argmax_rows, softmax_rows, Tensor};
+
+pub const PW_SET: [u32; 4] = [0, 2, 4, 8];
+pub const PX_SET: [u32; 3] = [2, 4, 8];
+pub const MASK_NEG: f32 = -1.0e9;
+
+/// Runtime precision-set restriction (DESIGN.md Sec. 2: this one
+/// mechanism implements the fixed-precision, MixPrec, PIT and EdMIPS
+/// baselines on the same artifact).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrecisionMasks {
+    /// 1.0 = allowed, 0.0 = forbidden; indexed like `PW_SET`.
+    pub pw: [f32; 4],
+    /// indexed like `PX_SET`.
+    pub px: [f32; 3],
+}
+
+impl PrecisionMasks {
+    /// The paper's full search space: all of {0,2,4,8} x activations 8-bit.
+    pub fn joint() -> Self {
+        PrecisionMasks {
+            pw: [1.0; 4],
+            px: [0.0, 0.0, 1.0],
+        }
+    }
+
+    /// Joint search including activation precision (paper Fig. 9).
+    pub fn joint_act() -> Self {
+        PrecisionMasks {
+            pw: [1.0; 4],
+            px: [1.0; 3],
+        }
+    }
+
+    /// MixPrec [8]: channel-wise MPS without pruning.
+    pub fn mixprec() -> Self {
+        PrecisionMasks {
+            pw: [0.0, 1.0, 1.0, 1.0],
+            px: [0.0, 0.0, 1.0],
+        }
+    }
+
+    /// PIT-like pruning-only: {0-bit, 8-bit}.
+    pub fn prune_only() -> Self {
+        PrecisionMasks {
+            pw: [1.0, 0.0, 0.0, 1.0],
+            px: [0.0, 0.0, 1.0],
+        }
+    }
+
+    /// Fixed precision wN a8 (N in {2,4,8}).
+    pub fn fixed(bits: u32) -> Result<Self> {
+        let mut pw = [0.0; 4];
+        let i = PW_SET
+            .iter()
+            .position(|&p| p == bits)
+            .ok_or_else(|| Error::Config(format!("bits {bits} not in PW set")))?;
+        pw[i] = 1.0;
+        Ok(PrecisionMasks {
+            pw,
+            px: [0.0, 0.0, 1.0],
+        })
+    }
+
+    pub fn pw_tensor(&self) -> Tensor {
+        Tensor::f32(vec![4], self.pw.to_vec())
+    }
+
+    pub fn px_tensor(&self) -> Tensor {
+        Tensor::f32(vec![3], self.px.to_vec())
+    }
+
+    pub fn allows_pruning(&self) -> bool {
+        self.pw[0] > 0.0
+    }
+}
+
+/// Discretized per-channel / per-activation precision assignment
+/// (paper Eq. 7/8 output).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Assignment {
+    /// `gamma_bits[g][c]` = bits of channel `c` in group `g` (0 == pruned).
+    pub gamma_bits: Vec<Vec<u32>>,
+    /// `delta_bits[d]` = activation bits of tensor `d`.
+    pub delta_bits: Vec<u32>,
+}
+
+impl Assignment {
+    /// All channels at `bits`, activations at 8 (the wNa8 baselines).
+    pub fn uniform(graph: &ModelGraph, bits: u32) -> Self {
+        Assignment {
+            gamma_bits: graph
+                .gamma_groups
+                .iter()
+                .map(|&n| vec![bits; n])
+                .collect(),
+            delta_bits: vec![8; graph.num_deltas],
+        }
+    }
+
+    pub fn kept_channels(&self, group: usize) -> usize {
+        self.gamma_bits[group].iter().filter(|&&b| b > 0).count()
+    }
+
+    pub fn pruned_channels(&self, group: usize) -> usize {
+        self.gamma_bits[group].len() - self.kept_channels(group)
+    }
+
+    /// Channels of `group` at exactly `bits`.
+    pub fn channels_at(&self, group: usize, bits: u32) -> usize {
+        self.gamma_bits[group].iter().filter(|&&b| b == bits).count()
+    }
+
+    /// Effective input channel count for a layer (paper's C_in,eff).
+    pub fn cin_eff(&self, _graph: &ModelGraph, layer: &crate::graph::Layer) -> usize {
+        if layer.in_group < 0 {
+            layer.cin
+        } else {
+            self.kept_channels(layer.in_group as usize)
+        }
+    }
+
+    /// Input activation bits for a layer (network input counts as 8).
+    pub fn in_bits(&self, layer: &crate::graph::Layer) -> u32 {
+        if layer.in_delta < 0 {
+            8
+        } else {
+            self.delta_bits[layer.in_delta as usize]
+        }
+    }
+}
+
+/// Theta view: gamma logits per group + delta logits, extracted from
+/// the train state via the manifest leaf names.
+pub struct ThetaView {
+    /// (channels, 4) logits per group.
+    pub gamma: Vec<Vec<f32>>,
+    pub gamma_rows: Vec<usize>,
+    /// (num_deltas, 3) logits.
+    pub delta: Vec<f32>,
+    pub delta_rows: usize,
+}
+
+pub fn theta_view(
+    state: &TrainState,
+    mm: &ModelManifest,
+    graph: &ModelGraph,
+) -> Result<ThetaView> {
+    let mut gamma = Vec::new();
+    let mut gamma_rows = Vec::new();
+    for g in 0..graph.gamma_groups.len() {
+        let t = state.leaf(mm, "theta", &format!("theta['gamma'][{g}]"))?;
+        gamma.push(t.as_f32().to_vec());
+        gamma_rows.push(t.shape[0]);
+    }
+    let d = state.leaf(mm, "theta", "theta['delta']")?;
+    Ok(ThetaView {
+        gamma,
+        gamma_rows,
+        delta: d.as_f32().to_vec(),
+        delta_rows: d.shape[0],
+    })
+}
+
+/// Per-group sampled probabilities under the given masks (softmax with
+/// temperature `tau`), mirroring `python/compile/sampling.py`.
+pub fn gamma_probs(
+    view: &ThetaView,
+    graph: &ModelGraph,
+    masks: &PrecisionMasks,
+    tau: f32,
+) -> Vec<Vec<f32>> {
+    view.gamma
+        .iter()
+        .enumerate()
+        .map(|(g, logits)| {
+            let mut masked = logits.clone();
+            let prunable = graph.group_prunable(g);
+            for (i, v) in masked.iter_mut().enumerate() {
+                let col = i % 4;
+                let allowed = masks.pw[col] > 0.0 && (col != 0 || prunable);
+                if !allowed {
+                    *v = MASK_NEG;
+                }
+            }
+            softmax_rows(&masked, view.gamma_rows[g], 4, tau)
+        })
+        .collect()
+}
+
+pub fn delta_probs(view: &ThetaView, masks: &PrecisionMasks, tau: f32) -> Vec<f32> {
+    let mut masked = view.delta.clone();
+    for (i, v) in masked.iter_mut().enumerate() {
+        if masks.px[i % 3] == 0.0 {
+            *v = MASK_NEG;
+        }
+    }
+    softmax_rows(&masked, view.delta_rows, 3, tau)
+}
+
+/// Paper Eq. 7/8: argmax discretization of theta into an `Assignment`.
+pub fn discretize(
+    state: &TrainState,
+    mm: &ModelManifest,
+    graph: &ModelGraph,
+    masks: &PrecisionMasks,
+) -> Result<Assignment> {
+    let view = theta_view(state, mm, graph)?;
+    let gprobs = gamma_probs(&view, graph, masks, 1.0);
+    let mut gamma_bits = Vec::new();
+    for (g, probs) in gprobs.iter().enumerate() {
+        let rows = view.gamma_rows[g];
+        let idx = argmax_rows(probs, rows, 4);
+        gamma_bits.push(idx.into_iter().map(|i| PW_SET[i]).collect());
+    }
+    let dprobs = delta_probs(&view, masks, 1.0);
+    let idx = argmax_rows(&dprobs, view.delta_rows, 3);
+    Ok(Assignment {
+        gamma_bits,
+        delta_bits: idx.into_iter().map(|i| PX_SET[i]).collect(),
+    })
+}
+
+/// Paper Eq. 12: rescale weights entering the search phase so the
+/// 0-bit branch does not systematically shrink the effective tensor.
+/// `W_c <- W_c / sum_{p != 0} gamma_hat_{c,p}` per output channel.
+pub fn rescale_weights(
+    state: &mut TrainState,
+    mm: &ModelManifest,
+    graph: &ModelGraph,
+    masks: &PrecisionMasks,
+    tau: f32,
+) -> Result<()> {
+    let view = theta_view(state, mm, graph)?;
+    let gprobs = gamma_probs(&view, graph, masks, tau);
+    for layer in &graph.layers {
+        let probs = &gprobs[layer.gamma_group];
+        let wname = format!("params['{}']['w']", layer.name);
+        let w = state.leaf_mut(mm, "params", &wname)?;
+        let shape = w.shape.clone();
+        let data = w.as_f32_mut();
+        // weight layouts: conv (k,k,cin,cout), dw (k,k,c,1), linear (in,out)
+        let (cout_axis_len, chan_of): (usize, Box<dyn Fn(usize) -> usize>) =
+            match layer.kind {
+                crate::graph::LayerKind::Linear => {
+                    let cout = shape[1];
+                    (cout, Box::new(move |i| i % cout))
+                }
+                crate::graph::LayerKind::Depthwise => {
+                    // (k,k,c,1): channel axis is dim 2
+                    let c = shape[2];
+                    (c, Box::new(move |i| i % c))
+                }
+                crate::graph::LayerKind::Conv => {
+                    let cout = shape[3];
+                    (cout, Box::new(move |i| i % cout))
+                }
+            };
+        debug_assert_eq!(cout_axis_len, layer.cout);
+        for (i, v) in data.iter_mut().enumerate() {
+            let c = chan_of(i);
+            let keep: f32 = probs[c * 4 + 1] + probs[c * 4 + 2] + probs[c * 4 + 3];
+            if keep > 1e-6 {
+                *v /= keep;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Per-layer share of channels at each precision (paper Fig. 7/8).
+#[derive(Debug, Clone)]
+pub struct BitHistogram {
+    pub layer: String,
+    /// counts indexed like PW_SET: [pruned, 2b, 4b, 8b]
+    pub counts: [usize; 4],
+}
+
+pub fn per_layer_histogram(graph: &ModelGraph, asg: &Assignment) -> Vec<BitHistogram> {
+    graph
+        .layers
+        .iter()
+        .map(|l| {
+            let mut counts = [0usize; 4];
+            for &b in &asg.gamma_bits[l.gamma_group] {
+                let i = PW_SET.iter().position(|&p| p == b).unwrap();
+                counts[i] += 1;
+            }
+            BitHistogram {
+                layer: l.name.clone(),
+                counts,
+            }
+        })
+        .collect()
+}
+
+/// Whole-model weighted bit distribution: fraction of *parameters* at
+/// each precision (paper Fig. 8 plots parameter shares).
+pub fn param_share_by_bits(graph: &ModelGraph, asg: &Assignment) -> [f64; 4] {
+    let mut bits_count = [0f64; 4];
+    let mut total = 0f64;
+    for l in &graph.layers {
+        let per_ch = l.weights_per_channel() as f64;
+        for &b in &asg.gamma_bits[l.gamma_group] {
+            let i = PW_SET.iter().position(|&p| p == b).unwrap();
+            bits_count[i] += per_ch;
+            total += per_ch;
+        }
+    }
+    if total > 0.0 {
+        for v in &mut bits_count {
+            *v /= total;
+        }
+    }
+    bits_count
+}
+
+/// Project gamma logits onto the layer-wise subspace (row mean), the
+/// EdMIPS layer-wise-MPS emulation. Applied after every search step.
+pub fn project_layerwise(state: &mut TrainState, mm: &ModelManifest, graph: &ModelGraph) -> Result<()> {
+    for g in 0..graph.gamma_groups.len() {
+        let t = state.leaf_mut(mm, "theta", &format!("theta['gamma'][{g}]"))?;
+        let rows = t.shape[0];
+        let data = t.as_f32_mut();
+        let mut mean = [0f32; 4];
+        for r in 0..rows {
+            for c in 0..4 {
+                mean[c] += data[r * 4 + c];
+            }
+        }
+        for m in &mut mean {
+            *m /= rows as f32;
+        }
+        for r in 0..rows {
+            for c in 0..4 {
+                data[r * 4 + c] = mean[c];
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ModelGraph {
+        // mirror graph::tests::tiny_graph without cross-module test dep
+        let text = r#"{
+          "model": "tiny", "in_shape": [8,8,3], "num_classes": 4, "batch": 2,
+          "layers": [
+            {"name":"c0","kind":"conv","cin":3,"cout":8,"k":3,"stride":1,
+             "out_h":8,"out_w":8,"gamma_group":0,"in_group":-1,
+             "delta_idx":0,"in_delta":-1,"prunable":true,"macs":13824},
+            {"name":"fc","kind":"linear","cin":8,"cout":4,"k":1,"stride":1,
+             "out_h":1,"out_w":1,"gamma_group":1,"in_group":0,
+             "delta_idx":-1,"in_delta":0,"prunable":false,"macs":32}
+          ],
+          "gamma_groups": [8, 4], "num_deltas": 1,
+          "pw_set": [0,2,4,8], "px_set": [2,4,8]
+        }"#;
+        ModelGraph::from_json(&crate::util::json::Json::parse(text).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn masks_shapes() {
+        let m = PrecisionMasks::joint();
+        assert!(m.allows_pruning());
+        assert!(!PrecisionMasks::mixprec().allows_pruning());
+        assert_eq!(PrecisionMasks::fixed(4).unwrap().pw, [0.0, 0.0, 1.0, 0.0]);
+        assert!(PrecisionMasks::fixed(3).is_err());
+    }
+
+    #[test]
+    fn uniform_assignment() {
+        let g = tiny();
+        let a = Assignment::uniform(&g, 8);
+        assert_eq!(a.kept_channels(0), 8);
+        assert_eq!(a.channels_at(0, 8), 8);
+        assert_eq!(a.delta_bits, vec![8]);
+        assert_eq!(a.cin_eff(&g, &g.layers[1]), 8);
+        assert_eq!(a.in_bits(&g.layers[0]), 8);
+    }
+
+    #[test]
+    fn histogram_and_share() {
+        let g = tiny();
+        let mut a = Assignment::uniform(&g, 8);
+        a.gamma_bits[0][0] = 0;
+        a.gamma_bits[0][1] = 2;
+        let h = per_layer_histogram(&g, &a);
+        assert_eq!(h[0].counts, [1, 1, 0, 6]);
+        let share = param_share_by_bits(&g, &a);
+        assert!((share.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(share[3] > share[0]);
+    }
+}

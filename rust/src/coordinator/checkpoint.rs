@@ -1,0 +1,155 @@
+//! Binary checkpointing of `TrainState` (simple tagged format: magic,
+//! section count, per-section name + tensor list with shape/dtype).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::runtime::TrainState;
+use crate::util::tensor::{Tensor, TensorData};
+
+const MAGIC: &[u8; 8] = b"MIXPREC1";
+
+pub fn save(state: &TrainState, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    write_u32(&mut f, state.sections.len() as u32)?;
+    for (name, tensors) in &state.sections {
+        write_str(&mut f, name)?;
+        write_u32(&mut f, tensors.len() as u32)?;
+        for t in tensors {
+            write_u32(&mut f, t.shape.len() as u32)?;
+            for &d in &t.shape {
+                write_u32(&mut f, d as u32)?;
+            }
+            match &t.data {
+                TensorData::F32(v) => {
+                    write_u32(&mut f, 0)?;
+                    write_u32(&mut f, v.len() as u32)?;
+                    for x in v {
+                        f.write_all(&x.to_le_bytes())?;
+                    }
+                }
+                TensorData::I32(v) => {
+                    write_u32(&mut f, 1)?;
+                    write_u32(&mut f, v.len() as u32)?;
+                    for x in v {
+                        f.write_all(&x.to_le_bytes())?;
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<TrainState> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::msg("bad checkpoint magic"));
+    }
+    let nsec = read_u32(&mut f)? as usize;
+    let mut state = TrainState::default();
+    for _ in 0..nsec {
+        let name = read_str(&mut f)?;
+        let nt = read_u32(&mut f)? as usize;
+        let mut tensors = Vec::with_capacity(nt);
+        for _ in 0..nt {
+            let rank = read_u32(&mut f)? as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(read_u32(&mut f)? as usize);
+            }
+            let dtype = read_u32(&mut f)?;
+            let n = read_u32(&mut f)? as usize;
+            let t = match dtype {
+                0 => {
+                    let mut v = vec![0f32; n];
+                    for x in &mut v {
+                        let mut b = [0u8; 4];
+                        f.read_exact(&mut b)?;
+                        *x = f32::from_le_bytes(b);
+                    }
+                    Tensor::f32(shape, v)
+                }
+                1 => {
+                    let mut v = vec![0i32; n];
+                    for x in &mut v {
+                        let mut b = [0u8; 4];
+                        f.read_exact(&mut b)?;
+                        *x = i32::from_le_bytes(b);
+                    }
+                    Tensor::i32(shape, v)
+                }
+                other => return Err(Error::msg(format!("bad dtype tag {other}"))),
+            };
+            tensors.push(t);
+        }
+        state.sections.insert(name, tensors);
+    }
+    Ok(state)
+}
+
+fn write_u32<W: Write>(w: &mut W, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn write_str<W: Write>(w: &mut W, s: &str) -> Result<()> {
+    write_u32(w, s.len() as u32)?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn read_str<R: Read>(r: &mut R) -> Result<String> {
+    let n = read_u32(r)? as usize;
+    let mut b = vec![0u8; n];
+    r.read_exact(&mut b)?;
+    String::from_utf8(b).map_err(|_| Error::msg("bad utf-8 in checkpoint"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut st = TrainState::default();
+        st.sections.insert(
+            "params".into(),
+            vec![
+                Tensor::f32(vec![2, 2], vec![1.0, -2.5, 3.25, 0.0]),
+                Tensor::scalar_f32(7.0),
+            ],
+        );
+        st.sections
+            .insert("theta".into(), vec![Tensor::i32(vec![3], vec![1, 2, 3])]);
+        let dir = std::env::temp_dir().join("mixprec_ckpt_test");
+        let path = dir.join("a.ckpt");
+        save(&st, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.sections, st.sections);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("mixprec_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"NOTMAGIC____").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,83 @@
+//! Shared experiment context: engine + manifest + per-model graph and
+//! dataset, loaded once and borrowed by runners, examples and benches.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::phases::Runner;
+use crate::data::{DataConfig, DataSet};
+use crate::error::Result;
+use crate::graph::ModelGraph;
+use crate::runtime::{Engine, Manifest};
+
+pub struct Context {
+    pub eng: Engine,
+    pub man: Manifest,
+    graphs: BTreeMap<String, ModelGraph>,
+    data: BTreeMap<String, DataSet>,
+}
+
+impl Context {
+    /// Locate the artifacts directory: `$MIXPREC_ARTIFACTS`, ./artifacts,
+    /// or ../artifacts (for tests running from a subdir).
+    pub fn artifacts_dir() -> PathBuf {
+        if let Ok(p) = std::env::var("MIXPREC_ARTIFACTS") {
+            return PathBuf::from(p);
+        }
+        for cand in ["artifacts", "../artifacts"] {
+            let p = PathBuf::from(cand);
+            if p.join("manifest.json").exists() {
+                return p;
+            }
+        }
+        PathBuf::from("artifacts")
+    }
+
+    pub fn load(dir: &Path, data_frac: f64) -> Result<Self> {
+        let eng = Engine::cpu()?;
+        let man = Manifest::load(dir)?;
+        let mut graphs = BTreeMap::new();
+        let mut data = BTreeMap::new();
+        for (name, mm) in &man.models {
+            let g = ModelGraph::load(&dir.join(&mm.graph_file))?;
+            g.validate()
+                .map_err(|e| crate::error::Error::manifest(format!("{name}: {e}")))?;
+            let cfg = DataConfig::for_model(name, mm.in_shape, mm.num_classes).scaled(data_frac);
+            data.insert(name.clone(), DataSet::generate(cfg));
+            graphs.insert(name.clone(), g);
+        }
+        Ok(Context {
+            eng,
+            man,
+            graphs,
+            data,
+        })
+    }
+
+    pub fn load_default(data_frac: f64) -> Result<Self> {
+        Self::load(&Self::artifacts_dir(), data_frac)
+    }
+
+    pub fn graph(&self, model: &str) -> &ModelGraph {
+        &self.graphs[model]
+    }
+
+    pub fn dataset(&self, model: &str) -> &DataSet {
+        &self.data[model]
+    }
+
+    pub fn runner(&self, model: &str) -> Result<Runner<'_>> {
+        let mm = self.man.model(model)?;
+        Ok(Runner::new(
+            &self.eng,
+            &self.man,
+            mm,
+            &self.graphs[model],
+            &self.data[model],
+        ))
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        self.man.models.keys().cloned().collect()
+    }
+}

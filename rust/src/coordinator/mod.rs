@@ -1,0 +1,16 @@
+//! L3 coordinator — the paper's optimization pipeline as a system:
+//! three-phase training driver, schedules, early stopping, Pareto
+//! front maintenance, lambda-sweep scheduling and checkpointing.
+
+pub mod checkpoint;
+pub mod context;
+pub mod pareto;
+pub mod phases;
+pub mod schedule;
+pub mod sweep;
+
+pub use context::Context;
+pub use pareto::{ParetoFront, Point};
+pub use phases::{PipelineConfig, Record, RunResult, Runner, Sampling, Timing};
+pub use schedule::{EarlyStop, ExpDecay, TempSchedule};
+pub use sweep::{default_lambdas, sweep_lambdas, SweepResult};

@@ -1,0 +1,151 @@
+//! Pareto-front maintenance over (cost, accuracy) points.
+//!
+//! Every figure in the paper's evaluation plots the Pareto-optimal
+//! subset of a lambda sweep (accuracy up, cost down). Invariants are
+//! property-tested in `rust/tests/prop_invariants.rs`.
+
+/// One evaluated design point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Point {
+    /// Cost metric (size bits, cycles, bitops ... lower is better).
+    pub cost: f64,
+    /// Validation accuracy in [0, 1] (higher is better).
+    pub acc: f64,
+    /// Free-form tag (lambda value, method name, ...).
+    pub tag: String,
+}
+
+impl Point {
+    pub fn new(cost: f64, acc: f64, tag: impl Into<String>) -> Self {
+        Point {
+            cost,
+            acc,
+            tag: tag.into(),
+        }
+    }
+
+    /// `self` dominates `other`: no worse on both axes, better on one.
+    pub fn dominates(&self, other: &Point) -> bool {
+        (self.cost <= other.cost && self.acc >= other.acc)
+            && (self.cost < other.cost || self.acc > other.acc)
+    }
+}
+
+/// Pareto front (kept sorted by cost ascending).
+#[derive(Debug, Clone, Default)]
+pub struct ParetoFront {
+    points: Vec<Point>,
+}
+
+impl ParetoFront {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_points(points: impl IntoIterator<Item = Point>) -> Self {
+        let mut f = Self::new();
+        for p in points {
+            f.insert(p);
+        }
+        f
+    }
+
+    /// Insert a point; returns true if it joined the front.
+    pub fn insert(&mut self, p: Point) -> bool {
+        if self.points.iter().any(|q| q.dominates(&p)) {
+            return false;
+        }
+        self.points.retain(|q| !p.dominates(q));
+        let pos = self
+            .points
+            .partition_point(|q| (q.cost, -q.acc) < (p.cost, -p.acc));
+        self.points.insert(pos, p);
+        true
+    }
+
+    pub fn points(&self) -> &[Point] {
+        &self.points
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Smallest-cost point with accuracy >= `target` ("iso-accuracy"
+    /// comparisons in the paper's headline numbers).
+    pub fn iso_accuracy(&self, target: f64) -> Option<&Point> {
+        self.points
+            .iter()
+            .filter(|p| p.acc >= target)
+            .min_by(|a, b| a.cost.partial_cmp(&b.cost).unwrap())
+    }
+
+    /// Highest-accuracy point with cost <= `budget` ("iso-size").
+    pub fn iso_cost(&self, budget: f64) -> Option<&Point> {
+        self.points
+            .iter()
+            .filter(|p| p.cost <= budget)
+            .max_by(|a, b| a.acc.partial_cmp(&b.acc).unwrap())
+    }
+
+    pub fn best_acc(&self) -> Option<&Point> {
+        self.points
+            .iter()
+            .max_by(|a, b| a.acc.partial_cmp(&b.acc).unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominance() {
+        let a = Point::new(1.0, 0.9, "a");
+        let b = Point::new(2.0, 0.8, "b");
+        assert!(a.dominates(&b));
+        assert!(!b.dominates(&a));
+        assert!(!a.dominates(&a));
+    }
+
+    #[test]
+    fn front_filters_dominated() {
+        let mut f = ParetoFront::new();
+        assert!(f.insert(Point::new(10.0, 0.5, "x")));
+        assert!(f.insert(Point::new(5.0, 0.4, "y")));
+        assert!(f.insert(Point::new(20.0, 0.9, "z")));
+        assert!(!f.insert(Point::new(25.0, 0.85, "dominated")));
+        assert_eq!(f.len(), 3);
+        // inserting a dominating point evicts
+        assert!(f.insert(Point::new(4.0, 0.95, "super")));
+        assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn sorted_by_cost() {
+        let f = ParetoFront::from_points([
+            Point::new(3.0, 0.3, ""),
+            Point::new(1.0, 0.1, ""),
+            Point::new(2.0, 0.2, ""),
+        ]);
+        let costs: Vec<f64> = f.points().iter().map(|p| p.cost).collect();
+        assert_eq!(costs, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn iso_queries() {
+        let f = ParetoFront::from_points([
+            Point::new(1.0, 0.5, "small"),
+            Point::new(2.0, 0.7, "mid"),
+            Point::new(4.0, 0.9, "big"),
+        ]);
+        assert_eq!(f.iso_accuracy(0.7).unwrap().tag, "mid");
+        assert_eq!(f.iso_cost(2.5).unwrap().tag, "mid");
+        assert!(f.iso_accuracy(0.95).is_none());
+        assert_eq!(f.best_acc().unwrap().tag, "big");
+    }
+}

@@ -1,0 +1,134 @@
+//! Learning-rate and temperature schedules (paper Sec. 5.1.1).
+
+/// Exponential epoch decay: `base * factor^epoch` with a floor.
+#[derive(Debug, Clone)]
+pub struct ExpDecay {
+    pub base: f32,
+    pub factor: f32,
+    pub floor: f32,
+}
+
+impl ExpDecay {
+    pub fn new(base: f32, factor: f32, floor: f32) -> Self {
+        ExpDecay { base, factor, floor }
+    }
+
+    pub fn at(&self, epoch: usize) -> f32 {
+        (self.base * self.factor.powi(epoch as i32)).max(self.floor)
+    }
+}
+
+/// Softmax temperature schedule: tau_0 * exp(-rate * epoch), floored
+/// (paper: tau lowered by e^-0.045 per epoch, FbNetV2-style [45]).
+#[derive(Debug, Clone)]
+pub struct TempSchedule {
+    pub tau0: f32,
+    pub rate: f32,
+    pub floor: f32,
+}
+
+impl Default for TempSchedule {
+    fn default() -> Self {
+        TempSchedule {
+            tau0: 1.0,
+            rate: 0.045,
+            floor: 0.02,
+        }
+    }
+}
+
+impl TempSchedule {
+    /// Same final temperature over a different epoch budget (the paper
+    /// rescales the decay for Tiny ImageNet's shorter schedule).
+    pub fn rescaled(total_epochs: usize, reference_epochs: usize) -> Self {
+        let d = TempSchedule::default();
+        let rate = d.rate * reference_epochs as f32 / total_epochs.max(1) as f32;
+        TempSchedule { rate, ..d }
+    }
+
+    pub fn at(&self, epoch: usize) -> f32 {
+        (self.tau0 * (-self.rate * epoch as f32).exp()).max(self.floor)
+    }
+}
+
+/// Early stopping with patience on a maximized metric (val accuracy).
+#[derive(Debug, Clone)]
+pub struct EarlyStop {
+    pub patience: usize,
+    best: f32,
+    since_best: usize,
+    pub best_step: usize,
+}
+
+impl EarlyStop {
+    pub fn new(patience: usize) -> Self {
+        EarlyStop {
+            patience,
+            best: f32::NEG_INFINITY,
+            since_best: 0,
+            best_step: 0,
+        }
+    }
+
+    /// Record a metric; returns true when training should stop.
+    pub fn update(&mut self, step: usize, metric: f32) -> bool {
+        if metric > self.best {
+            self.best = metric;
+            self.since_best = 0;
+            self.best_step = step;
+        } else {
+            self.since_best += 1;
+        }
+        self.since_best > self.patience
+    }
+
+    pub fn best(&self) -> f32 {
+        self.best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp_decay() {
+        let s = ExpDecay::new(1.0, 0.5, 0.1);
+        assert_eq!(s.at(0), 1.0);
+        assert_eq!(s.at(1), 0.5);
+        assert_eq!(s.at(10), 0.1); // floored
+    }
+
+    #[test]
+    fn temperature_monotone_to_floor() {
+        let t = TempSchedule::default();
+        let mut prev = f32::MAX;
+        for e in 0..200 {
+            let v = t.at(e);
+            assert!(v <= prev && v >= t.floor);
+            prev = v;
+        }
+        assert_eq!(t.at(500), t.floor);
+    }
+
+    #[test]
+    fn rescaled_matches_final_temp() {
+        let long = TempSchedule::default();
+        let short = TempSchedule::rescaled(50, 200);
+        let a = long.at(200);
+        let b = short.at(50);
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+
+    #[test]
+    fn early_stop_patience() {
+        let mut es = EarlyStop::new(2);
+        assert!(!es.update(0, 0.5));
+        assert!(!es.update(1, 0.6)); // new best
+        assert!(!es.update(2, 0.55));
+        assert!(!es.update(3, 0.55));
+        assert!(es.update(4, 0.55)); // 3rd step without improvement
+        assert_eq!(es.best(), 0.6);
+        assert_eq!(es.best_step, 1);
+    }
+}

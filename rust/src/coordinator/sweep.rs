@@ -1,0 +1,102 @@
+//! Lambda-sweep scheduler: runs one pipeline per regularization
+//! strength (optionally in parallel workers sharing the PJRT engine)
+//! and maintains the resulting Pareto front — the machinery behind
+//! every figure in the paper's evaluation.
+
+use crate::coordinator::pareto::{ParetoFront, Point};
+use crate::coordinator::phases::{PipelineConfig, RunResult, Runner};
+use crate::error::Result;
+use crate::util::pool::parallel_map;
+
+/// Result of a sweep: all runs plus the Pareto front over the chosen
+/// cost metric.
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    pub runs: Vec<RunResult>,
+    pub metric: String,
+}
+
+impl SweepResult {
+    /// Pareto front in (cost-of-metric, val accuracy) space.
+    pub fn front(&self) -> ParetoFront {
+        ParetoFront::from_points(self.runs.iter().map(|r| {
+            Point::new(
+                r.cost_of(&self.metric),
+                r.val_acc,
+                format!("lam={}", r.lambda),
+            )
+        }))
+    }
+
+    /// Front over *test* accuracy (paper reports test numbers for
+    /// points selected on validation).
+    pub fn front_test(&self) -> ParetoFront {
+        ParetoFront::from_points(self.runs.iter().map(|r| {
+            Point::new(
+                r.cost_of(&self.metric),
+                r.test_acc,
+                format!("lam={}", r.lambda),
+            )
+        }))
+    }
+
+    pub fn total_search_time_s(&self) -> f64 {
+        self.runs.iter().map(|r| r.timing.total_s()).sum()
+    }
+}
+
+/// Run the pipeline for each lambda in `lambdas`.
+///
+/// `workers > 1` shares the engine across OS threads; the PJRT CPU
+/// client is thread-safe and each worker owns its state (see
+/// `runtime::client` safety notes).
+pub fn sweep_lambdas(
+    runner: &Runner<'_>,
+    base: &PipelineConfig,
+    lambdas: &[f64],
+    metric: &str,
+    workers: usize,
+) -> Result<SweepResult> {
+    let outs = parallel_map(lambdas, workers, |i, &lam| {
+        let mut cfg = base.clone();
+        cfg.lambda = lam as f32;
+        cfg.seed = base.seed.wrapping_add(i as u64 * 9973);
+        runner.run(&cfg)
+    });
+    let mut runs = Vec::new();
+    for r in outs {
+        runs.push(r?);
+    }
+    Ok(SweepResult {
+        runs,
+        metric: metric.to_string(),
+    })
+}
+
+/// The default strength grid used by the figure harnesses (log-spaced;
+/// the paper sweeps lambda per benchmark without publishing values).
+pub fn default_lambdas(n: usize) -> Vec<f64> {
+    let (lo, hi) = (0.02f64, 20.0f64);
+    if n == 1 {
+        return vec![lo];
+    }
+    (0..n)
+        .map(|i| lo * (hi / lo).powf(i as f64 / (n - 1) as f64))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lambda_grid_is_log_spaced() {
+        let l = default_lambdas(5);
+        assert_eq!(l.len(), 5);
+        assert!((l[0] - 0.02).abs() < 1e-12);
+        assert!((l[4] - 20.0).abs() < 1e-9);
+        let r1 = l[1] / l[0];
+        let r2 = l[2] / l[1];
+        assert!((r1 - r2).abs() < 1e-9);
+    }
+}

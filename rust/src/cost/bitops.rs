@@ -1,0 +1,58 @@
+//! Bit-ops cost: MACs x weight-bits x activation-bits, the
+//! hardware-agnostic latency proxy used by EdMIPS [7] and by the
+//! paper's Fig. 9 activation-precision study.
+
+use super::CostModel;
+use crate::assignment::Assignment;
+use crate::graph::{LayerKind, ModelGraph};
+
+pub struct BitOps;
+
+impl CostModel for BitOps {
+    fn name(&self) -> &'static str {
+        "bitops"
+    }
+
+    fn cost(&self, graph: &ModelGraph, asg: &Assignment) -> f64 {
+        let mut total = 0f64;
+        for l in &graph.layers {
+            let px = asg.in_bits(l) as f64;
+            let spatial = (l.k * l.k * l.out_h * l.out_w) as f64;
+            let macs_per_ch = match l.kind {
+                LayerKind::Depthwise => spatial,
+                _ => spatial * asg.cin_eff(graph, l) as f64,
+            };
+            let wbits: f64 = asg.gamma_bits[l.gamma_group]
+                .iter()
+                .map(|&b| b as f64)
+                .sum();
+            total += macs_per_ch * wbits * px;
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::testutil::tiny_graph;
+
+    #[test]
+    fn w8a8_is_macs_times_64() {
+        let g = tiny_graph();
+        let a = Assignment::uniform(&g, 8);
+        let expect = g.total_macs() as f64 * 64.0;
+        assert_eq!(BitOps.cost(&g, &a), expect);
+    }
+
+    #[test]
+    fn activation_bits_scale_linearly() {
+        let g = tiny_graph();
+        let mut a = Assignment::uniform(&g, 8);
+        let c8 = BitOps.cost(&g, &a);
+        a.delta_bits = vec![4, 4];
+        let c4 = BitOps.cost(&g, &a);
+        // first layer's input is the network input (stays 8); the rest halve
+        assert!(c4 < c8 && c4 > c8 / 2.0);
+    }
+}

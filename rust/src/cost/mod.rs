@@ -1,0 +1,128 @@
+//! Exact (integer) cost models over discretized assignments — the
+//! deployment-side twins of the differentiable regularizers in
+//! `python/compile/regularizers.py` (paper Sec. 4.3).
+//!
+//! Shared constants (MPIC LUT, NE16 bandwidths/frequencies) must stay
+//! in lock-step with the Python module; `rust/tests/` pins reference
+//! values that both sides assert against.
+
+pub mod bitops;
+pub mod mpic;
+pub mod ne16;
+pub mod size;
+
+use crate::assignment::Assignment;
+use crate::graph::ModelGraph;
+
+/// A cost model evaluated on a discrete assignment.
+pub trait CostModel {
+    fn name(&self) -> &'static str;
+    /// Cost of the given assignment (bits for size, cycles for the HW
+    /// models, bit-ops for bitops).
+    fn cost(&self, graph: &ModelGraph, asg: &Assignment) -> f64;
+    /// Cost of the all-8-bit w8a8 reference (normalization constant,
+    /// == the Python regularizer's `*_max`).
+    fn max_cost(&self, graph: &ModelGraph) -> f64 {
+        self.cost(graph, &Assignment::uniform(graph, 8))
+    }
+    /// Normalized cost in [0, ~1], comparable with the `cost` metric
+    /// the search artifacts report.
+    fn normalized(&self, graph: &ModelGraph, asg: &Assignment) -> f64 {
+        self.cost(graph, asg) / self.max_cost(graph)
+    }
+}
+
+pub use bitops::BitOps;
+pub use mpic::Mpic;
+pub use ne16::Ne16;
+pub use size::Size;
+
+/// Look up a cost model by regularizer name.
+pub fn by_name(name: &str) -> Option<Box<dyn CostModel + Send + Sync>> {
+    match name {
+        "size" => Some(Box::new(Size)),
+        "bitops" => Some(Box::new(BitOps)),
+        "mpic" => Some(Box::new(Mpic)),
+        "ne16" => Some(Box::new(Ne16)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::graph::ModelGraph;
+    use crate::util::json::Json;
+
+    pub fn tiny_graph() -> ModelGraph {
+        let text = r#"{
+          "model": "tiny", "in_shape": [8,8,3], "num_classes": 4, "batch": 2,
+          "layers": [
+            {"name":"c0","kind":"conv","cin":3,"cout":8,"k":3,"stride":1,
+             "out_h":8,"out_w":8,"gamma_group":0,"in_group":-1,
+             "delta_idx":0,"in_delta":-1,"prunable":true,"macs":13824},
+            {"name":"dw0","kind":"dw","cin":8,"cout":8,"k":3,"stride":1,
+             "out_h":8,"out_w":8,"gamma_group":0,"in_group":0,
+             "delta_idx":1,"in_delta":0,"prunable":true,"macs":4608},
+            {"name":"fc","kind":"linear","cin":8,"cout":4,"k":1,"stride":1,
+             "out_h":1,"out_w":1,"gamma_group":1,"in_group":0,
+             "delta_idx":-1,"in_delta":1,"prunable":false,"macs":32}
+          ],
+          "gamma_groups": [8, 4], "num_deltas": 2,
+          "pw_set": [0,2,4,8], "px_set": [2,4,8]
+        }"#;
+        ModelGraph::from_json(&Json::parse(text).unwrap()).unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assignment::Assignment;
+    use testutil::tiny_graph;
+
+    /// Pruning or lowering precision must never increase any cost model
+    /// (monotonicity — the property the search relies on).
+    #[test]
+    fn monotone_under_bit_reduction() {
+        let g = tiny_graph();
+        for model in ["size", "bitops", "mpic", "ne16"] {
+            let m = by_name(model).unwrap();
+            let mut prev = f64::MAX;
+            for bits in [8u32, 4, 2] {
+                let c = m.cost(&g, &Assignment::uniform(&g, bits));
+                assert!(
+                    c <= prev + 1e-9,
+                    "{model}: cost at {bits} bits ({c}) > previous ({prev})"
+                );
+                prev = c;
+            }
+        }
+    }
+
+    #[test]
+    fn pruning_reduces_cost() {
+        let g = tiny_graph();
+        for model in ["size", "bitops", "mpic", "ne16"] {
+            let m = by_name(model).unwrap();
+            let full = Assignment::uniform(&g, 8);
+            let mut pruned = full.clone();
+            for c in 0..4 {
+                pruned.gamma_bits[0][c] = 0;
+            }
+            assert!(
+                m.cost(&g, &pruned) < m.cost(&g, &full),
+                "{model}: pruning did not reduce cost"
+            );
+        }
+    }
+
+    #[test]
+    fn normalized_at_one_for_w8a8() {
+        let g = tiny_graph();
+        for model in ["size", "bitops", "mpic", "ne16"] {
+            let m = by_name(model).unwrap();
+            let n = m.normalized(&g, &Assignment::uniform(&g, 8));
+            assert!((n - 1.0).abs() < 1e-9, "{model}: {n}");
+        }
+    }
+}

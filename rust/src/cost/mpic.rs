@@ -1,0 +1,124 @@
+//! MPIC (Mixed Precision Inference Core [9]) latency/energy model —
+//! paper Eq. 10/11, exact integer form.
+//!
+//! The LUT stores MACs/cycle for every (activation, weight) precision
+//! combination. Values are synthetic but shape-faithful (DESIGN.md
+//! Sec. 3): SIMD throughput tracks `16 / max(px, pw)` lanes at ~70%
+//! issue efficiency, with a small bonus when the co-operand is
+//! narrower (fewer fetches), exactly the curvature the paper's
+//! Fig. 8 analysis depends on (weak pw differentiation at px=8 makes
+//! MPIC favour pruning over 2/4-bit channels).
+
+use super::CostModel;
+use crate::assignment::Assignment;
+use crate::graph::{LayerKind, ModelGraph};
+
+/// MACs/cycle indexed by (px, pw) with px, pw in {2, 4, 8}.
+pub const MPIC_LUT: [[f64; 3]; 3] = [
+    // pw:   2     4     8
+    [11.2, 6.4, 3.4], // px=2
+    [6.4, 5.6, 3.2],  // px=4
+    [3.4, 3.2, 2.8],  // px=8
+];
+
+pub const MPIC_FREQ_HZ: f64 = 250.0e6;
+pub const MPIC_POWER_W: f64 = 5.4e-3;
+
+fn lut_idx(bits: u32) -> usize {
+    match bits {
+        2 => 0,
+        4 => 1,
+        8 => 2,
+        other => panic!("MPIC LUT: unsupported precision {other}"),
+    }
+}
+
+pub fn macs_per_cycle(px: u32, pw: u32) -> f64 {
+    MPIC_LUT[lut_idx(px)][lut_idx(pw)]
+}
+
+pub struct Mpic;
+
+impl CostModel for Mpic {
+    fn name(&self) -> &'static str {
+        "mpic"
+    }
+
+    /// Execution cycles (paper Eq. 10): per layer, MACs executed at
+    /// each (px, pw) combination divided by the LUT throughput.
+    fn cost(&self, graph: &ModelGraph, asg: &Assignment) -> f64 {
+        let mut cycles = 0f64;
+        for l in &graph.layers {
+            let px = asg.in_bits(l);
+            let spatial = (l.k * l.k * l.out_h * l.out_w) as f64;
+            let macs_per_ch = match l.kind {
+                LayerKind::Depthwise => spatial,
+                _ => spatial * asg.cin_eff(graph, l) as f64,
+            };
+            for &pw in [2u32, 4, 8].iter() {
+                let n_ch = asg.channels_at(l.gamma_group, pw) as f64;
+                if n_ch > 0.0 {
+                    cycles += macs_per_ch * n_ch / macs_per_cycle(px, pw);
+                }
+            }
+        }
+        cycles
+    }
+}
+
+impl Mpic {
+    pub fn latency_ms(graph: &ModelGraph, asg: &Assignment) -> f64 {
+        Mpic.cost(graph, asg) / MPIC_FREQ_HZ * 1e3
+    }
+
+    pub fn energy_uj(graph: &ModelGraph, asg: &Assignment) -> f64 {
+        Mpic.cost(graph, asg) / MPIC_FREQ_HZ * MPIC_POWER_W * 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::testutil::tiny_graph;
+
+    #[test]
+    fn lut_shape() {
+        // homogeneous precisions order: 2x2 fastest, 8x8 slowest
+        assert!(macs_per_cycle(2, 2) > macs_per_cycle(4, 4));
+        assert!(macs_per_cycle(4, 4) > macs_per_cycle(8, 8));
+        // mixed is bounded by the wider operand but beats homogeneous-wide
+        assert!(macs_per_cycle(8, 2) >= macs_per_cycle(8, 8));
+        assert!(macs_per_cycle(8, 2) <= macs_per_cycle(2, 2));
+        // symmetry
+        for a in [2, 4, 8] {
+            for b in [2, 4, 8] {
+                assert_eq!(macs_per_cycle(a, b), macs_per_cycle(b, a));
+            }
+        }
+    }
+
+    #[test]
+    fn w8a8_cycles() {
+        let g = tiny_graph();
+        let a = Assignment::uniform(&g, 8);
+        let expect = g.total_macs() as f64 / 2.8;
+        assert!((Mpic.cost(&g, &a) - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn weak_pw_differentiation_at_px8() {
+        // the paper's observation: at 8-bit activations, dropping
+        // weights to 2 bits buys <25% cycles, while pruning buys 100%.
+        let saving = 1.0 - macs_per_cycle(8, 8) / macs_per_cycle(8, 2);
+        assert!(saving < 0.25, "saving {saving}");
+    }
+
+    #[test]
+    fn latency_energy_consistent() {
+        let g = tiny_graph();
+        let a = Assignment::uniform(&g, 8);
+        let ms = Mpic::latency_ms(&g, &a);
+        let uj = Mpic::energy_uj(&g, &a);
+        assert!((uj / ms - MPIC_POWER_W * 1e3).abs() < 1e-9);
+    }
+}

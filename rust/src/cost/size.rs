@@ -1,0 +1,76 @@
+//! Model-size cost (paper Eq. 9, exact integer form): parameter bits
+//! with pruning credited to downstream layers via `C_in,eff`.
+
+use super::CostModel;
+use crate::assignment::Assignment;
+use crate::graph::{LayerKind, ModelGraph};
+
+pub struct Size;
+
+impl CostModel for Size {
+    fn name(&self) -> &'static str {
+        "size"
+    }
+
+    fn cost(&self, graph: &ModelGraph, asg: &Assignment) -> f64 {
+        let mut total = 0f64;
+        for l in &graph.layers {
+            let bits: u64 = asg.gamma_bits[l.gamma_group]
+                .iter()
+                .map(|&b| b as u64)
+                .sum();
+            let per_ch = match l.kind {
+                LayerKind::Depthwise => (l.k * l.k) as u64,
+                _ => (asg.cin_eff(graph, l) * l.k * l.k) as u64,
+            };
+            total += (per_ch * bits) as f64;
+        }
+        total
+    }
+}
+
+impl Size {
+    /// Size in kilobytes (what the paper's tables report).
+    pub fn kb(graph: &ModelGraph, asg: &Assignment) -> f64 {
+        Size.cost(graph, asg) / 8.0 / 1024.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::testutil::tiny_graph;
+
+    #[test]
+    fn w8_matches_parameter_count() {
+        let g = tiny_graph();
+        let a = Assignment::uniform(&g, 8);
+        // conv: 3*3*3*8, dw: 3*3*8, fc: 8*4 weights, all at 8 bits
+        let expect = 8.0 * (3.0 * 3.0 * 3.0 * 8.0 + 3.0 * 3.0 * 8.0 + 8.0 * 4.0);
+        assert_eq!(Size.cost(&g, &a), expect);
+    }
+
+    #[test]
+    fn cin_eff_credits_downstream() {
+        let g = tiny_graph();
+        let mut a = Assignment::uniform(&g, 8);
+        // prune half of group 0 (c0+dw0 outputs): fc input shrinks 8->4
+        for c in 0..4 {
+            a.gamma_bits[0][c] = 0;
+        }
+        let cost = Size.cost(&g, &a);
+        // conv keeps 4 channels @8b, dw keeps 4 @8b, fc has cin_eff=4
+        let expect = 8.0 * (27.0 * 4.0 + 9.0 * 4.0 + 4.0 * 4.0);
+        assert_eq!(cost, expect);
+    }
+
+    #[test]
+    fn mixed_bits() {
+        let g = tiny_graph();
+        let mut a = Assignment::uniform(&g, 8);
+        a.gamma_bits[1] = vec![2, 4, 8, 0];
+        let conv_dw = 8.0 * (27.0 * 8.0 + 9.0 * 8.0);
+        let fc = 8.0 * (2 + 4 + 8 + 0) as f64;
+        assert_eq!(Size.cost(&g, &a), conv_dw + fc);
+    }
+}

@@ -1,0 +1,115 @@
+//! Epoch-based batch iteration with deterministic shuffling.
+
+use crate::util::rng::Pcg64;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Val,
+    Test,
+}
+
+/// Yields index slices of size `batch`, reshuffling every epoch.
+pub struct BatchIter {
+    order: Vec<usize>,
+    pos: usize,
+    batch: usize,
+    rng: Pcg64,
+    shuffle: bool,
+    pub epoch: usize,
+}
+
+impl BatchIter {
+    pub fn new(n: usize, batch: usize, seed: u64, shuffle: bool) -> Self {
+        let mut it = BatchIter {
+            order: (0..n).collect(),
+            pos: 0,
+            batch,
+            rng: Pcg64::new(seed),
+            shuffle,
+            epoch: 0,
+        };
+        if shuffle {
+            it.rng.shuffle(&mut it.order);
+        }
+        it
+    }
+
+    /// Next batch of indices (wraps across epochs; never empty).
+    pub fn next_batch(&mut self) -> Vec<usize> {
+        let n = self.order.len();
+        let mut out = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            if self.pos >= n {
+                self.pos = 0;
+                self.epoch += 1;
+                if self.shuffle {
+                    self.rng.shuffle(&mut self.order);
+                }
+            }
+            out.push(self.order[self.pos]);
+            self.pos += 1;
+        }
+        out
+    }
+
+    /// Number of batches per epoch (ceil).
+    pub fn batches_per_epoch(&self) -> usize {
+        self.order.len().div_ceil(self.batch)
+    }
+
+    /// All fixed batches covering the split once (for evaluation).
+    pub fn eval_batches(n: usize, batch: usize) -> Vec<Vec<usize>> {
+        (0..n)
+            .collect::<Vec<_>>()
+            .chunks(batch)
+            .map(|c| c.to_vec())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_all_indices_each_epoch() {
+        let mut it = BatchIter::new(10, 3, 1, true);
+        let mut seen = vec![0usize; 10];
+        // 4 batches = 12 draws = one full epoch (10) + 2 of the next
+        for _ in 0..4 {
+            for i in it.next_batch() {
+                seen[i] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c >= 1));
+        assert_eq!(seen.iter().sum::<usize>(), 12);
+    }
+
+    #[test]
+    fn deterministic_with_seed() {
+        let mut a = BatchIter::new(32, 8, 9, true);
+        let mut b = BatchIter::new(32, 8, 9, true);
+        for _ in 0..10 {
+            assert_eq!(a.next_batch(), b.next_batch());
+        }
+    }
+
+    #[test]
+    fn no_shuffle_is_sequential() {
+        let mut it = BatchIter::new(6, 2, 0, false);
+        assert_eq!(it.next_batch(), vec![0, 1]);
+        assert_eq!(it.next_batch(), vec![2, 3]);
+        assert_eq!(it.next_batch(), vec![4, 5]);
+        assert_eq!(it.next_batch(), vec![0, 1]);
+        assert_eq!(it.epoch, 1);
+    }
+
+    #[test]
+    fn eval_batches_cover_once() {
+        let bs = BatchIter::eval_batches(10, 4);
+        assert_eq!(bs.len(), 3);
+        let all: Vec<usize> = bs.into_iter().flatten().collect();
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+    }
+}

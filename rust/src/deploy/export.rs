@@ -1,0 +1,202 @@
+//! Integer model export: turn (searched float params, discretized
+//! assignment) into the deployable artifact — reordered (Fig. 3),
+//! per-channel quantized at the assigned bit-widths, with PACT
+//! activation parameters — in the exact layout `qconv_int` consumes.
+
+use crate::assignment::Assignment;
+use crate::deploy::reorder::{reorder_assignment, ReorderPlan};
+use crate::error::Result;
+use crate::graph::{LayerKind, ModelGraph};
+use crate::quant::{quantize_rows, ActQuant, QuantizedRows};
+use crate::runtime::{ModelManifest, TrainState};
+use crate::util::tensor::Tensor;
+
+/// One exported layer.
+#[derive(Debug, Clone)]
+pub struct ExportedLayer {
+    pub name: String,
+    pub weights: QuantizedRows,
+    pub bias: Vec<f32>,
+    /// Output activation quantizer (None for the logits layer).
+    pub act: Option<ActQuant>,
+}
+
+/// The deployable integer model.
+#[derive(Debug, Clone)]
+pub struct ExportedModel {
+    pub model: String,
+    pub layers: Vec<ExportedLayer>,
+    pub plan: ReorderPlan,
+}
+
+/// View one layer's weight tensor as channel-major (C_out, row) 2-D.
+fn as_rows(layer: &crate::graph::Layer, w: &Tensor) -> Tensor {
+    let src = w.as_f32();
+    match layer.kind {
+        LayerKind::Linear => {
+            let (cin, cout) = (w.shape[0], w.shape[1]);
+            let mut data = vec![0f32; cin * cout];
+            for i in 0..cin {
+                for j in 0..cout {
+                    data[j * cin + i] = src[i * cout + j];
+                }
+            }
+            Tensor::f32(vec![cout, cin], data)
+        }
+        LayerKind::Depthwise => {
+            let (k1, k2, c) = (w.shape[0], w.shape[1], w.shape[2]);
+            let mut data = vec![0f32; k1 * k2 * c];
+            for y in 0..k1 {
+                for x in 0..k2 {
+                    for ch in 0..c {
+                        data[ch * k1 * k2 + y * k2 + x] = src[(y * k2 + x) * c + ch];
+                    }
+                }
+            }
+            Tensor::f32(vec![c, k1 * k2], data)
+        }
+        LayerKind::Conv => {
+            let (k1, k2, cin, cout) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+            let row = k1 * k2 * cin;
+            let mut data = vec![0f32; row * cout];
+            for y in 0..k1 {
+                for x in 0..k2 {
+                    for i in 0..cin {
+                        for j in 0..cout {
+                            data[j * row + (y * k2 + x) * cin + i] =
+                                src[((y * k2 + x) * cin + i) * cout + j];
+                        }
+                    }
+                }
+            }
+            Tensor::f32(vec![cout, row], data)
+        }
+    }
+}
+
+/// Export the model: reorder by bit-width, drop pruned channels,
+/// quantize each kept channel at its assigned precision.
+pub fn export_model(
+    graph: &ModelGraph,
+    mm: &ModelManifest,
+    state: &TrainState,
+    asg: &Assignment,
+) -> Result<ExportedModel> {
+    let plan = reorder_assignment(asg);
+    let mut layers = Vec::new();
+    let alphas = state.leaf(mm, "params", "params['alphas']")?.as_f32();
+    for l in &graph.layers {
+        let w = state.leaf(mm, "params", &format!("params['{}']['w']", l.name))?;
+        let b = state.leaf(mm, "params", &format!("params['{}']['b']", l.name))?;
+        // apply the Fig. 3 permutation (both axes), then row-quantize
+        let wr = plan.apply_to_weights(graph, l, w)?;
+        let rows = as_rows(
+            &{
+                // the reordered tensor has the kept-channel counts
+                let mut l2 = l.clone();
+                l2.cout = plan.perms[l.gamma_group].len();
+                if l.in_group >= 0 {
+                    l2.cin = plan.perms[l.in_group as usize].len();
+                }
+                l2
+            },
+            &wr,
+        );
+        let bias = plan.apply_to_bias(l.gamma_group, b).as_f32().to_vec();
+        let bits = plan.bits[l.gamma_group].clone();
+        layers.push(ExportedLayer {
+            name: l.name.clone(),
+            weights: quantize_rows(&rows, &bits),
+            bias,
+            act: if l.delta_idx >= 0 {
+                Some(ActQuant {
+                    alpha: alphas[l.delta_idx as usize].max(1e-3),
+                    bits: asg.delta_bits[l.delta_idx as usize],
+                })
+            } else {
+                None
+            },
+        });
+    }
+    Ok(ExportedModel {
+        model: graph.model.clone(),
+        layers,
+        plan,
+    })
+}
+
+impl ExportedModel {
+    /// Total weight storage in bits — must equal the Size cost model
+    /// on the refined assignment (asserted in integration tests).
+    pub fn storage_bits(&self) -> u64 {
+        self.layers.iter().map(|l| l.weights.storage_bits()).sum()
+    }
+
+    pub fn storage_kb(&self) -> f64 {
+        self.storage_bits() as f64 / 8.0 / 1024.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn as_rows_conv_matches_python_w2d_of() {
+        // conv (k,k,cin,cout) -> (cout, k*k*cin), matching
+        // layers.w2d_of: transpose(3,0,1,2).reshape(cout, -1)
+        let (k, cin, cout) = (2usize, 3usize, 2usize);
+        let mut data = vec![0f32; k * k * cin * cout];
+        for (i, v) in data.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let w = Tensor::f32(vec![k, k, cin, cout], data.clone());
+        let l = crate::graph::Layer {
+            name: "c".into(),
+            kind: LayerKind::Conv,
+            cin,
+            cout,
+            k,
+            stride: 1,
+            out_h: 1,
+            out_w: 1,
+            gamma_group: 0,
+            in_group: -1,
+            delta_idx: -1,
+            in_delta: -1,
+            prunable: true,
+            macs: 1,
+        };
+        let rows = as_rows(&l, &w);
+        // row j element ((y*k+x)*cin+i) == src[((y*k+x)*cin+i)*cout + j]
+        for j in 0..cout {
+            for e in 0..k * k * cin {
+                assert_eq!(rows.as_f32()[j * k * k * cin + e], data[e * cout + j]);
+            }
+        }
+    }
+
+    #[test]
+    fn as_rows_linear_is_transpose() {
+        let w = Tensor::f32(vec![2, 3], vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        let l = crate::graph::Layer {
+            name: "fc".into(),
+            kind: LayerKind::Linear,
+            cin: 2,
+            cout: 3,
+            k: 1,
+            stride: 1,
+            out_h: 1,
+            out_w: 1,
+            gamma_group: 0,
+            in_group: -1,
+            delta_idx: -1,
+            in_delta: -1,
+            prunable: false,
+            macs: 1,
+        };
+        let rows = as_rows(&l, &w);
+        assert_eq!(rows.shape, vec![3, 2]);
+        assert_eq!(rows.as_f32(), &[0.0, 3.0, 1.0, 4.0, 2.0, 5.0]);
+    }
+}

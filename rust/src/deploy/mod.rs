@@ -1,0 +1,13 @@
+//! Deployment transforms (paper Sec. 4.3.3 + 4.5 + Fig. 3):
+//! channel reordering by bit-width, per-precision layer splitting, and
+//! the NE16 post-search refinement step.
+
+pub mod export;
+pub mod refine;
+pub mod reorder;
+pub mod split;
+
+pub use export::{export_model, ExportedModel};
+pub use refine::refine_for_ne16;
+pub use reorder::{reorder_assignment, ReorderPlan};
+pub use split::{split_layers, SubLayer};

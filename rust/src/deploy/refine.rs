@@ -1,0 +1,132 @@
+//! NE16 post-search refinement (paper Sec. 4.3.3): deterministic pass
+//! that may only *increase* channel bit-widths when doing so reduces
+//! NE16 latency by filling otherwise-wasted 32-channel PE slots
+//! (e.g. 33 channels at 8-bit + 31 at 4-bit -> move the 1 straggler
+//! up is never needed, but moving the 31 4-bit up into the second
+//! 8-bit pass can erase an entire pass).
+//!
+//! Greedy per group: for each precision run whose size is not a
+//! multiple of 32, try promoting the straggler channels of lower
+//! precisions upward; keep any move that lowers the modelled cycles.
+//! Never decreases a bit-width, never touches pruned channels, takes
+//! O(groups x |P|^2) — "less than 1 s" as in the paper.
+
+use crate::assignment::Assignment;
+use crate::cost::{CostModel, Ne16};
+use crate::graph::ModelGraph;
+
+/// Refine in place; returns (cycles_before, cycles_after, promotions).
+pub fn refine_for_ne16(graph: &ModelGraph, asg: &mut Assignment) -> (f64, f64, usize) {
+    let before = Ne16.cost(graph, asg);
+    let mut promotions = 0usize;
+    let bit_ladder = [2u32, 4, 8];
+    for g in 0..asg.gamma_bits.len() {
+        // try promoting all channels of precision `lo` to `hi` (hi > lo)
+        for (i, &lo) in bit_ladder.iter().enumerate() {
+            for &hi in &bit_ladder[i + 1..] {
+                let candidates: Vec<usize> = asg.gamma_bits[g]
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &b)| b == lo)
+                    .map(|(c, _)| c)
+                    .collect();
+                if candidates.is_empty() {
+                    continue;
+                }
+                // promote progressively larger prefixes; keep the best
+                let base = Ne16.cost(graph, asg);
+                let mut best: Option<(f64, usize)> = None;
+                for take in 1..=candidates.len() {
+                    let mut trial = asg.clone();
+                    for &c in &candidates[..take] {
+                        trial.gamma_bits[g][c] = hi;
+                    }
+                    let cost = Ne16.cost(graph, &trial);
+                    if cost < base && best.map(|(b, _)| cost < b).unwrap_or(true) {
+                        best = Some((cost, take));
+                    }
+                }
+                if let Some((_, take)) = best {
+                    for &c in &candidates[..take] {
+                        asg.gamma_bits[g][c] = hi;
+                    }
+                    promotions += take;
+                }
+            }
+        }
+    }
+    let after = Ne16.cost(graph, asg);
+    debug_assert!(after <= before + 1e-9);
+    (before, after, promotions)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn wide_graph() -> ModelGraph {
+        let text = r#"{
+          "model": "wide", "in_shape": [12,12,16], "num_classes": 4, "batch": 2,
+          "layers": [
+            {"name":"c0","kind":"conv","cin":16,"cout":64,"k":3,"stride":1,
+             "out_h":12,"out_w":12,"gamma_group":0,"in_group":-1,
+             "delta_idx":0,"in_delta":-1,"prunable":true,"macs":1327104},
+            {"name":"fc","kind":"linear","cin":64,"cout":4,"k":1,"stride":1,
+             "out_h":1,"out_w":1,"gamma_group":1,"in_group":0,
+             "delta_idx":-1,"in_delta":0,"prunable":false,"macs":256}
+          ],
+          "gamma_groups": [64, 4], "num_deltas": 1,
+          "pw_set": [0,2,4,8], "px_set": [2,4,8]
+        }"#;
+        ModelGraph::from_json(&Json::parse(text).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn never_increases_cost_or_decreases_bits() {
+        let g = wide_graph();
+        // pathological split: 33 at 8-bit, 31 at 4-bit
+        let mut bits = vec![8u32; 33];
+        bits.extend(vec![4u32; 31]);
+        let mut asg = Assignment {
+            gamma_bits: vec![bits.clone(), vec![8; 4]],
+            delta_bits: vec![8],
+        };
+        let orig = asg.clone();
+        let (before, after, _) = refine_for_ne16(&g, &mut asg);
+        assert!(after <= before);
+        for (gi, group) in asg.gamma_bits.iter().enumerate() {
+            for (c, &b) in group.iter().enumerate() {
+                assert!(b >= orig.gamma_bits[gi][c], "bit decreased");
+            }
+        }
+    }
+
+    #[test]
+    fn fills_pe_slots_when_beneficial() {
+        let g = wide_graph();
+        // 33 channels at 8b pay ceil(33/32)=2 passes; 31 at 4b pay 1.
+        // Promoting the 31 4-bit channels into the second 8-bit pass
+        // wastes bits but saves the whole 4-bit pass -> refinement
+        // should find *some* improving promotion here.
+        let mut bits = vec![8u32; 33];
+        bits.extend(vec![4u32; 31]);
+        let mut asg = Assignment {
+            gamma_bits: vec![bits, vec![8; 4]],
+            delta_bits: vec![8],
+        };
+        let (before, after, promotions) = refine_for_ne16(&g, &mut asg);
+        assert!(promotions > 0, "expected at least one promotion");
+        assert!(after < before);
+    }
+
+    #[test]
+    fn uniform_assignment_untouched() {
+        let g = wide_graph();
+        let mut asg = Assignment::uniform(&g, 8);
+        let orig = asg.clone();
+        let (_, _, promotions) = refine_for_ne16(&g, &mut asg);
+        assert_eq!(promotions, 0);
+        assert_eq!(asg, orig);
+    }
+}

@@ -1,0 +1,171 @@
+//! Channel reordering by bit-width (paper Fig. 3).
+//!
+//! After discretization, each layer's output channels are grouped by
+//! precision (descending bits, pruned channels dropped entirely) so
+//! the layer can execute as a few dense per-precision sub-layers. The
+//! permutation of a producer group must be mirrored on the *input*
+//! channel axis of every consumer layer; this module computes the
+//! per-group permutations and applies them to weight tensors.
+
+use crate::assignment::{Assignment, PW_SET};
+use crate::error::Result;
+use crate::graph::{LayerKind, ModelGraph};
+use crate::util::tensor::Tensor;
+
+/// Per-group channel permutation: `perm[new_index] = old_index`,
+/// pruned channels removed.
+#[derive(Debug, Clone)]
+pub struct ReorderPlan {
+    /// One permutation per gamma group.
+    pub perms: Vec<Vec<usize>>,
+    /// Reordered per-group bits (descending precision runs).
+    pub bits: Vec<Vec<u32>>,
+}
+
+/// Build the reorder plan: channels sorted by descending bit-width
+/// (stable within a precision), pruned (0-bit) channels dropped.
+pub fn reorder_assignment(asg: &Assignment) -> ReorderPlan {
+    let mut perms = Vec::new();
+    let mut bits = Vec::new();
+    for group in &asg.gamma_bits {
+        let mut idx: Vec<usize> = (0..group.len()).filter(|&c| group[c] > 0).collect();
+        idx.sort_by_key(|&c| std::cmp::Reverse(group[c]));
+        bits.push(idx.iter().map(|&c| group[c]).collect());
+        perms.push(idx);
+    }
+    ReorderPlan { perms, bits }
+}
+
+impl ReorderPlan {
+    /// Contiguous per-precision runs of a reordered group:
+    /// `(bits, start, len)` in output-channel order.
+    pub fn runs(&self, group: usize) -> Vec<(u32, usize, usize)> {
+        let mut out = Vec::new();
+        for &p in PW_SET.iter().rev() {
+            if p == 0 {
+                continue;
+            }
+            let start = self.bits[group].iter().take_while(|&&b| b > p).count();
+            let len = self.bits[group].iter().filter(|&&b| b == p).count();
+            if len > 0 {
+                out.push((p, start, len));
+            }
+        }
+        out
+    }
+
+    /// Apply the plan to one layer's weights: permute + drop output
+    /// channels by the layer's own group, and permute + drop input
+    /// channels by the producer group (`in_perm`), mirroring Fig. 3's
+    /// "subsequent layers' weights must be reordered accordingly".
+    pub fn apply_to_weights(
+        &self,
+        graph: &ModelGraph,
+        layer: &crate::graph::Layer,
+        w: &Tensor,
+    ) -> Result<Tensor> {
+        let out_perm = &self.perms[layer.gamma_group];
+        let in_perm: Option<&Vec<usize>> = if layer.in_group >= 0 {
+            Some(&self.perms[layer.in_group as usize])
+        } else {
+            None
+        };
+        let _ = graph;
+        match layer.kind {
+            LayerKind::Linear => {
+                // (in, out)
+                let (cin, cout) = (w.shape[0], w.shape[1]);
+                let src = w.as_f32();
+                let in_idx: Vec<usize> =
+                    in_perm.cloned().unwrap_or_else(|| (0..cin).collect());
+                let mut data = vec![0f32; in_idx.len() * out_perm.len()];
+                for (ni, &oi) in in_idx.iter().enumerate() {
+                    for (nj, &oj) in out_perm.iter().enumerate() {
+                        data[ni * out_perm.len() + nj] = src[oi * cout + oj];
+                    }
+                }
+                Ok(Tensor::f32(vec![in_idx.len(), out_perm.len()], data))
+            }
+            LayerKind::Depthwise => {
+                // (k, k, c, 1): single channel axis follows the group
+                let (k1, k2, c) = (w.shape[0], w.shape[1], w.shape[2]);
+                let src = w.as_f32();
+                let mut data = vec![0f32; k1 * k2 * out_perm.len()];
+                for y in 0..k1 {
+                    for x in 0..k2 {
+                        for (nc, &oc) in out_perm.iter().enumerate() {
+                            data[(y * k2 + x) * out_perm.len() + nc] =
+                                src[(y * k2 + x) * c + oc];
+                        }
+                    }
+                }
+                Ok(Tensor::f32(vec![k1, k2, out_perm.len(), 1], data))
+            }
+            LayerKind::Conv => {
+                // (k, k, cin, cout)
+                let (k1, k2, cin, cout) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+                let src = w.as_f32();
+                let in_idx: Vec<usize> =
+                    in_perm.cloned().unwrap_or_else(|| (0..cin).collect());
+                let (ncin, ncout) = (in_idx.len(), out_perm.len());
+                let mut data = vec![0f32; k1 * k2 * ncin * ncout];
+                for y in 0..k1 {
+                    for x in 0..k2 {
+                        for (ni, &oi) in in_idx.iter().enumerate() {
+                            for (nj, &oj) in out_perm.iter().enumerate() {
+                                data[((y * k2 + x) * ncin + ni) * ncout + nj] =
+                                    src[((y * k2 + x) * cin + oi) * cout + oj];
+                            }
+                        }
+                    }
+                }
+                Ok(Tensor::f32(vec![k1, k2, ncin, ncout], data))
+            }
+        }
+    }
+
+    /// Apply to a per-output-channel bias vector.
+    pub fn apply_to_bias(&self, group: usize, b: &Tensor) -> Tensor {
+        let src = b.as_f32();
+        let data: Vec<f32> = self.perms[group].iter().map(|&c| src[c]).collect();
+        Tensor::f32(vec![data.len()], data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn asg2() -> Assignment {
+        Assignment {
+            gamma_bits: vec![vec![2, 8, 0, 4, 8, 0], vec![4, 4]],
+            delta_bits: vec![8],
+        }
+    }
+
+    #[test]
+    fn sorts_descending_and_drops_pruned() {
+        let plan = reorder_assignment(&asg2());
+        assert_eq!(plan.bits[0], vec![8, 8, 4, 2]);
+        assert_eq!(plan.perms[0], vec![1, 4, 3, 0]);
+        assert_eq!(plan.runs(0), vec![(8, 0, 2), (4, 2, 1), (2, 3, 1)]);
+    }
+
+    #[test]
+    fn bias_follows_permutation() {
+        let plan = reorder_assignment(&asg2());
+        let b = Tensor::f32(vec![6], vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        let nb = plan.apply_to_bias(0, &b);
+        assert_eq!(nb.as_f32(), &[1.0, 4.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn stable_within_precision() {
+        let asg = Assignment {
+            gamma_bits: vec![vec![8, 8, 8]],
+            delta_bits: vec![],
+        };
+        let plan = reorder_assignment(&asg);
+        assert_eq!(plan.perms[0], vec![0, 1, 2]);
+    }
+}

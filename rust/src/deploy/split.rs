@@ -1,0 +1,113 @@
+//! Per-precision layer splitting (paper Sec. 4.5 / Fig. 3, right):
+//! after reordering, a mixed-precision layer becomes `|P_W|` dense
+//! sub-layers whose outputs concatenate (activations are layer-wise
+//! quantized, so concatenation is well-defined).
+
+use crate::deploy::reorder::ReorderPlan;
+use crate::graph::{Layer, ModelGraph};
+
+/// One dense sub-layer of a split mixed-precision layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubLayer {
+    pub layer: String,
+    pub bits: u32,
+    /// Output-channel range [start, start+len) in the reordered layer.
+    pub start: usize,
+    pub len: usize,
+    /// Effective input channels (after producer pruning).
+    pub cin_eff: usize,
+    /// Weight bits this sub-layer stores.
+    pub weight_bits: u64,
+}
+
+/// Split every layer of the graph according to the reorder plan.
+pub fn split_layers(graph: &ModelGraph, plan: &ReorderPlan) -> Vec<SubLayer> {
+    let mut out = Vec::new();
+    for l in &graph.layers {
+        let cin_eff = if l.in_group >= 0 {
+            plan.perms[l.in_group as usize].len()
+        } else {
+            l.cin
+        };
+        for (bits, start, len) in plan.runs(l.gamma_group) {
+            let per_ch = match l.kind {
+                crate::graph::LayerKind::Depthwise => l.k * l.k,
+                _ => cin_eff * l.k * l.k,
+            };
+            out.push(SubLayer {
+                layer: l.name.clone(),
+                bits,
+                start,
+                len,
+                cin_eff,
+                weight_bits: (per_ch * len) as u64 * bits as u64,
+            });
+        }
+    }
+    out
+}
+
+/// Total storage of the split model in bits; must equal the Size cost
+/// model on the same assignment (consistency is property-tested).
+pub fn total_bits(subs: &[SubLayer]) -> u64 {
+    subs.iter().map(|s| s.weight_bits).sum()
+}
+
+/// Sub-layers of one layer, in output-channel order.
+pub fn of_layer<'a>(subs: &'a [SubLayer], layer: &Layer) -> Vec<&'a SubLayer> {
+    subs.iter().filter(|s| s.layer == layer.name).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assignment::Assignment;
+    use crate::cost::{CostModel, Size};
+    use crate::deploy::reorder::reorder_assignment;
+    use crate::util::json::Json;
+
+    fn tiny() -> ModelGraph {
+        let text = r#"{
+          "model": "tiny", "in_shape": [8,8,3], "num_classes": 4, "batch": 2,
+          "layers": [
+            {"name":"c0","kind":"conv","cin":3,"cout":8,"k":3,"stride":1,
+             "out_h":8,"out_w":8,"gamma_group":0,"in_group":-1,
+             "delta_idx":0,"in_delta":-1,"prunable":true,"macs":13824},
+            {"name":"fc","kind":"linear","cin":8,"cout":4,"k":1,"stride":1,
+             "out_h":1,"out_w":1,"gamma_group":1,"in_group":0,
+             "delta_idx":-1,"in_delta":0,"prunable":false,"macs":32}
+          ],
+          "gamma_groups": [8, 4], "num_deltas": 1,
+          "pw_set": [0,2,4,8], "px_set": [2,4,8]
+        }"#;
+        ModelGraph::from_json(&Json::parse(text).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn split_matches_size_model() {
+        let g = tiny();
+        let asg = Assignment {
+            gamma_bits: vec![vec![8, 4, 0, 2, 8, 0, 4, 8], vec![8, 8, 4, 4]],
+            delta_bits: vec![8],
+        };
+        let plan = reorder_assignment(&asg);
+        let subs = split_layers(&g, &plan);
+        assert_eq!(total_bits(&subs) as f64, Size.cost(&g, &asg));
+    }
+
+    #[test]
+    fn sublayers_cover_kept_channels() {
+        let g = tiny();
+        let asg = Assignment {
+            gamma_bits: vec![vec![8, 4, 0, 2, 8, 0, 4, 8], vec![4, 4, 4, 4]],
+            delta_bits: vec![8],
+        };
+        let plan = reorder_assignment(&asg);
+        let subs = split_layers(&g, &plan);
+        let c0: usize = of_layer(&subs, &g.layers[0]).iter().map(|s| s.len).sum();
+        assert_eq!(c0, 6); // 8 channels - 2 pruned
+        let fc = of_layer(&subs, &g.layers[1]);
+        assert_eq!(fc.len(), 1); // uniform 4-bit: single dense sub-layer
+        assert_eq!(fc[0].cin_eff, 6);
+    }
+}

@@ -1,0 +1,37 @@
+//! Crate-wide error type.
+
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("xla: {0}")]
+    Xla(#[from] xla::Error),
+
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("json: {0}")]
+    Json(#[from] crate::util::json::JsonError),
+
+    #[error("manifest: {0}")]
+    Manifest(String),
+
+    #[error("shape: {0}")]
+    Shape(String),
+
+    #[error("config: {0}")]
+    Config(String),
+
+    #[error("{0}")]
+    Msg(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    pub fn msg(s: impl Into<String>) -> Self {
+        Error::Msg(s.into())
+    }
+
+    pub fn manifest(s: impl Into<String>) -> Self {
+        Error::Manifest(s.into())
+    }
+}

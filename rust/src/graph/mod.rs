@@ -1,0 +1,248 @@
+//! Model graph IR, parsed from `artifacts/graph_<model>.json`.
+//!
+//! This is the Rust-side twin of the Python `LayerSpec` list
+//! (`python/compile/layers.py`): the exact integer cost models
+//! (`cost`, `hwsim`), the deploy transforms (`deploy`) and the
+//! assignment bookkeeping (`assignment`) all operate on this IR.
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    Depthwise,
+    Linear,
+}
+
+impl LayerKind {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "conv" => Ok(LayerKind::Conv),
+            "dw" => Ok(LayerKind::Depthwise),
+            "linear" => Ok(LayerKind::Linear),
+            other => Err(Error::manifest(format!("unknown layer kind '{other}'"))),
+        }
+    }
+}
+
+/// One layer of the reference network (paper Sec. 4.1 search space).
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    pub cin: usize,
+    pub cout: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub out_h: usize,
+    pub out_w: usize,
+    /// Shared bit-width selection group for this layer's output channels.
+    pub gamma_group: usize,
+    /// Producer group of this layer's input (-1 == network input).
+    pub in_group: isize,
+    /// Activation delta index of this layer's output (-1 == none).
+    pub delta_idx: isize,
+    /// Activation delta index of this layer's input (-1 == 8-bit input).
+    pub in_delta: isize,
+    pub prunable: bool,
+    pub macs: u64,
+}
+
+impl Layer {
+    /// Weight-element count per output channel.
+    pub fn weights_per_channel(&self) -> usize {
+        match self.kind {
+            LayerKind::Depthwise => self.k * self.k,
+            _ => self.cin * self.k * self.k,
+        }
+    }
+
+    /// MACs contributed by one output channel at full input width.
+    pub fn macs_per_channel(&self) -> u64 {
+        (self.macs / self.cout as u64).max(1)
+    }
+}
+
+/// Whole-model graph.
+#[derive(Debug, Clone)]
+pub struct ModelGraph {
+    pub model: String,
+    pub in_shape: [usize; 3],
+    pub num_classes: usize,
+    pub batch: usize,
+    pub layers: Vec<Layer>,
+    /// `gamma_groups[g]` == number of channels in group `g`.
+    pub gamma_groups: Vec<usize>,
+    pub num_deltas: usize,
+    pub pw_set: Vec<u32>,
+    pub px_set: Vec<u32>,
+}
+
+impl ModelGraph {
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let shape: Vec<usize> = v
+            .get("in_shape")
+            .as_arr()
+            .ok_or_else(|| Error::manifest("in_shape"))?
+            .iter()
+            .map(|x| x.as_usize().unwrap_or(0))
+            .collect();
+        if shape.len() != 3 {
+            return Err(Error::manifest("in_shape must be rank 3"));
+        }
+        let mut layers = Vec::new();
+        for l in v.get("layers").as_arr().unwrap_or(&[]) {
+            layers.push(Layer {
+                name: l.get("name").as_str().unwrap_or("").to_string(),
+                kind: LayerKind::parse(l.get("kind").as_str().unwrap_or(""))?,
+                cin: l.get("cin").as_usize().unwrap_or(0),
+                cout: l.get("cout").as_usize().unwrap_or(0),
+                k: l.get("k").as_usize().unwrap_or(1),
+                stride: l.get("stride").as_usize().unwrap_or(1),
+                out_h: l.get("out_h").as_usize().unwrap_or(1),
+                out_w: l.get("out_w").as_usize().unwrap_or(1),
+                gamma_group: l.get("gamma_group").as_usize().unwrap_or(0),
+                in_group: l.get("in_group").as_i64().unwrap_or(-1) as isize,
+                delta_idx: l.get("delta_idx").as_i64().unwrap_or(-1) as isize,
+                in_delta: l.get("in_delta").as_i64().unwrap_or(-1) as isize,
+                prunable: l.get("prunable").as_bool().unwrap_or(true),
+                macs: l.get("macs").as_i64().unwrap_or(0) as u64,
+            });
+        }
+        if layers.is_empty() {
+            return Err(Error::manifest("graph has no layers"));
+        }
+        Ok(ModelGraph {
+            model: v.get("model").as_str().unwrap_or("").to_string(),
+            in_shape: [shape[0], shape[1], shape[2]],
+            num_classes: v.get("num_classes").as_usize().unwrap_or(0),
+            batch: v.get("batch").as_usize().unwrap_or(0),
+            layers,
+            gamma_groups: v
+                .get("gamma_groups")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|x| x.as_usize().unwrap_or(0))
+                .collect(),
+            num_deltas: v.get("num_deltas").as_usize().unwrap_or(0),
+            pw_set: v
+                .get("pw_set")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|x| x.as_usize().unwrap_or(0) as u32)
+                .collect(),
+            px_set: v
+                .get("px_set")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|x| x.as_usize().unwrap_or(0) as u32)
+                .collect(),
+        })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn layer(&self, name: &str) -> Option<&Layer> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+
+    /// Is a group's 0-bit option available (all member layers prunable)?
+    pub fn group_prunable(&self, gid: usize) -> bool {
+        self.layers
+            .iter()
+            .filter(|l| l.gamma_group == gid)
+            .all(|l| l.prunable)
+    }
+
+    /// Total parameter count (weights only).
+    pub fn total_weights(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| (l.weights_per_channel() * l.cout) as u64)
+            .sum()
+    }
+
+    /// Total MACs per inference.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+
+    /// Sanity-check group / delta wiring (used by integration tests).
+    pub fn validate(&self) -> Result<()> {
+        for l in &self.layers {
+            let g = self
+                .gamma_groups
+                .get(l.gamma_group)
+                .copied()
+                .ok_or_else(|| Error::manifest(format!("{}: bad gamma group", l.name)))?;
+            if g != l.cout {
+                return Err(Error::manifest(format!(
+                    "{}: group size {g} != cout {}",
+                    l.name, l.cout
+                )));
+            }
+            if l.in_group >= self.gamma_groups.len() as isize {
+                return Err(Error::manifest(format!("{}: bad in_group", l.name)));
+            }
+            if l.kind == LayerKind::Depthwise && l.cin != l.cout {
+                return Err(Error::manifest(format!("{}: dw cin != cout", l.name)));
+            }
+            if l.delta_idx >= self.num_deltas as isize {
+                return Err(Error::manifest(format!("{}: bad delta", l.name)));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub fn tiny_graph() -> ModelGraph {
+        let text = r#"{
+          "model": "tiny", "in_shape": [8,8,3], "num_classes": 4, "batch": 2,
+          "layers": [
+            {"name":"c0","kind":"conv","cin":3,"cout":8,"k":3,"stride":1,
+             "out_h":8,"out_w":8,"gamma_group":0,"in_group":-1,
+             "delta_idx":0,"in_delta":-1,"prunable":true,"macs":13824},
+            {"name":"fc","kind":"linear","cin":8,"cout":4,"k":1,"stride":1,
+             "out_h":1,"out_w":1,"gamma_group":1,"in_group":0,
+             "delta_idx":-1,"in_delta":0,"prunable":false,"macs":32}
+          ],
+          "gamma_groups": [8, 4], "num_deltas": 1,
+          "pw_set": [0,2,4,8], "px_set": [2,4,8]
+        }"#;
+        ModelGraph::from_json(&Json::parse(text).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let g = tiny_graph();
+        g.validate().unwrap();
+        assert_eq!(g.layers.len(), 2);
+        assert_eq!(g.layers[0].weights_per_channel(), 27);
+        assert_eq!(g.total_weights(), 27 * 8 + 8 * 4);
+        assert!(!g.group_prunable(1));
+        assert!(g.group_prunable(0));
+    }
+
+    #[test]
+    fn real_graphs_validate_if_present() {
+        for m in ["resnet8", "dscnn", "resnet10"] {
+            let p = std::path::Path::new("artifacts").join(format!("graph_{m}.json"));
+            if p.exists() {
+                let g = ModelGraph::load(&p).unwrap();
+                g.validate().unwrap();
+                assert_eq!(g.model, m);
+            }
+        }
+    }
+}

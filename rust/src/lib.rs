@@ -1,0 +1,31 @@
+//! # mixprec
+//!
+//! A Rust + JAX + Pallas (three-layer, AOT via PJRT) reproduction of
+//! *"Joint Pruning and Channel-wise Mixed-Precision Quantization for
+//! Efficient Deep Neural Networks"* (Motetti et al., 2024).
+//!
+//! * **L1** (`python/compile/kernels`): Pallas kernels for the
+//!   effective-tensor construction and the integer deployment conv.
+//! * **L2** (`python/compile`): JAX search/train/eval graphs, lowered
+//!   once to HLO-text artifacts by `make artifacts`.
+//! * **L3** (this crate): the search coordinator — phases, schedules,
+//!   lambda sweeps, Pareto fronts, exact cost models / HW simulators,
+//!   deploy transforms and baselines. Python never runs at runtime.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod assignment;
+pub mod baselines;
+pub mod coordinator;
+pub mod cost;
+pub mod data;
+pub mod deploy;
+pub mod error;
+pub mod graph;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,201 @@
+//! `mixprec` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   search   — one joint-search pipeline (model, reg, lambda, sampling)
+//!   sweep    — lambda sweep + Pareto front for one method
+//!   compare  — joint vs baselines (fig. 5 style) at bench scale
+//!   deploy   — discretize + NE16 refine + reorder/split report
+//!   qdemo    — run the integer-conv Pallas artifact end to end
+//!   info     — manifest/artifact inventory
+
+use mixprec::assignment::PrecisionMasks;
+use mixprec::baselines::Method;
+use mixprec::coordinator::{
+    default_lambdas, sweep_lambdas, Context, PipelineConfig, Sampling,
+};
+use mixprec::cost::{Mpic, Ne16, Size};
+use mixprec::deploy::{refine_for_ne16, reorder_assignment, split_layers};
+use mixprec::report;
+use mixprec::util::cli::Args;
+use mixprec::util::table::{f2, f4, Table};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: mixprec <search|sweep|compare|deploy|qdemo|info> [options]
+  common options:
+    --model resnet8|dscnn|resnet10   (default resnet8)
+    --reg size|mpic|ne16|bitops      (default size)
+    --sampling softmax|argmax|gumbel (default softmax)
+    --lambda <f>          regularization strength (default 0.5)
+    --lambdas a,b,c       sweep strengths (default log grid)
+    --points <n>          sweep size when --lambdas absent (default 5)
+    --warmup/--steps/--finetune <n>  phase step counts
+    --data-frac <f>       dataset scale (default 0.5)
+    --workers <n>         parallel sweep workers (default 1)
+    --seed <n>            RNG seed
+    --act-search          open activation precisions {{2,4,8}}
+    --verbose"
+    );
+    std::process::exit(2);
+}
+
+fn build_cfg(a: &Args) -> PipelineConfig {
+    let model = a.str_or("model", "resnet8");
+    let mut cfg = PipelineConfig::quick(&model);
+    cfg.reg = a.str_or("reg", "size");
+    cfg.sampling = Sampling::parse(&a.str_or("sampling", "softmax")).unwrap_or(Sampling::Softmax);
+    cfg.lambda = a.f32_or("lambda", 0.5);
+    cfg.warmup_steps = a.usize_or("warmup", cfg.warmup_steps);
+    cfg.search_steps = a.usize_or("steps", cfg.search_steps);
+    cfg.finetune_steps = a.usize_or("finetune", cfg.finetune_steps);
+    cfg.data_frac = a.f64_or("data-frac", cfg.data_frac);
+    cfg.seed = a.u64_or("seed", cfg.seed);
+    cfg.verbose = a.has("verbose");
+    if a.has("act-search") {
+        cfg.masks = PrecisionMasks::joint_act();
+    }
+    cfg
+}
+
+fn main() {
+    let a = Args::from_env();
+    let cmd = a.pos(0).unwrap_or("").to_string();
+    if cmd.is_empty() {
+        usage();
+    }
+    if let Err(e) = run(&cmd, &a) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(cmd: &str, a: &Args) -> mixprec::Result<()> {
+    match cmd {
+        "info" => {
+            let ctx = Context::load_default(0.1)?;
+            println!("platform: {}", ctx.eng.platform());
+            let mut t = Table::new(
+                "models",
+                &["model", "batch", "classes", "layers", "params", "artifacts"],
+            );
+            for m in ctx.models() {
+                let g = ctx.graph(&m);
+                let mm = ctx.man.model(&m)?;
+                t.row(vec![
+                    m.clone(),
+                    mm.batch.to_string(),
+                    mm.num_classes.to_string(),
+                    g.layers.len().to_string(),
+                    g.total_weights().to_string(),
+                    mm.artifacts.len().to_string(),
+                ]);
+            }
+            println!("{}", t.to_markdown());
+        }
+        "qdemo" => {
+            let dir = Context::artifacts_dir();
+            let eng = mixprec::runtime::Engine::cpu()?;
+            let exe = eng.load(&dir.join("qdemo.hlo.txt"))?;
+            let xq = xla::Literal::vec1(&vec![3i32; 64 * 72]).reshape(&[64, 72])?;
+            let wq = xla::Literal::vec1(&vec![1i32; 72 * 32]).reshape(&[72, 32])?;
+            let sc = xla::Literal::vec1(&vec![0.25f32; 32]);
+            let out = exe.run(&[xq, wq, sc])?;
+            let v = out[0].to_vec::<f32>()?;
+            println!(
+                "qdemo: integer conv kernel OK, out[0]={} (expect {})",
+                v[0],
+                72.0 * 3.0 * 0.25
+            );
+        }
+        "search" => {
+            let cfg = build_cfg(a);
+            let ctx = Context::load_default(cfg.data_frac)?;
+            let runner = ctx.runner(&cfg.model)?;
+            let r = runner.run(&cfg)?;
+            let rr = [(Method::Joint.label(), &r)];
+            println!("{}", report::runs_table("search result", &rr).to_markdown());
+            println!("{}", report::history_table(&r).to_markdown());
+        }
+        "sweep" => {
+            let cfg = build_cfg(a);
+            let lambdas = a.f64_list("lambdas", &default_lambdas(a.usize_or("points", 5)));
+            let workers = a.usize_or("workers", 1);
+            let ctx = Context::load_default(cfg.data_frac)?;
+            let runner = ctx.runner(&cfg.model)?;
+            let sw = sweep_lambdas(&runner, &cfg, &lambdas, &cfg.reg.clone(), workers)?;
+            let rows: Vec<(String, &_)> = sw
+                .runs
+                .iter()
+                .map(|r| (format!("lam={}", r.lambda), r))
+                .collect();
+            println!("{}", report::runs_table("sweep", &rows).to_markdown());
+            let front = sw.front();
+            println!(
+                "{}",
+                report::front_table("pareto front (val acc)", &front, &cfg.reg).to_markdown()
+            );
+        }
+        "compare" => {
+            let cfg = build_cfg(a);
+            let lambdas = a.f64_list("lambdas", &default_lambdas(a.usize_or("points", 3)));
+            let workers = a.usize_or("workers", 1);
+            let ctx = Context::load_default(cfg.data_frac)?;
+            let runner = ctx.runner(&cfg.model)?;
+            let mut rows: Vec<(String, mixprec::coordinator::RunResult)> = Vec::new();
+            for m in [Method::Joint, Method::MixPrec, Method::EdMips, Method::Pit] {
+                let mcfg = m.configure(&cfg);
+                let sw = sweep_lambdas(&runner, &mcfg, &lambdas, &cfg.reg.clone(), workers)?;
+                for r in sw.runs {
+                    rows.push((m.label(), r));
+                }
+            }
+            for (b, r) in [2u32, 4, 8]
+                .iter()
+                .zip(mixprec::baselines::fixed_baselines(&runner, &cfg, &[2, 4, 8])?)
+            {
+                rows.push((format!("w{b}a8"), r));
+            }
+            let refs: Vec<(String, &_)> = rows.iter().map(|(l, r)| (l.clone(), r)).collect();
+            println!("{}", report::runs_table("method comparison", &refs).to_markdown());
+        }
+        "deploy" => {
+            let cfg = build_cfg(a);
+            let ctx = Context::load_default(cfg.data_frac)?;
+            let runner = ctx.runner(&cfg.model)?;
+            let r = runner.run(&cfg)?;
+            let g = ctx.graph(&cfg.model);
+            let mut asg = r.assignment.clone();
+            let (before, after, promoted) = refine_for_ne16(g, &mut asg);
+            let plan = reorder_assignment(&asg);
+            let subs = split_layers(g, &plan);
+            println!(
+                "search acc {:.4} | size {:.2} kB | NE16 refine: {:.0} -> {:.0} cycles ({promoted} promotions)",
+                r.test_acc,
+                Size::kb(g, &asg),
+                before,
+                after,
+            );
+            let mut t = Table::new(
+                "deployed sub-layers (fig. 3 split)",
+                &["layer", "bits", "range", "cin_eff", "kbits"],
+            );
+            for s in &subs {
+                t.row(vec![
+                    s.layer.clone(),
+                    s.bits.to_string(),
+                    format!("{}..{}", s.start, s.start + s.len),
+                    s.cin_eff.to_string(),
+                    f2(s.weight_bits as f64 / 1e3),
+                ]);
+            }
+            println!("{}", t.to_markdown());
+            println!(
+                "latency: MPIC {} ms | NE16 {} ms",
+                f4(Mpic::latency_ms(g, &asg)),
+                f4(Ne16::latency_ms(g, &asg))
+            );
+        }
+        _ => usage(),
+    }
+    Ok(())
+}

@@ -1,0 +1,166 @@
+//! Host-side integer quantization — the deployment twin of
+//! `python/compile/quantlib.py` (paper Sec. 2.1 affine scheme).
+//!
+//! Used by `deploy::export` to materialize the final integer model
+//! from the searched float weights + discretized assignment, exactly
+//! as the L1 `qconv_int` kernel consumes it.
+
+use crate::util::tensor::Tensor;
+
+/// Symmetric per-channel quantization result for one weight tensor
+/// viewed as (C_out, C_in*K*K) rows.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantizedRows {
+    pub cout: usize,
+    pub row_len: usize,
+    /// Per-channel bit-width (0 == pruned; the row is then empty).
+    pub bits: Vec<u32>,
+    /// Per-channel scale (w ~= q * scale).
+    pub scales: Vec<f32>,
+    /// Integer codes, row-major, pruned rows omitted.
+    pub codes: Vec<i32>,
+}
+
+pub fn qmax_signed(bits: u32) -> f32 {
+    ((1i64 << (bits - 1)) - 1) as f32
+}
+
+/// Quantize one channel row at `bits` (symmetric min-max).
+pub fn quantize_row(row: &[f32], bits: u32) -> (Vec<i32>, f32) {
+    assert!(bits >= 2, "use 0-bit pruning upstream");
+    let absmax = row.iter().fold(0f32, |m, &v| m.max(v.abs()));
+    let absmax = if absmax == 0.0 { 1.0 } else { absmax };
+    let qmax = qmax_signed(bits);
+    let scale = absmax / qmax;
+    let codes = row
+        .iter()
+        .map(|&v| (v / scale).round().clamp(-qmax, qmax) as i32)
+        .collect();
+    (codes, scale)
+}
+
+/// Dequantize (for round-trip checks).
+pub fn dequantize_row(codes: &[i32], scale: f32) -> Vec<f32> {
+    codes.iter().map(|&q| q as f32 * scale).collect()
+}
+
+/// Quantize a (C_out, row_len) matrix with per-channel bit-widths.
+pub fn quantize_rows(w2d: &Tensor, bits: &[u32]) -> QuantizedRows {
+    assert_eq!(w2d.shape.len(), 2);
+    let (cout, row_len) = (w2d.shape[0], w2d.shape[1]);
+    assert_eq!(bits.len(), cout);
+    let data = w2d.as_f32();
+    let mut scales = Vec::with_capacity(cout);
+    let mut codes = Vec::new();
+    for c in 0..cout {
+        if bits[c] == 0 {
+            scales.push(0.0);
+            continue;
+        }
+        let (q, s) = quantize_row(&data[c * row_len..(c + 1) * row_len], bits[c]);
+        scales.push(s);
+        codes.extend(q);
+    }
+    QuantizedRows {
+        cout,
+        row_len,
+        bits: bits.to_vec(),
+        scales,
+        codes,
+    }
+}
+
+impl QuantizedRows {
+    /// Storage in bits (codes only, as the Size cost model counts).
+    pub fn storage_bits(&self) -> u64 {
+        self.bits
+            .iter()
+            .filter(|&&b| b > 0)
+            .map(|&b| b as u64 * self.row_len as u64)
+            .sum()
+    }
+
+    /// Worst-case absolute reconstruction error per channel
+    /// (half a quantization step).
+    pub fn max_error(&self, c: usize) -> f32 {
+        self.scales[c] / 2.0
+    }
+}
+
+/// PACT activation quantization parameters for deployment.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ActQuant {
+    pub alpha: f32,
+    pub bits: u32,
+}
+
+impl ActQuant {
+    pub fn step(&self) -> f32 {
+        self.alpha / ((1u32 << self.bits) - 1) as f32
+    }
+
+    pub fn quantize(&self, x: f32) -> u32 {
+        let y = x.clamp(0.0, self.alpha);
+        (y / self.step()).round() as u32
+    }
+
+    pub fn dequantize(&self, q: u32) -> f32 {
+        q as f32 * self.step()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_roundtrip_error_bounded() {
+        let row: Vec<f32> = (0..64).map(|i| ((i * 37) % 13) as f32 / 6.5 - 1.0).collect();
+        for bits in [2, 4, 8] {
+            let (codes, scale) = quantize_row(&row, bits);
+            let back = dequantize_row(&codes, scale);
+            let qmax = qmax_signed(bits);
+            for (a, b) in row.iter().zip(&back) {
+                assert!((a - b).abs() <= scale / 2.0 + 1e-6, "bits={bits}");
+            }
+            assert!(codes.iter().all(|&q| (q as f32).abs() <= qmax));
+        }
+    }
+
+    #[test]
+    fn matches_python_quantlib_semantics() {
+        // same guard: all-zero channel quantizes to zeros with scale 1/qmax
+        let (codes, scale) = quantize_row(&[0.0; 8], 8);
+        assert_eq!(codes, vec![0; 8]);
+        assert!((scale - 1.0 / 127.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rows_with_pruning() {
+        let w = Tensor::f32(vec![3, 4], vec![1.0; 12]);
+        let q = quantize_rows(&w, &[8, 0, 2]);
+        assert_eq!(q.codes.len(), 8); // pruned row omitted
+        assert_eq!(q.storage_bits(), 8 * 4 + 2 * 4);
+        assert_eq!(q.scales[1], 0.0);
+    }
+
+    #[test]
+    fn act_quant_grid() {
+        let a = ActQuant { alpha: 6.0, bits: 8 };
+        assert_eq!(a.quantize(-1.0), 0);
+        assert_eq!(a.quantize(7.0), 255);
+        let q = a.quantize(3.0);
+        assert!((a.dequantize(q) - 3.0).abs() <= a.step() / 2.0 + 1e-6);
+    }
+
+    #[test]
+    fn two_bit_has_three_levels() {
+        let row = vec![-1.0, -0.4, 0.0, 0.4, 1.0];
+        let (codes, _) = quantize_row(&row, 2);
+        let mut uniq = codes.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert!(uniq.len() <= 3);
+        assert!(uniq.iter().all(|&q| (-1..=1).contains(&q)));
+    }
+}

@@ -1,0 +1,105 @@
+//! Shared scaffolding for the figure/table bench harnesses
+//! (`rust/benches/*.rs`, `harness = false`).
+//!
+//! Each harness regenerates one paper table/figure at *bench scale*
+//! (synthetic data, shortened phases — the testbed has a single CPU
+//! core; see DESIGN.md Sec. 3/4). Scale knobs come from env vars so
+//! `cargo bench` stays bounded while `MIXPREC_FULL=1` runs the long
+//! version:
+//!
+//! * `MIXPREC_WARMUP` / `MIXPREC_STEPS` / `MIXPREC_FINETUNE`
+//! * `MIXPREC_POINTS`   — lambda points per sweep
+//! * `MIXPREC_DATA_FRAC`
+//! * `MIXPREC_WORKERS`
+
+use std::time::Instant;
+
+use crate::coordinator::{Context, PipelineConfig, TempSchedule};
+use crate::error::Result;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchScale {
+    pub warmup: usize,
+    pub steps: usize,
+    pub finetune: usize,
+    pub points: usize,
+    pub data_frac: f64,
+    pub workers: usize,
+}
+
+impl BenchScale {
+    pub fn from_env() -> Self {
+        let full = std::env::var("MIXPREC_FULL").is_ok();
+        let (w, s, f, p, d) = if full {
+            (300, 400, 120, 7, 1.0)
+        } else {
+            (48, 96, 24, 3, 0.15)
+        };
+        BenchScale {
+            warmup: env_usize("MIXPREC_WARMUP", w),
+            steps: env_usize("MIXPREC_STEPS", s),
+            finetune: env_usize("MIXPREC_FINETUNE", f),
+            points: env_usize("MIXPREC_POINTS", p),
+            data_frac: env_f64("MIXPREC_DATA_FRAC", d),
+            workers: env_usize("MIXPREC_WORKERS", 1),
+        }
+    }
+
+    pub fn config(&self, model: &str) -> PipelineConfig {
+        let mut cfg = PipelineConfig::quick(model);
+        cfg.warmup_steps = self.warmup;
+        cfg.search_steps = self.steps;
+        cfg.finetune_steps = self.finetune;
+        cfg.data_frac = self.data_frac;
+        cfg.eval_every = (self.steps / 3).max(8);
+        cfg.steps_per_epoch = 16;
+        // keep the same *final* temperature despite the short schedule,
+        // as the paper does for Tiny ImageNet (Sec. 5.1.1)
+        cfg.temp = TempSchedule::rescaled(self.steps / 16, 200);
+        cfg
+    }
+}
+
+/// Bench harness entrypoint: prints a banner, loads the context, runs
+/// the body, prints elapsed. Skips gracefully when artifacts are
+/// missing (so `cargo bench` works pre-`make artifacts` in CI dry
+/// runs).
+pub fn run_bench(name: &str, body: impl FnOnce(&Context, &BenchScale) -> Result<()>) {
+    // `cargo bench` passes harness flags; ignore them.
+    let scale = BenchScale::from_env();
+    println!("=== {name} (scale: {scale:?}) ===");
+    let dir = Context::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP: no artifacts at {dir:?}; run `make artifacts` first");
+        return;
+    }
+    let t0 = Instant::now();
+    let ctx = match Context::load(&dir, scale.data_frac) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("SKIP: context load failed: {e}");
+            return;
+        }
+    };
+    match body(&ctx, &scale) {
+        Ok(()) => println!("=== {name} done in {:.1}s ===", t0.elapsed().as_secs_f64()),
+        Err(e) => {
+            eprintln!("{name} FAILED: {e}");
+            std::process::exit(1);
+        }
+    }
+}

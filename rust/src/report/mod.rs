@@ -1,0 +1,109 @@
+//! Report helpers shared by the figure/table bench harnesses: run
+//! tables, headline iso-accuracy/iso-cost deltas, history CSVs.
+
+pub mod benchkit;
+
+use crate::coordinator::pareto::ParetoFront;
+use crate::coordinator::phases::RunResult;
+use crate::util::table::{f2, f4, Table};
+
+/// Render a set of runs as the standard results table.
+pub fn runs_table(title: &str, runs: &[(String, &RunResult)]) -> Table {
+    let mut t = Table::new(
+        title,
+        &[
+            "method", "lambda", "val acc", "test acc", "size kB",
+            "MPIC Mcyc", "NE16 kcyc", "Gbitops", "time s",
+        ],
+    );
+    for (label, r) in runs {
+        t.row(vec![
+            label.clone(),
+            f4(r.lambda as f64),
+            f4(r.val_acc),
+            f4(r.test_acc),
+            f2(r.size_kb),
+            f2(r.mpic_cycles / 1e6),
+            f2(r.ne16_cycles / 1e3),
+            f2(r.bitops / 1e9),
+            f2(r.timing.total_s()),
+        ]);
+    }
+    t
+}
+
+/// Paper-style headline: size reduction at iso-accuracy vs a baseline.
+/// Returns (reduction fraction, our point cost) when a front point
+/// matches or beats `baseline_acc`.
+pub fn iso_accuracy_reduction(
+    front: &ParetoFront,
+    baseline_acc: f64,
+    baseline_cost: f64,
+) -> Option<(f64, f64)> {
+    front
+        .iso_accuracy(baseline_acc)
+        .map(|p| (1.0 - p.cost / baseline_cost, p.cost))
+}
+
+/// Accuracy gain at iso-cost vs a baseline point.
+pub fn iso_cost_gain(
+    front: &ParetoFront,
+    baseline_acc: f64,
+    baseline_cost: f64,
+) -> Option<(f64, f64)> {
+    front
+        .iso_cost(baseline_cost)
+        .map(|p| (p.acc - baseline_acc, p.acc))
+}
+
+/// Pareto front as a printable table.
+pub fn front_table(title: &str, front: &ParetoFront, cost_name: &str) -> Table {
+    let mut t = Table::new(title, &[cost_name, "val acc", "tag"]);
+    for p in front.points() {
+        t.row(vec![f2(p.cost), f4(p.acc), p.tag.clone()]);
+    }
+    t
+}
+
+/// Training history CSV (loss curves for the e2e example).
+pub fn history_table(r: &RunResult) -> Table {
+    let mut t = Table::new(
+        &format!("history {} reg={} lam={}", r.model, r.reg, r.lambda),
+        &["phase", "step", "loss", "acc", "cost"],
+    );
+    for rec in &r.history {
+        t.row(vec![
+            rec.phase.to_string(),
+            rec.step.to_string(),
+            f4(rec.loss as f64),
+            f4(rec.acc as f64),
+            if rec.cost.is_nan() {
+                "".into()
+            } else {
+                f4(rec.cost as f64)
+            },
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pareto::Point;
+
+    #[test]
+    fn iso_helpers() {
+        let f = ParetoFront::from_points([
+            Point::new(10.0, 0.6, "a"),
+            Point::new(20.0, 0.8, "b"),
+        ]);
+        let (red, cost) = iso_accuracy_reduction(&f, 0.8, 40.0).unwrap();
+        assert_eq!(cost, 20.0);
+        assert!((red - 0.5).abs() < 1e-12);
+        let (gain, acc) = iso_cost_gain(&f, 0.5, 15.0).unwrap();
+        assert_eq!(acc, 0.6);
+        assert!((gain - 0.1).abs() < 1e-12);
+        assert!(iso_accuracy_reduction(&f, 0.9, 40.0).is_none());
+    }
+}

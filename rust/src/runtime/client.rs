@@ -1,0 +1,118 @@
+//! PJRT engine: loads HLO-text artifacts, compiles them once, and
+//! executes steps from the L3 hot loop.
+//!
+//! Interchange format is HLO *text* (`HloModuleProto::from_text_file`):
+//! jax >= 0.5 emits serialized protos with 64-bit instruction ids that
+//! the linked xla_extension 0.5.1 rejects; the text parser reassigns
+//! ids (see /opt/xla-example/README.md).
+//!
+//! # Thread safety
+//! `PjRtClient` / `PjRtLoadedExecutable` wrap raw pointers and are not
+//! auto-`Send`. The underlying TfrtCpuClient *is* thread-safe for both
+//! `compile` and `execute`, so `Engine` asserts `Send + Sync` and the
+//! sweep scheduler shares one engine across workers. `Literal`s are
+//! never shared across threads (each worker owns its state).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+// SAFETY: TfrtCpuClient (PJRT CPU) is internally synchronized; compile
+// and execute may be called concurrently. We never hand out raw
+// client/executable pointers, and the cache is mutex-guarded.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Engine {
+    pub fn cpu() -> Result<Self> {
+        Ok(Engine {
+            client: xla::PjRtClient::cpu()?,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file (cached by path).
+    pub fn load(&self, path: &Path) -> Result<Arc<Executable>> {
+        let key = path.to_string_lossy().to_string();
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let arc = Arc::new(Executable {
+            exe,
+            name: key.clone(),
+        });
+        self.cache.lock().unwrap().insert(key, arc.clone());
+        Ok(arc)
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+impl Executable {
+    /// Execute with literal inputs; unpack the (return_tuple=True)
+    /// 1-tuple output into its component literals.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = self.exe.execute::<xla::Literal>(inputs)?;
+        let lit = out
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| Error::msg("executable produced no outputs"))?
+            .to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// End-to-end load/execute check against the qdemo artifact (the
+    /// integer-conv Pallas kernel lowered by aot.py). Skipped when
+    /// artifacts have not been built.
+    #[test]
+    fn qdemo_executes() {
+        let path = Path::new("artifacts/qdemo.hlo.txt");
+        if !path.exists() {
+            return;
+        }
+        let eng = Engine::cpu().unwrap();
+        let exe = eng.load(path).unwrap();
+        // xq: 64x72 of ones, wq: 72x32 of twos, scale: 0.5 =>
+        // out[i,j] = 72 * 1 * 2 * 0.5 = 72.0
+        let xq = xla::Literal::vec1(&vec![1i32; 64 * 72]).reshape(&[64, 72]).unwrap();
+        let wq = xla::Literal::vec1(&vec![2i32; 72 * 32]).reshape(&[72, 32]).unwrap();
+        let sc = xla::Literal::vec1(&vec![0.5f32; 32]);
+        let out = exe.run(&[xq, wq, sc]).unwrap();
+        assert_eq!(out.len(), 1);
+        let v = out[0].to_vec::<f32>().unwrap();
+        assert_eq!(v.len(), 64 * 32);
+        assert!(v.iter().all(|&x| (x - 72.0).abs() < 1e-5));
+        // cached on second load
+        let _ = eng.load(path).unwrap();
+        assert_eq!(eng.compiled_count(), 1);
+    }
+}

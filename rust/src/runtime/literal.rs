@@ -1,0 +1,77 @@
+//! Host `Tensor` <-> PJRT `Literal` conversion.
+
+use crate::error::Result;
+use crate::runtime::manifest::{DType, LeafDesc};
+use crate::util::tensor::{Tensor, TensorData};
+
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    let lit = match &t.data {
+        TensorData::F32(v) => {
+            if t.shape.is_empty() {
+                xla::Literal::scalar(v[0])
+            } else {
+                xla::Literal::vec1(v).reshape(&dims)?
+            }
+        }
+        TensorData::I32(v) => {
+            if t.shape.is_empty() {
+                xla::Literal::scalar(v[0])
+            } else {
+                xla::Literal::vec1(v).reshape(&dims)?
+            }
+        }
+    };
+    Ok(lit)
+}
+
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let t = match shape.ty() {
+        xla::ElementType::F32 => Tensor::f32(dims, lit.to_vec::<f32>()?),
+        xla::ElementType::S32 => Tensor::i32(dims, lit.to_vec::<i32>()?),
+        other => {
+            return Err(crate::error::Error::Shape(format!(
+                "unsupported literal element type {other:?}"
+            )))
+        }
+    };
+    Ok(t)
+}
+
+/// Zero tensor matching a manifest leaf description.
+pub fn zeros_for(desc: &LeafDesc) -> Tensor {
+    match desc.dtype {
+        DType::F32 => Tensor::f32(desc.shape.clone(), vec![0.0; desc.elem_count().max(1)]),
+        DType::I32 => Tensor::i32(desc.shape.clone(), vec![0; desc.elem_count().max(1)]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = Tensor::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn roundtrip_scalar() {
+        let t = Tensor::scalar_f32(3.25);
+        let back = literal_to_tensor(&tensor_to_literal(&t).unwrap()).unwrap();
+        assert_eq!(back.as_f32(), &[3.25]);
+        assert!(back.shape.is_empty());
+    }
+
+    #[test]
+    fn roundtrip_i32() {
+        let t = Tensor::i32(vec![4], vec![-1, 0, 7, 42]);
+        let back = literal_to_tensor(&tensor_to_literal(&t).unwrap()).unwrap();
+        assert_eq!(back, t);
+    }
+}

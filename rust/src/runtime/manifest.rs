@@ -1,0 +1,253 @@
+//! Parse `artifacts/manifest.json`: the I/O contract of every AOT
+//! artifact (state-tensor order, shapes, dtypes, extra inputs and
+//! metric outputs). Written by `python/compile/aot.py`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => Err(Error::manifest(format!("unknown dtype '{other}'"))),
+        }
+    }
+}
+
+/// One tensor in an artifact's signature.
+#[derive(Debug, Clone)]
+pub struct LeafDesc {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl LeafDesc {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(LeafDesc {
+            name: v.get("name").as_str().unwrap_or("").to_string(),
+            shape: v
+                .get("shape")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|x| x.as_usize().unwrap_or(0))
+                .collect(),
+            dtype: DType::parse(v.get("dtype").as_str().unwrap_or(""))?,
+        })
+    }
+
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled step function.
+#[derive(Debug, Clone)]
+pub struct ArtifactDesc {
+    pub file: String,
+    /// Which state sections this artifact consumes (in order).
+    pub state_sections: Vec<String>,
+    pub extra_inputs: Vec<LeafDesc>,
+    /// Which state sections it returns (before the metrics).
+    pub outputs: Vec<String>,
+    pub metrics: Vec<String>,
+}
+
+impl ArtifactDesc {
+    fn from_json(v: &Json) -> Result<Self> {
+        let strs = |key: &str| -> Vec<String> {
+            v.get(key)
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|x| x.as_str().map(|s| s.to_string()))
+                .collect()
+        };
+        let mut extra = Vec::new();
+        for e in v.get("extra_inputs").as_arr().unwrap_or(&[]) {
+            extra.push(LeafDesc::from_json(e)?);
+        }
+        Ok(ArtifactDesc {
+            file: v.get("file").as_str().unwrap_or("").to_string(),
+            state_sections: strs("state_sections"),
+            extra_inputs: extra,
+            outputs: strs("outputs"),
+            metrics: strs("metrics"),
+        })
+    }
+}
+
+/// Per-model manifest entry.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub name: String,
+    pub graph_file: String,
+    pub batch: usize,
+    pub in_shape: [usize; 3],
+    pub num_classes: usize,
+    /// Section name -> ordered leaf descriptors.
+    pub sections: BTreeMap<String, Vec<LeafDesc>>,
+    pub artifacts: BTreeMap<String, ArtifactDesc>,
+}
+
+impl ModelManifest {
+    pub fn section(&self, name: &str) -> Result<&[LeafDesc]> {
+        self.sections
+            .get(name)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| Error::manifest(format!("no section '{name}'")))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactDesc> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::manifest(format!("no artifact '{name}'")))
+    }
+
+    /// Leaf index (within `section`) by manifest name.
+    pub fn leaf_index(&self, section: &str, name: &str) -> Option<usize> {
+        self.sections
+            .get(section)?
+            .iter()
+            .position(|l| l.name == name)
+    }
+
+    /// Indices of all leaves in `section` whose name contains `pat`.
+    pub fn leaves_matching(&self, section: &str, pat: &str) -> Vec<usize> {
+        self.sections
+            .get(section)
+            .map(|ls| {
+                ls.iter()
+                    .enumerate()
+                    .filter(|(_, l)| l.name.contains(pat))
+                    .map(|(i, _)| i)
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+}
+
+/// Whole-artifacts-directory manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub pw_set: Vec<u32>,
+    pub px_set: Vec<u32>,
+    pub models: BTreeMap<String, ModelManifest>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let v = Json::parse(&text)?;
+        let mut models = BTreeMap::new();
+        if let Some(obj) = v.get("models").as_obj() {
+            for (name, mv) in obj.iter() {
+                let shape: Vec<usize> = mv
+                    .get("in_shape")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|x| x.as_usize().unwrap_or(0))
+                    .collect();
+                let mut sections = BTreeMap::new();
+                if let Some(so) = mv.get("sections").as_obj() {
+                    for (sname, sv) in so.iter() {
+                        let mut leaves = Vec::new();
+                        for l in sv.as_arr().unwrap_or(&[]) {
+                            leaves.push(LeafDesc::from_json(l)?);
+                        }
+                        sections.insert(sname.clone(), leaves);
+                    }
+                }
+                let mut artifacts = BTreeMap::new();
+                if let Some(ao) = mv.get("artifacts").as_obj() {
+                    for (aname, av) in ao.iter() {
+                        artifacts.insert(aname.clone(), ArtifactDesc::from_json(av)?);
+                    }
+                }
+                models.insert(
+                    name.clone(),
+                    ModelManifest {
+                        name: name.clone(),
+                        graph_file: mv.get("graph").as_str().unwrap_or("").to_string(),
+                        batch: mv.get("batch").as_usize().unwrap_or(0),
+                        in_shape: [
+                            shape.first().copied().unwrap_or(0),
+                            shape.get(1).copied().unwrap_or(0),
+                            shape.get(2).copied().unwrap_or(0),
+                        ],
+                        num_classes: mv.get("num_classes").as_usize().unwrap_or(0),
+                        sections,
+                        artifacts,
+                    },
+                );
+            }
+        }
+        let ints = |key: &str| -> Vec<u32> {
+            v.get(key)
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|x| x.as_usize().unwrap_or(0) as u32)
+                .collect()
+        };
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            pw_set: ints("pw_set"),
+            px_set: ints("px_set"),
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models
+            .get(name)
+            .ok_or_else(|| Error::manifest(format!("no model '{name}' in manifest")))
+    }
+
+    pub fn artifact_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        let dir = Path::new("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(dir).unwrap();
+        assert_eq!(m.pw_set, vec![0, 2, 4, 8]);
+        assert_eq!(m.px_set, vec![2, 4, 8]);
+        let r8 = m.model("resnet8").unwrap();
+        assert_eq!(r8.batch, 32);
+        let warm = r8.artifact("warmup").unwrap();
+        assert_eq!(warm.state_sections, vec!["params", "opt_w"]);
+        assert_eq!(warm.metrics, vec!["loss", "acc"]);
+        // state sections are non-empty and shapes are concrete
+        for (_, leaves) in &r8.sections {
+            assert!(!leaves.is_empty());
+            for l in leaves {
+                assert!(l.elem_count() > 0 || l.shape.is_empty());
+            }
+        }
+        // gamma leaves present
+        assert!(!r8.leaves_matching("theta", "gamma").is_empty());
+    }
+}

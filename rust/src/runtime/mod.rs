@@ -1,0 +1,13 @@
+//! PJRT runtime: artifact loading, manifest-driven state management,
+//! literal conversion. `PjRtClient::cpu()` -> `HloModuleProto::
+//! from_text_file` -> `compile` -> `execute` (adapted from
+//! /opt/xla-example/load_hlo).
+
+pub mod client;
+pub mod literal;
+pub mod manifest;
+pub mod state;
+
+pub use client::{Engine, Executable};
+pub use manifest::{ArtifactDesc, DType, LeafDesc, Manifest, ModelManifest};
+pub use state::{Metrics, StepFn, TrainState};

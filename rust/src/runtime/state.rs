@@ -1,0 +1,197 @@
+//! Manifest-driven training state: the host-side mirror of the state
+//! tensors threaded through every AOT step function.
+//!
+//! Layout follows the manifest sections (`params`, `opt_w`, `theta`,
+//! `opt_th`), each an ordered `Vec<Tensor>` matching the leaf order the
+//! lowering flattened. `StepFn` binds an artifact descriptor to its
+//! compiled executable and marshals (state, batch, scalars) -> literals
+//! -> step -> (new state, metrics).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::runtime::client::{Engine, Executable};
+use crate::runtime::literal::{literal_to_tensor, tensor_to_literal};
+use crate::runtime::manifest::{ArtifactDesc, Manifest, ModelManifest};
+use crate::util::tensor::Tensor;
+
+/// Host-side state sections.
+#[derive(Debug, Clone, Default)]
+pub struct TrainState {
+    pub sections: BTreeMap<String, Vec<Tensor>>,
+}
+
+impl TrainState {
+    /// Build the full search state by running the model's `init`
+    /// artifact (seed -> params/opt_w/theta/opt_th).
+    pub fn init(eng: &Engine, man: &Manifest, mm: &ModelManifest, seed: i32) -> Result<Self> {
+        let desc = mm.artifact("init")?;
+        let exe = eng.load(&man.artifact_path(&desc.file))?;
+        let outs = exe.run(&[xla::Literal::scalar(seed)])?;
+        let mut tensors = Vec::with_capacity(outs.len());
+        for lit in &outs {
+            tensors.push(literal_to_tensor(lit)?);
+        }
+        let mut st = TrainState::default();
+        let mut off = 0;
+        for sec in &desc.outputs {
+            let n = mm.section(sec)?.len();
+            if off + n > tensors.len() {
+                return Err(Error::manifest("init returned too few tensors"));
+            }
+            st.sections
+                .insert(sec.clone(), tensors[off..off + n].to_vec());
+            off += n;
+        }
+        if off != tensors.len() {
+            return Err(Error::manifest(format!(
+                "init returned {} tensors, manifest expects {off}",
+                tensors.len()
+            )));
+        }
+        Ok(st)
+    }
+
+    pub fn section(&self, name: &str) -> Result<&[Tensor]> {
+        self.sections
+            .get(name)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| Error::manifest(format!("state has no section '{name}'")))
+    }
+
+    pub fn section_mut(&mut self, name: &str) -> Result<&mut Vec<Tensor>> {
+        self.sections
+            .get_mut(name)
+            .ok_or_else(|| Error::manifest(format!("state has no section '{name}'")))
+    }
+
+    /// Tensor by manifest leaf name, e.g. `params['stem']['w']`.
+    pub fn leaf(&self, mm: &ModelManifest, section: &str, name: &str) -> Result<&Tensor> {
+        let idx = mm
+            .leaf_index(section, name)
+            .ok_or_else(|| Error::manifest(format!("no leaf '{name}' in '{section}'")))?;
+        Ok(&self.section(section)?[idx])
+    }
+
+    pub fn leaf_mut(
+        &mut self,
+        mm: &ModelManifest,
+        section: &str,
+        name: &str,
+    ) -> Result<&mut Tensor> {
+        let idx = mm
+            .leaf_index(section, name)
+            .ok_or_else(|| Error::manifest(format!("no leaf '{name}' in '{section}'")))?;
+        Ok(&mut self.section_mut(section)?[idx])
+    }
+
+    /// Total f32 element count (for checkpoints / diagnostics).
+    pub fn total_elems(&self) -> usize {
+        self.sections
+            .values()
+            .flat_map(|v| v.iter())
+            .map(|t| t.len())
+            .sum()
+    }
+}
+
+/// Metrics returned by a step (named per the artifact descriptor).
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub values: BTreeMap<String, f32>,
+}
+
+impl Metrics {
+    pub fn get(&self, name: &str) -> f32 {
+        *self.values.get(name).unwrap_or(&f32::NAN)
+    }
+}
+
+/// A bound step function (artifact + executable).
+pub struct StepFn {
+    pub desc: ArtifactDesc,
+    exe: Arc<Executable>,
+    section_lens: BTreeMap<String, usize>,
+}
+
+impl StepFn {
+    pub fn bind(
+        eng: &Engine,
+        man: &Manifest,
+        mm: &ModelManifest,
+        artifact: &str,
+    ) -> Result<Self> {
+        let desc = mm.artifact(artifact)?.clone();
+        let exe = eng.load(&man.artifact_path(&desc.file))?;
+        let mut section_lens = BTreeMap::new();
+        for (name, leaves) in &mm.sections {
+            section_lens.insert(name.clone(), leaves.len());
+        }
+        Ok(StepFn {
+            desc,
+            exe,
+            section_lens,
+        })
+    }
+
+    /// Execute one step: consumes the state sections named by the
+    /// artifact, plus `extra` inputs (in manifest order). Returns
+    /// metrics; updates `state` in place with the returned sections.
+    pub fn step(&self, state: &mut TrainState, extra: &[Tensor]) -> Result<Metrics> {
+        if extra.len() != self.desc.extra_inputs.len() {
+            return Err(Error::msg(format!(
+                "step '{}' wants {} extra inputs, got {}",
+                self.exe.name,
+                self.desc.extra_inputs.len(),
+                extra.len()
+            )));
+        }
+        let mut inputs: Vec<xla::Literal> = Vec::new();
+        for sec in &self.desc.state_sections {
+            for t in state.section(sec)? {
+                inputs.push(tensor_to_literal(t)?);
+            }
+        }
+        for (t, d) in extra.iter().zip(&self.desc.extra_inputs) {
+            if t.shape != d.shape {
+                return Err(Error::Shape(format!(
+                    "extra input '{}': expected {:?}, got {:?}",
+                    d.name, d.shape, t.shape
+                )));
+            }
+            inputs.push(tensor_to_literal(t)?);
+        }
+        let outs = self.exe.run(&inputs)?;
+        let n_state: usize = self
+            .desc
+            .outputs
+            .iter()
+            .map(|s| self.section_lens.get(s).copied().unwrap_or(0))
+            .sum();
+        if outs.len() != n_state + self.desc.metrics.len() {
+            return Err(Error::manifest(format!(
+                "step '{}' returned {} tensors, expected {}",
+                self.exe.name,
+                outs.len(),
+                n_state + self.desc.metrics.len()
+            )));
+        }
+        let mut off = 0;
+        for sec in &self.desc.outputs {
+            let n = self.section_lens[sec];
+            let dst = state.section_mut(sec)?;
+            for (i, lit) in outs[off..off + n].iter().enumerate() {
+                dst[i] = literal_to_tensor(lit)?;
+            }
+            off += n;
+        }
+        let mut metrics = Metrics::default();
+        for (name, lit) in self.desc.metrics.iter().zip(&outs[off..]) {
+            metrics
+                .values
+                .insert(name.clone(), lit.to_vec::<f32>()?[0]);
+        }
+        Ok(metrics)
+    }
+}

@@ -1,0 +1,11 @@
+//! Substrate utilities hand-rolled for the offline build environment
+//! (the baked crate registry only carries the `xla` crate's closure;
+//! no serde/clap/rand/tokio/rayon/criterion/proptest).
+
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod table;
+pub mod tensor;

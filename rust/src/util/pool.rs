@@ -1,0 +1,83 @@
+//! Scoped parallel map over OS threads (no tokio/rayon offline).
+//!
+//! The lambda-sweep scheduler runs independent searches concurrently;
+//! each task owns its PJRT executables and state, so plain scoped
+//! threads with a bounded worker count are all we need.
+
+/// Run `f(i, &items[i])` for every item on up to `workers` threads and
+/// return results in input order.
+pub fn parallel_map<T, R, F>(items: &[T], workers: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    let mut results: Vec<Option<R>> = Vec::with_capacity(n);
+    results.resize_with(n, || None);
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let results_mx = std::sync::Mutex::new(&mut results);
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                let mut guard = results_mx.lock().unwrap();
+                guard[i] = Some(r);
+            });
+        }
+    });
+
+    results.into_iter().map(|r| r.unwrap()).collect()
+}
+
+/// Number of workers to use by default: physical parallelism minus one
+/// (the PJRT CPU client itself multi-threads executions), at least 1.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| (n.get().saturating_sub(1)).max(1))
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let items: Vec<u64> = (0..100).collect();
+        let out = parallel_map(&items, 8, |_, &x| x * x);
+        assert_eq!(out, items.iter().map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty() {
+        let items: Vec<u64> = vec![];
+        let out: Vec<u64> = parallel_map(&items, 4, |_, &x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn single_worker_sequential() {
+        let items: Vec<usize> = (0..10).collect();
+        let out = parallel_map(&items, 1, |i, &x| i + x);
+        assert_eq!(out, (0..10).map(|i| 2 * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn all_indices_visited_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let counter = AtomicUsize::new(0);
+        let items: Vec<u32> = (0..57).collect();
+        let _ = parallel_map(&items, 5, |_, _| counter.fetch_add(1, Ordering::SeqCst));
+        assert_eq!(counter.load(Ordering::SeqCst), 57);
+    }
+}

@@ -1,0 +1,151 @@
+//! Mini property-testing harness (the offline registry has no
+//! `proptest`). Seeded random case generation with failure shrinking
+//! over a user-provided `shrink` candidate function.
+//!
+//! Used by the coordinator invariants tests (Pareto-front laws,
+//! reordering permutation laws, cost-model monotonicity, quantization
+//! round-trips) -- see `rust/tests/prop_invariants.rs`.
+
+use super::rng::Pcg64;
+
+pub struct Prop {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrinks: usize,
+}
+
+impl Default for Prop {
+    fn default() -> Self {
+        Prop {
+            cases: 128,
+            seed: 0x5eed,
+            max_shrinks: 200,
+        }
+    }
+}
+
+impl Prop {
+    pub fn new(cases: usize) -> Self {
+        Prop {
+            cases,
+            ..Default::default()
+        }
+    }
+
+    /// Check `check(case)` for `cases` generated inputs. On failure,
+    /// greedily shrink using `shrink` candidates, then panic with the
+    /// minimal failing case.
+    pub fn check<T, G, S, C>(&self, name: &str, mut gen: G, shrink: S, check: C)
+    where
+        T: std::fmt::Debug + Clone,
+        G: FnMut(&mut Pcg64) -> T,
+        S: Fn(&T) -> Vec<T>,
+        C: Fn(&T) -> Result<(), String>,
+    {
+        let mut rng = Pcg64::new(self.seed);
+        for case_no in 0..self.cases {
+            let case = gen(&mut rng);
+            if let Err(msg) = check(&case) {
+                let (minimal, last_msg) =
+                    self.shrink_loop(case, msg, &shrink, &check);
+                panic!(
+                    "property '{name}' failed (case {case_no}/{}):\n  \
+                     minimal case: {minimal:?}\n  error: {last_msg}",
+                    self.cases
+                );
+            }
+        }
+    }
+
+    fn shrink_loop<T, S, C>(
+        &self,
+        mut case: T,
+        mut msg: String,
+        shrink: &S,
+        check: &C,
+    ) -> (T, String)
+    where
+        T: std::fmt::Debug + Clone,
+        S: Fn(&T) -> Vec<T>,
+        C: Fn(&T) -> Result<(), String>,
+    {
+        let mut budget = self.max_shrinks;
+        'outer: while budget > 0 {
+            for cand in shrink(&case) {
+                budget = budget.saturating_sub(1);
+                if let Err(m) = check(&cand) {
+                    case = cand;
+                    msg = m;
+                    continue 'outer;
+                }
+                if budget == 0 {
+                    break;
+                }
+            }
+            break;
+        }
+        (case, msg)
+    }
+}
+
+/// Common shrinker: all single-element-removed and halved versions of
+/// a vector.
+pub fn shrink_vec<T: Clone>(v: &Vec<T>) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    if v.is_empty() {
+        return out;
+    }
+    out.push(v[..v.len() / 2].to_vec());
+    for i in 0..v.len().min(16) {
+        let mut c = v.clone();
+        c.remove(i);
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        Prop::new(64).check(
+            "reverse twice",
+            |rng| (0..rng.below(20)).map(|_| rng.next_u64() % 100).collect::<Vec<_>>(),
+            shrink_vec,
+            |v| {
+                let mut w = v.clone();
+                w.reverse();
+                w.reverse();
+                if w == *v {
+                    Ok(())
+                } else {
+                    Err("not equal".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let r = std::panic::catch_unwind(|| {
+            Prop::new(64).check(
+                "all vecs shorter than 3",
+                |rng| (0..rng.below(10)).map(|_| 1u8).collect::<Vec<_>>(),
+                shrink_vec,
+                |v| {
+                    if v.len() < 3 {
+                        Ok(())
+                    } else {
+                        Err(format!("len {}", v.len()))
+                    }
+                },
+            )
+        });
+        let err = r.expect_err("property should fail");
+        let msg = err.downcast_ref::<String>().unwrap();
+        // shrinker should land exactly on the boundary len == 3
+        assert!(msg.contains("len 3"), "got: {msg}");
+    }
+}

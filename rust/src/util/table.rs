@@ -1,0 +1,153 @@
+//! Plain-text/markdown table + CSV writers for the bench harnesses.
+//!
+//! Every figure/table reproduction prints the paper's row structure to
+//! stdout (markdown) and appends a machine-readable CSV under
+//! `reports/` so EXPERIMENTS.md can cite exact numbers.
+
+use std::io::Write;
+use std::path::Path;
+
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "ragged table row");
+        self.rows.push(cells);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("\n## {}\n\n", self.title));
+        }
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {c:w$} |"));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{:-<1$}|", "", w + 2));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| -> String {
+            if s.contains([',', '"', '\n']) {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(
+            &self
+                .headers
+                .iter()
+                .map(|h| esc(h))
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print markdown to stdout and write the CSV under `reports/`.
+    pub fn emit(&self, csv_name: &str) {
+        println!("{}", self.to_markdown());
+        if let Err(e) = self.write_csv(Path::new("reports"), csv_name) {
+            eprintln!("warn: could not write reports/{csv_name}: {e}");
+        }
+    }
+
+    pub fn write_csv(&self, dir: &Path, name: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut f = std::fs::File::create(dir.join(name))?;
+        f.write_all(self.to_csv().as_bytes())
+    }
+}
+
+/// Short float formatting helpers used across report code.
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn f4(x: f64) -> String {
+    format!("{x:.4}")
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{:.2}%", 100.0 * x)
+}
+
+pub fn kb(bits: f64) -> String {
+    format!("{:.2}", bits / 8.0 / 1024.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new("T", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| a | bb |"));
+        assert!(md.contains("| 1 | 2  |"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_row_panics() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("", &["x"]);
+        t.row(vec!["a,\"b\"".into()]);
+        assert_eq!(t.to_csv(), "x\n\"a,\"\"b\"\"\"\n");
+    }
+
+    #[test]
+    fn helpers() {
+        assert_eq!(f2(1.005), "1.00");
+        assert_eq!(pct(0.4750), "47.50%");
+        assert_eq!(kb(8.0 * 1024.0 * 8.0), "8.00");
+    }
+}

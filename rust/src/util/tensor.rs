@@ -1,0 +1,183 @@
+//! Minimal host-side tensor (shape + flat data), the lingua franca
+//! between the data generators, assignment math, deploy transforms and
+//! the PJRT literal conversion in `runtime::literal`.
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor {
+            shape,
+            data: TensorData::F32(data),
+        }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor {
+            shape,
+            data: TensorData::I32(data),
+        }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor::f32(shape, vec![0.0; n])
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Tensor::f32(vec![], vec![v])
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        Tensor::i32(vec![], vec![v])
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.data {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            TensorData::F32(v) => v,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        match &mut self.data {
+            TensorData::F32(v) => v,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match &self.data {
+            TensorData::I32(v) => v,
+            _ => panic!("tensor is not i32"),
+        }
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    pub fn idx(&self, coords: &[usize]) -> usize {
+        debug_assert_eq!(coords.len(), self.shape.len());
+        coords
+            .iter()
+            .zip(self.strides())
+            .map(|(c, s)| c * s)
+            .sum()
+    }
+
+    pub fn get_f32(&self, coords: &[usize]) -> f32 {
+        self.as_f32()[self.idx(coords)]
+    }
+
+    pub fn set_f32(&mut self, coords: &[usize], v: f32) {
+        let i = self.idx(coords);
+        self.as_f32_mut()[i] = v;
+    }
+}
+
+/// Row-wise softmax over a (rows, cols) f32 slice (used for gamma /
+/// delta probability computation in `assignment`).
+pub fn softmax_rows(data: &[f32], rows: usize, cols: usize, tau: f32) -> Vec<f32> {
+    assert_eq!(data.len(), rows * cols);
+    let mut out = vec![0f32; rows * cols];
+    for r in 0..rows {
+        let row = &data[r * cols..(r + 1) * cols];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0f32;
+        for c in 0..cols {
+            let e = ((row[c] - m) / tau).exp();
+            out[r * cols + c] = e;
+            denom += e;
+        }
+        for c in 0..cols {
+            out[r * cols + c] /= denom;
+        }
+    }
+    out
+}
+
+/// Row-wise argmax.
+pub fn argmax_rows(data: &[f32], rows: usize, cols: usize) -> Vec<usize> {
+    (0..rows)
+        .map(|r| {
+            let row = &data[r * cols..(r + 1) * cols];
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_and_index() {
+        let t = Tensor::zeros(vec![2, 3, 4]);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+        assert_eq!(t.idx(&[1, 2, 3]), 23);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let probs = softmax_rows(&[1.0, 2.0, 3.0, -1.0, 0.0, 1.0], 2, 3, 1.0);
+        for r in 0..2 {
+            let s: f32 = probs[r * 3..(r + 1) * 3].iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        assert!(probs[2] > probs[1] && probs[1] > probs[0]);
+    }
+
+    #[test]
+    fn softmax_low_tau_is_argmaxish() {
+        let probs = softmax_rows(&[1.0, 2.0, 3.0], 1, 3, 0.01);
+        assert!(probs[2] > 0.999);
+    }
+
+    #[test]
+    fn argmax() {
+        assert_eq!(argmax_rows(&[0.1, 0.9, 0.5, 0.2], 2, 2), vec![1, 0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::f32(vec![2, 2], vec![1.0]);
+    }
+}

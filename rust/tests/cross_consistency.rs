@@ -1,0 +1,91 @@
+//! Cross-language consistency: the exact Rust cost models must agree
+//! with the differentiable Python regularizers. Pinned reference
+//! values are shared with python/tests/test_regularizers.py
+//! (TestCrossLanguagePins) — regenerate both if either side changes.
+
+use mixprec::assignment::Assignment;
+use mixprec::coordinator::Context;
+use mixprec::cost::by_name;
+
+fn graph() -> Option<mixprec::graph::ModelGraph> {
+    let dir = Context::artifacts_dir();
+    let p = dir.join("graph_resnet8.json");
+    if !p.exists() {
+        eprintln!("SKIP: graph_resnet8.json missing");
+        return None;
+    }
+    Some(mixprec::graph::ModelGraph::load(&p).unwrap())
+}
+
+#[test]
+fn pinned_w8a8_maxima_match_python() {
+    let Some(g) = graph() else { return };
+    let w8 = Assignment::uniform(&g, 8);
+    assert_eq!(by_name("size").unwrap().cost(&g, &w8), 618880.0);
+    assert_eq!(g.total_macs(), 3125888);
+    assert_eq!(by_name("bitops").unwrap().cost(&g, &w8), 200056832.0);
+    let ne16 = by_name("ne16").unwrap().cost(&g, &w8);
+    assert!((ne16 - 18246.13888888889).abs() < 1e-6, "{ne16}");
+    let mpic = by_name("mpic").unwrap().cost(&g, &w8);
+    assert!((mpic - 1116388.5714285716).abs() < 1e-3, "{mpic}");
+}
+
+#[test]
+fn normalized_w4_and_w2_fractions() {
+    let Some(g) = graph() else { return };
+    // size normalizes exactly to bits/8
+    let size = by_name("size").unwrap();
+    assert!((size.normalized(&g, &Assignment::uniform(&g, 4)) - 0.5).abs() < 1e-12);
+    assert!((size.normalized(&g, &Assignment::uniform(&g, 2)) - 0.25).abs() < 1e-12);
+    // mpic w2a8: all MACs at (px=8, pw=2) -> 2.8/3.4 of the w8a8 cycles
+    let mpic = by_name("mpic").unwrap();
+    let frac = mpic.normalized(&g, &Assignment::uniform(&g, 2));
+    assert!((frac - 2.8 / 3.4).abs() < 1e-9, "{frac}");
+}
+
+#[test]
+fn graph_matches_manifest_shapes() {
+    let dir = Context::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    let man = mixprec::runtime::Manifest::load(&dir).unwrap();
+    for (name, mm) in &man.models {
+        let g = mixprec::graph::ModelGraph::load(&dir.join(&mm.graph_file)).unwrap();
+        g.validate().unwrap();
+        assert_eq!(g.batch, mm.batch, "{name}");
+        assert_eq!(g.num_classes, mm.num_classes, "{name}");
+        assert_eq!(g.in_shape, mm.in_shape, "{name}");
+        // each gamma group has a matching theta leaf of shape (n, 4)
+        for (gid, &n) in g.gamma_groups.iter().enumerate() {
+            let leaf = format!("theta['gamma'][{gid}]");
+            let idx = mm
+                .leaf_index("theta", &leaf)
+                .unwrap_or_else(|| panic!("{name}: {leaf} missing"));
+            let desc = &mm.section("theta").unwrap()[idx];
+            assert_eq!(desc.shape, vec![n, 4], "{name} {leaf}");
+        }
+        // delta leaf shape (num_deltas, 3)
+        let didx = mm.leaf_index("theta", "theta['delta']").unwrap();
+        assert_eq!(
+            mm.section("theta").unwrap()[didx].shape,
+            vec![g.num_deltas, 3],
+            "{name}"
+        );
+        // every layer has w and b parameter leaves
+        for l in &g.layers {
+            assert!(
+                mm.leaf_index("params", &format!("params['{}']['w']", l.name))
+                    .is_some(),
+                "{name}: missing w for {}",
+                l.name
+            );
+            assert!(
+                mm.leaf_index("params", &format!("params['{}']['b']", l.name))
+                    .is_some(),
+                "{name}: missing b for {}",
+                l.name
+            );
+        }
+    }
+}

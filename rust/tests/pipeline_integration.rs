@@ -1,0 +1,244 @@
+//! Integration tests over the real AOT artifacts: init/step/eval
+//! round-trips, mask-driven baselines, discretization semantics and
+//! Eq. 12 rescaling — the L3 <-> L2 contract. Skipped (pass
+//! trivially) when `make artifacts` has not been run.
+
+use mixprec::assignment::{self, PrecisionMasks};
+use mixprec::coordinator::{Context, PipelineConfig, Sampling};
+use mixprec::data::Split;
+use mixprec::runtime::{StepFn, TrainState};
+use mixprec::util::tensor::Tensor;
+
+fn ctx() -> Option<Context> {
+    let dir = Context::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return None;
+    }
+    Some(Context::load(&dir, 0.05).expect("context"))
+}
+
+fn search_extras(
+    data: &mixprec::data::DataSet,
+    batch: usize,
+    masks: &PrecisionMasks,
+    lam: f32,
+    lr_th: f32,
+    t: f32,
+) -> Vec<Tensor> {
+    let idx: Vec<usize> = (0..batch).collect();
+    let (x, y) = data.batch(Split::Train, &idx, batch);
+    vec![
+        x,
+        y,
+        Tensor::scalar_f32(1e-3),
+        Tensor::scalar_f32(lr_th),
+        Tensor::scalar_f32(1.0),
+        Tensor::scalar_f32(lam),
+        Tensor::scalar_f32(0.0),
+        Tensor::scalar_f32(0.0),
+        Tensor::scalar_i32(7),
+        Tensor::scalar_f32(t),
+        masks.pw_tensor(),
+        masks.px_tensor(),
+    ]
+}
+
+#[test]
+fn init_is_deterministic_in_seed() {
+    let Some(ctx) = ctx() else { return };
+    let mm = ctx.man.model("resnet8").unwrap();
+    let a = TrainState::init(&ctx.eng, &ctx.man, mm, 5).unwrap();
+    let b = TrainState::init(&ctx.eng, &ctx.man, mm, 5).unwrap();
+    let c = TrainState::init(&ctx.eng, &ctx.man, mm, 6).unwrap();
+    assert_eq!(a.sections, b.sections);
+    assert_ne!(a.sections, c.sections);
+    // all four sections present with manifest-matching leaf counts
+    for sec in ["params", "opt_w", "theta", "opt_th"] {
+        assert_eq!(
+            a.section(sec).unwrap().len(),
+            mm.section(sec).unwrap().len()
+        );
+    }
+}
+
+#[test]
+fn theta_init_matches_eq13() {
+    let Some(ctx) = ctx() else { return };
+    let mm = ctx.man.model("resnet8").unwrap();
+    let st = TrainState::init(&ctx.eng, &ctx.man, mm, 0).unwrap();
+    let g0 = st.leaf(mm, "theta", "theta['gamma'][0]").unwrap();
+    // every row is [0, .25, .5, 1] (Eq. 13 with P_W = {0,2,4,8})
+    for row in g0.as_f32().chunks(4) {
+        assert_eq!(row, &[0.0, 0.25, 0.5, 1.0]);
+    }
+}
+
+#[test]
+fn warmup_steps_reduce_loss() {
+    let Some(ctx) = ctx() else { return };
+    let model = "dscnn";
+    let mm = ctx.man.model(model).unwrap();
+    let data = ctx.dataset(model);
+    let mut st = TrainState::init(&ctx.eng, &ctx.man, mm, 1).unwrap();
+    let warm = StepFn::bind(&ctx.eng, &ctx.man, mm, "warmup").unwrap();
+    let idx: Vec<usize> = (0..mm.batch).collect();
+    let (x, y) = data.batch(Split::Train, &idx, mm.batch);
+    let mut losses = Vec::new();
+    for t in 1..=40 {
+        let m = warm
+            .step(
+                &mut st,
+                &[
+                    x.clone(),
+                    y.clone(),
+                    Tensor::scalar_f32(1e-2),
+                    Tensor::scalar_f32(t as f32),
+                ],
+            )
+            .unwrap();
+        losses.push(m.get("loss"));
+    }
+    assert!(
+        *losses.last().unwrap() < losses[0] * 0.8,
+        "no learning: {:?}",
+        &losses[..5]
+    );
+}
+
+#[test]
+fn fixed_mask_pins_assignment_and_cost() {
+    let Some(ctx) = ctx() else { return };
+    let model = "resnet8";
+    let mm = ctx.man.model(model).unwrap();
+    let graph = ctx.graph(model);
+    let data = ctx.dataset(model);
+    let masks = PrecisionMasks::fixed(4).unwrap();
+    let mut st = TrainState::init(&ctx.eng, &ctx.man, mm, 2).unwrap();
+    let search = StepFn::bind(&ctx.eng, &ctx.man, mm, "search_size").unwrap();
+    for t in 1..=3 {
+        let m = search
+            .step(&mut st, &search_extras(data, mm.batch, &masks, 1.0, 1e-2, t as f32))
+            .unwrap();
+        assert!(m.get("loss").is_finite());
+    }
+    let asg = assignment::discretize(&st, mm, graph, &masks).unwrap();
+    for group in &asg.gamma_bits {
+        assert!(group.iter().all(|&b| b == 4), "{group:?}");
+    }
+    // exact cost agrees with the in-graph normalized cost (w4 = 0.5 of w8)
+    let size = mixprec::cost::Size;
+    use mixprec::cost::CostModel;
+    let norm = size.normalized(graph, &asg);
+    assert!((norm - 0.5).abs() < 1e-9, "{norm}");
+}
+
+#[test]
+fn mixprec_mask_never_prunes_and_final_layer_protected() {
+    let Some(ctx) = ctx() else { return };
+    let model = "resnet8";
+    let mm = ctx.man.model(model).unwrap();
+    let graph = ctx.graph(model);
+    let data = ctx.dataset(model);
+    let masks = PrecisionMasks::mixprec();
+    let mut st = TrainState::init(&ctx.eng, &ctx.man, mm, 3).unwrap();
+    let search = StepFn::bind(&ctx.eng, &ctx.man, mm, "search_size").unwrap();
+    for t in 1..=4 {
+        search
+            .step(&mut st, &search_extras(data, mm.batch, &masks, 8.0, 5e-2, t as f32))
+            .unwrap();
+    }
+    let asg = assignment::discretize(&st, mm, graph, &masks).unwrap();
+    for (g, group) in asg.gamma_bits.iter().enumerate() {
+        assert!(group.iter().all(|&b| b > 0), "group {g} pruned: {group:?}");
+    }
+    // joint masks + high strength CAN prune, but never the fc group
+    let joint = PrecisionMasks::joint();
+    let asg2 = assignment::discretize(&st, mm, graph, &joint).unwrap();
+    let fc = graph.layer("fc").unwrap();
+    assert!(asg2.gamma_bits[fc.gamma_group].iter().all(|&b| b > 0));
+}
+
+#[test]
+fn eval_metrics_match_search_eval_path() {
+    let Some(ctx) = ctx() else { return };
+    let model = "resnet8";
+    let mm = ctx.man.model(model).unwrap();
+    let data = ctx.dataset(model);
+    let masks = PrecisionMasks::joint();
+    let mut st = TrainState::init(&ctx.eng, &ctx.man, mm, 4).unwrap();
+    let eval = StepFn::bind(&ctx.eng, &ctx.man, mm, "eval").unwrap();
+    let idx: Vec<usize> = (0..mm.batch).collect();
+    let (x, y) = data.batch(Split::Val, &idx, mm.batch);
+    let run = |st: &mut TrainState| {
+        eval.step(
+            st,
+            &[
+                x.clone(),
+                y.clone(),
+                Tensor::scalar_f32(1.0),
+                Tensor::scalar_f32(1.0),
+                masks.pw_tensor(),
+                masks.px_tensor(),
+            ],
+        )
+        .unwrap()
+    };
+    let a = run(&mut st);
+    let b = run(&mut st);
+    assert_eq!(a.get("loss"), b.get("loss"));
+    assert_eq!(a.get("acc"), b.get("acc"));
+    assert!(a.get("cost") > 0.0 && a.get("cost") <= 1.01);
+}
+
+#[test]
+fn rescale_weights_divides_by_keep_probability() {
+    let Some(ctx) = ctx() else { return };
+    let model = "resnet8";
+    let mm = ctx.man.model(model).unwrap();
+    let graph = ctx.graph(model);
+    let masks = PrecisionMasks::joint();
+    let mut st = TrainState::init(&ctx.eng, &ctx.man, mm, 5).unwrap();
+    let before = st
+        .leaf(mm, "params", "params['stem']['w']")
+        .unwrap()
+        .as_f32()
+        .to_vec();
+    assignment::rescale_weights(&mut st, mm, graph, &masks, 1.0).unwrap();
+    let after = st
+        .leaf(mm, "params", "params['stem']['w']")
+        .unwrap()
+        .as_f32()
+        .to_vec();
+    // Eq. 13 init: logits [0,.25,.5,1] with tau=1 -> keep prob is the
+    // same for every channel; ratio must be uniform and > 1.
+    let ratio = after[0] / before[0];
+    assert!(ratio > 1.0 && ratio < 1.4, "{ratio}");
+    for (a, b) in after.iter().zip(&before) {
+        if b.abs() > 1e-6 {
+            assert!((a / b - ratio).abs() < 1e-4);
+        }
+    }
+}
+
+#[test]
+fn full_micro_pipeline_runs_all_samplings() {
+    let Some(ctx) = ctx() else { return };
+    let runner = ctx.runner("dscnn").unwrap();
+    for sampling in [Sampling::Softmax, Sampling::Argmax, Sampling::Gumbel] {
+        let mut cfg = PipelineConfig::quick("dscnn");
+        cfg.warmup_steps = 6;
+        cfg.search_steps = 6;
+        cfg.finetune_steps = 3;
+        cfg.eval_every = 3;
+        cfg.sampling = sampling;
+        cfg.data_frac = 0.05;
+        let r = runner.run(&cfg).expect("pipeline");
+        assert!(r.val_acc >= 0.0 && r.val_acc <= 1.0);
+        assert!(r.size_kb > 0.0);
+        assert_eq!(
+            r.assignment.gamma_bits.len(),
+            ctx.graph("dscnn").gamma_groups.len()
+        );
+    }
+}

@@ -1,0 +1,302 @@
+//! Property-based tests of coordinator invariants (hand-rolled
+//! harness in `util::prop`; the offline registry has no proptest).
+
+use mixprec::assignment::{Assignment, PW_SET};
+use mixprec::coordinator::{ParetoFront, Point};
+use mixprec::cost::by_name;
+use mixprec::deploy::{refine_for_ne16, reorder_assignment, split_layers};
+use mixprec::graph::ModelGraph;
+use mixprec::util::json::Json;
+use mixprec::util::prop::{shrink_vec, Prop};
+use mixprec::util::rng::Pcg64;
+
+fn tiny_graph() -> ModelGraph {
+    let text = r#"{
+      "model": "tiny", "in_shape": [8,8,3], "num_classes": 4, "batch": 2,
+      "layers": [
+        {"name":"c0","kind":"conv","cin":3,"cout":16,"k":3,"stride":1,
+         "out_h":8,"out_w":8,"gamma_group":0,"in_group":-1,
+         "delta_idx":0,"in_delta":-1,"prunable":true,"macs":27648},
+        {"name":"dw0","kind":"dw","cin":16,"cout":16,"k":3,"stride":1,
+         "out_h":8,"out_w":8,"gamma_group":0,"in_group":0,
+         "delta_idx":1,"in_delta":0,"prunable":true,"macs":9216},
+        {"name":"c1","kind":"conv","cin":16,"cout":24,"k":3,"stride":2,
+         "out_h":4,"out_w":4,"gamma_group":1,"in_group":0,
+         "delta_idx":2,"in_delta":1,"prunable":true,"macs":55296},
+        {"name":"fc","kind":"linear","cin":24,"cout":4,"k":1,"stride":1,
+         "out_h":1,"out_w":1,"gamma_group":2,"in_group":1,
+         "delta_idx":-1,"in_delta":2,"prunable":false,"macs":96}
+      ],
+      "gamma_groups": [16, 24, 4], "num_deltas": 3,
+      "pw_set": [0,2,4,8], "px_set": [2,4,8]
+    }"#;
+    ModelGraph::from_json(&Json::parse(text).unwrap()).unwrap()
+}
+
+fn random_assignment(rng: &mut Pcg64, graph: &ModelGraph) -> Assignment {
+    let gamma_bits = graph
+        .gamma_groups
+        .iter()
+        .enumerate()
+        .map(|(g, &n)| {
+            (0..n)
+                .map(|_| {
+                    // last group (fc) never pruned
+                    let opts: &[u32] = if graph.group_prunable(g) {
+                        &PW_SET
+                    } else {
+                        &PW_SET[1..]
+                    };
+                    opts[rng.below(opts.len() as u64) as usize]
+                })
+                .collect()
+        })
+        .collect();
+    let delta_bits = (0..graph.num_deltas)
+        .map(|_| [2u32, 4, 8][rng.below(3) as usize])
+        .collect();
+    Assignment {
+        gamma_bits,
+        delta_bits,
+    }
+}
+
+#[test]
+fn pareto_front_no_point_dominates_another() {
+    let graph = tiny_graph();
+    let _ = &graph;
+    Prop::new(100).check(
+        "pareto mutual non-dominance",
+        |rng| {
+            (0..rng.below(30) + 1)
+                .map(|i| (rng.next_f64() * 100.0, rng.next_f64(), i))
+                .collect::<Vec<_>>()
+        },
+        shrink_vec,
+        |pts| {
+            let front = ParetoFront::from_points(
+                pts.iter().map(|(c, a, i)| Point::new(*c, *a, format!("{i}"))),
+            );
+            for p in front.points() {
+                for q in front.points() {
+                    if p != q && p.dominates(q) {
+                        return Err(format!("{p:?} dominates {q:?}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn pareto_front_contains_extremes() {
+    Prop::new(100).check(
+        "front contains min-cost and max-acc",
+        |rng| {
+            (0..rng.below(20) + 1)
+                .map(|_| (rng.next_f64() * 100.0, rng.next_f64()))
+                .collect::<Vec<_>>()
+        },
+        shrink_vec,
+        |pts| {
+            let front = ParetoFront::from_points(
+                pts.iter().map(|(c, a)| Point::new(*c, *a, "")),
+            );
+            let max_acc = pts.iter().map(|p| p.1).fold(f64::MIN, f64::max);
+            if front.best_acc().map(|p| p.acc) != Some(max_acc) {
+                return Err("max accuracy point missing from front".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn insertion_order_does_not_change_front() {
+    Prop::new(60).check(
+        "front is order-independent",
+        |rng| {
+            (0..rng.below(15) + 2)
+                .map(|_| ((rng.next_f64() * 10.0).round(), (rng.next_f64() * 10.0).round() / 10.0))
+                .collect::<Vec<_>>()
+        },
+        shrink_vec,
+        |pts| {
+            let f1 = ParetoFront::from_points(pts.iter().map(|(c, a)| Point::new(*c, *a, "")));
+            let mut rev = pts.clone();
+            rev.reverse();
+            let f2 = ParetoFront::from_points(rev.iter().map(|(c, a)| Point::new(*c, *a, "")));
+            let key = |f: &ParetoFront| -> Vec<(u64, u64)> {
+                f.points()
+                    .iter()
+                    .map(|p| (p.cost.to_bits(), p.acc.to_bits()))
+                    .collect()
+            };
+            if key(&f1) != key(&f2) {
+                return Err(format!("fronts differ: {:?} vs {:?}", f1.points(), f2.points()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn reorder_is_a_permutation_of_kept_channels() {
+    let graph = tiny_graph();
+    Prop::new(100).check(
+        "reorder permutation",
+        |rng| random_assignment(rng, &graph),
+        |_| vec![],
+        |asg| {
+            let plan = reorder_assignment(asg);
+            for (g, perm) in plan.perms.iter().enumerate() {
+                let kept: Vec<usize> = (0..asg.gamma_bits[g].len())
+                    .filter(|&c| asg.gamma_bits[g][c] > 0)
+                    .collect();
+                let mut sorted = perm.clone();
+                sorted.sort_unstable();
+                if sorted != kept {
+                    return Err(format!("group {g}: {perm:?} not a perm of {kept:?}"));
+                }
+                // bits must be non-increasing after reorder
+                for w in plan.bits[g].windows(2) {
+                    if w[0] < w[1] {
+                        return Err(format!("group {g}: bits not sorted {:?}", plan.bits[g]));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn split_total_bits_equals_size_cost() {
+    let graph = tiny_graph();
+    let size = by_name("size").unwrap();
+    Prop::new(100).check(
+        "split == size model",
+        |rng| random_assignment(rng, &graph),
+        |_| vec![],
+        |asg| {
+            let plan = reorder_assignment(asg);
+            let subs = split_layers(&graph, &plan);
+            let total: u64 = subs.iter().map(|s| s.weight_bits).sum();
+            let cost = size.cost(&graph, asg);
+            if (total as f64 - cost).abs() > 1e-6 {
+                return Err(format!("split {total} != size {cost}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn cost_models_monotone_under_single_channel_reduction() {
+    let graph = tiny_graph();
+    Prop::new(60).check(
+        "reducing one channel's bits never increases cost (size/bitops)",
+        |rng| {
+            let asg = random_assignment(rng, &graph);
+            let g = rng.below(graph.gamma_groups.len() as u64) as usize;
+            let c = rng.below(graph.gamma_groups[g] as u64) as usize;
+            (asg, g, c)
+        },
+        |_| vec![],
+        |(asg, g, c)| {
+            let bits = asg.gamma_bits[*g][*c];
+            let lower = match bits {
+                8 => 4,
+                4 => 2,
+                2 if graph.group_prunable(*g) => 0,
+                _ => return Ok(()),
+            };
+            let mut reduced = asg.clone();
+            reduced.gamma_bits[*g][*c] = lower;
+            // NOTE: intentionally not NE16 — its 32-channel PE
+            // granularity makes single-channel reductions non-monotone
+            // (that step structure is the paper's Fig. 8 finding).
+            for name in ["size", "bitops", "mpic"] {
+                let m = by_name(name).unwrap();
+                let (a, b) = (m.cost(&graph, asg), m.cost(&graph, &reduced));
+                if b > a + 1e-9 {
+                    return Err(format!("{name}: {bits}->{lower} raised cost {a} -> {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn ne16_refinement_never_hurts() {
+    let graph = tiny_graph();
+    let ne16 = by_name("ne16").unwrap();
+    Prop::new(40).check(
+        "refine_for_ne16 sound",
+        |rng| random_assignment(rng, &graph),
+        |_| vec![],
+        |asg| {
+            let mut refined = asg.clone();
+            let (before, after, _) = refine_for_ne16(&graph, &mut refined);
+            if after > before + 1e-9 {
+                return Err(format!("cost up: {before} -> {after}"));
+            }
+            if (ne16.cost(&graph, &refined) - after).abs() > 1e-9 {
+                return Err("reported cost mismatch".into());
+            }
+            for (g, group) in refined.gamma_bits.iter().enumerate() {
+                for (c, &b) in group.iter().enumerate() {
+                    let orig = asg.gamma_bits[g][c];
+                    if b < orig {
+                        return Err(format!("bit decreased g{g}c{c}: {orig}->{b}"));
+                    }
+                    if (orig == 0) != (b == 0) {
+                        return Err("pruning status changed".into());
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn checkpoint_roundtrip_random_states() {
+    use mixprec::coordinator::checkpoint;
+    use mixprec::runtime::TrainState;
+    use mixprec::util::tensor::Tensor;
+    Prop::new(20).check(
+        "checkpoint roundtrip",
+        |rng| {
+            let n = rng.below(5) + 1;
+            (0..n)
+                .map(|i| {
+                    let len = (rng.below(50) + 1) as usize;
+                    let data: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+                    (format!("sec{i}"), len, data)
+                })
+                .collect::<Vec<_>>()
+        },
+        shrink_vec,
+        |secs| {
+            let mut st = TrainState::default();
+            for (name, len, data) in secs {
+                st.sections
+                    .insert(name.clone(), vec![Tensor::f32(vec![*len], data.clone())]);
+            }
+            let path = std::env::temp_dir().join(format!(
+                "mixprec_prop_{}.ckpt",
+                std::process::id()
+            ));
+            checkpoint::save(&st, &path).map_err(|e| e.to_string())?;
+            let back = checkpoint::load(&path).map_err(|e| e.to_string())?;
+            std::fs::remove_file(&path).ok();
+            if back.sections != st.sections {
+                return Err("state mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
