@@ -5,12 +5,12 @@
 
 use std::time::Instant;
 
-use mixprec::assignment::{self, Assignment, PrecisionMasks};
+use mixprec::assignment::{self, Assignment, PrecisionMasks, ResolvedLeaves};
 use mixprec::cost::by_name;
 use mixprec::data::Split;
 use mixprec::deploy::{reorder_assignment, split_layers};
 use mixprec::report::benchkit;
-use mixprec::runtime::{StepFn, TrainState};
+use mixprec::runtime::{DeviceState, StepArg, StepFn, TrainState};
 use mixprec::util::rng::Pcg64;
 use mixprec::util::tensor::Tensor;
 
@@ -92,10 +92,52 @@ fn main() {
             .unwrap();
         });
 
+        // ---- device-resident step path ----------------------------------
+        let mut dev = DeviceState::init(&ctx.eng, &ctx.man, mm, 7)?;
+        let pw_buf = ctx.eng.upload_tensor(&masks.pw_tensor())?;
+        let px_buf = ctx.eng.upload_tensor(&masks.px_tensor())?;
+        time_it("search step (B=32, device-resident)", 30, || {
+            t += 1.0;
+            let lr_w = Tensor::scalar_f32(1e-3);
+            let lr_th = Tensor::scalar_f32(1e-2);
+            let tau = Tensor::scalar_f32(1.0);
+            let lam = Tensor::scalar_f32(0.5);
+            let hard = Tensor::scalar_f32(0.0);
+            let noise = Tensor::scalar_f32(0.0);
+            let key = Tensor::scalar_i32(rng.next_u64() as i32);
+            let tt = Tensor::scalar_f32(t);
+            search
+                .step_device(
+                    &ctx.eng,
+                    &mut dev,
+                    &[
+                        StepArg::Host(&x),
+                        StepArg::Host(&y),
+                        StepArg::Host(&lr_w),
+                        StepArg::Host(&lr_th),
+                        StepArg::Host(&tau),
+                        StepArg::Host(&lam),
+                        StepArg::Host(&hard),
+                        StepArg::Host(&noise),
+                        StepArg::Host(&key),
+                        StepArg::Host(&tt),
+                        StepArg::Device(&pw_buf),
+                        StepArg::Device(&px_buf),
+                    ],
+                )
+                .unwrap();
+        });
+        println!(
+            "device-resident transfer: {} B h2d, {} B d2h over init + 31 step calls \
+             (30 timed + 1 warmup)",
+            dev.stats.h2d_bytes, dev.stats.d2h_bytes
+        );
+
         // ---- host-side hot paths ----------------------------------------
-        let asg = assignment::discretize(&state, mm, graph, &masks)?;
-        time_it("discretize theta", 200, || {
-            assignment::discretize(&state, mm, graph, &masks).unwrap();
+        let leaves = ResolvedLeaves::new(mm, graph)?;
+        let asg = assignment::discretize(&state, &leaves, graph, &masks)?;
+        time_it("discretize theta (interned leaves)", 200, || {
+            assignment::discretize(&state, &leaves, graph, &masks).unwrap();
         });
         for reg in ["size", "bitops", "mpic", "ne16"] {
             let m = by_name(reg).unwrap();

@@ -1,0 +1,212 @@
+//! Step-marshalling bench: device-resident vs host-resident stepping.
+//!
+//! Measures the tentpole win — eliminating the per-step full
+//! host<->device round trip of the train state — and records it in
+//! `BENCH_step_marshal.json` (steps/sec, bytes transferred per step,
+//! speedup) so the perf trajectory is tracked across PRs.
+//!
+//! Two modes:
+//! * with real AOT artifacts (`make artifacts`): runs the full
+//!   resnet8 pipeline twice (device-resident vs `host_resident`
+//!   compat mode) and asserts the discretized assignments and final
+//!   accuracies are identical;
+//! * without artifacts (default container): runs the stub-backend
+//!   fixture (`runtime::fixture`), which executes a deterministic
+//!   affine step program, so the marshalling layers are exercised and
+//!   timed for real while the "compute" is near-free — isolating
+//!   exactly the cost this PR removes. The legacy `StepFn::step`
+//!   (full literal marshal, the seed hot loop) is timed as a third
+//!   leg for reference.
+
+use std::time::Instant;
+
+use mixprec::report::benchkit;
+use mixprec::runtime::{fixture, DeviceState, Engine, StepArg, StepFn, TransferStats};
+use mixprec::util::json::{Json, JsonObj};
+
+fn env_steps(default: usize) -> usize {
+    std::env::var("MIXPREC_MARSHAL_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+        .max(1) // steps=0 would put NaN in the JSON
+}
+
+fn leg_json(seconds: f64, steps: usize, stats: &TransferStats) -> Json {
+    let steps = (steps as f64).max(1.0); // steps=0 would emit NaN
+    let mut o = JsonObj::new();
+    o.insert("seconds", Json::Num(seconds));
+    o.insert("steps_per_sec", Json::Num(steps / seconds.max(1e-12)));
+    o.insert(
+        "h2d_bytes_per_step",
+        Json::Num(stats.h2d_bytes as f64 / steps),
+    );
+    o.insert(
+        "d2h_bytes_per_step",
+        Json::Num(stats.d2h_bytes as f64 / steps),
+    );
+    Json::Obj(o)
+}
+
+/// Stub-backend leg: exercises the real marshalling code against the
+/// host backend. Returns (seconds, stats, final host sections).
+fn run_stub() -> mixprec::Result<()> {
+    let steps = env_steps(2000);
+    let dir = std::env::temp_dir().join(format!("mixprec_step_marshal_{}", std::process::id()));
+    let man = fixture::write_stub_fixture(&dir)?;
+    let mm = man.model(fixture::STUB_MODEL)?;
+    let eng = Engine::cpu()?;
+    let search = StepFn::bind(&eng, &man, mm, "search")?;
+    let init = fixture::stub_train_state(mm);
+
+    // ---- device-resident leg: state never leaves the device ---------
+    let mut dev = DeviceState::from_host(init.clone());
+    let mask_a = eng.upload_tensor(&fixture::stub_search_extras(0)[4])?;
+    let mask_b = eng.upload_tensor(&fixture::stub_search_extras(0)[5])?;
+    let t0 = Instant::now();
+    for step in 0..steps {
+        let ex = fixture::stub_search_extras(step);
+        search.step_device(
+            &eng,
+            &mut dev,
+            &[
+                StepArg::Host(&ex[0]),
+                StepArg::Host(&ex[1]),
+                StepArg::Host(&ex[2]),
+                StepArg::Host(&ex[3]),
+                StepArg::Device(&mask_a),
+                StepArg::Device(&mask_b),
+            ],
+        )?;
+    }
+    let dev_s = t0.elapsed().as_secs_f64();
+    let dev_stats = dev.stats;
+
+    // ---- host-resident leg: forced full marshal every step ----------
+    let mut host = DeviceState::from_host(init.clone());
+    let t0 = Instant::now();
+    for step in 0..steps {
+        let ex = fixture::stub_search_extras(step);
+        let args: Vec<StepArg> = ex.iter().map(StepArg::Host).collect();
+        search.step_device(&eng, &mut host, &args)?;
+        host.force_host_roundtrip()?;
+    }
+    let host_s = t0.elapsed().as_secs_f64();
+    let host_stats = host.stats;
+
+    // ---- legacy leg: the seed's StepFn::step literal marshal --------
+    let mut legacy = init.clone();
+    let t0 = Instant::now();
+    for step in 0..steps {
+        let ex = fixture::stub_search_extras(step);
+        search.step(&mut legacy, &ex)?;
+    }
+    let legacy_s = t0.elapsed().as_secs_f64();
+
+    // ---- exact equivalence across all three paths -------------------
+    let dev_host = dev.host_view()?;
+    let host_host = host.host_view()?;
+    let equal = dev_host.sections == host_host.sections
+        && dev_host.sections == legacy.sections;
+    assert!(
+        equal,
+        "device-resident trajectory diverged from the full-marshal paths"
+    );
+
+    let speedup = host_s / dev_s.max(1e-12);
+    println!(
+        "device    {:9.0} steps/s  ({:.0} B/step h2d, {:.0} B/step d2h)",
+        steps as f64 / dev_s,
+        dev_stats.h2d_bytes as f64 / steps as f64,
+        dev_stats.d2h_bytes as f64 / steps as f64
+    );
+    println!(
+        "host      {:9.0} steps/s  ({:.0} B/step h2d, {:.0} B/step d2h)",
+        steps as f64 / host_s,
+        host_stats.h2d_bytes as f64 / steps as f64,
+        host_stats.d2h_bytes as f64 / steps as f64
+    );
+    println!("legacy    {:9.0} steps/s", steps as f64 / legacy_s);
+    println!("speedup (device vs host-resident): {speedup:.2}x");
+
+    let mut o = JsonObj::new();
+    o.insert("bench", Json::Str("step_marshal".into()));
+    o.insert("mode", Json::Str("stub".into()));
+    o.insert("steps", Json::Num(steps as f64));
+    o.insert("device", leg_json(dev_s, steps, &dev_stats));
+    o.insert("host_resident", leg_json(host_s, steps, &host_stats));
+    o.insert(
+        "legacy_steps_per_sec",
+        Json::Num(steps as f64 / legacy_s.max(1e-12)),
+    );
+    o.insert("speedup_vs_host_resident", Json::Num(speedup));
+    o.insert("sections_equal", Json::Bool(equal));
+    benchkit::write_bench_json("step_marshal", &Json::Obj(o))?;
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}
+
+fn main() {
+    let artifacts = mixprec::coordinator::Context::artifacts_dir();
+    if !artifacts.join("manifest.json").exists() {
+        println!("=== step_marshal (stub backend; no artifacts) ===");
+        let t0 = Instant::now();
+        match run_stub() {
+            Ok(()) => println!(
+                "=== step_marshal done in {:.1}s ===",
+                t0.elapsed().as_secs_f64()
+            ),
+            Err(e) => {
+                eprintln!("step_marshal FAILED: {e}");
+                std::process::exit(1);
+            }
+        }
+        return;
+    }
+    benchkit::run_bench("step_marshal", |ctx, scale| {
+        let model = "resnet8";
+        let runner = ctx.runner(model)?;
+        let mut cfg = scale.config(model);
+        cfg.host_resident = false;
+        let dev = runner.run(&cfg)?;
+        let mut cfg_host = cfg.clone();
+        cfg_host.host_resident = true;
+        let host = runner.run(&cfg_host)?;
+
+        // identical search outcome is a hard requirement of the
+        // device-resident engine
+        assert_eq!(dev.assignment, host.assignment, "assignment diverged");
+        assert_eq!(dev.val_acc, host.val_acc, "val accuracy diverged");
+        assert_eq!(dev.test_acc, host.test_acc, "test accuracy diverged");
+
+        let dev_sps = dev.steps_run as f64 / dev.timing.total_s().max(1e-12);
+        let host_sps = host.steps_run as f64 / host.timing.total_s().max(1e-12);
+        println!(
+            "device {dev_sps:.1} steps/s vs host-resident {host_sps:.1} steps/s \
+             ({:.2}x)",
+            dev_sps / host_sps
+        );
+
+        let mut o = JsonObj::new();
+        o.insert("bench", Json::Str("step_marshal".into()));
+        o.insert("mode", Json::Str("artifacts".into()));
+        o.insert("model", Json::Str(model.into()));
+        o.insert("device", leg_json(dev.timing.total_s(), dev.steps_run, &dev.transfer));
+        o.insert(
+            "host_resident",
+            leg_json(host.timing.total_s(), host.steps_run, &host.transfer),
+        );
+        o.insert(
+            "per_phase_seconds_device",
+            Json::Arr(vec![
+                Json::Num(dev.timing.warmup_s),
+                Json::Num(dev.timing.search_s),
+                Json::Num(dev.timing.finetune_s),
+            ]),
+        );
+        o.insert("speedup_vs_host_resident", Json::Num(dev_sps / host_sps));
+        o.insert("sections_equal", Json::Bool(true));
+        benchkit::write_bench_json("step_marshal", &Json::Obj(o))?;
+        Ok(())
+    });
+}

@@ -6,7 +6,7 @@
 
 use crate::error::{Error, Result};
 use crate::graph::ModelGraph;
-use crate::runtime::{ModelManifest, TrainState};
+use crate::runtime::{LeafId, ModelManifest, TrainState};
 use crate::util::tensor::{argmax_rows, softmax_rows, Tensor};
 
 pub const PW_SET: [u32; 4] = [0, 2, 4, 8];
@@ -139,8 +139,42 @@ impl Assignment {
     }
 }
 
+/// Interned manifest handles for the per-step host touchpoints:
+/// resolved once per pipeline, so the hot loop never formats leaf
+/// names or scans the manifest again (the seed paid a
+/// `format!("theta['gamma'][{g}]")` plus a linear leaf scan per group
+/// per call in `theta_view` / `rescale_weights` / `project_layerwise`).
+#[derive(Debug, Clone)]
+pub struct ResolvedLeaves {
+    /// `theta['gamma'][g]` per gamma group.
+    pub gamma: Vec<LeafId>,
+    /// `theta['delta']`.
+    pub delta: LeafId,
+    /// `params['<layer>']['w']` aligned with `graph.layers`.
+    pub layer_w: Vec<LeafId>,
+}
+
+impl ResolvedLeaves {
+    pub fn new(mm: &ModelManifest, graph: &ModelGraph) -> Result<Self> {
+        let mut gamma = Vec::with_capacity(graph.gamma_groups.len());
+        for g in 0..graph.gamma_groups.len() {
+            gamma.push(mm.leaf_id("theta", &format!("theta['gamma'][{g}]"))?);
+        }
+        let delta = mm.leaf_id("theta", "theta['delta']")?;
+        let mut layer_w = Vec::with_capacity(graph.layers.len());
+        for layer in &graph.layers {
+            layer_w.push(mm.leaf_id("params", &format!("params['{}']['w']", layer.name))?);
+        }
+        Ok(ResolvedLeaves {
+            gamma,
+            delta,
+            layer_w,
+        })
+    }
+}
+
 /// Theta view: gamma logits per group + delta logits, extracted from
-/// the train state via the manifest leaf names.
+/// the train state via interned leaf handles.
 pub struct ThetaView {
     /// (channels, 4) logits per group.
     pub gamma: Vec<Vec<f32>>,
@@ -150,19 +184,15 @@ pub struct ThetaView {
     pub delta_rows: usize,
 }
 
-pub fn theta_view(
-    state: &TrainState,
-    mm: &ModelManifest,
-    graph: &ModelGraph,
-) -> Result<ThetaView> {
+pub fn theta_view(state: &TrainState, leaves: &ResolvedLeaves) -> Result<ThetaView> {
     let mut gamma = Vec::new();
     let mut gamma_rows = Vec::new();
-    for g in 0..graph.gamma_groups.len() {
-        let t = state.leaf(mm, "theta", &format!("theta['gamma'][{g}]"))?;
+    for id in &leaves.gamma {
+        let t = state.leaf_at(id)?;
         gamma.push(t.as_f32().to_vec());
         gamma_rows.push(t.shape[0]);
     }
-    let d = state.leaf(mm, "theta", "theta['delta']")?;
+    let d = state.leaf_at(&leaves.delta)?;
     Ok(ThetaView {
         gamma,
         gamma_rows,
@@ -210,11 +240,11 @@ pub fn delta_probs(view: &ThetaView, masks: &PrecisionMasks, tau: f32) -> Vec<f3
 /// Paper Eq. 7/8: argmax discretization of theta into an `Assignment`.
 pub fn discretize(
     state: &TrainState,
-    mm: &ModelManifest,
+    leaves: &ResolvedLeaves,
     graph: &ModelGraph,
     masks: &PrecisionMasks,
 ) -> Result<Assignment> {
-    let view = theta_view(state, mm, graph)?;
+    let view = theta_view(state, leaves)?;
     let gprobs = gamma_probs(&view, graph, masks, 1.0);
     let mut gamma_bits = Vec::new();
     for (g, probs) in gprobs.iter().enumerate() {
@@ -235,17 +265,16 @@ pub fn discretize(
 /// `W_c <- W_c / sum_{p != 0} gamma_hat_{c,p}` per output channel.
 pub fn rescale_weights(
     state: &mut TrainState,
-    mm: &ModelManifest,
+    leaves: &ResolvedLeaves,
     graph: &ModelGraph,
     masks: &PrecisionMasks,
     tau: f32,
 ) -> Result<()> {
-    let view = theta_view(state, mm, graph)?;
+    let view = theta_view(state, leaves)?;
     let gprobs = gamma_probs(&view, graph, masks, tau);
-    for layer in &graph.layers {
+    for (layer, wid) in graph.layers.iter().zip(&leaves.layer_w) {
         let probs = &gprobs[layer.gamma_group];
-        let wname = format!("params['{}']['w']", layer.name);
-        let w = state.leaf_mut(mm, "params", &wname)?;
+        let w = state.leaf_at_mut(wid)?;
         let shape = w.shape.clone();
         let data = w.as_f32_mut();
         // weight layouts: conv (k,k,cin,cout), dw (k,k,c,1), linear (in,out)
@@ -325,10 +354,11 @@ pub fn param_share_by_bits(graph: &ModelGraph, asg: &Assignment) -> [f64; 4] {
 }
 
 /// Project gamma logits onto the layer-wise subspace (row mean), the
-/// EdMIPS layer-wise-MPS emulation. Applied after every search step.
-pub fn project_layerwise(state: &mut TrainState, mm: &ModelManifest, graph: &ModelGraph) -> Result<()> {
-    for g in 0..graph.gamma_groups.len() {
-        let t = state.leaf_mut(mm, "theta", &format!("theta['gamma'][{g}]"))?;
+/// EdMIPS layer-wise-MPS emulation. Applied after every search step
+/// (through the device state's theta-only partial sync).
+pub fn project_layerwise(state: &mut TrainState, leaves: &ResolvedLeaves) -> Result<()> {
+    for id in &leaves.gamma {
+        let t = state.leaf_at_mut(id)?;
         let rows = t.shape[0];
         let data = t.as_f32_mut();
         let mut mean = [0f32; 4];

@@ -1,11 +1,13 @@
 //! Binary checkpointing of `TrainState` (simple tagged format: magic,
 //! section count, per-section name + tensor list with shape/dtype).
+//! Device-resident states checkpoint through the dirty-tracked sync
+//! layer: `save_device` downloads only the stale sections.
 
 use std::io::{Read, Write};
 use std::path::Path;
 
 use crate::error::{Error, Result};
-use crate::runtime::TrainState;
+use crate::runtime::{DeviceState, TrainState};
 use crate::util::tensor::{Tensor, TensorData};
 
 const MAGIC: &[u8; 8] = b"MIXPREC1";
@@ -93,6 +95,18 @@ pub fn load(path: &Path) -> Result<TrainState> {
         state.sections.insert(name, tensors);
     }
     Ok(state)
+}
+
+/// Checkpoint a device-resident state (syncs stale sections to the
+/// host mirror first; resident sections are not re-downloaded twice).
+pub fn save_device(state: &mut DeviceState, path: &Path) -> Result<()> {
+    save(state.host_view()?, path)
+}
+
+/// Load a checkpoint straight into a device state; sections upload
+/// lazily before the first step that consumes them.
+pub fn load_device(path: &Path) -> Result<DeviceState> {
+    Ok(DeviceState::from_host(load(path)?))
 }
 
 fn write_u32<W: Write>(w: &mut W, v: u32) -> Result<()> {

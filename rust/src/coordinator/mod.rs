@@ -11,6 +11,6 @@ pub mod sweep;
 
 pub use context::Context;
 pub use pareto::{ParetoFront, Point};
-pub use phases::{PipelineConfig, Record, RunResult, Runner, Sampling, Timing};
+pub use phases::{MaskBufs, PipelineConfig, Record, RunResult, Runner, Sampling, Timing};
 pub use schedule::{EarlyStop, ExpDecay, TempSchedule};
 pub use sweep::{default_lambdas, sweep_lambdas, SweepResult};

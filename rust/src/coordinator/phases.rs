@@ -1,16 +1,29 @@
 //! The three-phase optimization pipeline (paper Sec. 4.4):
 //! warmup (float) -> joint search (Eq. 2) -> fine-tuning, driven
 //! entirely from Rust over the AOT step artifacts.
+//!
+//! The train state lives on device for the whole pipeline
+//! (`runtime::DeviceState`): each step feeds the previous step's
+//! output buffers back as inputs and only the batch + scalar knobs
+//! cross the host boundary. The few host touchpoints (Eq. 12
+//! rescaling, EdMIPS projection, discretization, best-state tracking)
+//! go through the dirty-tracked sync layer; `PipelineConfig::
+//! host_resident` forces the seed's per-step full marshal for
+//! benchmarking and equivalence testing.
 
+use std::sync::Arc;
 use std::time::Instant;
 
-use crate::assignment::{self, Assignment, PrecisionMasks};
+use crate::assignment::{self, Assignment, PrecisionMasks, ResolvedLeaves};
 use crate::coordinator::schedule::{EarlyStop, ExpDecay, TempSchedule};
 use crate::cost::{BitOps, CostModel, Mpic, Ne16, Size};
 use crate::data::{BatchIter, DataSet, Split};
 use crate::error::Result;
 use crate::graph::ModelGraph;
-use crate::runtime::{Engine, Manifest, ModelManifest, StepFn, TrainState};
+use crate::runtime::{
+    DeviceState, Engine, Manifest, ModelManifest, StateSnapshot, StepArg, StepFn,
+    TransferStats,
+};
 use crate::util::rng::Pcg64;
 use crate::util::tensor::Tensor;
 
@@ -78,6 +91,10 @@ pub struct PipelineConfig {
     pub layerwise: bool,
     /// Fraction of the default dataset size.
     pub data_frac: f64,
+    /// Force a full device->host->device marshal after every step,
+    /// reproducing the seed runtime's per-batch cost (bench baseline /
+    /// equivalence reference). Numerics are identical either way.
+    pub host_resident: bool,
     pub verbose: bool,
 }
 
@@ -119,6 +136,7 @@ impl PipelineConfig {
             seed: 42,
             layerwise: false,
             data_frac: 0.5,
+            host_resident: false,
             verbose: false,
         }
     }
@@ -163,6 +181,13 @@ pub struct RunResult {
     pub bitops: f64,
     pub history: Vec<Record>,
     pub timing: Timing,
+    /// Train/finetune steps actually executed (early stop may cut the
+    /// search phase short).
+    pub steps_run: usize,
+    /// Host<->device traffic of the train state and per-step inputs
+    /// over the whole pipeline (the one-time mask upload via
+    /// `MaskBufs` is outside the state and not counted).
+    pub transfer: TransferStats,
 }
 
 impl RunResult {
@@ -175,6 +200,23 @@ impl RunResult {
             "bitops" => self.bitops,
             _ => f64::NAN,
         }
+    }
+}
+
+/// Precision-mask tensors uploaded once per run and reused as
+/// device-resident step inputs (the seed rebuilt and re-marshalled
+/// both mask tensors on every batch of every phase).
+pub struct MaskBufs {
+    pub pw: Arc<xla::PjRtBuffer>,
+    pub px: Arc<xla::PjRtBuffer>,
+}
+
+impl MaskBufs {
+    pub fn new(eng: &Engine, masks: &PrecisionMasks) -> Result<Self> {
+        Ok(MaskBufs {
+            pw: eng.upload_tensor(&masks.pw_tensor())?,
+            px: eng.upload_tensor(&masks.px_tensor())?,
+        })
     }
 }
 
@@ -206,14 +248,17 @@ impl<'a> Runner<'a> {
 
     /// Evaluate accuracy/loss over a whole split with the current
     /// theta (hard == discretized, matching deployment numerics).
+    /// The mask buffers are uploaded once by the caller; only the
+    /// batch and two scalars move per eval step.
     pub fn evaluate(
         &self,
         eval: &StepFn,
-        state: &mut TrainState,
+        state: &mut DeviceState,
         split: Split,
-        masks: &PrecisionMasks,
+        masks: &MaskBufs,
         tau: f32,
         hard: bool,
+        host_resident: bool,
     ) -> Result<(f64, f64)> {
         let n = match split {
             Split::Train => self.data.cfg.n_train,
@@ -224,20 +269,26 @@ impl<'a> Runner<'a> {
         let mut tot_loss = 0f64;
         let mut tot_acc = 0f64;
         let mut count = 0f64;
+        let tau_t = Tensor::scalar_f32(tau);
+        let hard_t = Tensor::scalar_f32(if hard { 1.0 } else { 0.0 });
         for idx in BatchIter::eval_batches(n, batch) {
             let real = idx.len() as f64;
             let (x, y) = self.data.batch(split, &idx, batch);
-            let m = eval.step(
+            let m = eval.step_device(
+                self.eng,
                 state,
                 &[
-                    x,
-                    y,
-                    Tensor::scalar_f32(tau),
-                    Tensor::scalar_f32(if hard { 1.0 } else { 0.0 }),
-                    masks.pw_tensor(),
-                    masks.px_tensor(),
+                    StepArg::Host(&x),
+                    StepArg::Host(&y),
+                    StepArg::Host(&tau_t),
+                    StepArg::Host(&hard_t),
+                    StepArg::Device(&masks.pw),
+                    StepArg::Device(&masks.px),
                 ],
             )?;
+            if host_resident {
+                state.force_host_roundtrip()?;
+            }
             // padded tail batches repeat samples; weight by real count
             tot_loss += m.get("loss") as f64 * real;
             tot_acc += m.get("acc") as f64 * real;
@@ -246,15 +297,20 @@ impl<'a> Runner<'a> {
         Ok((tot_loss / count, tot_acc / count))
     }
 
-    /// Run the full three-phase pipeline.
+    /// Run the full three-phase pipeline with the train state resident
+    /// on device throughout.
     pub fn run(&self, cfg: &PipelineConfig) -> Result<RunResult> {
         let mut rng = Pcg64::new(cfg.seed);
-        let mut state = TrainState::init(self.eng, self.man, self.mm, cfg.seed as i32)?;
+        let mut state = DeviceState::init(self.eng, self.man, self.mm, cfg.seed as i32)?;
         let warm = StepFn::bind(self.eng, self.man, self.mm, "warmup")?;
         let search = StepFn::bind(self.eng, self.man, self.mm, &format!("search_{}", cfg.reg))?;
         let eval = StepFn::bind(self.eng, self.man, self.mm, "eval")?;
+        // Resolved once per run: interned leaf handles + uploaded masks.
+        let leaves = ResolvedLeaves::new(self.mm, self.graph)?;
+        let mask_bufs = MaskBufs::new(self.eng, &cfg.masks)?;
         let mut history = Vec::new();
         let mut timing = Timing::default();
+        let mut steps_run = 0usize;
         let batch = self.mm.batch;
         let mut train_iter =
             BatchIter::new(self.data.cfg.n_train, batch, rng.next_u64(), true);
@@ -266,15 +322,22 @@ impl<'a> Runner<'a> {
             let idx = train_iter.next_batch();
             let (x, y) = self.data.batch(Split::Train, &idx, batch);
             let epoch = step / cfg.steps_per_epoch;
-            let m = warm.step(
+            let lr_t = Tensor::scalar_f32(wlr.at(epoch));
+            let t_t = Tensor::scalar_f32((step + 1) as f32);
+            let m = warm.step_device(
+                self.eng,
                 &mut state,
                 &[
-                    x,
-                    y,
-                    Tensor::scalar_f32(wlr.at(epoch)),
-                    Tensor::scalar_f32((step + 1) as f32),
+                    StepArg::Host(&x),
+                    StepArg::Host(&y),
+                    StepArg::Host(&lr_t),
+                    StepArg::Host(&t_t),
                 ],
             )?;
+            steps_run += 1;
+            if cfg.host_resident {
+                state.force_host_roundtrip()?;
+            }
             if step % cfg.eval_every == 0 || step + 1 == cfg.warmup_steps {
                 history.push(Record {
                     phase: "warmup",
@@ -296,44 +359,82 @@ impl<'a> Runner<'a> {
         timing.warmup_s = t0.elapsed().as_secs_f64();
 
         // ---- phase 2: joint search --------------------------------------
-        // Eq. 12 weight rescaling against the initial gamma distribution.
-        assignment::rescale_weights(&mut state, self.mm, self.graph, &cfg.masks, cfg.temp.tau0)?;
+        // Eq. 12 weight rescaling against the initial gamma
+        // distribution — a host touchpoint: pull theta (read) and
+        // params (read/write) through the sync layer; params re-upload
+        // lazily before the first search step.
+        {
+            state.host_view_partial(&["theta"])?;
+            let host = state.host_view_mut_partial(&["params"])?;
+            assignment::rescale_weights(host, &leaves, self.graph, &cfg.masks, cfg.temp.tau0)?;
+        }
         let t0 = Instant::now();
         let (hard_flag, noise_scale) = cfg.sampling.flags();
         let slr_w = ExpDecay::new(cfg.lr_w, cfg.lr_decay, cfg.lr_w * 0.01);
         let slr_th = ExpDecay::new(cfg.lr_th, cfg.lr_decay, cfg.lr_th * 0.01);
+        let hard_t = Tensor::scalar_f32(hard_flag);
+        let noise_t = Tensor::scalar_f32(noise_scale);
+        let lambda_t = Tensor::scalar_f32(cfg.lambda);
         let mut es = EarlyStop::new(cfg.patience);
-        let mut best_state: Option<TrainState> = None;
+        // Best-state tracking: Arc snapshot on the device path; a host
+        // clone in host-resident mode, matching the seed's
+        // `state.clone()` exactly (a device snapshot there would
+        // re-upload the whole state and skew the bench baseline).
+        enum BestState {
+            Dev(StateSnapshot),
+            Host(crate::runtime::TrainState),
+        }
+        let mut best: Option<BestState> = None;
         for step in 0..cfg.search_steps {
             let idx = train_iter.next_batch();
             let (x, y) = self.data.batch(Split::Train, &idx, batch);
             let epoch = step / cfg.steps_per_epoch;
             let tau = cfg.temp.at(epoch);
-            let m = search.step(
+            let lr_w_t = Tensor::scalar_f32(slr_w.at(epoch));
+            let lr_th_t = Tensor::scalar_f32(slr_th.at(epoch));
+            let tau_t = Tensor::scalar_f32(tau);
+            let key_t = Tensor::scalar_i32(rng.next_u64() as i32);
+            let t_t = Tensor::scalar_f32((step + 1) as f32);
+            let m = search.step_device(
+                self.eng,
                 &mut state,
                 &[
-                    x,
-                    y,
-                    Tensor::scalar_f32(slr_w.at(epoch)),
-                    Tensor::scalar_f32(slr_th.at(epoch)),
-                    Tensor::scalar_f32(tau),
-                    Tensor::scalar_f32(cfg.lambda),
-                    Tensor::scalar_f32(hard_flag),
-                    Tensor::scalar_f32(noise_scale),
-                    Tensor::scalar_i32(rng.next_u64() as i32),
-                    Tensor::scalar_f32((step + 1) as f32),
-                    cfg.masks.pw_tensor(),
-                    cfg.masks.px_tensor(),
+                    StepArg::Host(&x),
+                    StepArg::Host(&y),
+                    StepArg::Host(&lr_w_t),
+                    StepArg::Host(&lr_th_t),
+                    StepArg::Host(&tau_t),
+                    StepArg::Host(&lambda_t),
+                    StepArg::Host(&hard_t),
+                    StepArg::Host(&noise_t),
+                    StepArg::Host(&key_t),
+                    StepArg::Host(&t_t),
+                    StepArg::Device(&mask_bufs.pw),
+                    StepArg::Device(&mask_bufs.px),
                 ],
             )?;
+            steps_run += 1;
+            if cfg.host_resident {
+                state.force_host_roundtrip()?;
+            }
             if cfg.layerwise {
-                assignment::project_layerwise(&mut state, self.mm, self.graph)?;
+                // theta-only partial sync: params/optimizer state stay
+                // resident while the EdMIPS projection edits gamma.
+                let host = state.host_view_mut_partial(&["theta"])?;
+                assignment::project_layerwise(host, &leaves)?;
             }
             let is_eval = step % cfg.eval_every == cfg.eval_every - 1
                 || step + 1 == cfg.search_steps;
             if is_eval {
-                let (vl, va) =
-                    self.evaluate(&eval, &mut state, Split::Val, &cfg.masks, tau, true)?;
+                let (vl, va) = self.evaluate(
+                    &eval,
+                    &mut state,
+                    Split::Val,
+                    &mask_bufs,
+                    tau,
+                    true,
+                    cfg.host_resident,
+                )?;
                 history.push(Record {
                     phase: "search",
                     step,
@@ -351,7 +452,13 @@ impl<'a> Runner<'a> {
                     );
                 }
                 if va as f32 >= es.best() {
-                    best_state = Some(state.clone());
+                    // O(leaf-count) snapshot: shared Arc handles, no
+                    // parameter copies (the seed cloned the full state).
+                    best = Some(if cfg.host_resident {
+                        BestState::Host(state.host_view()?.clone())
+                    } else {
+                        BestState::Dev(state.snapshot(self.eng)?)
+                    });
                 }
                 if es.update(step, va as f32) {
                     if cfg.verbose {
@@ -361,37 +468,57 @@ impl<'a> Runner<'a> {
                 }
             }
         }
-        if let Some(best) = best_state {
-            state = best;
+        match best {
+            Some(BestState::Dev(snap)) => state.restore(&snap),
+            Some(BestState::Host(host)) => state.restore_host(host),
+            None => {}
         }
         timing.search_s = t0.elapsed().as_secs_f64();
 
         // ---- discretize (Eq. 7/8) ---------------------------------------
-        let asg = assignment::discretize(&state, self.mm, self.graph, &cfg.masks)?;
+        let asg = assignment::discretize(
+            state.host_view_partial(&["theta"])?,
+            &leaves,
+            self.graph,
+            &cfg.masks,
+        )?;
 
         // ---- phase 3: fine-tune (weights only, hard theta) ---------------
         let t0 = Instant::now();
+        let ft_lr_th = Tensor::scalar_f32(0.0); // lr_th = 0: theta frozen
+        let ft_tau = Tensor::scalar_f32(cfg.temp.floor);
+        let ft_lambda = Tensor::scalar_f32(0.0); // lambda = 0: task loss only
+        let ft_hard = Tensor::scalar_f32(1.0); // hard (discretized) quantizers
+        let ft_noise = Tensor::scalar_f32(0.0);
+        let ft_key = Tensor::scalar_i32(0);
         for step in 0..cfg.finetune_steps {
             let idx = train_iter.next_batch();
             let (x, y) = self.data.batch(Split::Train, &idx, batch);
             let epoch = step / cfg.steps_per_epoch;
-            let m = search.step(
+            let lr_w_t = Tensor::scalar_f32(slr_w.at(epoch) * 0.5);
+            let t_t = Tensor::scalar_f32((step + 1) as f32);
+            let m = search.step_device(
+                self.eng,
                 &mut state,
                 &[
-                    x,
-                    y,
-                    Tensor::scalar_f32(slr_w.at(epoch) * 0.5),
-                    Tensor::scalar_f32(0.0), // lr_th = 0: theta frozen
-                    Tensor::scalar_f32(cfg.temp.floor),
-                    Tensor::scalar_f32(0.0), // lambda = 0: task loss only
-                    Tensor::scalar_f32(1.0), // hard (discretized) quantizers
-                    Tensor::scalar_f32(0.0),
-                    Tensor::scalar_i32(0),
-                    Tensor::scalar_f32((step + 1) as f32),
-                    cfg.masks.pw_tensor(),
-                    cfg.masks.px_tensor(),
+                    StepArg::Host(&x),
+                    StepArg::Host(&y),
+                    StepArg::Host(&lr_w_t),
+                    StepArg::Host(&ft_lr_th),
+                    StepArg::Host(&ft_tau),
+                    StepArg::Host(&ft_lambda),
+                    StepArg::Host(&ft_hard),
+                    StepArg::Host(&ft_noise),
+                    StepArg::Host(&ft_key),
+                    StepArg::Host(&t_t),
+                    StepArg::Device(&mask_bufs.pw),
+                    StepArg::Device(&mask_bufs.px),
                 ],
             )?;
+            steps_run += 1;
+            if cfg.host_resident {
+                state.force_host_roundtrip()?;
+            }
             if step % cfg.eval_every == 0 || step + 1 == cfg.finetune_steps {
                 history.push(Record {
                     phase: "finetune",
@@ -409,17 +536,19 @@ impl<'a> Runner<'a> {
             &eval,
             &mut state,
             Split::Val,
-            &cfg.masks,
+            &mask_bufs,
             cfg.temp.floor,
             true,
+            cfg.host_resident,
         )?;
         let (_, test_acc) = self.evaluate(
             &eval,
             &mut state,
             Split::Test,
-            &cfg.masks,
+            &mask_bufs,
             cfg.temp.floor,
             true,
+            cfg.host_resident,
         )?;
 
         Ok(RunResult {
@@ -436,6 +565,8 @@ impl<'a> Runner<'a> {
             assignment: asg,
             history,
             timing,
+            steps_run,
+            transfer: state.stats,
         })
     }
 }

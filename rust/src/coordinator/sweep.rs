@@ -5,7 +5,9 @@
 
 use crate::coordinator::pareto::{ParetoFront, Point};
 use crate::coordinator::phases::{PipelineConfig, RunResult, Runner};
+use crate::cost::Normalizer;
 use crate::error::Result;
+use crate::graph::ModelGraph;
 use crate::util::pool::parallel_map;
 
 /// Result of a sweep: all runs plus the Pareto front over the chosen
@@ -42,6 +44,21 @@ impl SweepResult {
 
     pub fn total_search_time_s(&self) -> f64 {
         self.runs.iter().map(|r| r.timing.total_s()).sum()
+    }
+
+    /// Pareto front in (normalized cost, val accuracy) space: every
+    /// run's assignment scored by the sweep metric divided by the
+    /// w8a8 reference, which [`Normalizer`] computes once for the
+    /// whole sweep instead of once per point.
+    pub fn front_normalized(&self, graph: &ModelGraph) -> Option<ParetoFront> {
+        let norm = Normalizer::by_name(&self.metric, graph)?;
+        Some(ParetoFront::from_points(self.runs.iter().map(|r| {
+            Point::new(
+                norm.normalized(graph, &r.assignment),
+                r.val_acc,
+                format!("lam={}", r.lambda),
+            )
+        })))
     }
 }
 
@@ -88,6 +105,46 @@ pub fn default_lambdas(n: usize) -> Vec<f64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn front_normalized_uses_memoized_max() {
+        use crate::assignment::Assignment;
+        use crate::coordinator::phases::{RunResult, Sampling, Timing};
+        use crate::cost::testutil::tiny_graph;
+        let g = tiny_graph();
+        let mk = |lam: f32, bits: u32, acc: f64| RunResult {
+            model: "tiny".into(),
+            reg: "size".into(),
+            lambda: lam,
+            sampling: Sampling::Softmax,
+            val_acc: acc,
+            test_acc: acc,
+            assignment: Assignment::uniform(&g, bits),
+            size_kb: 0.0,
+            mpic_cycles: 0.0,
+            ne16_cycles: 0.0,
+            bitops: 0.0,
+            history: Vec::new(),
+            timing: Timing::default(),
+            steps_run: 0,
+            transfer: Default::default(),
+        };
+        let sw = SweepResult {
+            runs: vec![mk(0.1, 8, 0.9), mk(1.0, 4, 0.8)],
+            metric: "size".into(),
+        };
+        let front = sw.front_normalized(&g).unwrap();
+        assert_eq!(front.len(), 2);
+        let costs: Vec<f64> = front.points().iter().map(|p| p.cost).collect();
+        // w4a8 is exactly half the w8a8 reference under the size model
+        assert!((costs[0] - 0.5).abs() < 1e-9, "{costs:?}");
+        assert!((costs[1] - 1.0).abs() < 1e-9, "{costs:?}");
+        let bad = SweepResult {
+            runs: Vec::new(),
+            metric: "nope".into(),
+        };
+        assert!(bad.front_normalized(&g).is_none());
+    }
 
     #[test]
     fn lambda_grid_is_log_spaced() {

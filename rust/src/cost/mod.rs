@@ -48,6 +48,46 @@ pub fn by_name(name: &str) -> Option<Box<dyn CostModel + Send + Sync>> {
     }
 }
 
+/// A cost model with its w8a8 normalization constant precomputed.
+///
+/// `CostModel::normalized` rebuilds `Assignment::uniform(graph, 8)`
+/// and re-walks every layer on each call; sweep and Pareto reporting
+/// evaluate many assignments against the same graph, so the max is
+/// memoized here once.
+pub struct Normalizer {
+    model: Box<dyn CostModel + Send + Sync>,
+    max: f64,
+}
+
+impl Normalizer {
+    pub fn new(model: Box<dyn CostModel + Send + Sync>, graph: &ModelGraph) -> Self {
+        let max = model.max_cost(graph);
+        Normalizer { model, max }
+    }
+
+    pub fn by_name(name: &str, graph: &ModelGraph) -> Option<Self> {
+        by_name(name).map(|m| Self::new(m, graph))
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.model.name()
+    }
+
+    /// The memoized w8a8 reference cost.
+    pub fn max_cost(&self) -> f64 {
+        self.max
+    }
+
+    pub fn cost(&self, graph: &ModelGraph, asg: &Assignment) -> f64 {
+        self.model.cost(graph, asg)
+    }
+
+    /// Normalized cost without recomputing the reference.
+    pub fn normalized(&self, graph: &ModelGraph, asg: &Assignment) -> f64 {
+        self.model.cost(graph, asg) / self.max
+    }
+}
+
 #[cfg(test)]
 pub(crate) mod testutil {
     use crate::graph::ModelGraph;
@@ -124,5 +164,23 @@ mod tests {
             let n = m.normalized(&g, &Assignment::uniform(&g, 8));
             assert!((n - 1.0).abs() < 1e-9, "{model}: {n}");
         }
+    }
+
+    /// The memoized normalizer must agree exactly with the recompute-
+    /// every-call default it replaces.
+    #[test]
+    fn normalizer_matches_cost_model() {
+        let g = tiny_graph();
+        for model in ["size", "bitops", "mpic", "ne16"] {
+            let m = by_name(model).unwrap();
+            let norm = Normalizer::by_name(model, &g).unwrap();
+            assert_eq!(norm.max_cost(), m.max_cost(&g), "{model}");
+            for bits in [2u32, 4, 8] {
+                let a = Assignment::uniform(&g, bits);
+                assert_eq!(norm.normalized(&g, &a), m.normalized(&g, &a), "{model}");
+                assert_eq!(norm.cost(&g, &a), m.cost(&g, &a), "{model}");
+            }
+        }
+        assert!(Normalizer::by_name("nope", &g).is_none());
     }
 }

@@ -1,27 +1,60 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled impls: the offline registry
+//! carries no `thiserror`).
 
-#[derive(Debug, thiserror::Error)]
+use std::fmt;
+
+#[derive(Debug)]
 pub enum Error {
-    #[error("xla: {0}")]
-    Xla(#[from] xla::Error),
-
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("json: {0}")]
-    Json(#[from] crate::util::json::JsonError),
-
-    #[error("manifest: {0}")]
+    Xla(xla::Error),
+    Io(std::io::Error),
+    Json(crate::util::json::JsonError),
     Manifest(String),
-
-    #[error("shape: {0}")]
     Shape(String),
-
-    #[error("config: {0}")]
     Config(String),
-
-    #[error("{0}")]
     Msg(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(e) => write!(f, "xla: {e}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Json(e) => write!(f, "json: {e}"),
+            Error::Manifest(m) => write!(f, "manifest: {m}"),
+            Error::Shape(m) => write!(f, "shape: {m}"),
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Msg(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Xla(e) => Some(e),
+            Error::Io(e) => Some(e),
+            Error::Json(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<crate::util::json::JsonError> for Error {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        Error::Json(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, Error>;

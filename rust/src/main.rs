@@ -134,6 +134,19 @@ fn run(cmd: &str, a: &Args) -> mixprec::Result<()> {
                 "{}",
                 report::front_table("pareto front (val acc)", &front, &cfg.reg).to_markdown()
             );
+            // normalized view: every point scored against the memoized
+            // w8a8 reference (cost::Normalizer, computed once)
+            if let Some(nf) = sw.front_normalized(ctx.graph(&cfg.model)) {
+                println!(
+                    "{}",
+                    report::front_table(
+                        "pareto front (normalized cost)",
+                        &nf,
+                        &format!("{}/w8a8", cfg.reg),
+                    )
+                    .to_markdown()
+                );
+            }
         }
         "compare" => {
             let cfg = build_cfg(a);

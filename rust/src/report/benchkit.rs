@@ -11,11 +11,17 @@
 //! * `MIXPREC_POINTS`   — lambda points per sweep
 //! * `MIXPREC_DATA_FRAC`
 //! * `MIXPREC_WORKERS`
+//! * `MIXPREC_HOST_RESIDENT=1` — force the seed's per-step full
+//!   host<->device marshal (baseline for the step-marshalling bench)
+//! * `MIXPREC_BENCH_DIR` — where `BENCH_*.json` trend files land
+//!   (default: current directory)
 
+use std::path::PathBuf;
 use std::time::Instant;
 
 use crate::coordinator::{Context, PipelineConfig, TempSchedule};
 use crate::error::Result;
+use crate::util::json::Json;
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key)
@@ -39,6 +45,7 @@ pub struct BenchScale {
     pub points: usize,
     pub data_frac: f64,
     pub workers: usize,
+    pub host_resident: bool,
 }
 
 impl BenchScale {
@@ -56,6 +63,7 @@ impl BenchScale {
             points: env_usize("MIXPREC_POINTS", p),
             data_frac: env_f64("MIXPREC_DATA_FRAC", d),
             workers: env_usize("MIXPREC_WORKERS", 1),
+            host_resident: env_usize("MIXPREC_HOST_RESIDENT", 0) != 0,
         }
     }
 
@@ -65,6 +73,7 @@ impl BenchScale {
         cfg.search_steps = self.steps;
         cfg.finetune_steps = self.finetune;
         cfg.data_frac = self.data_frac;
+        cfg.host_resident = self.host_resident;
         cfg.eval_every = (self.steps / 3).max(8);
         cfg.steps_per_epoch = 16;
         // keep the same *final* temperature despite the short schedule,
@@ -72,6 +81,25 @@ impl BenchScale {
         cfg.temp = TempSchedule::rescaled(self.steps / 16, 200);
         cfg
     }
+}
+
+/// Where `BENCH_<name>.json` trend files are written
+/// (`MIXPREC_BENCH_DIR`, default current directory).
+pub fn bench_json_path(name: &str) -> PathBuf {
+    let dir = std::env::var("MIXPREC_BENCH_DIR").unwrap_or_else(|_| ".".into());
+    PathBuf::from(dir).join(format!("BENCH_{name}.json"))
+}
+
+/// Write a bench payload as pretty-printed JSON so the perf
+/// trajectory is tracked across PRs (`BENCH_step_marshal.json` etc.).
+pub fn write_bench_json(name: &str, payload: &Json) -> Result<PathBuf> {
+    let path = bench_json_path(name);
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&path, payload.to_string_pretty())?;
+    println!("wrote {}", path.display());
+    Ok(path)
 }
 
 /// Bench harness entrypoint: prints a banner, loads the context, runs

@@ -18,6 +18,8 @@ use std::path::Path;
 use std::sync::{Arc, Mutex};
 
 use crate::error::{Error, Result};
+use crate::runtime::literal::tensor_to_literal;
+use crate::util::tensor::Tensor;
 
 pub struct Engine {
     client: xla::PjRtClient,
@@ -70,19 +72,60 @@ impl Engine {
     pub fn compiled_count(&self) -> usize {
         self.cache.lock().unwrap().len()
     }
+
+    /// Copy a host literal into a device buffer. The `Arc` lets the
+    /// device-resident state and its snapshots share buffers without
+    /// further copies.
+    pub fn upload(&self, lit: &xla::Literal) -> Result<Arc<xla::PjRtBuffer>> {
+        Ok(Arc::new(self.client.buffer_from_host_literal(lit)?))
+    }
+
+    /// Convert + upload a host tensor in one call.
+    pub fn upload_tensor(&self, t: &Tensor) -> Result<Arc<xla::PjRtBuffer>> {
+        self.upload(&tensor_to_literal(t)?)
+    }
 }
 
 impl Executable {
-    /// Execute with literal inputs; unpack the (return_tuple=True)
-    /// 1-tuple output into its component literals.
+    /// Execute with literal inputs and download everything: unpacks
+    /// both output conventions — a single (return_tuple=True) tuple
+    /// buffer, or already-untupled per-leaf buffers.
     pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let out = self.exe.execute::<xla::Literal>(inputs)?;
-        let lit = out
-            .first()
-            .and_then(|r| r.first())
-            .ok_or_else(|| Error::msg("executable produced no outputs"))?
-            .to_literal_sync()?;
-        Ok(lit.to_tuple()?)
+        let bufs = Self::first_device(self.exe.execute::<xla::Literal>(inputs)?)?;
+        if bufs.len() == 1 {
+            return Ok(bufs[0].to_literal_sync()?.to_tuple()?);
+        }
+        let mut lits = Vec::with_capacity(bufs.len());
+        for b in &bufs {
+            lits.push(b.to_literal_sync()?);
+        }
+        Ok(lits)
+    }
+
+    /// Execute with device-resident inputs and keep the outputs on
+    /// device — the zero-marshal hot path. Handles both output
+    /// conventions: per-leaf buffers, or the legacy
+    /// (return_tuple=True) single tuple buffer, which is disassembled
+    /// on device (no host visit) via `PjRtBuffer::untuple`.
+    pub fn run_buffers(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let bufs = Self::first_device(self.exe.execute_b(inputs)?)?;
+        if bufs.len() == 1 {
+            if let Some(parts) = bufs[0].untuple() {
+                return Ok(parts);
+            }
+        }
+        Ok(bufs)
+    }
+
+    fn first_device(out: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<xla::PjRtBuffer>> {
+        let bufs = out
+            .into_iter()
+            .next()
+            .ok_or_else(|| Error::msg("executable produced no outputs"))?;
+        if bufs.is_empty() {
+            return Err(Error::msg("executable produced no outputs"));
+        }
+        Ok(bufs)
     }
 }
 

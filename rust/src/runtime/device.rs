@@ -1,0 +1,307 @@
+//! Device-resident training state with a dirty-tracked host mirror.
+//!
+//! The seed runtime marshalled the *entire* train state (params,
+//! opt_w, theta, opt_th) through `tensor_to_literal` /
+//! `literal_to_tensor` on every warmup/search/finetune/eval batch.
+//! [`DeviceState`] instead keeps each section as live `PjRtBuffer`s
+//! between steps: `StepFn::step_device` feeds the previous step's
+//! output buffers straight back as inputs, so only the batch and the
+//! scalar knobs cross the host/device boundary per step.
+//!
+//! Host tensors are materialized lazily through the sync layer:
+//!
+//! * [`DeviceState::host_view`] / [`host_view_partial`] download the
+//!   stale sections on access (checkpointing, discretize, export);
+//! * [`DeviceState::host_view_mut_partial`] also marks the listed
+//!   sections dirty so the next step re-uploads them (Eq. 12
+//!   rescaling, EdMIPS layer-wise projection);
+//! * [`DeviceState::mark_dirty`] is the manual escape hatch.
+//!
+//! Per-section staleness is tracked in both directions; a section is
+//! never stale in both. [`DeviceState::snapshot`] clones only `Arc`
+//! handles — the best-state bookkeeping in the search loop is O(leaf
+//! count), not O(parameter bytes). All state and per-step-input
+//! traffic through a `DeviceState` is counted in [`TransferStats`]
+//! so the step-marshalling bench can report bytes moved per step
+//! (one-time uploads made directly via `Engine::upload*`, e.g. the
+//! per-run mask buffers, are not).
+//!
+//! See `runtime/README.md` for the full architecture notes.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::runtime::client::Engine;
+use crate::runtime::literal::literal_to_tensor;
+use crate::runtime::manifest::{Manifest, ModelManifest};
+use crate::runtime::state::{split_init_outputs, TrainState};
+
+/// Cumulative host<->device traffic (tensor payloads; scalars count 4
+/// bytes like any other leaf).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TransferStats {
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
+    pub h2d_tensors: u64,
+    pub d2h_tensors: u64,
+}
+
+impl TransferStats {
+    pub fn total_bytes(&self) -> u64 {
+        self.h2d_bytes + self.d2h_bytes
+    }
+}
+
+/// Cheap copy-on-write snapshot of the device side of a state: shared
+/// `Arc` handles, no payload copies. Restoring never mutates buffers
+/// in place — steps *replace* section buffers — so a snapshot stays
+/// valid while the live state keeps training.
+#[derive(Clone)]
+pub struct StateSnapshot {
+    dev: BTreeMap<String, Vec<Arc<xla::PjRtBuffer>>>,
+}
+
+/// Manifest-ordered train state held in device buffers, with a
+/// lazily-synced host mirror.
+pub struct DeviceState {
+    host: TrainState,
+    dev: BTreeMap<String, Vec<Arc<xla::PjRtBuffer>>>,
+    /// Sections where the device copy is newer than the host mirror.
+    host_stale: BTreeSet<String>,
+    /// Sections where the host mirror is newer than the device copy.
+    dev_stale: BTreeSet<String>,
+    pub stats: TransferStats,
+}
+
+impl DeviceState {
+    /// Wrap a host state; everything uploads lazily on first use.
+    pub fn from_host(host: TrainState) -> Self {
+        let dev_stale = host.sections.keys().cloned().collect();
+        DeviceState {
+            host,
+            dev: BTreeMap::new(),
+            host_stale: BTreeSet::new(),
+            dev_stale,
+            stats: TransferStats::default(),
+        }
+    }
+
+    /// Build the full search state by running the model's `init`
+    /// artifact, keeping every output on device (the host mirror
+    /// stays empty until first `host_view`).
+    pub fn init(eng: &Engine, man: &Manifest, mm: &ModelManifest, seed: i32) -> Result<Self> {
+        let desc = mm.artifact("init")?;
+        let exe = eng.load(&man.artifact_path(&desc.file))?;
+        let seed_buf = eng.upload(&xla::Literal::scalar(seed))?;
+        let outs = exe.run_buffers(&[seed_buf.as_ref()])?;
+        let mut st = DeviceState {
+            host: TrainState::default(),
+            dev: BTreeMap::new(),
+            host_stale: BTreeSet::new(),
+            dev_stale: BTreeSet::new(),
+            stats: TransferStats::default(),
+        };
+        st.stats.h2d_bytes += 4;
+        st.stats.h2d_tensors += 1;
+        for (sec, bufs) in split_init_outputs(desc, mm, outs)? {
+            st.dev
+                .insert(sec.clone(), bufs.into_iter().map(Arc::new).collect());
+            st.host.sections.insert(sec.clone(), Vec::new());
+            st.host_stale.insert(sec);
+        }
+        Ok(st)
+    }
+
+    pub fn section_names(&self) -> Vec<String> {
+        self.host.sections.keys().cloned().collect()
+    }
+
+    // ---- host side of the sync layer --------------------------------
+
+    fn sync_host_one(&mut self, sec: &str) -> Result<()> {
+        if !self.host_stale.contains(sec) {
+            return Ok(());
+        }
+        let bufs = self
+            .dev
+            .get(sec)
+            .ok_or_else(|| Error::manifest(format!("no device section '{sec}'")))?;
+        let mut tensors = Vec::with_capacity(bufs.len());
+        for b in bufs {
+            let t = literal_to_tensor(&b.to_literal_sync()?)?;
+            self.stats.d2h_bytes += (t.len() * 4) as u64;
+            self.stats.d2h_tensors += 1;
+            tensors.push(t);
+        }
+        self.host.sections.insert(sec.to_string(), tensors);
+        self.host_stale.remove(sec);
+        Ok(())
+    }
+
+    /// Host mirror with *every* section synced (checkpointing, final
+    /// export — the few cold touchpoints that want the whole state).
+    pub fn host_view(&mut self) -> Result<&TrainState> {
+        for sec in self.host_stale.clone() {
+            self.sync_host_one(&sec)?;
+        }
+        Ok(&self.host)
+    }
+
+    /// Host mirror with only `secs` guaranteed fresh; other sections
+    /// may be stale. The per-step host touchpoints (discretize reads
+    /// theta) use this to avoid downloading params/optimizer state.
+    pub fn host_view_partial(&mut self, secs: &[&str]) -> Result<&TrainState> {
+        for sec in secs {
+            self.sync_host_one(sec)?;
+        }
+        Ok(&self.host)
+    }
+
+    /// Mutable host mirror syncing and dirty-marking only `secs` (the
+    /// layer-wise projection touches theta every search step; pulling
+    /// params/opt state along would defeat device residency).
+    pub fn host_view_mut_partial(&mut self, secs: &[&str]) -> Result<&mut TrainState> {
+        for sec in secs {
+            self.sync_host_one(sec)?;
+        }
+        for sec in secs {
+            self.mark_dirty(sec);
+        }
+        Ok(&mut self.host)
+    }
+
+    /// Declare that the host copy of `sec` was mutated: the device
+    /// copy is stale and re-uploads lazily before the next step.
+    pub fn mark_dirty(&mut self, sec: &str) {
+        debug_assert!(
+            !self.host_stale.contains(sec),
+            "mark_dirty('{sec}') on a section whose host mirror was never synced"
+        );
+        self.dev_stale.insert(sec.to_string());
+    }
+
+    /// Full host copy (syncs everything).
+    pub fn to_host(&mut self) -> Result<TrainState> {
+        Ok(self.host_view()?.clone())
+    }
+
+    // ---- device side of the sync layer ------------------------------
+
+    fn sync_dev_one(&mut self, eng: &Engine, sec: &str) -> Result<()> {
+        if !self.dev_stale.contains(sec) {
+            return Ok(());
+        }
+        if self.host_stale.contains(sec) {
+            // both-sides-stale only happens when mark_dirty was called
+            // on a section whose host mirror was never synced; refuse
+            // rather than upload the unmaterialized mirror over live
+            // device buffers
+            return Err(Error::msg(format!(
+                "section '{sec}' dirty on both sides: sync a host view \
+                 before mark_dirty"
+            )));
+        }
+        let tensors = self.host.section(sec)?;
+        let mut bufs = Vec::with_capacity(tensors.len());
+        let mut bytes = 0u64;
+        for t in tensors {
+            bufs.push(eng.upload_tensor(t)?);
+            bytes += (t.len() * 4) as u64;
+        }
+        self.stats.h2d_bytes += bytes;
+        self.stats.h2d_tensors += tensors.len() as u64;
+        self.dev.insert(sec.to_string(), bufs);
+        self.dev_stale.remove(sec);
+        Ok(())
+    }
+
+    /// Ensure the named sections are device-fresh (uploading any the
+    /// host dirtied). `StepFn::step_device` calls this for the
+    /// artifact's input sections before gathering buffers.
+    pub fn sync_to_device(&mut self, eng: &Engine, secs: &[String]) -> Result<()> {
+        for sec in secs {
+            self.sync_dev_one(eng, sec)?;
+        }
+        Ok(())
+    }
+
+    /// Device buffers of a section. Errors if the section is dirty —
+    /// call [`DeviceState::sync_to_device`] first.
+    pub fn device_bufs(&self, sec: &str) -> Result<&[Arc<xla::PjRtBuffer>]> {
+        if self.dev_stale.contains(sec) {
+            return Err(Error::msg(format!(
+                "device section '{sec}' is stale; sync_to_device first"
+            )));
+        }
+        self.dev
+            .get(sec)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| Error::manifest(format!("no device section '{sec}'")))
+    }
+
+    /// Install a step's output buffers as the new live section; the
+    /// host mirror becomes stale (synced lazily on next host access).
+    pub fn set_device_section(
+        &mut self,
+        sec: &str,
+        bufs: Vec<Arc<xla::PjRtBuffer>>,
+    ) -> Result<()> {
+        if !self.host.sections.contains_key(sec) {
+            return Err(Error::manifest(format!("state has no section '{sec}'")));
+        }
+        self.dev.insert(sec.to_string(), bufs);
+        self.dev_stale.remove(sec);
+        self.host_stale.insert(sec.to_string());
+        Ok(())
+    }
+
+    // ---- snapshots ---------------------------------------------------
+
+    /// O(leaf-count) snapshot of the device state (Arc clones only).
+    /// Syncs any host-dirtied section up first so the snapshot is
+    /// self-contained.
+    pub fn snapshot(&mut self, eng: &Engine) -> Result<StateSnapshot> {
+        for sec in self.dev_stale.clone() {
+            self.sync_dev_one(eng, &sec)?;
+        }
+        Ok(StateSnapshot {
+            dev: self.dev.clone(),
+        })
+    }
+
+    /// Restore a snapshot; the host mirror becomes fully stale.
+    pub fn restore(&mut self, snap: &StateSnapshot) {
+        self.dev = snap.dev.clone();
+        self.dev_stale.clear();
+        self.host_stale = self.host.sections.keys().cloned().collect();
+    }
+
+    /// Replace the state with a host-side copy (the host-resident
+    /// best-state path, mirroring the seed's `state.clone()`):
+    /// everything re-uploads lazily before the next step.
+    pub fn restore_host(&mut self, host: TrainState) {
+        self.dev_stale = host.sections.keys().cloned().collect();
+        self.host_stale.clear();
+        self.dev.clear();
+        self.host = host;
+    }
+
+    // ---- host-resident compatibility mode ---------------------------
+
+    /// Force one full device->host->device round trip, reproducing the
+    /// seed runtime's per-step marshalling cost: download every
+    /// section, then mark everything dirty so the next step re-uploads
+    /// it all. Used as the baseline leg of the step-marshalling bench
+    /// and the equivalence tests.
+    pub fn force_host_roundtrip(&mut self) -> Result<()> {
+        for sec in self.host_stale.clone() {
+            self.sync_host_one(&sec)?;
+        }
+        let all: Vec<String> = self.section_names();
+        for sec in all {
+            self.dev_stale.insert(sec);
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,137 @@
+//! Self-contained runtime fixture: a tiny fake model whose artifacts
+//! are `// STUB:` programs the host backend can execute, letting the
+//! device-resident runtime be integration-tested and benchmarked
+//! end-to-end *without* real AOT artifacts or native XLA.
+//!
+//! Used by `tests/device_state.rs` and `benches/step_marshal.rs`; not
+//! part of the search pipeline itself.
+
+use std::path::Path;
+
+use crate::error::Result;
+use crate::runtime::manifest::{Manifest, ModelManifest};
+use crate::runtime::state::TrainState;
+use crate::util::tensor::Tensor;
+
+/// Fixture model name.
+pub const STUB_MODEL: &str = "stubnet";
+
+/// Manifest JSON for the fixture: four state sections shaped like a
+/// (very small) search state and two stub artifacts — `search`
+/// (consumes + returns all sections, 3 metrics) and `eval` (consumes
+/// params + theta, metrics only). The `search` weight leaves are
+/// 64x64 so per-step marshalling is measurable.
+const MANIFEST_JSON: &str = r#"{
+  "pw_set": [0, 2, 4, 8],
+  "px_set": [2, 4, 8],
+  "models": {
+    "stubnet": {
+      "graph": "graph_stubnet.json",
+      "batch": 8,
+      "in_shape": [4, 4, 1],
+      "num_classes": 4,
+      "sections": {
+        "params": [
+          {"name": "params['stem']['w']", "shape": [64, 64], "dtype": "f32"},
+          {"name": "params['stem']['b']", "shape": [64], "dtype": "f32"}
+        ],
+        "opt_w": [
+          {"name": "opt_w['stem']['w']", "shape": [64, 64], "dtype": "f32"},
+          {"name": "opt_w['stem']['b']", "shape": [64], "dtype": "f32"}
+        ],
+        "theta": [
+          {"name": "theta['gamma'][0]", "shape": [16, 4], "dtype": "f32"},
+          {"name": "theta['delta']", "shape": [2, 3], "dtype": "f32"}
+        ],
+        "opt_th": [
+          {"name": "opt_th['gamma'][0]", "shape": [16, 4], "dtype": "f32"},
+          {"name": "opt_th['delta']", "shape": [2, 3], "dtype": "f32"}
+        ]
+      },
+      "artifacts": {
+        "search": {
+          "file": "stub_search.hlo.txt",
+          "state_sections": ["params", "opt_w", "theta", "opt_th"],
+          "extra_inputs": [
+            {"name": "x", "shape": [8, 16], "dtype": "f32"},
+            {"name": "y", "shape": [8], "dtype": "i32"},
+            {"name": "lr", "shape": [], "dtype": "f32"},
+            {"name": "tau", "shape": [], "dtype": "f32"},
+            {"name": "pw_mask", "shape": [4], "dtype": "f32"},
+            {"name": "px_mask", "shape": [3], "dtype": "f32"}
+          ],
+          "outputs": ["params", "opt_w", "theta", "opt_th"],
+          "metrics": ["loss", "acc", "cost"]
+        },
+        "eval": {
+          "file": "stub_eval.hlo.txt",
+          "state_sections": ["params", "theta"],
+          "extra_inputs": [
+            {"name": "x", "shape": [8, 16], "dtype": "f32"},
+            {"name": "y", "shape": [8], "dtype": "i32"}
+          ],
+          "outputs": [],
+          "metrics": ["loss", "acc"]
+        }
+      }
+    }
+  }
+}
+"#;
+
+/// Write the fixture (manifest + stub artifacts) into `dir` and load
+/// its `Manifest`.
+pub fn write_stub_fixture(dir: &Path) -> Result<Manifest> {
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join("manifest.json"), MANIFEST_JSON)?;
+    // The search program perturbs every f32 state leaf each step so
+    // dirty-tracking bugs change the trajectory; metrics mix *all*
+    // inputs so argument-ordering bugs change the metrics.
+    std::fs::write(
+        dir.join("stub_search.hlo.txt"),
+        "// STUB: affine scale=0.999 bias=0.0005 state=8 metrics=3\n",
+    )?;
+    std::fs::write(
+        dir.join("stub_eval.hlo.txt"),
+        "// STUB: affine scale=1.0 bias=0.0 state=0 metrics=2\n",
+    )?;
+    Manifest::load(dir)
+}
+
+fn fill(seed: usize, n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|k| ((seed + k * 13) % 997) as f32 / 997.0 - 0.5)
+        .collect()
+}
+
+/// Deterministic host state matching the fixture manifest's shapes.
+pub fn stub_train_state(mm: &ModelManifest) -> TrainState {
+    let mut st = TrainState::default();
+    for (sec, leaves) in &mm.sections {
+        let tensors = leaves
+            .iter()
+            .map(|l| {
+                let seed: usize = l.name.bytes().map(|b| b as usize).sum();
+                Tensor::f32(l.shape.clone(), fill(seed, l.elem_count().max(1)))
+            })
+            .collect();
+        st.sections.insert(sec.clone(), tensors);
+    }
+    st
+}
+
+/// Deterministic extra inputs for the fixture's `search` artifact, in
+/// manifest order: x, y, lr, tau, pw_mask, px_mask. `step` varies the
+/// batch so consecutive steps see different data.
+pub fn stub_search_extras(step: usize) -> Vec<Tensor> {
+    let x = Tensor::f32(vec![8, 16], fill(step * 101 + 7, 8 * 16));
+    let y = Tensor::i32(vec![8], (0..8).map(|i| ((i + step) % 4) as i32).collect());
+    vec![
+        x,
+        y,
+        Tensor::scalar_f32(1e-3),
+        Tensor::scalar_f32(1.0),
+        Tensor::f32(vec![4], vec![1.0; 4]),
+        Tensor::f32(vec![3], vec![0.0, 0.0, 1.0]),
+    ]
+}

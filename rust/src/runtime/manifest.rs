@@ -24,6 +24,16 @@ impl DType {
     }
 }
 
+/// Interned handle to one state-section leaf: `(section, index)`
+/// resolved once from a manifest name, replacing the per-call
+/// `format!("theta['gamma'][{g}]")` + linear name scan the hot-path
+/// host touchpoints used to pay on every step.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LeafId {
+    pub section: String,
+    pub index: usize,
+}
+
 /// One tensor in an artifact's signature.
 #[derive(Debug, Clone)]
 pub struct LeafDesc {
@@ -121,6 +131,18 @@ impl ModelManifest {
             .get(section)?
             .iter()
             .position(|l| l.name == name)
+    }
+
+    /// Resolve a `(section, name)` pair into an interned [`LeafId`].
+    /// Do this once per pipeline, not per step.
+    pub fn leaf_id(&self, section: &str, name: &str) -> Result<LeafId> {
+        let index = self
+            .leaf_index(section, name)
+            .ok_or_else(|| Error::manifest(format!("no leaf '{name}' in '{section}'")))?;
+        Ok(LeafId {
+            section: section.to_string(),
+            index,
+        })
     }
 
     /// Indices of all leaves in `section` whose name contains `pat`.

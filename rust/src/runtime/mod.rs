@@ -1,13 +1,19 @@
 //! PJRT runtime: artifact loading, manifest-driven state management,
-//! literal conversion. `PjRtClient::cpu()` -> `HloModuleProto::
-//! from_text_file` -> `compile` -> `execute` (adapted from
-//! /opt/xla-example/load_hlo).
+//! literal conversion, and the device-resident state engine.
+//! `PjRtClient::cpu()` -> `HloModuleProto::from_text_file` ->
+//! `compile` -> `execute` (adapted from /opt/xla-example/load_hlo).
+//!
+//! See `README.md` in this directory for the buffer-residency /
+//! dirty-sync architecture.
 
 pub mod client;
+pub mod device;
+pub mod fixture;
 pub mod literal;
 pub mod manifest;
 pub mod state;
 
 pub use client::{Engine, Executable};
-pub use manifest::{ArtifactDesc, DType, LeafDesc, Manifest, ModelManifest};
-pub use state::{Metrics, StepFn, TrainState};
+pub use device::{DeviceState, StateSnapshot, TransferStats};
+pub use manifest::{ArtifactDesc, DType, LeafDesc, LeafId, Manifest, ModelManifest};
+pub use state::{Metrics, StepArg, StepFn, TrainState};

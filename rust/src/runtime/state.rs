@@ -12,8 +12,9 @@ use std::sync::Arc;
 
 use crate::error::{Error, Result};
 use crate::runtime::client::{Engine, Executable};
+use crate::runtime::device::DeviceState;
 use crate::runtime::literal::{literal_to_tensor, tensor_to_literal};
-use crate::runtime::manifest::{ArtifactDesc, Manifest, ModelManifest};
+use crate::runtime::manifest::{ArtifactDesc, LeafId, Manifest, ModelManifest};
 use crate::util::tensor::Tensor;
 
 /// Host-side state sections.
@@ -34,21 +35,8 @@ impl TrainState {
             tensors.push(literal_to_tensor(lit)?);
         }
         let mut st = TrainState::default();
-        let mut off = 0;
-        for sec in &desc.outputs {
-            let n = mm.section(sec)?.len();
-            if off + n > tensors.len() {
-                return Err(Error::manifest("init returned too few tensors"));
-            }
-            st.sections
-                .insert(sec.clone(), tensors[off..off + n].to_vec());
-            off += n;
-        }
-        if off != tensors.len() {
-            return Err(Error::manifest(format!(
-                "init returned {} tensors, manifest expects {off}",
-                tensors.len()
-            )));
+        for (sec, ts) in split_init_outputs(desc, mm, tensors)? {
+            st.sections.insert(sec, ts);
         }
         Ok(st)
     }
@@ -86,6 +74,30 @@ impl TrainState {
         Ok(&mut self.section_mut(section)?[idx])
     }
 
+    /// Tensor by interned [`LeafId`] (no string formatting, no linear
+    /// leaf-name scan — resolve once with `ModelManifest::leaf_id`).
+    pub fn leaf_at(&self, id: &LeafId) -> Result<&Tensor> {
+        self.section(&id.section)?
+            .get(id.index)
+            .ok_or_else(|| {
+                Error::manifest(format!(
+                    "leaf index {} out of range in '{}'",
+                    id.index, id.section
+                ))
+            })
+    }
+
+    pub fn leaf_at_mut(&mut self, id: &LeafId) -> Result<&mut Tensor> {
+        self.section_mut(&id.section)?
+            .get_mut(id.index)
+            .ok_or_else(|| {
+                Error::manifest(format!(
+                    "leaf index {} out of range in '{}'",
+                    id.index, id.section
+                ))
+            })
+    }
+
     /// Total f32 element count (for checkpoints / diagnostics).
     pub fn total_elems(&self) -> usize {
         self.sections
@@ -94,6 +106,35 @@ impl TrainState {
             .map(|t| t.len())
             .sum()
     }
+}
+
+/// Split an init artifact's flat outputs into per-section chunks in
+/// manifest order — the one unpack used by both the host
+/// (`TrainState::init`) and device (`DeviceState::init`) paths, so
+/// the init-output convention cannot drift between them.
+pub(crate) fn split_init_outputs<T>(
+    desc: &ArtifactDesc,
+    mm: &ModelManifest,
+    outs: Vec<T>,
+) -> Result<Vec<(String, Vec<T>)>> {
+    let total = outs.len();
+    let mut iter = outs.into_iter();
+    let mut off = 0;
+    let mut sections = Vec::with_capacity(desc.outputs.len());
+    for sec in &desc.outputs {
+        let n = mm.section(sec)?.len();
+        if off + n > total {
+            return Err(Error::manifest("init returned too few tensors"));
+        }
+        sections.push((sec.clone(), iter.by_ref().take(n).collect()));
+        off += n;
+    }
+    if off != total {
+        return Err(Error::manifest(format!(
+            "init returned {total} tensors, manifest expects {off}"
+        )));
+    }
+    Ok(sections)
 }
 
 /// Metrics returned by a step (named per the artifact descriptor).
@@ -127,6 +168,15 @@ impl StepFn {
         let mut section_lens = BTreeMap::new();
         for (name, leaves) in &mm.sections {
             section_lens.insert(name.clone(), leaves.len());
+        }
+        // validate the I/O contract up front so the step hot paths can
+        // index section_lens without a per-section miss branch
+        for sec in desc.state_sections.iter().chain(&desc.outputs) {
+            if !section_lens.contains_key(sec) {
+                return Err(Error::manifest(format!(
+                    "artifact '{artifact}' references unknown section '{sec}'"
+                )));
+            }
         }
         Ok(StepFn {
             desc,
@@ -194,4 +244,103 @@ impl StepFn {
         }
         Ok(metrics)
     }
+
+    /// Execute one step with the state resident on device: the input
+    /// sections are the previous step's output buffers (uploaded only
+    /// if a host touchpoint dirtied them), the outputs replace them
+    /// without visiting the host, and only `extra` host args plus the
+    /// scalar metrics cross the boundary.
+    pub fn step_device(
+        &self,
+        eng: &Engine,
+        state: &mut DeviceState,
+        extra: &[StepArg<'_>],
+    ) -> Result<Metrics> {
+        if extra.len() != self.desc.extra_inputs.len() {
+            return Err(Error::msg(format!(
+                "step '{}' wants {} extra inputs, got {}",
+                self.exe.name,
+                self.desc.extra_inputs.len(),
+                extra.len()
+            )));
+        }
+        state.sync_to_device(eng, &self.desc.state_sections)?;
+        let mut inputs: Vec<Arc<xla::PjRtBuffer>> = Vec::new();
+        for sec in &self.desc.state_sections {
+            inputs.extend(state.device_bufs(sec)?.iter().cloned());
+        }
+        for (a, d) in extra.iter().zip(&self.desc.extra_inputs) {
+            match a {
+                StepArg::Host(t) => {
+                    if t.shape != d.shape {
+                        return Err(Error::Shape(format!(
+                            "extra input '{}': expected {:?}, got {:?}",
+                            d.name, d.shape, t.shape
+                        )));
+                    }
+                    let buf = eng.upload_tensor(t)?;
+                    state.stats.h2d_bytes += (t.len() * 4) as u64;
+                    state.stats.h2d_tensors += 1;
+                    inputs.push(buf);
+                }
+                StepArg::Device(b) => {
+                    // same validation the legacy host path applies to
+                    // every extra arg — a swapped mask pair must fail
+                    // loudly, not corrupt the run
+                    let dims: Vec<usize> = b
+                        .array_shape()?
+                        .dims()
+                        .iter()
+                        .map(|&v| v as usize)
+                        .collect();
+                    if dims != d.shape {
+                        return Err(Error::Shape(format!(
+                            "extra input '{}': expected {:?}, got device buffer {:?}",
+                            d.name, d.shape, dims
+                        )));
+                    }
+                    inputs.push(Arc::clone(b));
+                }
+            }
+        }
+        let refs: Vec<&xla::PjRtBuffer> = inputs.iter().map(|b| b.as_ref()).collect();
+        let outs = self.exe.run_buffers(&refs)?;
+        let n_state: usize = self
+            .desc
+            .outputs
+            .iter()
+            .map(|s| self.section_lens.get(s).copied().unwrap_or(0))
+            .sum();
+        if outs.len() != n_state + self.desc.metrics.len() {
+            return Err(Error::manifest(format!(
+                "step '{}' returned {} device buffers, expected {}",
+                self.exe.name,
+                outs.len(),
+                n_state + self.desc.metrics.len()
+            )));
+        }
+        let mut outs = outs.into_iter();
+        for sec in &self.desc.outputs {
+            let n = self.section_lens[sec];
+            let bufs: Vec<Arc<xla::PjRtBuffer>> =
+                outs.by_ref().take(n).map(Arc::new).collect();
+            state.set_device_section(sec, bufs)?;
+        }
+        let mut metrics = Metrics::default();
+        for (name, buf) in self.desc.metrics.iter().zip(outs) {
+            let v = buf.to_literal_sync()?.to_vec::<f32>()?[0];
+            state.stats.d2h_bytes += 4;
+            state.stats.d2h_tensors += 1;
+            metrics.values.insert(name.clone(), v);
+        }
+        Ok(metrics)
+    }
+}
+
+/// One extra (non-state) step input: a host tensor uploaded for this
+/// call, or an already-resident device buffer (precision masks and
+/// other per-run constants are uploaded once and reused).
+pub enum StepArg<'a> {
+    Host(&'a Tensor),
+    Device(&'a Arc<xla::PjRtBuffer>),
 }

@@ -1,0 +1,257 @@
+//! Host/device state equivalence tests for the device-resident
+//! runtime. These run against the stub fixture (`runtime::fixture`),
+//! whose artifacts are deterministic `// STUB:` programs the host
+//! backend executes — so the whole marshalling + dirty-sync layer is
+//! exercised for real without AOT artifacts or native XLA.
+
+use std::path::PathBuf;
+
+use mixprec::coordinator::checkpoint;
+use mixprec::runtime::{
+    fixture, DeviceState, Engine, Manifest, StepArg, StepFn, TrainState,
+};
+
+struct Fx {
+    dir: PathBuf,
+    man: Manifest,
+    eng: Engine,
+}
+
+impl Fx {
+    fn new(tag: &str) -> Fx {
+        let dir = std::env::temp_dir().join(format!(
+            "mixprec_devstate_{tag}_{}",
+            std::process::id()
+        ));
+        let man = fixture::write_stub_fixture(&dir).expect("fixture");
+        let eng = Engine::cpu().expect("engine");
+        Fx { dir, man, eng }
+    }
+
+    fn search(&self) -> StepFn {
+        let mm = self.man.model(fixture::STUB_MODEL).unwrap();
+        StepFn::bind(&self.eng, &self.man, mm, "search").expect("bind search")
+    }
+
+    fn init_state(&self) -> TrainState {
+        fixture::stub_train_state(self.man.model(fixture::STUB_MODEL).unwrap())
+    }
+
+    /// One step through the seed's full-literal-marshal path.
+    fn step_legacy(&self, search: &StepFn, st: &mut TrainState, step: usize) -> Vec<f32> {
+        let ex = fixture::stub_search_extras(step);
+        let m = search.step(st, &ex).expect("legacy step");
+        m.values.values().cloned().collect()
+    }
+
+    /// One step through the device-resident path (all-host extras).
+    fn step_dev(&self, search: &StepFn, st: &mut DeviceState, step: usize) -> Vec<f32> {
+        let ex = fixture::stub_search_extras(step);
+        let args: Vec<StepArg> = ex.iter().map(StepArg::Host).collect();
+        let m = search
+            .step_device(&self.eng, st, &args)
+            .expect("device step");
+        m.values.values().cloned().collect()
+    }
+}
+
+impl Drop for Fx {
+    fn drop(&mut self) {
+        std::fs::remove_dir_all(&self.dir).ok();
+    }
+}
+
+/// N search steps: device-resident state must stay bitwise identical
+/// to both the seed full-marshal path (`StepFn::step`) and the forced
+/// per-step-roundtrip compat mode, metrics included.
+#[test]
+fn device_path_matches_legacy_full_marshal_bitwise() {
+    let fx = Fx::new("equiv");
+    let search = fx.search();
+    let mut legacy = fx.init_state();
+    let mut dev = DeviceState::from_host(legacy.clone());
+    let mut compat = DeviceState::from_host(legacy.clone());
+    // device leg keeps the masks resident to cover StepArg::Device
+    let ex0 = fixture::stub_search_extras(0);
+    let pw = fx.eng.upload_tensor(&ex0[4]).unwrap();
+    let px = fx.eng.upload_tensor(&ex0[5]).unwrap();
+    for step in 0..7 {
+        let ex = fixture::stub_search_extras(step);
+        let m_legacy = fx.step_legacy(&search, &mut legacy, step);
+        let m_dev = search
+            .step_device(
+                &fx.eng,
+                &mut dev,
+                &[
+                    StepArg::Host(&ex[0]),
+                    StepArg::Host(&ex[1]),
+                    StepArg::Host(&ex[2]),
+                    StepArg::Host(&ex[3]),
+                    StepArg::Device(&pw),
+                    StepArg::Device(&px),
+                ],
+            )
+            .expect("device step")
+            .values
+            .values()
+            .cloned()
+            .collect::<Vec<f32>>();
+        let m_compat = fx.step_dev(&search, &mut compat, step);
+        compat.force_host_roundtrip().unwrap();
+        assert_eq!(m_legacy, m_dev, "metrics diverged at step {step}");
+        assert_eq!(m_legacy, m_compat, "compat metrics diverged at step {step}");
+    }
+    assert_eq!(
+        dev.host_view().unwrap().sections,
+        legacy.sections,
+        "device-resident sections diverged from the legacy path"
+    );
+    assert_eq!(compat.host_view().unwrap().sections, legacy.sections);
+}
+
+/// Checkpoint round-trip through the sync layer: save a mid-training
+/// device state, reload it, continue stepping — identical to never
+/// having left the device, and to the legacy path.
+#[test]
+fn checkpoint_roundtrip_through_sync_layer() {
+    let fx = Fx::new("ckpt");
+    let search = fx.search();
+    let mut legacy = fx.init_state();
+    let mut dev = DeviceState::from_host(legacy.clone());
+    for step in 0..3 {
+        fx.step_legacy(&search, &mut legacy, step);
+        fx.step_dev(&search, &mut dev, step);
+    }
+    let path = fx.dir.join("mid.ckpt");
+    checkpoint::save_device(&mut dev, &path).unwrap();
+    let mut reloaded = checkpoint::load_device(&path).unwrap();
+    for step in 3..5 {
+        fx.step_legacy(&search, &mut legacy, step);
+        fx.step_dev(&search, &mut dev, step);
+        fx.step_dev(&search, &mut reloaded, step);
+    }
+    let dev_host = dev.host_view().unwrap().sections.clone();
+    assert_eq!(dev_host, legacy.sections);
+    assert_eq!(reloaded.host_view().unwrap().sections, dev_host);
+}
+
+/// Host edits through `host_view_mut_partial` must reach the device
+/// before the next step (dirty tracking), without touching the other
+/// sections' residency.
+#[test]
+fn host_edits_are_uploaded_before_next_step() {
+    let fx = Fx::new("dirty");
+    let mm = fx.man.model(fixture::STUB_MODEL).unwrap();
+    let search = fx.search();
+    let mut legacy = fx.init_state();
+    let mut dev = DeviceState::from_host(legacy.clone());
+    for step in 0..2 {
+        fx.step_legacy(&search, &mut legacy, step);
+        fx.step_dev(&search, &mut dev, step);
+    }
+    let gamma = mm.leaf_id("theta", "theta['gamma'][0]").unwrap();
+    for v in legacy.leaf_at_mut(&gamma).unwrap().as_f32_mut() {
+        *v *= 2.0;
+    }
+    let d2h_before = dev.stats.d2h_bytes;
+    {
+        let host = dev.host_view_mut_partial(&["theta"]).unwrap();
+        for v in host.leaf_at_mut(&gamma).unwrap().as_f32_mut() {
+            *v *= 2.0;
+        }
+    }
+    // partial sync downloaded only theta (2 small leaves, 70 floats)
+    assert_eq!(dev.stats.d2h_bytes - d2h_before, 70 * 4);
+    for step in 2..4 {
+        fx.step_legacy(&search, &mut legacy, step);
+        fx.step_dev(&search, &mut dev, step);
+    }
+    assert_eq!(dev.host_view().unwrap().sections, legacy.sections);
+}
+
+/// Snapshots are cheap Arc handles but must restore the exact state.
+#[test]
+fn snapshot_restore_returns_exact_state() {
+    let fx = Fx::new("snap");
+    let search = fx.search();
+    let mut dev = DeviceState::from_host(fx.init_state());
+    for step in 0..2 {
+        fx.step_dev(&search, &mut dev, step);
+    }
+    let snap = dev.snapshot(&fx.eng).unwrap();
+    let saved = dev.to_host().unwrap();
+    for step in 2..5 {
+        fx.step_dev(&search, &mut dev, step);
+    }
+    assert_ne!(dev.host_view().unwrap().sections, saved.sections);
+    dev.restore(&snap);
+    assert_eq!(dev.host_view().unwrap().sections, saved.sections);
+}
+
+/// The point of the tentpole: device residency moves orders of
+/// magnitude fewer bytes per step than the forced full marshal.
+#[test]
+fn device_residency_slashes_transfer_bytes() {
+    let fx = Fx::new("stats");
+    let search = fx.search();
+    let init = fx.init_state();
+    let mut dev = DeviceState::from_host(init.clone());
+    let mut compat = DeviceState::from_host(init);
+    for step in 0..10 {
+        fx.step_dev(&search, &mut dev, step);
+        fx.step_dev(&search, &mut compat, step);
+        compat.force_host_roundtrip().unwrap();
+    }
+    // both paths upload the same extras; the compat path re-marshals
+    // the whole state (~33 KB each way) every step on top of that
+    assert!(
+        dev.stats.h2d_bytes * 5 < compat.stats.h2d_bytes,
+        "device h2d {} vs compat h2d {}",
+        dev.stats.h2d_bytes,
+        compat.stats.h2d_bytes
+    );
+    assert!(
+        dev.stats.d2h_bytes * 5 < compat.stats.d2h_bytes,
+        "device d2h {} vs compat d2h {}",
+        dev.stats.d2h_bytes,
+        compat.stats.d2h_bytes
+    );
+}
+
+/// Device-resident extras get the same shape validation the legacy
+/// host path applied: a swapped mask pair must error, not corrupt.
+#[test]
+fn swapped_device_masks_rejected() {
+    let fx = Fx::new("maskswap");
+    let search = fx.search();
+    let mut dev = DeviceState::from_host(fx.init_state());
+    let ex = fixture::stub_search_extras(0);
+    let pw = fx.eng.upload_tensor(&ex[4]).unwrap();
+    let px = fx.eng.upload_tensor(&ex[5]).unwrap();
+    let r = search.step_device(
+        &fx.eng,
+        &mut dev,
+        &[
+            StepArg::Host(&ex[0]),
+            StepArg::Host(&ex[1]),
+            StepArg::Host(&ex[2]),
+            StepArg::Host(&ex[3]),
+            StepArg::Device(&px), // swapped
+            StepArg::Device(&pw),
+        ],
+    );
+    assert!(r.is_err(), "swapped device masks were accepted");
+}
+
+/// Contract checks: stale device sections must be synced before use;
+/// unknown sections error.
+#[test]
+fn stale_and_missing_sections_error() {
+    let fx = Fx::new("contract");
+    let mut dev = DeviceState::from_host(fx.init_state());
+    assert!(dev.device_bufs("params").is_err(), "stale section served");
+    dev.sync_to_device(&fx.eng, &["params".to_string()]).unwrap();
+    assert_eq!(dev.device_bufs("params").unwrap().len(), 2);
+    assert!(dev.device_bufs("nope").is_err());
+    assert!(dev.host_view_partial(&["params"]).is_ok());
+}

@@ -3,7 +3,7 @@
 //! Eq. 12 rescaling — the L3 <-> L2 contract. Skipped (pass
 //! trivially) when `make artifacts` has not been run.
 
-use mixprec::assignment::{self, PrecisionMasks};
+use mixprec::assignment::{self, PrecisionMasks, ResolvedLeaves};
 use mixprec::coordinator::{Context, PipelineConfig, Sampling};
 use mixprec::data::Split;
 use mixprec::runtime::{StepFn, TrainState};
@@ -122,7 +122,8 @@ fn fixed_mask_pins_assignment_and_cost() {
             .unwrap();
         assert!(m.get("loss").is_finite());
     }
-    let asg = assignment::discretize(&st, mm, graph, &masks).unwrap();
+    let leaves = ResolvedLeaves::new(mm, graph).unwrap();
+    let asg = assignment::discretize(&st, &leaves, graph, &masks).unwrap();
     for group in &asg.gamma_bits {
         assert!(group.iter().all(|&b| b == 4), "{group:?}");
     }
@@ -148,13 +149,14 @@ fn mixprec_mask_never_prunes_and_final_layer_protected() {
             .step(&mut st, &search_extras(data, mm.batch, &masks, 8.0, 5e-2, t as f32))
             .unwrap();
     }
-    let asg = assignment::discretize(&st, mm, graph, &masks).unwrap();
+    let leaves = ResolvedLeaves::new(mm, graph).unwrap();
+    let asg = assignment::discretize(&st, &leaves, graph, &masks).unwrap();
     for (g, group) in asg.gamma_bits.iter().enumerate() {
         assert!(group.iter().all(|&b| b > 0), "group {g} pruned: {group:?}");
     }
     // joint masks + high strength CAN prune, but never the fc group
     let joint = PrecisionMasks::joint();
-    let asg2 = assignment::discretize(&st, mm, graph, &joint).unwrap();
+    let asg2 = assignment::discretize(&st, &leaves, graph, &joint).unwrap();
     let fc = graph.layer("fc").unwrap();
     assert!(asg2.gamma_bits[fc.gamma_group].iter().all(|&b| b > 0));
 }
@@ -204,7 +206,8 @@ fn rescale_weights_divides_by_keep_probability() {
         .unwrap()
         .as_f32()
         .to_vec();
-    assignment::rescale_weights(&mut st, mm, graph, &masks, 1.0).unwrap();
+    let leaves = ResolvedLeaves::new(mm, graph).unwrap();
+    assignment::rescale_weights(&mut st, &leaves, graph, &masks, 1.0).unwrap();
     let after = st
         .leaf(mm, "params", "params['stem']['w']")
         .unwrap()

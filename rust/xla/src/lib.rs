@@ -1,0 +1,623 @@
+//! PJRT binding surface for the mixprec coordinator.
+//!
+//! The offline container has no crate registry and no native
+//! `xla_extension` runtime, so this crate provides the exact API the
+//! coordinator was written against (the subset of the xla-rs bindings
+//! used by `/opt/xla-example/load_hlo`) backed by a pure-Rust *host
+//! backend*:
+//!
+//! * `Literal` is a host array (shape + flat f32/i32 data, row-major),
+//!   `PjRtBuffer` is a "device" buffer — an `Arc<Literal>` here, a real
+//!   device allocation under native PJRT. Uploads and downloads copy,
+//!   so host/device transfer costs remain observable and the
+//!   device-resident runtime's marshalling wins are measurable even
+//!   without native XLA.
+//! * Real HLO cannot be interpreted here: `execute` on an artifact
+//!   lowered by `aot.py` returns `Error::Unsupported`. Tests and
+//!   benches that need end-to-end execution use *stub programs* — HLO
+//!   text files whose first line carries a `// STUB: affine ...`
+//!   directive (see [`StubProgram`]) that this backend evaluates
+//!   deterministically.
+//! * Executions return **untupled** outputs (one `PjRtBuffer` per
+//!   result leaf), matching PJRT's `untuple_result` mode. The legacy
+//!   single-tuple-buffer shape is still handled by callers for
+//!   compatibility with native builds that compile without it.
+
+use std::fmt;
+use std::path::Path;
+use std::sync::Arc;
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[derive(Debug)]
+pub enum Error {
+    Msg(String),
+    Unsupported(String),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Msg(m) => write!(f, "{m}"),
+            Error::Unsupported(m) => write!(f, "unsupported: {m}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+fn err(msg: impl Into<String>) -> Error {
+    Error::Msg(msg.into())
+}
+
+// ---------------------------------------------------------------------------
+// element types / shapes
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    U8,
+    U32,
+    F16,
+    F32,
+    F64,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn new(ty: ElementType, dims: Vec<i64>) -> Self {
+        ArrayShape { ty, dims }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().map(|&d| d as usize).product()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// literals
+// ---------------------------------------------------------------------------
+
+/// Native scalar types a `Literal` can hold.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn into_data(v: Vec<Self>) -> Data;
+    fn from_data(d: &Data) -> Option<&[Self]>;
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+
+    fn ty(&self) -> ElementType {
+        match self {
+            Data::F32(_) => ElementType::F32,
+            Data::I32(_) => ElementType::S32,
+        }
+    }
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+
+    fn into_data(v: Vec<Self>) -> Data {
+        Data::F32(v)
+    }
+
+    fn from_data(d: &Data) -> Option<&[Self]> {
+        match d {
+            Data::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+
+    fn into_data(v: Vec<Self>) -> Data {
+        Data::I32(v)
+    }
+
+    fn from_data(d: &Data) -> Option<&[Self]> {
+        match d {
+            Data::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A host-side value: a dense row-major array or a tuple of literals.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Literal {
+    Array { dims: Vec<i64>, data: Data },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal::Array {
+            dims: Vec::new(),
+            data: T::into_data(vec![v]),
+        }
+    }
+
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal::Array {
+            dims: vec![v.len() as i64],
+            data: T::into_data(v.to_vec()),
+        }
+    }
+
+    /// Tuple literal.
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal::Tuple(elems)
+    }
+
+    /// Reshape to `dims` (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        match self {
+            Literal::Array { data, .. } => {
+                let n: i64 = dims.iter().product();
+                if n as usize != data.len() {
+                    return Err(err(format!(
+                        "reshape: {} elements into dims {dims:?}",
+                        data.len()
+                    )));
+                }
+                Ok(Literal::Array {
+                    dims: dims.to_vec(),
+                    data: data.clone(),
+                })
+            }
+            Literal::Tuple(_) => Err(err("cannot reshape a tuple literal")),
+        }
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self {
+            Literal::Array { dims, data } => Ok(ArrayShape::new(data.ty(), dims.clone())),
+            Literal::Tuple(_) => Err(err("tuple literal has no array shape")),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match self {
+            Literal::Array { data, .. } => T::from_data(data)
+                .map(|s| s.to_vec())
+                .ok_or_else(|| err(format!("literal is {:?}, not {:?}", data.ty(), T::TY))),
+            Literal::Tuple(_) => Err(err("cannot to_vec a tuple literal")),
+        }
+    }
+
+    /// Decompose into tuple elements. A non-tuple literal decomposes
+    /// into itself (single-element), which keeps the legacy
+    /// "single tuple output buffer" unpack path working for both the
+    /// tupled and untupled executable output conventions.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(elems) => Ok(elems),
+            lit @ Literal::Array { .. } => Ok(vec![lit]),
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match self {
+            Literal::Array { data, .. } => data.len(),
+            Literal::Tuple(elems) => elems.iter().map(|l| l.element_count()).sum(),
+        }
+    }
+
+    /// Payload bytes (f32/i32 are both 4 bytes wide).
+    pub fn size_bytes(&self) -> usize {
+        self.element_count() * 4
+    }
+
+    /// Mean of all elements as f64 (stub-program metric helper).
+    fn mean(&self) -> f64 {
+        match self {
+            Literal::Array { data, .. } => {
+                let n = data.len();
+                if n == 0 {
+                    return 0.0;
+                }
+                let sum: f64 = match data {
+                    Data::F32(v) => v.iter().map(|&x| x as f64).sum(),
+                    Data::I32(v) => v.iter().map(|&x| x as f64).sum(),
+                };
+                sum / n as f64
+            }
+            Literal::Tuple(_) => 0.0,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// stub programs
+// ---------------------------------------------------------------------------
+
+/// A deterministic program the host backend can actually run, parsed
+/// from the first `// STUB:` line of an HLO text file:
+///
+/// ```text
+/// // STUB: affine scale=0.995 bias=0.001 state=8 metrics=3
+/// ```
+///
+/// Execution takes the first `state` arguments as the new state
+/// (`x * scale + bias` elementwise for f32, identity for i32) and
+/// appends `metrics` scalar f32 outputs, each `(j+1) * S` where
+/// `S = sum_i (i+1) * mean(arg_i)` over *all* arguments — so any
+/// permutation or omission of inputs changes the metrics and is caught
+/// by the equivalence tests.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StubProgram {
+    pub scale: f32,
+    pub bias: f32,
+    pub n_state: usize,
+    pub n_metrics: usize,
+}
+
+impl StubProgram {
+    fn parse(line: &str) -> Option<StubProgram> {
+        let rest = line.trim().strip_prefix("//")?.trim().strip_prefix("STUB:")?;
+        let mut words = rest.split_whitespace();
+        if words.next()? != "affine" {
+            return None;
+        }
+        let mut prog = StubProgram {
+            scale: 1.0,
+            bias: 0.0,
+            n_state: 0,
+            n_metrics: 0,
+        };
+        for w in words {
+            let (key, val) = w.split_once('=')?;
+            match key {
+                "scale" => prog.scale = val.parse().ok()?,
+                "bias" => prog.bias = val.parse().ok()?,
+                "state" => prog.n_state = val.parse().ok()?,
+                "metrics" => prog.n_metrics = val.parse().ok()?,
+                _ => return None,
+            }
+        }
+        Some(prog)
+    }
+
+    fn run(&self, args: &[Arc<Literal>]) -> Result<Vec<PjRtBuffer>> {
+        if args.len() < self.n_state {
+            return Err(err(format!(
+                "stub program wants >= {} args, got {}",
+                self.n_state,
+                args.len()
+            )));
+        }
+        let mut outs = Vec::with_capacity(self.n_state + self.n_metrics);
+        for arg in args.iter().take(self.n_state) {
+            let lit = match arg.as_ref() {
+                Literal::Array { dims, data } => {
+                    let data = match data {
+                        Data::F32(v) => Data::F32(
+                            v.iter().map(|&x| x * self.scale + self.bias).collect(),
+                        ),
+                        Data::I32(v) => Data::I32(v.clone()),
+                    };
+                    Literal::Array {
+                        dims: dims.clone(),
+                        data,
+                    }
+                }
+                Literal::Tuple(_) => return Err(err("stub program takes array args only")),
+            };
+            outs.push(PjRtBuffer::from_literal(lit));
+        }
+        let s: f64 = args
+            .iter()
+            .enumerate()
+            .map(|(i, a)| (i + 1) as f64 * a.mean())
+            .sum();
+        for j in 0..self.n_metrics {
+            let v = ((j + 1) as f64 * s) as f32;
+            outs.push(PjRtBuffer::from_literal(Literal::scalar(v)));
+        }
+        Ok(outs)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HLO artifacts
+// ---------------------------------------------------------------------------
+
+/// Parsed HLO module. The host backend keeps only the optional stub
+/// directive; the native backend parses the full HLO text instead.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    stub: Option<StubProgram>,
+    name: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)?;
+        let stub = text.lines().next().and_then(StubProgram::parse);
+        Ok(HloModuleProto {
+            stub,
+            name: path.to_string_lossy().to_string(),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    stub: Option<StubProgram>,
+    name: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            stub: proto.stub,
+            name: proto.name.clone(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// client / buffers / executables
+// ---------------------------------------------------------------------------
+
+pub struct PjRtClient {
+    platform: &'static str,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Ok(PjRtClient {
+            platform: "host-stub",
+        })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.platform.to_string()
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable {
+            stub: comp.stub,
+            name: comp.name.clone(),
+        })
+    }
+
+    /// Copy a host literal into a "device" buffer.
+    pub fn buffer_from_host_literal(&self, lit: &Literal) -> Result<PjRtBuffer> {
+        Ok(PjRtBuffer::from_literal(lit.clone()))
+    }
+}
+
+/// A device-resident buffer. Cheap to share via `Arc`; downloading via
+/// [`PjRtBuffer::to_literal_sync`] copies.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    lit: Arc<Literal>,
+}
+
+impl PjRtBuffer {
+    fn from_literal(lit: Literal) -> Self {
+        PjRtBuffer { lit: Arc::new(lit) }
+    }
+
+    /// Download to host (copies the payload).
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok((*self.lit).clone())
+    }
+
+    /// Split a tuple buffer into per-leaf buffers **without leaving
+    /// the device**; `None` for non-tuple buffers. Legacy
+    /// (`return_tuple=True`) executables produce a single tuple
+    /// output, which the device-resident runtime disassembles through
+    /// this. Under a native PJRT backend this maps to
+    /// `untuple_result` / single-device-buffer disassembly.
+    pub fn untuple(&self) -> Option<Vec<PjRtBuffer>> {
+        match self.lit.as_ref() {
+            Literal::Tuple(elems) => Some(
+                elems
+                    .iter()
+                    .cloned()
+                    .map(PjRtBuffer::from_literal)
+                    .collect(),
+            ),
+            Literal::Array { .. } => None,
+        }
+    }
+
+    /// Shape of the on-device value (array buffers only; maps to
+    /// `on_device_shape` under a native backend).
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        self.lit.array_shape()
+    }
+
+    pub fn on_device_size_bytes(&self) -> usize {
+        self.lit.size_bytes()
+    }
+}
+
+/// Argument kinds `execute` accepts: host literals (uploaded per call)
+/// or device buffers (zero-copy under this backend).
+pub trait BufferArgument {
+    fn as_literal_arc(&self) -> Arc<Literal>;
+}
+
+impl BufferArgument for Literal {
+    fn as_literal_arc(&self) -> Arc<Literal> {
+        Arc::new(self.clone())
+    }
+}
+
+impl BufferArgument for PjRtBuffer {
+    fn as_literal_arc(&self) -> Arc<Literal> {
+        self.lit.clone()
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    stub: Option<StubProgram>,
+    name: String,
+}
+
+impl PjRtLoadedExecutable {
+    fn run(&self, args: Vec<Arc<Literal>>) -> Result<Vec<Vec<PjRtBuffer>>> {
+        match self.stub {
+            Some(prog) => Ok(vec![prog.run(&args)?]),
+            None => Err(Error::Unsupported(format!(
+                "host backend cannot execute real HLO ('{}'); link the native \
+                 xla_extension backend or use a `// STUB:` program",
+                self.name
+            ))),
+        }
+    }
+
+    /// Execute with owned arguments (device copies made per call for
+    /// host literals).
+    pub fn execute<L: BufferArgument>(&self, args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        self.run(args.iter().map(|a| a.as_literal_arc()).collect())
+    }
+
+    /// Execute with borrowed arguments (device buffers stay resident;
+    /// nothing is copied under this backend).
+    pub fn execute_b<L: BufferArgument>(&self, args: &[&L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        self.run(args.iter().map(|a| a.as_literal_arc()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        let s = l.array_shape().unwrap();
+        assert_eq!(s.ty(), ElementType::F32);
+        assert_eq!(s.dims(), &[2, 2]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_and_tuple() {
+        let s = Literal::scalar(7i32);
+        assert!(s.array_shape().unwrap().dims().is_empty());
+        let t = Literal::tuple(vec![s.clone(), Literal::scalar(1f32)]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        // non-tuple decomposes into itself
+        assert_eq!(s.clone().to_tuple().unwrap(), vec![s]);
+    }
+
+    #[test]
+    fn stub_directive_parses() {
+        let p = StubProgram::parse("// STUB: affine scale=0.5 bias=0.25 state=2 metrics=1")
+            .unwrap();
+        assert_eq!(p.scale, 0.5);
+        assert_eq!(p.bias, 0.25);
+        assert_eq!(p.n_state, 2);
+        assert_eq!(p.n_metrics, 1);
+        assert!(StubProgram::parse("HloModule jit_step").is_none());
+    }
+
+    #[test]
+    fn stub_program_executes() {
+        let prog = StubProgram {
+            scale: 2.0,
+            bias: 1.0,
+            n_state: 1,
+            n_metrics: 2,
+        };
+        let args = vec![
+            Arc::new(Literal::vec1(&[1f32, 3.0])),
+            Arc::new(Literal::scalar(10f32)),
+        ];
+        let outs = prog.run(&args).unwrap();
+        assert_eq!(outs.len(), 3);
+        let st = outs[0].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+        assert_eq!(st, vec![3.0, 7.0]);
+        // S = 1*mean([1,3]) + 2*mean([10]) = 2 + 20 = 22
+        let m1 = outs[1].to_literal_sync().unwrap().to_vec::<f32>().unwrap()[0];
+        let m2 = outs[2].to_literal_sync().unwrap().to_vec::<f32>().unwrap()[0];
+        assert_eq!(m1, 22.0);
+        assert_eq!(m2, 44.0);
+    }
+
+    #[test]
+    fn untuple_splits_on_device() {
+        let client = PjRtClient::cpu().unwrap();
+        let t = Literal::tuple(vec![Literal::scalar(1f32), Literal::vec1(&[2f32, 3.0])]);
+        let buf = client.buffer_from_host_literal(&t).unwrap();
+        let parts = buf.untuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(
+            parts[1].to_literal_sync().unwrap().to_vec::<f32>().unwrap(),
+            vec![2.0, 3.0]
+        );
+        let arr = client.buffer_from_host_literal(&Literal::scalar(1f32)).unwrap();
+        assert!(arr.untuple().is_none());
+    }
+
+    #[test]
+    fn real_hlo_is_unsupported() {
+        let dir = std::env::temp_dir().join("xla_stub_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("real.hlo.txt");
+        std::fs::write(&path, "HloModule jit_step\nENTRY main { ... }\n").unwrap();
+        let proto = HloModuleProto::from_text_file(&path).unwrap();
+        let client = PjRtClient::cpu().unwrap();
+        let exe = client.compile(&XlaComputation::from_proto(&proto)).unwrap();
+        assert!(exe.execute::<Literal>(&[]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
