@@ -10,7 +10,7 @@
 //! ```
 
 use mixprec::baselines::{fixed_baselines, Method};
-use mixprec::coordinator::{sweep_lambdas, Context, PipelineConfig};
+use mixprec::coordinator::{sweep_lambdas, Context, PipelineConfig, SweepOptions};
 use mixprec::report;
 
 fn main() -> mixprec::Result<()> {
@@ -45,7 +45,20 @@ fn main() -> mixprec::Result<()> {
     } else {
         vec![0.1, 1.0, 6.0, 20.0]
     };
-    let sw = sweep_lambdas(&runner, &Method::Joint.configure(&cfg), &lambdas, "size", 1)?;
+    // default SweepOptions: one shared warmup phase forked per lambda
+    let sw = sweep_lambdas(
+        &runner,
+        &Method::Joint.configure(&cfg),
+        &lambdas,
+        "size",
+        &SweepOptions::default(),
+    )?;
+    if sw.warmup_steps_saved > 0 {
+        println!(
+            "shared warmup saved {} steps vs per-lambda warmup",
+            sw.warmup_steps_saved
+        );
+    }
     let baselines = fixed_baselines(&runner, &cfg, &[2, 8])?;
 
     let mut rows: Vec<(String, &_)> = sw

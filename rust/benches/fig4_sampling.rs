@@ -41,7 +41,7 @@ fn main() {
             for sampling in [Sampling::Softmax, Sampling::Argmax, Sampling::Gumbel] {
                 let mut cfg = Method::Joint.configure(&base);
                 cfg.sampling = sampling;
-                let sw = sweep_lambdas(&runner, &cfg, &lambdas, "size", scale.workers)?;
+                let sw = sweep_lambdas(&runner, &cfg, &lambdas, "size", &scale.sweep_opts())?;
                 for r in &sw.runs {
                     table.row(vec![
                         model.clone(),

@@ -26,7 +26,7 @@ fn main() {
 
         for m in [Method::Joint, Method::MixPrec, Method::EdMips] {
             let cfg = m.configure(&base);
-            let sw = sweep_lambdas(&runner, &cfg, &lambdas, "size", scale.workers)?;
+            let sw = sweep_lambdas(&runner, &cfg, &lambdas, "size", &scale.sweep_opts())?;
             let mut front = ParetoFront::new();
             for r in &sw.runs {
                 table.row(vec![
@@ -47,7 +47,7 @@ fn main() {
             &lambdas[..lambdas.len().min(2)],
             &lambdas[..lambdas.len().min(2)],
             "size",
-            scale.workers,
+            &scale.sweep_opts(),
         )?;
         let mut front = ParetoFront::new();
         for r in seq.pit_runs.iter().chain(&seq.mixprec_sweep.runs) {

@@ -31,7 +31,7 @@ fn main() {
         for reg in ["mpic", "ne16"] {
             let mut cfg = Method::Joint.configure(&base);
             cfg.reg = reg.to_string();
-            let sw = sweep_lambdas(&runner, &cfg, &lambdas, reg, scale.workers)?;
+            let sw = sweep_lambdas(&runner, &cfg, &lambdas, reg, &scale.sweep_opts())?;
             let mut pts = Vec::new();
             for r in &sw.runs {
                 table.row(vec![

@@ -47,7 +47,7 @@ fn main() {
             &[base.lambda as f64],
             &[base.lambda as f64],
             "size",
-            scale.workers,
+            &scale.sweep_opts(),
         )?;
         if let Some(r) = seq.mixprec_sweep.runs.first() {
             add("PIT+MixPrec(mix stage)", &r.assignment);

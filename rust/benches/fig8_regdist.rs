@@ -30,7 +30,7 @@ fn main() {
         for reg in ["size", "mpic", "ne16"] {
             let mut cfg = Method::Joint.configure(&base);
             cfg.reg = reg.into();
-            let sw = sweep_lambdas(&runner, &cfg, &lambdas, reg, scale.workers)?;
+            let sw = sweep_lambdas(&runner, &cfg, &lambdas, reg, &scale.sweep_opts())?;
             let mut runs = sw.runs.clone();
             runs.sort_by(|a, b| b.cost_of(reg).partial_cmp(&a.cost_of(reg)).unwrap());
             let bands = ["High", "Medium", "Low"];

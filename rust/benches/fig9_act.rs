@@ -31,7 +31,7 @@ fn main() {
             let mut cfg = Method::Joint.configure(&base);
             cfg.reg = "bitops".into();
             cfg.masks = masks;
-            let sw = sweep_lambdas(&runner, &cfg, &lambdas, "bitops", scale.workers)?;
+            let sw = sweep_lambdas(&runner, &cfg, &lambdas, "bitops", &scale.sweep_opts())?;
             let mut tot = 0.0;
             for r in &sw.runs {
                 let act_bits: Vec<String> = r

@@ -1,0 +1,181 @@
+//! Shared-warmup sweep bench: `ForkedWarmup` vs `Independent`
+//! 5-lambda sweeps plus batched vs per-batch eval, recorded in
+//! `BENCH_sweep_fork.json` (warmup steps saved, sweep wall-clock,
+//! eval bytes per call) so the perf trajectory is tracked across PRs.
+//!
+//! Runs entirely on the stub fixture (`runtime::fixture`), whose
+//! artifacts are deterministic `// STUB:` programs — the schedulers,
+//! snapshot forks and eval marshalling are exercised for real while
+//! the "compute" is near-free, isolating exactly the costs this
+//! rework removes. Asserts the acceptance contract: warmup runs once,
+//! the forked front is identical to the independent one, and batched
+//! eval moves strictly fewer host<->device bytes.
+
+use std::time::Instant;
+
+use mixprec::coordinator::{
+    default_lambdas, sweep_lambdas, Context, EvalBufs, MaskBufs, SweepMode,
+    SweepOptions, SweepResult,
+};
+use mixprec::data::Split;
+use mixprec::report::benchkit::{self, BenchScale};
+use mixprec::runtime::{fixture, DeviceState, StepFn, TransferStats};
+use mixprec::util::json::{Json, JsonObj};
+
+fn sweep_json(sw: &SweepResult, seconds: f64) -> Json {
+    let traffic: u64 = sw.shared_warmup.total_bytes()
+        + sw.runs.iter().map(|r| r.transfer.total_bytes()).sum::<u64>();
+    let mut o = JsonObj::new();
+    o.insert("mode", Json::Str(sw.mode.label().into()));
+    o.insert("seconds", Json::Num(seconds));
+    o.insert("runs", Json::Num(sw.runs.len() as f64));
+    o.insert("warmup_steps_run", Json::Num(sw.warmup_steps_run as f64));
+    o.insert("warmup_steps_saved", Json::Num(sw.warmup_steps_saved as f64));
+    o.insert("shared_warmup_s", Json::Num(sw.shared_warmup_s));
+    o.insert("total_transfer_bytes", Json::Num(traffic as f64));
+    Json::Obj(o)
+}
+
+fn eval_leg(h2d: u64, d2h: u64) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("h2d_bytes", Json::Num(h2d as f64));
+    o.insert("d2h_bytes", Json::Num(d2h as f64));
+    Json::Obj(o)
+}
+
+fn delta(after: TransferStats, before: TransferStats) -> (u64, u64) {
+    (
+        after.h2d_bytes - before.h2d_bytes,
+        after.d2h_bytes - before.d2h_bytes,
+    )
+}
+
+fn run() -> mixprec::Result<()> {
+    let scale = BenchScale::from_env();
+    let dir = std::env::temp_dir().join(format!("mixprec_sweep_fork_{}", std::process::id()));
+    fixture::write_stub_fixture(&dir)?;
+    let ctx = Context::load(&dir, scale.data_frac)?;
+    let runner = ctx.runner(fixture::STUB_MODEL)?;
+    let mut cfg = scale.config(fixture::STUB_MODEL);
+    cfg.batched_eval = true;
+    let lambdas = default_lambdas(5);
+    let shared_seed = |mode| SweepOptions {
+        workers: scale.workers,
+        mode,
+        vary_seeds: false,
+    };
+
+    // ---- forked vs independent 5-lambda sweeps ----------------------
+    let t0 = Instant::now();
+    let forked = sweep_lambdas(
+        &runner,
+        &cfg,
+        &lambdas,
+        "size",
+        &shared_seed(SweepMode::ForkedWarmup),
+    )?;
+    let forked_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let indep = sweep_lambdas(
+        &runner,
+        &cfg,
+        &lambdas,
+        "size",
+        &shared_seed(SweepMode::Independent),
+    )?;
+    let indep_s = t0.elapsed().as_secs_f64();
+
+    // acceptance: warmup ran exactly once, front identical
+    assert_eq!(forked.warmup_steps_run, cfg.warmup_steps, "warmup not shared");
+    assert_eq!(
+        forked.warmup_steps_saved,
+        cfg.warmup_steps * (lambdas.len() - 1)
+    );
+    let (ff, fi) = (forked.front(), indep.front());
+    let key = |f: &mixprec::coordinator::ParetoFront| -> Vec<(u64, u64)> {
+        f.points()
+            .iter()
+            .map(|p| (p.cost.to_bits(), p.acc.to_bits()))
+            .collect()
+    };
+    let fronts_equal = key(&ff) == key(&fi);
+    assert!(fronts_equal, "forked front != independent front");
+
+    println!(
+        "forked  {forked_s:7.2}s  ({} warmup steps run, {} saved)",
+        forked.warmup_steps_run, forked.warmup_steps_saved
+    );
+    println!(
+        "indep   {indep_s:7.2}s  ({} warmup steps run)",
+        indep.warmup_steps_run
+    );
+    println!("sweep speedup (forked vs independent): {:.2}x", indep_s / forked_s.max(1e-12));
+
+    // ---- batched vs per-batch eval traffic --------------------------
+    let mm = ctx.man.model(fixture::STUB_MODEL)?;
+    let eval = StepFn::bind(&ctx.eng, &ctx.man, mm, "eval")?;
+    let eval_b = StepFn::bind(&ctx.eng, &ctx.man, mm, "eval_batched")?;
+    let mut state = DeviceState::init(&ctx.eng, &ctx.man, mm, cfg.seed as i32)?;
+    let masks = MaskBufs::new(&ctx.eng, &cfg.masks)?;
+    let mut bufs = EvalBufs::new();
+    let before = state.stats;
+    let (l_pb, a_pb) =
+        runner.evaluate(&eval, &mut state, Split::Val, &masks, 1.0, true, false)?;
+    let (pb_h2d, pb_d2h) = delta(state.stats, before);
+    let before = state.stats;
+    let (l_b, a_b) = runner.evaluate_batched(
+        &eval_b, &mut state, Split::Val, &mut bufs, &masks, 1.0, true, false,
+    )?;
+    let (b1_h2d, b1_d2h) = delta(state.stats, before);
+    let before = state.stats;
+    runner.evaluate_batched(
+        &eval_b, &mut state, Split::Val, &mut bufs, &masks, 1.0, true, false,
+    )?;
+    let (b2_h2d, b2_d2h) = delta(state.stats, before);
+    assert_eq!(l_pb.to_bits(), l_b.to_bits(), "eval loss diverged");
+    assert_eq!(a_pb.to_bits(), a_b.to_bits(), "eval acc diverged");
+    // acceptance: strictly fewer bytes, both on first (split upload
+    // included) and cached calls
+    assert!(b1_h2d + b1_d2h < pb_h2d + pb_d2h, "batched eval not cheaper");
+    assert!(b2_h2d + b2_d2h < pb_h2d + pb_d2h, "cached eval not cheaper");
+    println!(
+        "eval bytes/call: per-batch {} | batched first {} | batched cached {}",
+        pb_h2d + pb_d2h,
+        b1_h2d + b1_d2h,
+        b2_h2d + b2_d2h
+    );
+
+    let mut o = JsonObj::new();
+    o.insert("bench", Json::Str("sweep_fork".into()));
+    o.insert("mode", Json::Str("stub".into()));
+    o.insert("lambdas", Json::Num(lambdas.len() as f64));
+    o.insert("warmup_steps", Json::Num(cfg.warmup_steps as f64));
+    o.insert("warmup_steps_saved", Json::Num(forked.warmup_steps_saved as f64));
+    o.insert("forked", sweep_json(&forked, forked_s));
+    o.insert("independent", sweep_json(&indep, indep_s));
+    o.insert(
+        "sweep_speedup_vs_independent",
+        Json::Num(indep_s / forked_s.max(1e-12)),
+    );
+    let mut ev = JsonObj::new();
+    ev.insert("per_batch", eval_leg(pb_h2d, pb_d2h));
+    ev.insert("batched_first_call", eval_leg(b1_h2d, b1_d2h));
+    ev.insert("batched_cached_call", eval_leg(b2_h2d, b2_d2h));
+    o.insert("eval_bytes_per_call", Json::Obj(ev));
+    o.insert("fronts_equal", Json::Bool(fronts_equal));
+    benchkit::write_bench_json("sweep_fork", &Json::Obj(o))?;
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}
+
+fn main() {
+    println!("=== sweep_fork (stub backend) ===");
+    let t0 = Instant::now();
+    match run() {
+        Ok(()) => println!("=== sweep_fork done in {:.1}s ===", t0.elapsed().as_secs_f64()),
+        Err(e) => {
+            eprintln!("sweep_fork FAILED: {e}");
+            std::process::exit(1);
+        }
+    }
+}

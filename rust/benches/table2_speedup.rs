@@ -46,7 +46,7 @@ fn main() {
             // MixPrec seed can even be chosen, then one MixPrec pipeline
             // per point.
             let seq = sequential_pit_mixprec(
-                &runner, &base, &lambdas, &lambdas[..1], "size", scale.workers,
+                &runner, &base, &lambdas, &lambdas[..1], "size", &scale.sweep_opts(),
             )?;
             let seq_s = seq.total_time_s;
 

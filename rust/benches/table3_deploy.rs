@@ -76,7 +76,7 @@ fn main() {
         for reg in ["mpic", "ne16"] {
             let mut cfg = Method::Joint.configure(&base);
             cfg.reg = reg.into();
-            let sw = sweep_lambdas(&runner, &cfg, &lambdas, reg, scale.workers)?;
+            let sw = sweep_lambdas(&runner, &cfg, &lambdas, reg, &scale.sweep_opts())?;
             for (band, r) in pick_hml(&sw.runs, reg, floor) {
                 table.row(row_of(&format!("{band}_{}", reg.to_uppercase()), r));
             }

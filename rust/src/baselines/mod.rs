@@ -10,7 +10,7 @@
 
 use crate::assignment::PrecisionMasks;
 use crate::coordinator::phases::{PipelineConfig, RunResult, Runner};
-use crate::coordinator::sweep::{sweep_lambdas, SweepResult};
+use crate::coordinator::sweep::{sweep_lambdas, SweepOptions, SweepResult};
 use crate::error::Result;
 
 /// Named baseline method.
@@ -114,11 +114,11 @@ pub fn sequential_pit_mixprec(
     pit_lambdas: &[f64],
     mix_lambdas: &[f64],
     metric: &str,
-    workers: usize,
+    opts: &SweepOptions,
 ) -> Result<SequentialResult> {
     // stage 1: PIT pruning sweep
     let pit_base = Method::Pit.configure(base);
-    let pit = sweep_lambdas(runner, &pit_base, pit_lambdas, metric, workers)?;
+    let pit = sweep_lambdas(runner, &pit_base, pit_lambdas, metric, opts)?;
     // seed selection: most accurate PIT point (paper picks from front)
     let _seed = pit
         .runs
@@ -126,7 +126,7 @@ pub fn sequential_pit_mixprec(
         .max_by(|a, b| a.val_acc.partial_cmp(&b.val_acc).unwrap());
     // stage 2: MixPrec sweep (no pruning) from the seed
     let mix_base = Method::MixPrec.configure(base);
-    let mix = sweep_lambdas(runner, &mix_base, mix_lambdas, metric, workers)?;
+    let mix = sweep_lambdas(runner, &mix_base, mix_lambdas, metric, opts)?;
     let total = pit.total_search_time_s() + mix.total_search_time_s();
     Ok(SequentialResult {
         pit_runs: pit.runs,

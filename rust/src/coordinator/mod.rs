@@ -11,6 +11,11 @@ pub mod sweep;
 
 pub use context::Context;
 pub use pareto::{ParetoFront, Point};
-pub use phases::{MaskBufs, PipelineConfig, Record, RunResult, Runner, Sampling, Timing};
+pub use phases::{
+    EvalBufs, MaskBufs, PipelineConfig, Record, RunResult, Runner, Sampling, Timing,
+    WarmStart,
+};
 pub use schedule::{EarlyStop, ExpDecay, TempSchedule};
-pub use sweep::{default_lambdas, sweep_lambdas, SweepResult};
+pub use sweep::{
+    default_lambdas, sweep_lambdas, SweepMode, SweepOptions, SweepResult,
+};

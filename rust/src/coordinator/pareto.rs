@@ -50,9 +50,15 @@ impl ParetoFront {
         f
     }
 
-    /// Insert a point; returns true if it joined the front.
+    /// Insert a point; returns true if it joined the front. A point
+    /// dominated by — or coordinate-identical to — a front member is
+    /// rejected, so the front is a set in (cost, acc) space.
     pub fn insert(&mut self, p: Point) -> bool {
-        if self.points.iter().any(|q| q.dominates(&p)) {
+        if self
+            .points
+            .iter()
+            .any(|q| q.dominates(&p) || (q.cost == p.cost && q.acc == p.acc))
+        {
             return false;
         }
         self.points.retain(|q| !p.dominates(q));

@@ -10,6 +10,22 @@
 //! go through the dirty-tracked sync layer; `PipelineConfig::
 //! host_resident` forces the seed's per-step full marshal for
 //! benchmarking and equivalence testing.
+//!
+//! The warmup phase is split out of [`Runner::run`]: [`Runner::warmup`]
+//! returns a [`WarmStart`] (post-warmup snapshot + RNG/batch-iterator
+//! state) and [`Runner::run_from`] continues into search/finetune from
+//! it. A lambda sweep in `ForkedWarmup` mode performs the float warmup
+//! **once** and forks every worker from the shared snapshot — the
+//! fork is bitwise identical to a run that warmed up itself.
+//!
+//! Evaluation is batched: each split is uploaded once per run into
+//! [`EvalBufs`] and one `eval_batched` dispatch returns per-chunk
+//! loss/acc reductions computed on device, with the host applying the
+//! same real-count weighting as the per-batch loop — results are
+//! bitwise identical (ragged final chunk included) while moving far
+//! fewer host<->device bytes. Manifests without an `eval_batched`
+//! artifact (or `batched_eval = false`) fall back to the per-batch
+//! path.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -18,7 +34,7 @@ use crate::assignment::{self, Assignment, PrecisionMasks, ResolvedLeaves};
 use crate::coordinator::schedule::{EarlyStop, ExpDecay, TempSchedule};
 use crate::cost::{BitOps, CostModel, Mpic, Ne16, Size};
 use crate::data::{BatchIter, DataSet, Split};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::graph::ModelGraph;
 use crate::runtime::{
     DeviceState, Engine, Manifest, ModelManifest, StateSnapshot, StepArg, StepFn,
@@ -95,6 +111,13 @@ pub struct PipelineConfig {
     /// reproducing the seed runtime's per-batch cost (bench baseline /
     /// equivalence reference). Numerics are identical either way.
     pub host_resident: bool,
+    /// Evaluate through the device-resident `eval_batched` artifact
+    /// (whole split uploaded once per run, per-chunk reductions on
+    /// device). Falls back to the per-batch loop when the manifest has
+    /// no such artifact, or in `host_resident` mode (whose point is
+    /// reproducing the seed's per-batch traffic); results are bitwise
+    /// identical either way.
+    pub batched_eval: bool,
     pub verbose: bool,
 }
 
@@ -137,13 +160,14 @@ impl PipelineConfig {
             layerwise: false,
             data_frac: 0.5,
             host_resident: false,
+            batched_eval: true,
             verbose: false,
         }
     }
 }
 
 /// One metrics record per logged step.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Record {
     pub phase: &'static str,
     pub step: usize,
@@ -220,6 +244,137 @@ impl MaskBufs {
     }
 }
 
+/// Device-resident evaluation data, uploaded lazily once per run and
+/// reused by every `evaluate_batched` call — the second per-run upload
+/// cache alongside [`MaskBufs`]. Each split is padded exactly like the
+/// per-batch iterator pads (tail chunk repeats samples), so the
+/// device-side chunk reductions are bitwise identical to the per-batch
+/// dispatch loop.
+#[derive(Default)]
+pub struct EvalBufs {
+    slots: [Option<SplitBufs>; 3],
+}
+
+struct SplitBufs {
+    x: Arc<xla::PjRtBuffer>,
+    y: Arc<xla::PjRtBuffer>,
+    /// Real (unpadded) sample count per chunk, for the host-side
+    /// weighted mean over the per-chunk device reductions.
+    real: Vec<f64>,
+}
+
+impl EvalBufs {
+    pub fn new() -> Self {
+        EvalBufs::default()
+    }
+
+    fn slot(split: Split) -> usize {
+        match split {
+            Split::Train => 0,
+            Split::Val => 1,
+            Split::Test => 2,
+        }
+    }
+
+    /// Upload a split on first use; the one-time upload is charged to
+    /// `stats` so batched and per-batch eval traffic stay comparable.
+    fn get_or_upload(
+        &mut self,
+        eng: &Engine,
+        data: &DataSet,
+        batch: usize,
+        split: Split,
+        stats: &mut TransferStats,
+    ) -> Result<&SplitBufs> {
+        let i = Self::slot(split);
+        if self.slots[i].is_none() {
+            let n = match split {
+                Split::Train => data.cfg.n_train,
+                Split::Val => data.cfg.n_val,
+                Split::Test => data.cfg.n_test,
+            };
+            let chunks = BatchIter::eval_batches(n, batch);
+            let sample = data.cfg.h * data.cfg.w * data.cfg.c;
+            let mut xs = Vec::with_capacity(chunks.len() * batch * sample);
+            let mut ys = Vec::with_capacity(chunks.len() * batch);
+            let mut real = Vec::with_capacity(chunks.len());
+            for idx in &chunks {
+                let (x, y) = data.batch(split, idx, batch);
+                xs.extend_from_slice(x.as_f32());
+                ys.extend_from_slice(y.as_i32());
+                real.push(idx.len() as f64);
+            }
+            let n_pad = chunks.len() * batch;
+            let xt = Tensor::f32(vec![n_pad, data.cfg.h, data.cfg.w, data.cfg.c], xs);
+            let yt = Tensor::i32(vec![n_pad], ys);
+            let x = eng.upload_tensor(&xt)?;
+            let y = eng.upload_tensor(&yt)?;
+            stats.h2d_bytes += ((xt.len() + yt.len()) * 4) as u64;
+            stats.h2d_tensors += 2;
+            self.slots[i] = Some(SplitBufs { x, y, real });
+        }
+        Ok(self.slots[i].as_ref().expect("slot just filled"))
+    }
+}
+
+/// Output of the shared warmup phase: the post-warmup device snapshot
+/// plus the exact RNG / batch-iterator state a run needs to continue
+/// into the search phase. [`Runner::run_from`] forks are bitwise
+/// identical to a run that performed the warmup itself; one
+/// `WarmStart` can seed any number of forks (`ForkedWarmup` sweeps).
+pub struct WarmStart {
+    snap: StateSnapshot,
+    rng: Pcg64,
+    train_iter: BatchIter,
+    /// Warmup-phase metric records (prefixed onto each forked run's
+    /// history, keeping forked and independent runs comparable).
+    pub history: Vec<Record>,
+    /// Wall-clock of the warmup phase (charged once, not per fork).
+    pub warmup_s: f64,
+    /// Warmup steps executed (once, regardless of fork count).
+    pub steps_run: usize,
+    /// Host<->device traffic of init + warmup.
+    pub transfer: TransferStats,
+    // fingerprint: a fork must come from a config with the same
+    // warmup trajectory (every knob the warmup phase reads)
+    fingerprint: WarmupFingerprint,
+}
+
+/// The `PipelineConfig` knobs the warmup phase actually consumes —
+/// compared field-for-field before a fork so `run_from` can never
+/// silently continue from a foreign warmup trajectory.
+#[derive(Debug, Clone, PartialEq)]
+struct WarmupFingerprint {
+    model: String,
+    seed: u64,
+    warmup_steps: usize,
+    steps_per_epoch: usize,
+    eval_every: usize,
+    lr_w_bits: u32,
+    lr_decay_bits: u32,
+    host_resident: bool,
+    /// Dataset identity: the warm `BatchIter` is built over this many
+    /// train samples, so a fork through a differently-scaled dataset
+    /// (`data_frac`) must be rejected, not silently wrapped via `% n`.
+    n_train: usize,
+}
+
+impl WarmupFingerprint {
+    fn of(cfg: &PipelineConfig, n_train: usize) -> Self {
+        WarmupFingerprint {
+            model: cfg.model.clone(),
+            seed: cfg.seed,
+            warmup_steps: cfg.warmup_steps,
+            steps_per_epoch: cfg.steps_per_epoch,
+            eval_every: cfg.eval_every,
+            lr_w_bits: cfg.lr_w.to_bits(),
+            lr_decay_bits: cfg.lr_decay.to_bits(),
+            host_resident: cfg.host_resident,
+            n_train,
+        }
+    }
+}
+
 /// Pipeline runner bound to one model's artifacts + dataset.
 pub struct Runner<'a> {
     pub eng: &'a Engine,
@@ -250,6 +405,7 @@ impl<'a> Runner<'a> {
     /// theta (hard == discretized, matching deployment numerics).
     /// The mask buffers are uploaded once by the caller; only the
     /// batch and two scalars move per eval step.
+    #[allow(clippy::too_many_arguments)]
     pub fn evaluate(
         &self,
         eval: &StepFn,
@@ -297,25 +453,118 @@ impl<'a> Runner<'a> {
         Ok((tot_loss / count, tot_acc / count))
     }
 
-    /// Run the full three-phase pipeline with the train state resident
-    /// on device throughout.
-    pub fn run(&self, cfg: &PipelineConfig) -> Result<RunResult> {
+    /// Batched evaluation over a whole split: the split lives on
+    /// device ([`EvalBufs`], uploaded once per run), one dispatch
+    /// computes per-chunk loss/acc reductions on device, and only two
+    /// `[n_chunks]` vectors come back. The host applies the same
+    /// real-count weighting as [`Runner::evaluate`], so results are
+    /// bitwise identical — padded (ragged) final chunk included.
+    #[allow(clippy::too_many_arguments)]
+    pub fn evaluate_batched(
+        &self,
+        eval: &StepFn,
+        state: &mut DeviceState,
+        split: Split,
+        bufs: &mut EvalBufs,
+        masks: &MaskBufs,
+        tau: f32,
+        hard: bool,
+        host_resident: bool,
+    ) -> Result<(f64, f64)> {
+        let batch = self.mm.batch;
+        let se = bufs.get_or_upload(self.eng, self.data, batch, split, &mut state.stats)?;
+        let tau_t = Tensor::scalar_f32(tau);
+        let hard_t = Tensor::scalar_f32(if hard { 1.0 } else { 0.0 });
+        let outs = eval.step_device_tensors(
+            self.eng,
+            state,
+            &[
+                StepArg::Device(&se.x),
+                StepArg::Device(&se.y),
+                StepArg::Host(&tau_t),
+                StepArg::Host(&hard_t),
+                StepArg::Device(&masks.pw),
+                StepArg::Device(&masks.px),
+            ],
+        )?;
+        if host_resident {
+            state.force_host_roundtrip()?;
+        }
+        let loss_v = outs[eval.metric_index("loss")?].as_f32();
+        let acc_v = outs[eval.metric_index("acc")?].as_f32();
+        if loss_v.len() != se.real.len() {
+            return Err(Error::Shape(format!(
+                "eval_batched returned {} chunks, split has {}",
+                loss_v.len(),
+                se.real.len()
+            )));
+        }
+        // identical accumulation to the per-batch path: weighted f64
+        // sums in chunk order, one final divide
+        let (mut tot_loss, mut tot_acc, mut count) = (0f64, 0f64, 0f64);
+        for (c, &real) in se.real.iter().enumerate() {
+            tot_loss += loss_v[c] as f64 * real;
+            tot_acc += acc_v[c] as f64 * real;
+            count += real;
+        }
+        Ok((tot_loss / count, tot_acc / count))
+    }
+
+    /// Pick the batched or per-batch eval path per `cfg` / manifest.
+    #[allow(clippy::too_many_arguments)]
+    fn eval_split(
+        &self,
+        eval: &StepFn,
+        eval_batched: Option<&StepFn>,
+        bufs: &mut EvalBufs,
+        state: &mut DeviceState,
+        split: Split,
+        masks: &MaskBufs,
+        tau: f32,
+        cfg: &PipelineConfig,
+    ) -> Result<(f64, f64)> {
+        match eval_batched {
+            Some(eb) => self.evaluate_batched(
+                eb,
+                state,
+                split,
+                bufs,
+                masks,
+                tau,
+                true,
+                cfg.host_resident,
+            ),
+            None => self.evaluate(
+                eval,
+                state,
+                split,
+                masks,
+                tau,
+                true,
+                cfg.host_resident,
+            ),
+        }
+    }
+
+    /// Phase 1 (float warmup), split out of `run` so a sweep can do it
+    /// once: init the state, run the warmup steps, snapshot. The
+    /// returned [`WarmStart`] captures everything the search phase
+    /// consumes (state, RNG, batch-iterator position).
+    pub fn warmup(&self, cfg: &PipelineConfig) -> Result<WarmStart> {
+        // fail fast on a bad config *before* spending the warmup
+        // phase: the search/eval artifacts are only bound in
+        // `run_from`, but their absence (e.g. a --reg typo) must not
+        // surface after hundreds of device steps
+        self.mm.artifact(&format!("search_{}", cfg.reg))?;
+        self.mm.artifact("eval")?;
         let mut rng = Pcg64::new(cfg.seed);
         let mut state = DeviceState::init(self.eng, self.man, self.mm, cfg.seed as i32)?;
         let warm = StepFn::bind(self.eng, self.man, self.mm, "warmup")?;
-        let search = StepFn::bind(self.eng, self.man, self.mm, &format!("search_{}", cfg.reg))?;
-        let eval = StepFn::bind(self.eng, self.man, self.mm, "eval")?;
-        // Resolved once per run: interned leaf handles + uploaded masks.
-        let leaves = ResolvedLeaves::new(self.mm, self.graph)?;
-        let mask_bufs = MaskBufs::new(self.eng, &cfg.masks)?;
         let mut history = Vec::new();
-        let mut timing = Timing::default();
         let mut steps_run = 0usize;
         let batch = self.mm.batch;
         let mut train_iter =
             BatchIter::new(self.data.cfg.n_train, batch, rng.next_u64(), true);
-
-        // ---- phase 1: warmup (float, task loss only) --------------------
         let t0 = Instant::now();
         let wlr = ExpDecay::new(cfg.lr_w, cfg.lr_decay, cfg.lr_w * 0.01);
         for step in 0..cfg.warmup_steps {
@@ -356,7 +605,73 @@ impl<'a> Runner<'a> {
                 }
             }
         }
-        timing.warmup_s = t0.elapsed().as_secs_f64();
+        let warmup_s = t0.elapsed().as_secs_f64();
+        let snap = state.snapshot(self.eng)?;
+        Ok(WarmStart {
+            snap,
+            rng,
+            train_iter,
+            history,
+            warmup_s,
+            steps_run,
+            transfer: state.stats,
+            fingerprint: WarmupFingerprint::of(cfg, self.data.cfg.n_train),
+        })
+    }
+
+    /// Run the full three-phase pipeline with the train state resident
+    /// on device throughout.
+    pub fn run(&self, cfg: &PipelineConfig) -> Result<RunResult> {
+        let ws = self.warmup(cfg)?;
+        let mut r = self.run_from(&ws, cfg)?;
+        // this run performed its own warmup: fold the warmup phase
+        // back into its accounting (a forked sweep instead charges the
+        // shared warmup once, at the sweep level)
+        r.timing.warmup_s = ws.warmup_s;
+        r.steps_run += ws.steps_run;
+        r.transfer.merge(&ws.transfer);
+        Ok(r)
+    }
+
+    /// Phases 2+3 (search + finetune) from a [`WarmStart`]: forks the
+    /// device state off the shared snapshot (Arc clones, no parameter
+    /// copies) and continues with the warm RNG / batch iterator — the
+    /// trajectory is bitwise identical to a run that warmed up itself.
+    /// Warmup wall-clock / step / transfer accounting stays with the
+    /// `WarmStart` (only its history records are carried over).
+    pub fn run_from(&self, ws: &WarmStart, cfg: &PipelineConfig) -> Result<RunResult> {
+        let fp = WarmupFingerprint::of(cfg, self.data.cfg.n_train);
+        if fp != ws.fingerprint {
+            return Err(Error::Config(format!(
+                "run_from: config warmup fingerprint {fp:?} does not match the \
+                 WarmStart's {:?}",
+                ws.fingerprint
+            )));
+        }
+        let mut rng = ws.rng.clone();
+        let mut train_iter = ws.train_iter.clone();
+        let mut state = DeviceState::from_snapshot(&ws.snap);
+        let search = StepFn::bind(self.eng, self.man, self.mm, &format!("search_{}", cfg.reg))?;
+        let eval = StepFn::bind(self.eng, self.man, self.mm, "eval")?;
+        // host_resident is the seed-faithful bench baseline: it must
+        // keep the seed's per-batch eval traffic, not the batched path
+        let eval_batched = if cfg.batched_eval
+            && !cfg.host_resident
+            && self.mm.artifacts.contains_key("eval_batched")
+        {
+            Some(StepFn::bind(self.eng, self.man, self.mm, "eval_batched")?)
+        } else {
+            None
+        };
+        // Resolved once per run: interned leaf handles + uploaded
+        // masks + (lazily) the device-resident eval splits.
+        let leaves = ResolvedLeaves::new(self.mm, self.graph)?;
+        let mask_bufs = MaskBufs::new(self.eng, &cfg.masks)?;
+        let mut eval_bufs = EvalBufs::new();
+        let mut history = ws.history.clone();
+        let mut timing = Timing::default();
+        let mut steps_run = 0usize;
+        let batch = self.mm.batch;
 
         // ---- phase 2: joint search --------------------------------------
         // Eq. 12 weight rescaling against the initial gamma
@@ -426,14 +741,15 @@ impl<'a> Runner<'a> {
             let is_eval = step % cfg.eval_every == cfg.eval_every - 1
                 || step + 1 == cfg.search_steps;
             if is_eval {
-                let (vl, va) = self.evaluate(
+                let (vl, va) = self.eval_split(
                     &eval,
+                    eval_batched.as_ref(),
+                    &mut eval_bufs,
                     &mut state,
                     Split::Val,
                     &mask_bufs,
                     tau,
-                    true,
-                    cfg.host_resident,
+                    cfg,
                 )?;
                 history.push(Record {
                     phase: "search",
@@ -532,23 +848,25 @@ impl<'a> Runner<'a> {
         timing.finetune_s = t0.elapsed().as_secs_f64();
 
         // ---- final evaluation + exact costs ------------------------------
-        let (_, val_acc) = self.evaluate(
+        let (_, val_acc) = self.eval_split(
             &eval,
+            eval_batched.as_ref(),
+            &mut eval_bufs,
             &mut state,
             Split::Val,
             &mask_bufs,
             cfg.temp.floor,
-            true,
-            cfg.host_resident,
+            cfg,
         )?;
-        let (_, test_acc) = self.evaluate(
+        let (_, test_acc) = self.eval_split(
             &eval,
+            eval_batched.as_ref(),
+            &mut eval_bufs,
             &mut state,
             Split::Test,
             &mask_bufs,
             cfg.temp.floor,
-            true,
-            cfg.host_resident,
+            cfg,
         )?;
 
         Ok(RunResult {

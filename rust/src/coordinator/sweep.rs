@@ -2,20 +2,99 @@
 //! strength (optionally in parallel workers sharing the PJRT engine)
 //! and maintains the resulting Pareto front — the machinery behind
 //! every figure in the paper's evaluation.
+//!
+//! The float warmup phase is identical for every lambda, so the
+//! default [`SweepMode::ForkedWarmup`] performs it **once**
+//! ([`Runner::warmup`]) and forks every worker from the shared
+//! post-warmup snapshot ([`Runner::run_from`], Arc-based, O(leaf
+//! count) per fork) — for an `n`-lambda sweep that deletes `n - 1`
+//! warmup phases from the wall-clock, mirroring how the paper's joint
+//! search amortizes one seed network across the whole Pareto front
+//! (Sec. 5, Table 2). [`SweepMode::Independent`] keeps the legacy
+//! one-warmup-per-lambda behavior for equivalence testing.
 
 use crate::coordinator::pareto::{ParetoFront, Point};
 use crate::coordinator::phases::{PipelineConfig, RunResult, Runner};
 use crate::cost::Normalizer;
 use crate::error::Result;
 use crate::graph::ModelGraph;
+use crate::runtime::TransferStats;
 use crate::util::pool::parallel_map;
 
+/// Warmup-sharing strategy of a sweep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SweepMode {
+    /// Legacy: every lambda runs its own full pipeline, warmup
+    /// included. Kept for equivalence testing and for sweeps that
+    /// intentionally vary the seed per lambda.
+    Independent,
+    /// Warmup once, fork every worker from the shared post-warmup
+    /// snapshot. All lambdas share the base config's seed (the warmup
+    /// trajectory is common by construction).
+    #[default]
+    ForkedWarmup,
+}
+
+impl SweepMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "independent" | "indep" => Some(SweepMode::Independent),
+            "forked" | "fork" | "shared" => Some(SweepMode::ForkedWarmup),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SweepMode::Independent => "independent",
+            SweepMode::ForkedWarmup => "forked",
+        }
+    }
+}
+
+/// Scheduling knobs of a sweep.
+#[derive(Debug, Clone)]
+pub struct SweepOptions {
+    /// Parallel OS-thread workers (the PJRT CPU client is thread-safe;
+    /// each worker owns its state — see `runtime::client`).
+    pub workers: usize,
+    pub mode: SweepMode,
+    /// Derive a distinct seed per lambda (`base.seed + i*9973`, the
+    /// pre-fork legacy behavior). Only honored by
+    /// [`SweepMode::Independent`] — a forked sweep shares the warmup
+    /// trajectory and therefore the seed — so the default is `false`,
+    /// matching the default forked mode; set both `Independent` and
+    /// `vary_seeds` to restore the legacy sweep exactly.
+    pub vary_seeds: bool,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        SweepOptions {
+            workers: 1,
+            mode: SweepMode::default(),
+            vary_seeds: false,
+        }
+    }
+}
+
 /// Result of a sweep: all runs plus the Pareto front over the chosen
-/// cost metric.
+/// cost metric, and the warmup-sharing accounting.
 #[derive(Debug, Clone)]
 pub struct SweepResult {
     pub runs: Vec<RunResult>,
     pub metric: String,
+    pub mode: SweepMode,
+    /// Warmup steps actually executed across the whole sweep (one
+    /// phase for `ForkedWarmup`, one per lambda for `Independent`).
+    pub warmup_steps_run: usize,
+    /// Warmup steps the shared phase saved vs. an independent sweep.
+    pub warmup_steps_saved: usize,
+    /// Wall-clock of the shared warmup phase (`ForkedWarmup` only;
+    /// independent warmup time is inside each run's `timing`).
+    pub shared_warmup_s: f64,
+    /// Host<->device traffic of the shared warmup phase.
+    pub shared_warmup: TransferStats,
 }
 
 impl SweepResult {
@@ -42,8 +121,10 @@ impl SweepResult {
         }))
     }
 
+    /// Total search wall-clock, shared warmup included (Table 2's
+    /// search-time numerator).
     pub fn total_search_time_s(&self) -> f64 {
-        self.runs.iter().map(|r| r.timing.total_s()).sum()
+        self.shared_warmup_s + self.runs.iter().map(|r| r.timing.total_s()).sum::<f64>()
     }
 
     /// Pareto front in (normalized cost, val accuracy) space: every
@@ -64,30 +145,60 @@ impl SweepResult {
 
 /// Run the pipeline for each lambda in `lambdas`.
 ///
-/// `workers > 1` shares the engine across OS threads; the PJRT CPU
-/// client is thread-safe and each worker owns its state (see
-/// `runtime::client` safety notes).
+/// In [`SweepMode::ForkedWarmup`] (the default) the float warmup runs
+/// once and every worker forks from the shared snapshot; results are
+/// bitwise identical to an `Independent` sweep with `vary_seeds =
+/// false` (asserted by `tests/sweep_fork.rs`).
 pub fn sweep_lambdas(
     runner: &Runner<'_>,
     base: &PipelineConfig,
     lambdas: &[f64],
     metric: &str,
-    workers: usize,
+    opts: &SweepOptions,
 ) -> Result<SweepResult> {
-    let outs = parallel_map(lambdas, workers, |i, &lam| {
-        let mut cfg = base.clone();
-        cfg.lambda = lam as f32;
-        cfg.seed = base.seed.wrapping_add(i as u64 * 9973);
-        runner.run(&cfg)
-    });
-    let mut runs = Vec::new();
-    for r in outs {
-        runs.push(r?);
-    }
-    Ok(SweepResult {
-        runs,
+    let independent_warmup = base.warmup_steps * lambdas.len();
+    let mut result = SweepResult {
+        runs: Vec::new(),
         metric: metric.to_string(),
-    })
+        mode: opts.mode,
+        warmup_steps_run: 0,
+        warmup_steps_saved: 0,
+        shared_warmup_s: 0.0,
+        shared_warmup: TransferStats::default(),
+    };
+    if lambdas.is_empty() {
+        return Ok(result);
+    }
+    let outs = match opts.mode {
+        SweepMode::Independent => {
+            result.warmup_steps_run = independent_warmup;
+            parallel_map(lambdas, opts.workers, |i, &lam| {
+                let mut cfg = base.clone();
+                cfg.lambda = lam as f32;
+                if opts.vary_seeds {
+                    cfg.seed = base.seed.wrapping_add(i as u64 * 9973);
+                }
+                runner.run(&cfg)
+            })
+        }
+        SweepMode::ForkedWarmup => {
+            let ws = runner.warmup(base)?;
+            result.warmup_steps_run = ws.steps_run;
+            result.warmup_steps_saved =
+                independent_warmup.saturating_sub(ws.steps_run);
+            result.shared_warmup_s = ws.warmup_s;
+            result.shared_warmup = ws.transfer;
+            parallel_map(lambdas, opts.workers, |_i, &lam| {
+                let mut cfg = base.clone();
+                cfg.lambda = lam as f32;
+                runner.run_from(&ws, &cfg)
+            })
+        }
+    };
+    for r in outs {
+        result.runs.push(r?);
+    }
+    Ok(result)
 }
 
 /// The default strength grid used by the figure harnesses (log-spaced;
@@ -129,20 +240,23 @@ mod tests {
             steps_run: 0,
             transfer: Default::default(),
         };
-        let sw = SweepResult {
-            runs: vec![mk(0.1, 8, 0.9), mk(1.0, 4, 0.8)],
-            metric: "size".into(),
+        let mk_sweep = |runs: Vec<RunResult>, metric: &str| SweepResult {
+            runs,
+            metric: metric.into(),
+            mode: SweepMode::Independent,
+            warmup_steps_run: 0,
+            warmup_steps_saved: 0,
+            shared_warmup_s: 0.0,
+            shared_warmup: TransferStats::default(),
         };
+        let sw = mk_sweep(vec![mk(0.1, 8, 0.9), mk(1.0, 4, 0.8)], "size");
         let front = sw.front_normalized(&g).unwrap();
         assert_eq!(front.len(), 2);
         let costs: Vec<f64> = front.points().iter().map(|p| p.cost).collect();
         // w4a8 is exactly half the w8a8 reference under the size model
         assert!((costs[0] - 0.5).abs() < 1e-9, "{costs:?}");
         assert!((costs[1] - 1.0).abs() < 1e-9, "{costs:?}");
-        let bad = SweepResult {
-            runs: Vec::new(),
-            metric: "nope".into(),
-        };
+        let bad = mk_sweep(Vec::new(), "nope");
         assert!(bad.front_normalized(&g).is_none());
     }
 
@@ -155,5 +269,17 @@ mod tests {
         let r1 = l[1] / l[0];
         let r2 = l[2] / l[1];
         assert!((r1 - r2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sweep_mode_parses() {
+        assert_eq!(SweepMode::parse("forked"), Some(SweepMode::ForkedWarmup));
+        assert_eq!(
+            SweepMode::parse("independent"),
+            Some(SweepMode::Independent)
+        );
+        assert_eq!(SweepMode::parse("nope"), None);
+        assert_eq!(SweepMode::default(), SweepMode::ForkedWarmup);
+        assert_eq!(SweepMode::ForkedWarmup.label(), "forked");
     }
 }

@@ -10,6 +10,10 @@ pub enum Split {
 }
 
 /// Yields index slices of size `batch`, reshuffling every epoch.
+/// `Clone` captures the exact iteration state — a shared-warmup sweep
+/// forks each worker's iterator from the post-warmup position so
+/// forked runs see the same batch sequence an independent run would.
+#[derive(Clone)]
 pub struct BatchIter {
     order: Vec<usize>,
     pos: usize,

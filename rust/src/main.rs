@@ -11,7 +11,8 @@
 use mixprec::assignment::PrecisionMasks;
 use mixprec::baselines::Method;
 use mixprec::coordinator::{
-    default_lambdas, sweep_lambdas, Context, PipelineConfig, Sampling,
+    default_lambdas, sweep_lambdas, Context, PipelineConfig, Sampling, SweepMode,
+    SweepOptions,
 };
 use mixprec::cost::{Mpic, Ne16, Size};
 use mixprec::deploy::{refine_for_ne16, reorder_assignment, split_layers};
@@ -32,6 +33,11 @@ fn usage() -> ! {
     --warmup/--steps/--finetune <n>  phase step counts
     --data-frac <f>       dataset scale (default 0.5)
     --workers <n>         parallel sweep workers (default 1)
+    --sweep-mode forked|independent  warmup sharing across lambdas
+                          (default forked: one shared warmup phase)
+    --vary-seeds          independent mode only: derive a distinct
+                          seed per lambda (the pre-fork legacy sweep)
+    --per-batch-eval      disable the batched device-resident eval
     --seed <n>            RNG seed
     --act-search          open activation precisions {{2,4,8}}
     --verbose"
@@ -51,10 +57,25 @@ fn build_cfg(a: &Args) -> PipelineConfig {
     cfg.data_frac = a.f64_or("data-frac", cfg.data_frac);
     cfg.seed = a.u64_or("seed", cfg.seed);
     cfg.verbose = a.has("verbose");
+    cfg.batched_eval = !a.has("per-batch-eval");
     if a.has("act-search") {
         cfg.masks = PrecisionMasks::joint_act();
     }
     cfg
+}
+
+fn build_sweep_opts(a: &Args) -> mixprec::Result<SweepOptions> {
+    let raw = a.str_or("sweep-mode", "forked");
+    let mode = SweepMode::parse(&raw).ok_or_else(|| {
+        mixprec::Error::Config(format!(
+            "unknown --sweep-mode '{raw}' (expected forked|independent)"
+        ))
+    })?;
+    Ok(SweepOptions {
+        workers: a.usize_or("workers", 1),
+        mode,
+        vary_seeds: a.has("vary-seeds"),
+    })
 }
 
 fn main() {
@@ -119,10 +140,17 @@ fn run(cmd: &str, a: &Args) -> mixprec::Result<()> {
         "sweep" => {
             let cfg = build_cfg(a);
             let lambdas = a.f64_list("lambdas", &default_lambdas(a.usize_or("points", 5)));
-            let workers = a.usize_or("workers", 1);
+            let opts = build_sweep_opts(a)?;
             let ctx = Context::load_default(cfg.data_frac)?;
             let runner = ctx.runner(&cfg.model)?;
-            let sw = sweep_lambdas(&runner, &cfg, &lambdas, &cfg.reg.clone(), workers)?;
+            let sw = sweep_lambdas(&runner, &cfg, &lambdas, &cfg.reg.clone(), &opts)?;
+            if sw.warmup_steps_saved > 0 {
+                println!(
+                    "shared warmup: {} steps run once, {} steps saved vs independent \
+                     ({:.2}s)",
+                    sw.warmup_steps_run, sw.warmup_steps_saved, sw.shared_warmup_s
+                );
+            }
             let rows: Vec<(String, &_)> = sw
                 .runs
                 .iter()
@@ -151,13 +179,13 @@ fn run(cmd: &str, a: &Args) -> mixprec::Result<()> {
         "compare" => {
             let cfg = build_cfg(a);
             let lambdas = a.f64_list("lambdas", &default_lambdas(a.usize_or("points", 3)));
-            let workers = a.usize_or("workers", 1);
+            let opts = build_sweep_opts(a)?;
             let ctx = Context::load_default(cfg.data_frac)?;
             let runner = ctx.runner(&cfg.model)?;
             let mut rows: Vec<(String, mixprec::coordinator::RunResult)> = Vec::new();
             for m in [Method::Joint, Method::MixPrec, Method::EdMips, Method::Pit] {
                 let mcfg = m.configure(&cfg);
-                let sw = sweep_lambdas(&runner, &mcfg, &lambdas, &cfg.reg.clone(), workers)?;
+                let sw = sweep_lambdas(&runner, &mcfg, &lambdas, &cfg.reg.clone(), &opts)?;
                 for r in sw.runs {
                     rows.push((m.label(), r));
                 }

@@ -11,6 +11,11 @@
 //! * `MIXPREC_POINTS`   — lambda points per sweep
 //! * `MIXPREC_DATA_FRAC`
 //! * `MIXPREC_WORKERS`
+//! * `MIXPREC_SWEEP_MODE=forked|independent` — warmup sharing across
+//!   sweep lambdas (default forked: one shared warmup phase)
+//! * `MIXPREC_VARY_SEEDS=1` — independent mode only: distinct seed
+//!   per lambda (the pre-fork legacy sweep behavior)
+//! * `MIXPREC_BATCHED_EVAL=0` — fall back to the per-batch eval loop
 //! * `MIXPREC_HOST_RESIDENT=1` — force the seed's per-step full
 //!   host<->device marshal (baseline for the step-marshalling bench)
 //! * `MIXPREC_BENCH_DIR` — where `BENCH_*.json` trend files land
@@ -19,7 +24,7 @@
 use std::path::PathBuf;
 use std::time::Instant;
 
-use crate::coordinator::{Context, PipelineConfig, TempSchedule};
+use crate::coordinator::{Context, PipelineConfig, SweepMode, SweepOptions, TempSchedule};
 use crate::error::Result;
 use crate::util::json::Json;
 
@@ -45,6 +50,9 @@ pub struct BenchScale {
     pub points: usize,
     pub data_frac: f64,
     pub workers: usize,
+    pub sweep_mode: SweepMode,
+    pub vary_seeds: bool,
+    pub batched_eval: bool,
     pub host_resident: bool,
 }
 
@@ -56,6 +64,14 @@ impl BenchScale {
         } else {
             (48, 96, 24, 3, 0.15)
         };
+        // an unparseable value must fail loudly, not silently change
+        // which science the figure harnesses run
+        let sweep_mode = match std::env::var("MIXPREC_SWEEP_MODE") {
+            Ok(v) => SweepMode::parse(&v).unwrap_or_else(|| {
+                panic!("MIXPREC_SWEEP_MODE='{v}' (expected forked|independent)")
+            }),
+            Err(_) => SweepMode::default(),
+        };
         BenchScale {
             warmup: env_usize("MIXPREC_WARMUP", w),
             steps: env_usize("MIXPREC_STEPS", s),
@@ -63,6 +79,9 @@ impl BenchScale {
             points: env_usize("MIXPREC_POINTS", p),
             data_frac: env_f64("MIXPREC_DATA_FRAC", d),
             workers: env_usize("MIXPREC_WORKERS", 1),
+            sweep_mode,
+            vary_seeds: env_usize("MIXPREC_VARY_SEEDS", 0) != 0,
+            batched_eval: env_usize("MIXPREC_BATCHED_EVAL", 1) != 0,
             host_resident: env_usize("MIXPREC_HOST_RESIDENT", 0) != 0,
         }
     }
@@ -74,12 +93,22 @@ impl BenchScale {
         cfg.finetune_steps = self.finetune;
         cfg.data_frac = self.data_frac;
         cfg.host_resident = self.host_resident;
+        cfg.batched_eval = self.batched_eval;
         cfg.eval_every = (self.steps / 3).max(8);
         cfg.steps_per_epoch = 16;
         // keep the same *final* temperature despite the short schedule,
         // as the paper does for Tiny ImageNet (Sec. 5.1.1)
         cfg.temp = TempSchedule::rescaled(self.steps / 16, 200);
         cfg
+    }
+
+    /// Sweep scheduling knobs for the figure harnesses.
+    pub fn sweep_opts(&self) -> SweepOptions {
+        SweepOptions {
+            workers: self.workers,
+            mode: self.sweep_mode,
+            vary_seeds: self.vary_seeds,
+        }
     }
 }
 

@@ -51,6 +51,15 @@ impl TransferStats {
     pub fn total_bytes(&self) -> u64 {
         self.h2d_bytes + self.d2h_bytes
     }
+
+    /// Fold another counter into this one (e.g. charge a shared-warmup
+    /// phase's traffic into a run that performed the warmup itself).
+    pub fn merge(&mut self, other: &TransferStats) {
+        self.h2d_bytes += other.h2d_bytes;
+        self.d2h_bytes += other.d2h_bytes;
+        self.h2d_tensors += other.h2d_tensors;
+        self.d2h_tensors += other.d2h_tensors;
+    }
 }
 
 /// Cheap copy-on-write snapshot of the device side of a state: shared
@@ -268,6 +277,26 @@ impl DeviceState {
         Ok(StateSnapshot {
             dev: self.dev.clone(),
         })
+    }
+
+    /// Fork a fresh state from a snapshot: the device side shares the
+    /// snapshot's buffers (Arc clones, no payload copies), the host
+    /// mirror starts empty/stale, and the transfer counters start at
+    /// zero — so a forked run's `TransferStats` covers only the work
+    /// it does itself. This is how every worker of a `ForkedWarmup`
+    /// sweep starts from the one shared post-warmup snapshot.
+    pub fn from_snapshot(snap: &StateSnapshot) -> Self {
+        let mut host = TrainState::default();
+        for sec in snap.dev.keys() {
+            host.sections.insert(sec.clone(), Vec::new());
+        }
+        DeviceState {
+            host,
+            dev: snap.dev.clone(),
+            host_stale: snap.dev.keys().cloned().collect(),
+            dev_stale: BTreeSet::new(),
+            stats: TransferStats::default(),
+        }
     }
 
     /// Restore a snapshot; the host mirror becomes fully stale.

@@ -1,10 +1,16 @@
 //! Self-contained runtime fixture: a tiny fake model whose artifacts
 //! are `// STUB:` programs the host backend can execute, letting the
-//! device-resident runtime be integration-tested and benchmarked
-//! end-to-end *without* real AOT artifacts or native XLA.
+//! device-resident runtime — and since the shared-warmup rework the
+//! *whole pipeline* (`Runner::run` / `run_from`, lambda sweeps,
+//! batched eval) — be integration-tested and benchmarked end-to-end
+//! *without* real AOT artifacts or native XLA.
 //!
-//! Used by `tests/device_state.rs` and `benches/step_marshal.rs`; not
-//! part of the search pipeline itself.
+//! The fixture ships every artifact the `Runner` binds (`init`,
+//! `warmup`, `search_<reg>`, `eval`, `eval_batched`) plus a graph
+//! file, so `coordinator::Context::load` works directly on the
+//! fixture directory. Used by `tests/device_state.rs`,
+//! `tests/sweep_fork.rs`, `benches/step_marshal.rs` and
+//! `benches/sweep_fork.rs`; not part of the search pipeline itself.
 
 use std::path::Path;
 
@@ -17,10 +23,13 @@ use crate::util::tensor::Tensor;
 pub const STUB_MODEL: &str = "stubnet";
 
 /// Manifest JSON for the fixture: four state sections shaped like a
-/// (very small) search state and two stub artifacts — `search`
-/// (consumes + returns all sections, 3 metrics) and `eval` (consumes
-/// params + theta, metrics only). The `search` weight leaves are
-/// 64x64 so per-step marshalling is measurable.
+/// (very small) search state and the full artifact set the pipeline
+/// binds. The `params`/`opt_w` ballast leaves are 64x64 so per-step
+/// marshalling is measurable; the `stem`/`head` leaves line up with
+/// `graph_stubnet.json` so `ResolvedLeaves`, Eq. 12 rescaling and
+/// discretization all resolve. `search` (legacy 6-input signature) and
+/// `search_size` (the pipeline's 12-input signature) share one stub
+/// program.
 const MANIFEST_JSON: &str = r#"{
   "pw_set": [0, 2, 4, 8],
   "px_set": [2, 4, 8],
@@ -32,31 +41,80 @@ const MANIFEST_JSON: &str = r#"{
       "num_classes": 4,
       "sections": {
         "params": [
-          {"name": "params['stem']['w']", "shape": [64, 64], "dtype": "f32"},
-          {"name": "params['stem']['b']", "shape": [64], "dtype": "f32"}
+          {"name": "params['stem']['w']", "shape": [3, 3, 1, 16], "dtype": "f32"},
+          {"name": "params['stem']['b']", "shape": [16], "dtype": "f32"},
+          {"name": "params['head']['w']", "shape": [16, 4], "dtype": "f32"},
+          {"name": "params['head']['b']", "shape": [4], "dtype": "f32"},
+          {"name": "params['ballast']['w']", "shape": [64, 64], "dtype": "f32"}
         ],
         "opt_w": [
-          {"name": "opt_w['stem']['w']", "shape": [64, 64], "dtype": "f32"},
-          {"name": "opt_w['stem']['b']", "shape": [64], "dtype": "f32"}
+          {"name": "opt_w['stem']['w']", "shape": [3, 3, 1, 16], "dtype": "f32"},
+          {"name": "opt_w['stem']['b']", "shape": [16], "dtype": "f32"},
+          {"name": "opt_w['head']['w']", "shape": [16, 4], "dtype": "f32"},
+          {"name": "opt_w['head']['b']", "shape": [4], "dtype": "f32"},
+          {"name": "opt_w['ballast']['w']", "shape": [64, 64], "dtype": "f32"}
         ],
         "theta": [
           {"name": "theta['gamma'][0]", "shape": [16, 4], "dtype": "f32"},
-          {"name": "theta['delta']", "shape": [2, 3], "dtype": "f32"}
+          {"name": "theta['gamma'][1]", "shape": [4, 4], "dtype": "f32"},
+          {"name": "theta['delta']", "shape": [1, 3], "dtype": "f32"}
         ],
         "opt_th": [
           {"name": "opt_th['gamma'][0]", "shape": [16, 4], "dtype": "f32"},
-          {"name": "opt_th['delta']", "shape": [2, 3], "dtype": "f32"}
+          {"name": "opt_th['gamma'][1]", "shape": [4, 4], "dtype": "f32"},
+          {"name": "opt_th['delta']", "shape": [1, 3], "dtype": "f32"}
         ]
       },
       "artifacts": {
+        "init": {
+          "file": "stub_init.hlo.txt",
+          "state_sections": [],
+          "extra_inputs": [
+            {"name": "seed", "shape": [], "dtype": "i32"}
+          ],
+          "outputs": ["params", "opt_w", "theta", "opt_th"],
+          "metrics": []
+        },
+        "warmup": {
+          "file": "stub_warmup.hlo.txt",
+          "state_sections": ["params", "opt_w"],
+          "extra_inputs": [
+            {"name": "x", "shape": [8, 4, 4, 1], "dtype": "f32"},
+            {"name": "y", "shape": [8], "dtype": "i32"},
+            {"name": "lr", "shape": [], "dtype": "f32"},
+            {"name": "t", "shape": [], "dtype": "f32"}
+          ],
+          "outputs": ["params", "opt_w"],
+          "metrics": ["loss", "acc"]
+        },
         "search": {
           "file": "stub_search.hlo.txt",
           "state_sections": ["params", "opt_w", "theta", "opt_th"],
           "extra_inputs": [
-            {"name": "x", "shape": [8, 16], "dtype": "f32"},
+            {"name": "x", "shape": [8, 4, 4, 1], "dtype": "f32"},
             {"name": "y", "shape": [8], "dtype": "i32"},
             {"name": "lr", "shape": [], "dtype": "f32"},
             {"name": "tau", "shape": [], "dtype": "f32"},
+            {"name": "pw_mask", "shape": [4], "dtype": "f32"},
+            {"name": "px_mask", "shape": [3], "dtype": "f32"}
+          ],
+          "outputs": ["params", "opt_w", "theta", "opt_th"],
+          "metrics": ["loss", "acc", "cost"]
+        },
+        "search_size": {
+          "file": "stub_search.hlo.txt",
+          "state_sections": ["params", "opt_w", "theta", "opt_th"],
+          "extra_inputs": [
+            {"name": "x", "shape": [8, 4, 4, 1], "dtype": "f32"},
+            {"name": "y", "shape": [8], "dtype": "i32"},
+            {"name": "lr_w", "shape": [], "dtype": "f32"},
+            {"name": "lr_th", "shape": [], "dtype": "f32"},
+            {"name": "tau", "shape": [], "dtype": "f32"},
+            {"name": "lambda", "shape": [], "dtype": "f32"},
+            {"name": "hard", "shape": [], "dtype": "f32"},
+            {"name": "noise", "shape": [], "dtype": "f32"},
+            {"name": "key", "shape": [], "dtype": "i32"},
+            {"name": "t", "shape": [], "dtype": "f32"},
             {"name": "pw_mask", "shape": [4], "dtype": "f32"},
             {"name": "px_mask", "shape": [3], "dtype": "f32"}
           ],
@@ -67,8 +125,26 @@ const MANIFEST_JSON: &str = r#"{
           "file": "stub_eval.hlo.txt",
           "state_sections": ["params", "theta"],
           "extra_inputs": [
-            {"name": "x", "shape": [8, 16], "dtype": "f32"},
-            {"name": "y", "shape": [8], "dtype": "i32"}
+            {"name": "x", "shape": [8, 4, 4, 1], "dtype": "f32"},
+            {"name": "y", "shape": [8], "dtype": "i32"},
+            {"name": "tau", "shape": [], "dtype": "f32"},
+            {"name": "hard", "shape": [], "dtype": "f32"},
+            {"name": "pw_mask", "shape": [4], "dtype": "f32"},
+            {"name": "px_mask", "shape": [3], "dtype": "f32"}
+          ],
+          "outputs": [],
+          "metrics": ["loss", "acc"]
+        },
+        "eval_batched": {
+          "file": "stub_eval_batched.hlo.txt",
+          "state_sections": ["params", "theta"],
+          "extra_inputs": [
+            {"name": "x_all", "shape": [0, 4, 4, 1], "dtype": "f32"},
+            {"name": "y_all", "shape": [0], "dtype": "i32"},
+            {"name": "tau", "shape": [], "dtype": "f32"},
+            {"name": "hard", "shape": [], "dtype": "f32"},
+            {"name": "pw_mask", "shape": [4], "dtype": "f32"},
+            {"name": "px_mask", "shape": [3], "dtype": "f32"}
           ],
           "outputs": [],
           "metrics": ["loss", "acc"]
@@ -79,23 +155,72 @@ const MANIFEST_JSON: &str = r#"{
 }
 "#;
 
-/// Write the fixture (manifest + stub artifacts) into `dir` and load
-/// its `Manifest`.
+/// Graph IR matching the manifest's `stem`/`head` leaves (two gamma
+/// groups, one activation delta) so the cost models, discretization
+/// and deploy transforms all run on the fixture.
+const GRAPH_JSON: &str = r#"{
+  "model": "stubnet", "in_shape": [4, 4, 1], "num_classes": 4, "batch": 8,
+  "layers": [
+    {"name": "stem", "kind": "conv", "cin": 1, "cout": 16, "k": 3, "stride": 1,
+     "out_h": 4, "out_w": 4, "gamma_group": 0, "in_group": -1,
+     "delta_idx": 0, "in_delta": -1, "prunable": true, "macs": 2304},
+    {"name": "head", "kind": "linear", "cin": 16, "cout": 4, "k": 1, "stride": 1,
+     "out_h": 1, "out_w": 1, "gamma_group": 1, "in_group": 0,
+     "delta_idx": -1, "in_delta": 0, "prunable": false, "macs": 64}
+  ],
+  "gamma_groups": [16, 4], "num_deltas": 1,
+  "pw_set": [0, 2, 4, 8], "px_set": [2, 4, 8]
+}
+"#;
+
+/// Write the fixture (manifest + graph + stub artifacts) into `dir`
+/// and load its `Manifest`.
 pub fn write_stub_fixture(dir: &Path) -> Result<Manifest> {
     std::fs::create_dir_all(dir)?;
     std::fs::write(dir.join("manifest.json"), MANIFEST_JSON)?;
-    // The search program perturbs every f32 state leaf each step so
+    std::fs::write(dir.join("graph_stubnet.json"), GRAPH_JSON)?;
+    let man = Manifest::load(dir)?;
+    let mm = man.model(STUB_MODEL)?;
+    // The init program's output shapes are derived from the manifest
+    // so the directive can never drift from the section layout.
+    let mut dims = Vec::new();
+    for sec in &mm.artifact("init")?.outputs {
+        for leaf in mm.section(sec)? {
+            dims.push(
+                leaf.shape
+                    .iter()
+                    .map(|d| d.to_string())
+                    .collect::<Vec<_>>()
+                    .join("x"),
+            );
+        }
+    }
+    std::fs::write(
+        dir.join("stub_init.hlo.txt"),
+        format!("// STUB: init dims={}\n", dims.join(",")),
+    )?;
+    // The train programs perturb every f32 state leaf each step so
     // dirty-tracking bugs change the trajectory; metrics mix *all*
     // inputs so argument-ordering bugs change the metrics.
     std::fs::write(
+        dir.join("stub_warmup.hlo.txt"),
+        "// STUB: affine scale=0.999 bias=0.0005 state=10 metrics=2\n",
+    )?;
+    std::fs::write(
         dir.join("stub_search.hlo.txt"),
-        "// STUB: affine scale=0.999 bias=0.0005 state=8 metrics=3\n",
+        "// STUB: affine scale=0.999 bias=0.0005 state=16 metrics=3\n",
     )?;
     std::fs::write(
         dir.join("stub_eval.hlo.txt"),
         "// STUB: affine scale=1.0 bias=0.0 state=0 metrics=2\n",
     )?;
-    Manifest::load(dir)
+    // Multi-batch eval: 8 broadcast state leaves (params + theta),
+    // then x at arg index 8, y at 9; tau/hard/masks broadcast after.
+    std::fs::write(
+        dir.join("stub_eval_batched.hlo.txt"),
+        "// STUB: evalchunks batch=8 x=8 metrics=2\n",
+    )?;
+    Ok(man)
 }
 
 fn fill(seed: usize, n: usize) -> Vec<f32> {
@@ -120,11 +245,11 @@ pub fn stub_train_state(mm: &ModelManifest) -> TrainState {
     st
 }
 
-/// Deterministic extra inputs for the fixture's `search` artifact, in
-/// manifest order: x, y, lr, tau, pw_mask, px_mask. `step` varies the
-/// batch so consecutive steps see different data.
+/// Deterministic extra inputs for the fixture's legacy `search`
+/// artifact, in manifest order: x, y, lr, tau, pw_mask, px_mask.
+/// `step` varies the batch so consecutive steps see different data.
 pub fn stub_search_extras(step: usize) -> Vec<Tensor> {
-    let x = Tensor::f32(vec![8, 16], fill(step * 101 + 7, 8 * 16));
+    let x = Tensor::f32(vec![8, 4, 4, 1], fill(step * 101 + 7, 8 * 4 * 4));
     let y = Tensor::i32(vec![8], (0..8).map(|i| ((i + step) % 4) as i32).collect());
     vec![
         x,

@@ -108,6 +108,15 @@ impl TrainState {
     }
 }
 
+/// Does a concrete tensor shape satisfy a manifest signature shape?
+/// A `0` in the manifest entry is a wildcard dimension — used by the
+/// batched-eval artifacts, whose leading (whole-split) dimension
+/// depends on the dataset scale rather than the lowering.
+pub(crate) fn shape_matches(expected: &[usize], got: &[usize]) -> bool {
+    expected.len() == got.len()
+        && expected.iter().zip(got).all(|(&e, &g)| e == 0 || e == g)
+}
+
 /// Split an init artifact's flat outputs into per-section chunks in
 /// manifest order — the one unpack used by both the host
 /// (`TrainState::init`) and device (`DeviceState::init`) paths, so
@@ -204,7 +213,7 @@ impl StepFn {
             }
         }
         for (t, d) in extra.iter().zip(&self.desc.extra_inputs) {
-            if t.shape != d.shape {
+            if !shape_matches(&d.shape, &t.shape) {
                 return Err(Error::Shape(format!(
                     "extra input '{}': expected {:?}, got {:?}",
                     d.name, d.shape, t.shape
@@ -245,17 +254,31 @@ impl StepFn {
         Ok(metrics)
     }
 
-    /// Execute one step with the state resident on device: the input
-    /// sections are the previous step's output buffers (uploaded only
-    /// if a host touchpoint dirtied them), the outputs replace them
-    /// without visiting the host, and only `extra` host args plus the
-    /// scalar metrics cross the boundary.
-    pub fn step_device(
+    /// Index of a metric within this artifact's outputs (resolve once,
+    /// not per eval call).
+    pub fn metric_index(&self, name: &str) -> Result<usize> {
+        self.desc
+            .metrics
+            .iter()
+            .position(|m| m == name)
+            .ok_or_else(|| {
+                Error::manifest(format!(
+                    "artifact '{}' has no metric '{name}'",
+                    self.exe.name
+                ))
+            })
+    }
+
+    /// Shared device-resident dispatch: gather state + extra buffers,
+    /// execute, install the output sections, and return the trailing
+    /// metric buffers (still on device — the caller decides whether to
+    /// download scalars or whole vectors).
+    fn dispatch_device(
         &self,
         eng: &Engine,
         state: &mut DeviceState,
         extra: &[StepArg<'_>],
-    ) -> Result<Metrics> {
+    ) -> Result<Vec<xla::PjRtBuffer>> {
         if extra.len() != self.desc.extra_inputs.len() {
             return Err(Error::msg(format!(
                 "step '{}' wants {} extra inputs, got {}",
@@ -272,7 +295,7 @@ impl StepFn {
         for (a, d) in extra.iter().zip(&self.desc.extra_inputs) {
             match a {
                 StepArg::Host(t) => {
-                    if t.shape != d.shape {
+                    if !shape_matches(&d.shape, &t.shape) {
                         return Err(Error::Shape(format!(
                             "extra input '{}': expected {:?}, got {:?}",
                             d.name, d.shape, t.shape
@@ -293,7 +316,7 @@ impl StepFn {
                         .iter()
                         .map(|&v| v as usize)
                         .collect();
-                    if dims != d.shape {
+                    if !shape_matches(&d.shape, &dims) {
                         return Err(Error::Shape(format!(
                             "extra input '{}': expected {:?}, got device buffer {:?}",
                             d.name, d.shape, dims
@@ -326,14 +349,50 @@ impl StepFn {
                 outs.by_ref().take(n).map(Arc::new).collect();
             state.set_device_section(sec, bufs)?;
         }
+        Ok(outs.collect())
+    }
+
+    /// Execute one step with the state resident on device: the input
+    /// sections are the previous step's output buffers (uploaded only
+    /// if a host touchpoint dirtied them), the outputs replace them
+    /// without visiting the host, and only `extra` host args plus the
+    /// scalar metrics cross the boundary.
+    pub fn step_device(
+        &self,
+        eng: &Engine,
+        state: &mut DeviceState,
+        extra: &[StepArg<'_>],
+    ) -> Result<Metrics> {
+        let bufs = self.dispatch_device(eng, state, extra)?;
         let mut metrics = Metrics::default();
-        for (name, buf) in self.desc.metrics.iter().zip(outs) {
+        for (name, buf) in self.desc.metrics.iter().zip(bufs) {
             let v = buf.to_literal_sync()?.to_vec::<f32>()?[0];
             state.stats.d2h_bytes += 4;
             state.stats.d2h_tensors += 1;
             metrics.values.insert(name.clone(), v);
         }
         Ok(metrics)
+    }
+
+    /// Like [`StepFn::step_device`] but downloads each metric output
+    /// as a whole tensor (in `desc.metrics` order) — the return path
+    /// of the batched-eval artifacts, whose "metrics" are per-chunk
+    /// reduction vectors rather than scalars.
+    pub fn step_device_tensors(
+        &self,
+        eng: &Engine,
+        state: &mut DeviceState,
+        extra: &[StepArg<'_>],
+    ) -> Result<Vec<Tensor>> {
+        let bufs = self.dispatch_device(eng, state, extra)?;
+        let mut outs = Vec::with_capacity(bufs.len());
+        for buf in bufs {
+            let t = literal_to_tensor(&buf.to_literal_sync()?)?;
+            state.stats.d2h_bytes += (t.len() * 4) as u64;
+            state.stats.d2h_tensors += 1;
+            outs.push(t);
+        }
+        Ok(outs)
     }
 }
 

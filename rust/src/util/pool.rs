@@ -3,9 +3,22 @@
 //! The lambda-sweep scheduler runs independent searches concurrently;
 //! each task owns its PJRT executables and state, so plain scoped
 //! threads with a bounded worker count are all we need.
+//!
+//! Results are written through per-slot cells (one lock per slot,
+//! never contended: exactly one worker claims an index), so task
+//! completions do not serialize on a shared results lock. A panicking
+//! task stops the pool from claiming further work and the *original*
+//! panic payload is re-raised on the caller's thread after all
+//! workers drain — not a poisoned-mutex or `unwrap`-on-`None`
+//! secondary panic.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Run `f(i, &items[i])` for every item on up to `workers` threads and
-/// return results in input order.
+/// return results in input order. If any task panics, the first panic
+/// is propagated to the caller (remaining tasks are not started).
 pub fn parallel_map<T, R, F>(items: &[T], workers: usize, f: F) -> Vec<R>
 where
     T: Sync,
@@ -17,26 +30,49 @@ where
         return Vec::new();
     }
     let workers = workers.max(1).min(n);
-    let mut results: Vec<Option<R>> = Vec::with_capacity(n);
-    results.resize_with(n, || None);
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    let results_mx = std::sync::Mutex::new(&mut results);
+    // One cell per slot: a worker only ever touches the slot of the
+    // index it claimed, so these locks never block each other.
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    let abort = AtomicBool::new(false);
+    let first_panic: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
 
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if abort.load(Ordering::Acquire) {
+                    break;
+                }
+                let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;
                 }
-                let r = f(i, &items[i]);
-                let mut guard = results_mx.lock().unwrap();
-                guard[i] = Some(r);
+                match catch_unwind(AssertUnwindSafe(|| f(i, &items[i]))) {
+                    Ok(r) => *slots[i].lock().unwrap() = Some(r),
+                    Err(payload) => {
+                        abort.store(true, Ordering::Release);
+                        let mut guard = first_panic.lock().unwrap();
+                        if guard.is_none() {
+                            *guard = Some(payload);
+                        }
+                        break;
+                    }
+                }
             });
         }
     });
 
-    results.into_iter().map(|r| r.unwrap()).collect()
+    if let Some(payload) = first_panic.into_inner().unwrap() {
+        resume_unwind(payload);
+    }
+    slots
+        .into_iter()
+        .map(|cell| {
+            cell.into_inner()
+                .expect("slot lock poisoned")
+                .expect("slot not filled despite no panic")
+        })
+        .collect()
 }
 
 /// Number of workers to use by default: physical parallelism minus one
@@ -79,5 +115,65 @@ mod tests {
         let items: Vec<u32> = (0..57).collect();
         let _ = parallel_map(&items, 5, |_, _| counter.fetch_add(1, Ordering::SeqCst));
         assert_eq!(counter.load(Ordering::SeqCst), 57);
+    }
+
+    /// The original panic message must surface — not a poisoned-mutex
+    /// or `unwrap`-on-`None` secondary panic.
+    #[test]
+    fn task_panic_propagates_original_payload() {
+        let items: Vec<u32> = (0..16).collect();
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            parallel_map(&items, 4, |_, &x| {
+                if x == 5 {
+                    panic!("boom at {x}");
+                }
+                x
+            })
+        }));
+        let payload = result.expect_err("panic must propagate");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains("boom at 5"), "unexpected payload: {msg}");
+    }
+
+    /// A panic stops the pool from claiming further work.
+    #[test]
+    fn panic_aborts_remaining_work() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let started = AtomicUsize::new(0);
+        let items: Vec<u32> = (0..1000).collect();
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            // single worker: deterministic claim order, so everything
+            // after the panicking item must remain unstarted
+            parallel_map(&items, 1, |_, &x| {
+                started.fetch_add(1, Ordering::SeqCst);
+                if x == 3 {
+                    panic!("early");
+                }
+                x
+            })
+        }));
+        assert!(result.is_err());
+        assert_eq!(started.load(Ordering::SeqCst), 4);
+    }
+
+    /// Concurrent panics: exactly one (the first stored) propagates.
+    #[test]
+    fn concurrent_panics_pick_one() {
+        let items: Vec<u32> = (0..64).collect();
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            parallel_map(&items, 8, |_, &x| {
+                if x % 2 == 0 {
+                    panic!("even {x}");
+                }
+                x
+            })
+        }));
+        let payload = result.expect_err("panic must propagate");
+        let msg = payload.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.starts_with("even "), "unexpected payload: {msg}");
     }
 }

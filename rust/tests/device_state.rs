@@ -160,8 +160,9 @@ fn host_edits_are_uploaded_before_next_step() {
             *v *= 2.0;
         }
     }
-    // partial sync downloaded only theta (2 small leaves, 70 floats)
-    assert_eq!(dev.stats.d2h_bytes - d2h_before, 70 * 4);
+    // partial sync downloaded only theta (3 small leaves, 83 floats:
+    // gamma [16,4] + [4,4] + delta [1,3])
+    assert_eq!(dev.stats.d2h_bytes - d2h_before, 83 * 4);
     for step in 2..4 {
         fx.step_legacy(&search, &mut legacy, step);
         fx.step_dev(&search, &mut dev, step);
@@ -203,7 +204,7 @@ fn device_residency_slashes_transfer_bytes() {
         compat.force_host_roundtrip().unwrap();
     }
     // both paths upload the same extras; the compat path re-marshals
-    // the whole state (~33 KB each way) every step on top of that
+    // the whole state (~34 KB each way) every step on top of that
     assert!(
         dev.stats.h2d_bytes * 5 < compat.stats.h2d_bytes,
         "device h2d {} vs compat h2d {}",
@@ -251,7 +252,7 @@ fn stale_and_missing_sections_error() {
     let mut dev = DeviceState::from_host(fx.init_state());
     assert!(dev.device_bufs("params").is_err(), "stale section served");
     dev.sync_to_device(&fx.eng, &["params".to_string()]).unwrap();
-    assert_eq!(dev.device_bufs("params").unwrap().len(), 2);
+    assert_eq!(dev.device_bufs("params").unwrap().len(), 5);
     assert!(dev.device_bufs("nope").is_err());
     assert!(dev.host_view_partial(&["params"]).is_ok());
 }

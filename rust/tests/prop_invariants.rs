@@ -300,3 +300,166 @@ fn checkpoint_roundtrip_random_states() {
         },
     );
 }
+
+// ---- ParetoFront: iso queries, duplicates, emptiness ---------------
+
+fn random_points(rng: &mut Pcg64, max: u64) -> Vec<(f64, f64)> {
+    (0..rng.below(max) + 1)
+        // coarse grid so duplicates and ties actually occur
+        .map(|_| {
+            (
+                (rng.next_f64() * 8.0).round(),
+                (rng.next_f64() * 8.0).round() / 8.0,
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn pareto_iso_queries_return_optimal_front_members() {
+    Prop::new(120).check(
+        "iso_accuracy / iso_cost optimal and on the front",
+        |rng| {
+            let pts = random_points(rng, 24);
+            let target = rng.next_f64();
+            let budget = rng.next_f64() * 8.0;
+            (pts, target, budget)
+        },
+        |(pts, t, b)| shrink_vec(pts).into_iter().map(|p| (p, *t, *b)).collect(),
+        |(pts, target, budget)| {
+            let front =
+                ParetoFront::from_points(pts.iter().map(|(c, a)| Point::new(*c, *a, "")));
+            let is_member = |p: &Point| {
+                front
+                    .points()
+                    .iter()
+                    .any(|q| q.cost == p.cost && q.acc == p.acc)
+            };
+            match front.iso_accuracy(*target) {
+                Some(p) => {
+                    if !is_member(p) {
+                        return Err("iso_accuracy returned a non-member".into());
+                    }
+                    if p.acc < *target {
+                        return Err(format!("iso_accuracy below target: {} < {target}", p.acc));
+                    }
+                    // optimality vs the *input* set, not just the front
+                    if pts.iter().any(|&(c, a)| a >= *target && c < p.cost) {
+                        return Err("iso_accuracy not the cheapest qualifying point".into());
+                    }
+                }
+                None => {
+                    if pts.iter().any(|&(_, a)| a >= *target) {
+                        return Err("iso_accuracy missed a qualifying point".into());
+                    }
+                }
+            }
+            match front.iso_cost(*budget) {
+                Some(p) => {
+                    if !is_member(p) {
+                        return Err("iso_cost returned a non-member".into());
+                    }
+                    if p.cost > *budget {
+                        return Err(format!("iso_cost above budget: {} > {budget}", p.cost));
+                    }
+                    if pts.iter().any(|&(c, a)| c <= *budget && a > p.acc) {
+                        return Err("iso_cost not the most accurate qualifying point".into());
+                    }
+                }
+                None => {
+                    if pts.iter().any(|&(c, _)| c <= *budget) {
+                        return Err("iso_cost missed a qualifying point".into());
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn pareto_front_has_no_coordinate_duplicates() {
+    Prop::new(120).check(
+        "front is a set in (cost, acc)",
+        |rng| {
+            // duplicate-heavy input: draw, then replay a prefix
+            let mut pts = random_points(rng, 16);
+            let extra = rng.below(pts.len() as u64 + 1) as usize;
+            let dup: Vec<_> = pts[..extra].to_vec();
+            pts.extend(dup);
+            pts
+        },
+        shrink_vec,
+        |pts| {
+            let front =
+                ParetoFront::from_points(pts.iter().map(|(c, a)| Point::new(*c, *a, "")));
+            for (i, p) in front.points().iter().enumerate() {
+                for q in &front.points()[i + 1..] {
+                    if p.cost == q.cost && p.acc == q.acc {
+                        return Err(format!("duplicate on front: {p:?}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn pareto_front_insert_order_independent_under_shuffle() {
+    Prop::new(80).check(
+        "front identical under random permutation of inserts",
+        |rng| {
+            let pts = random_points(rng, 16);
+            let mut shuffled = pts.clone();
+            rng.shuffle(&mut shuffled);
+            (pts, shuffled)
+        },
+        |_| vec![],
+        |(pts, shuffled)| {
+            let key = |f: &ParetoFront| -> Vec<(u64, u64)> {
+                f.points()
+                    .iter()
+                    .map(|p| (p.cost.to_bits(), p.acc.to_bits()))
+                    .collect()
+            };
+            let f1 = ParetoFront::from_points(pts.iter().map(|(c, a)| Point::new(*c, *a, "")));
+            let f2 = ParetoFront::from_points(
+                shuffled.iter().map(|(c, a)| Point::new(*c, *a, "")),
+            );
+            if key(&f1) != key(&f2) {
+                return Err(format!("{:?} vs {:?}", f1.points(), f2.points()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn pareto_front_edge_cases() {
+    // empty front: every query is None and the front reports empty
+    let empty = ParetoFront::new();
+    assert!(empty.is_empty());
+    assert_eq!(empty.len(), 0);
+    assert!(empty.iso_accuracy(0.0).is_none());
+    assert!(empty.iso_cost(f64::MAX).is_none());
+    assert!(empty.best_acc().is_none());
+
+    // exact duplicates: second insert is rejected, first tag survives
+    let mut f = ParetoFront::new();
+    assert!(f.insert(Point::new(1.0, 0.5, "first")));
+    assert!(!f.insert(Point::new(1.0, 0.5, "second")));
+    assert_eq!(f.len(), 1);
+    assert_eq!(f.points()[0].tag, "first");
+
+    // same cost, better accuracy still evicts
+    assert!(f.insert(Point::new(1.0, 0.9, "better")));
+    assert_eq!(f.len(), 1);
+    assert_eq!(f.points()[0].tag, "better");
+
+    // a single point answers both iso queries
+    assert_eq!(f.iso_accuracy(0.9).unwrap().tag, "better");
+    assert!(f.iso_accuracy(0.91).is_none());
+    assert_eq!(f.iso_cost(1.0).unwrap().tag, "better");
+    assert!(f.iso_cost(0.99).is_none());
+}

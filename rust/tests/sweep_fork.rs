@@ -1,0 +1,326 @@
+//! Shared-warmup forked sweeps + batched device-resident eval, tested
+//! end-to-end on the stub fixture (`runtime::fixture`), which now
+//! ships every artifact the pipeline binds — so `Runner::run`,
+//! `run_from` forks and both eval paths execute for real without AOT
+//! artifacts or native XLA.
+//!
+//! Asserts the tentpole contract:
+//! (a) `ForkedWarmup` and `Independent` sweeps are bitwise identical
+//!     for the same seeds (assignments, accuracies, history, front);
+//! (b) a forked sweep executes the warmup exactly once (step counters
+//!     + transfer stats);
+//! (c) batched eval matches per-batch eval exactly — ragged final
+//!     chunk included — while moving strictly fewer bytes.
+
+use std::path::PathBuf;
+
+use mixprec::assignment::PrecisionMasks;
+use mixprec::coordinator::{
+    sweep_lambdas, Context, EvalBufs, MaskBufs, PipelineConfig, SweepMode,
+    SweepOptions,
+};
+use mixprec::data::Split;
+use mixprec::runtime::{fixture, DeviceState, StepFn, TransferStats};
+
+struct Fx {
+    dir: PathBuf,
+    ctx: Context,
+}
+
+impl Fx {
+    /// data_frac 0.07 -> n_val = n_test = 35, deliberately not a
+    /// multiple of the fixture batch (8) so every eval path covers a
+    /// ragged (padded) final chunk.
+    fn new(tag: &str) -> Fx {
+        let dir = std::env::temp_dir().join(format!(
+            "mixprec_sweepfork_{tag}_{}",
+            std::process::id()
+        ));
+        fixture::write_stub_fixture(&dir).expect("fixture");
+        let ctx = Context::load(&dir, 0.07).expect("context");
+        Fx { dir, ctx }
+    }
+}
+
+impl Drop for Fx {
+    fn drop(&mut self) {
+        std::fs::remove_dir_all(&self.dir).ok();
+    }
+}
+
+fn quick_cfg() -> PipelineConfig {
+    let mut cfg = PipelineConfig::quick(fixture::STUB_MODEL);
+    cfg.warmup_steps = 12;
+    cfg.search_steps = 24;
+    cfg.finetune_steps = 6;
+    cfg.eval_every = 8;
+    cfg.steps_per_epoch = 8;
+    cfg
+}
+
+fn opts(mode: SweepMode, workers: usize) -> SweepOptions {
+    SweepOptions {
+        workers,
+        mode,
+        // shared seed in both modes: the equivalence baseline
+        vary_seeds: false,
+    }
+}
+
+const LAMBDAS: [f64; 3] = [0.05, 0.5, 5.0];
+
+/// Bitwise history comparison (warmup records carry a NaN cost, so
+/// `PartialEq` on f32 would treat identical trajectories as unequal).
+fn assert_history_eq(a: &[mixprec::coordinator::Record], b: &[mixprec::coordinator::Record]) {
+    assert_eq!(a.len(), b.len(), "history length diverged");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.phase, y.phase);
+        assert_eq!(x.step, y.step);
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "{}[{}] loss", x.phase, x.step);
+        assert_eq!(x.acc.to_bits(), y.acc.to_bits(), "{}[{}] acc", x.phase, x.step);
+        assert_eq!(x.cost.to_bits(), y.cost.to_bits(), "{}[{}] cost", x.phase, x.step);
+    }
+}
+
+/// (a) Forked and independent sweeps are bitwise identical when they
+/// share seeds — same assignments, accuracies, histories, fronts.
+#[test]
+fn forked_sweep_matches_independent_bitwise() {
+    let fx = Fx::new("equiv");
+    let runner = fx.ctx.runner(fixture::STUB_MODEL).unwrap();
+    let cfg = quick_cfg();
+    let forked = sweep_lambdas(
+        &runner,
+        &cfg,
+        &LAMBDAS,
+        "size",
+        &opts(SweepMode::ForkedWarmup, 1),
+    )
+    .unwrap();
+    let indep = sweep_lambdas(
+        &runner,
+        &cfg,
+        &LAMBDAS,
+        "size",
+        &opts(SweepMode::Independent, 1),
+    )
+    .unwrap();
+    assert_eq!(forked.runs.len(), indep.runs.len());
+    for (f, i) in forked.runs.iter().zip(&indep.runs) {
+        assert_eq!(f.lambda, i.lambda);
+        assert_eq!(f.assignment, i.assignment, "assignment diverged at lam={}", f.lambda);
+        assert_eq!(
+            f.val_acc.to_bits(),
+            i.val_acc.to_bits(),
+            "val acc diverged at lam={}",
+            f.lambda
+        );
+        assert_eq!(
+            f.test_acc.to_bits(),
+            i.test_acc.to_bits(),
+            "test acc diverged at lam={}",
+            f.lambda
+        );
+        // history equality covers the whole trajectory: warmup records
+        // (carried from the shared phase), per-step losses (batch-order
+        // sensitive) and eval records
+        assert_history_eq(&f.history, &i.history);
+    }
+    let fp = forked.front();
+    let ip = indep.front();
+    assert_eq!(fp.len(), ip.len());
+    for (a, b) in fp.points().iter().zip(ip.points()) {
+        assert_eq!(a.cost.to_bits(), b.cost.to_bits());
+        assert_eq!(a.acc.to_bits(), b.acc.to_bits());
+    }
+}
+
+/// Parallel workers fork from the same snapshot concurrently and must
+/// not perturb each other (or the shared `WarmStart`).
+#[test]
+fn forked_sweep_is_deterministic_across_worker_counts() {
+    let fx = Fx::new("workers");
+    let runner = fx.ctx.runner(fixture::STUB_MODEL).unwrap();
+    let cfg = quick_cfg();
+    let solo = sweep_lambdas(
+        &runner,
+        &cfg,
+        &LAMBDAS,
+        "size",
+        &opts(SweepMode::ForkedWarmup, 1),
+    )
+    .unwrap();
+    let pooled = sweep_lambdas(
+        &runner,
+        &cfg,
+        &LAMBDAS,
+        "size",
+        &opts(SweepMode::ForkedWarmup, 3),
+    )
+    .unwrap();
+    for (a, b) in solo.runs.iter().zip(&pooled.runs) {
+        assert_eq!(a.assignment, b.assignment);
+        assert_eq!(a.val_acc.to_bits(), b.val_acc.to_bits());
+        assert_eq!(a.test_acc.to_bits(), b.test_acc.to_bits());
+    }
+}
+
+/// (b) Warmup executes exactly once per forked sweep; the savings show
+/// up in both the step counters and the transfer stats.
+#[test]
+fn forked_sweep_runs_warmup_exactly_once() {
+    let fx = Fx::new("once");
+    let runner = fx.ctx.runner(fixture::STUB_MODEL).unwrap();
+    let cfg = quick_cfg();
+    let forked = sweep_lambdas(
+        &runner,
+        &cfg,
+        &LAMBDAS,
+        "size",
+        &opts(SweepMode::ForkedWarmup, 1),
+    )
+    .unwrap();
+    let indep = sweep_lambdas(
+        &runner,
+        &cfg,
+        &LAMBDAS,
+        "size",
+        &opts(SweepMode::Independent, 1),
+    )
+    .unwrap();
+    // step counters: one shared phase vs one phase per lambda
+    assert_eq!(forked.warmup_steps_run, cfg.warmup_steps);
+    assert_eq!(indep.warmup_steps_run, cfg.warmup_steps * LAMBDAS.len());
+    assert_eq!(
+        forked.warmup_steps_saved,
+        cfg.warmup_steps * (LAMBDAS.len() - 1)
+    );
+    assert_eq!(indep.warmup_steps_saved, 0);
+    // the shared phase did real work...
+    assert!(forked.shared_warmup.h2d_bytes > 0);
+    assert!(forked.shared_warmup_s >= 0.0);
+    // ...and each forked run is exactly one warmup phase lighter
+    for (f, i) in forked.runs.iter().zip(&indep.runs) {
+        assert_eq!(f.steps_run + cfg.warmup_steps, i.steps_run);
+        assert_eq!(f.timing.warmup_s, 0.0, "fork must not charge warmup time");
+        assert!(
+            f.transfer.h2d_bytes < i.transfer.h2d_bytes,
+            "fork h2d {} not below independent h2d {}",
+            f.transfer.h2d_bytes,
+            i.transfer.h2d_bytes
+        );
+    }
+    // whole-sweep traffic: shared warmup counted once must still beat
+    // per-lambda warmups
+    let forked_total: u64 = forked.shared_warmup.total_bytes()
+        + forked.runs.iter().map(|r| r.transfer.total_bytes()).sum::<u64>();
+    let indep_total: u64 =
+        indep.runs.iter().map(|r| r.transfer.total_bytes()).sum::<u64>();
+    assert!(
+        forked_total < indep_total,
+        "forked sweep moved {forked_total} B, independent {indep_total} B"
+    );
+}
+
+fn stats_delta(after: TransferStats, before: TransferStats) -> (u64, u64) {
+    (
+        after.h2d_bytes - before.h2d_bytes,
+        after.d2h_bytes - before.d2h_bytes,
+    )
+}
+
+/// (c) Batched eval == per-batch eval bitwise, ragged chunk included,
+/// with strictly fewer host<->device bytes; the split upload is cached
+/// across calls.
+#[test]
+fn batched_eval_matches_per_batch_exactly() {
+    let fx = Fx::new("eval");
+    let mm = fx.ctx.man.model(fixture::STUB_MODEL).unwrap();
+    let runner = fx.ctx.runner(fixture::STUB_MODEL).unwrap();
+    let data_cfg = &fx.ctx.dataset(fixture::STUB_MODEL).cfg;
+    // the fixture invariant this test relies on: a ragged final chunk
+    assert_ne!(data_cfg.n_val % mm.batch, 0, "val split must be ragged");
+    assert_ne!(data_cfg.n_test % mm.batch, 0, "test split must be ragged");
+
+    let eval = StepFn::bind(&fx.ctx.eng, &fx.ctx.man, mm, "eval").unwrap();
+    let eval_b = StepFn::bind(&fx.ctx.eng, &fx.ctx.man, mm, "eval_batched").unwrap();
+    let mut state = DeviceState::init(&fx.ctx.eng, &fx.ctx.man, mm, 42).unwrap();
+    let masks = MaskBufs::new(&fx.ctx.eng, &PrecisionMasks::joint()).unwrap();
+    let mut bufs = EvalBufs::new();
+
+    for (split, tau) in [(Split::Val, 0.8f32), (Split::Test, 0.3f32)] {
+        let before = state.stats;
+        let (l_pb, a_pb) = runner
+            .evaluate(&eval, &mut state, split, &masks, tau, true, false)
+            .unwrap();
+        let (pb_h2d, pb_d2h) = stats_delta(state.stats, before);
+
+        let before = state.stats;
+        let (l_b, a_b) = runner
+            .evaluate_batched(&eval_b, &mut state, split, &mut bufs, &masks, tau, true, false)
+            .unwrap();
+        let (b_h2d, b_d2h) = stats_delta(state.stats, before);
+
+        assert_eq!(l_pb.to_bits(), l_b.to_bits(), "{split:?} loss diverged");
+        assert_eq!(a_pb.to_bits(), a_b.to_bits(), "{split:?} acc diverged");
+        // first batched call uploads the split once but skips the
+        // per-chunk scalar re-uploads: strictly fewer bytes
+        assert!(
+            b_h2d + b_d2h < pb_h2d + pb_d2h,
+            "{split:?}: batched {b_h2d}+{b_d2h} B not below per-batch {pb_h2d}+{pb_d2h} B"
+        );
+
+        // second batched call reuses the cached split: only the two
+        // scalar knobs cross, metrics come back
+        let before = state.stats;
+        let (l_b2, a_b2) = runner
+            .evaluate_batched(&eval_b, &mut state, split, &mut bufs, &masks, tau, true, false)
+            .unwrap();
+        let (c_h2d, _c_d2h) = stats_delta(state.stats, before);
+        assert_eq!(l_b2.to_bits(), l_b.to_bits());
+        assert_eq!(a_b2.to_bits(), a_b.to_bits());
+        assert_eq!(c_h2d, 8, "cached eval should upload only tau + hard");
+    }
+}
+
+/// Full pipelines with batched vs per-batch eval produce identical
+/// results while the batched run moves strictly fewer bytes.
+#[test]
+fn pipeline_with_batched_eval_is_equivalent_and_cheaper() {
+    let fx = Fx::new("pipeline");
+    let runner = fx.ctx.runner(fixture::STUB_MODEL).unwrap();
+    let cfg = quick_cfg();
+    let mut cfg_pb = cfg.clone();
+    cfg_pb.batched_eval = false;
+    let batched = runner.run(&cfg).unwrap();
+    let per_batch = runner.run(&cfg_pb).unwrap();
+    assert_eq!(batched.assignment, per_batch.assignment);
+    assert_eq!(batched.val_acc.to_bits(), per_batch.val_acc.to_bits());
+    assert_eq!(batched.test_acc.to_bits(), per_batch.test_acc.to_bits());
+    assert_history_eq(&batched.history, &per_batch.history);
+    assert!(
+        batched.transfer.total_bytes() < per_batch.transfer.total_bytes(),
+        "batched {} B not below per-batch {} B",
+        batched.transfer.total_bytes(),
+        per_batch.transfer.total_bytes()
+    );
+}
+
+/// `run_from` refuses a config whose warmup trajectory cannot match
+/// the snapshot it is forking.
+#[test]
+fn run_from_rejects_mismatched_config() {
+    let fx = Fx::new("guard");
+    let runner = fx.ctx.runner(fixture::STUB_MODEL).unwrap();
+    let cfg = quick_cfg();
+    let ws = runner.warmup(&cfg).unwrap();
+    let mut bad_seed = cfg.clone();
+    bad_seed.seed += 1;
+    assert!(runner.run_from(&ws, &bad_seed).is_err());
+    let mut bad_warmup = cfg.clone();
+    bad_warmup.warmup_steps += 1;
+    assert!(runner.run_from(&ws, &bad_warmup).is_err());
+    // the matching config forks fine (and more than once)
+    assert!(runner.run_from(&ws, &cfg).is_ok());
+    assert!(runner.run_from(&ws, &cfg).is_ok());
+}

@@ -281,68 +281,187 @@ impl Literal {
 // ---------------------------------------------------------------------------
 
 /// A deterministic program the host backend can actually run, parsed
-/// from the first `// STUB:` line of an HLO text file:
+/// from the first `// STUB:` line of an HLO text file. Three kinds:
 ///
 /// ```text
 /// // STUB: affine scale=0.995 bias=0.001 state=8 metrics=3
+/// // STUB: init dims=3x3x1x16,16,16x4
+/// // STUB: evalchunks batch=8 x=8 metrics=2
 /// ```
 ///
-/// Execution takes the first `state` arguments as the new state
-/// (`x * scale + bias` elementwise for f32, identity for i32) and
-/// appends `metrics` scalar f32 outputs, each `(j+1) * S` where
-/// `S = sum_i (i+1) * mean(arg_i)` over *all* arguments — so any
-/// permutation or omission of inputs changes the metrics and is caught
-/// by the equivalence tests.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct StubProgram {
-    pub scale: f32,
-    pub bias: f32,
-    pub n_state: usize,
-    pub n_metrics: usize,
+/// * `affine` takes the first `state` arguments as the new state
+///   (`x * scale + bias` elementwise for f32, identity for i32) and
+///   appends `metrics` scalar f32 outputs, each `(j+1) * S` where
+///   `S = sum_i (i+1) * mean(arg_i)` over *all* arguments — so any
+///   permutation or omission of inputs changes the metrics and is
+///   caught by the equivalence tests.
+/// * `init` takes a scalar seed and returns one deterministic
+///   seed-dependent f32 array per `dims` entry (the state factory
+///   behind `DeviceState::init` on the fixture).
+/// * `evalchunks` is the multi-batch eval program: argument `x` (f32,
+///   leading dim `n`) and the following argument `y` are split into
+///   `n / batch` chunks, every other argument is broadcast, and each
+///   metric comes back as an `[n_chunks]` vector whose element `c` is
+///   exactly what `affine` would have produced for chunk `c` alone —
+///   per-chunk reductions stay on device, bitwise identical to the
+///   per-batch dispatch loop.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StubProgram {
+    Affine {
+        scale: f32,
+        bias: f32,
+        n_state: usize,
+        n_metrics: usize,
+    },
+    Init {
+        dims: Vec<Vec<i64>>,
+    },
+    EvalChunks {
+        batch: usize,
+        x_arg: usize,
+        n_metrics: usize,
+    },
+}
+
+/// Weighted-mean mix of all (virtual) arguments, in argument order —
+/// the shared metric formula of `affine` and `evalchunks`. Addition
+/// order is part of the contract: `evalchunks` must reproduce it
+/// bitwise per chunk.
+fn metric_mix(means: impl Iterator<Item = f64>) -> f64 {
+    means
+        .enumerate()
+        .map(|(i, m)| (i + 1) as f64 * m)
+        .sum()
+}
+
+fn mean_f32(v: &[f32]) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64
+}
+
+fn mean_i32(v: &[i32]) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64
+}
+
+/// Deterministic seed-dependent fill for the `init` program.
+fn init_value(seed: i64, leaf: i64, k: i64) -> f32 {
+    let h = (seed
+        .wrapping_mul(1_000_003)
+        .wrapping_add(leaf.wrapping_mul(7_919))
+        .wrapping_add(k.wrapping_mul(104_729)))
+    .rem_euclid(997);
+    h as f32 / 997.0 - 0.5
 }
 
 impl StubProgram {
     fn parse(line: &str) -> Option<StubProgram> {
         let rest = line.trim().strip_prefix("//")?.trim().strip_prefix("STUB:")?;
         let mut words = rest.split_whitespace();
-        if words.next()? != "affine" {
-            return None;
-        }
-        let mut prog = StubProgram {
-            scale: 1.0,
-            bias: 0.0,
-            n_state: 0,
-            n_metrics: 0,
-        };
-        for w in words {
-            let (key, val) = w.split_once('=')?;
-            match key {
-                "scale" => prog.scale = val.parse().ok()?,
-                "bias" => prog.bias = val.parse().ok()?,
-                "state" => prog.n_state = val.parse().ok()?,
-                "metrics" => prog.n_metrics = val.parse().ok()?,
-                _ => return None,
+        match words.next()? {
+            "affine" => {
+                let (mut scale, mut bias, mut n_state, mut n_metrics) = (1.0, 0.0, 0, 0);
+                for w in words {
+                    let (key, val) = w.split_once('=')?;
+                    match key {
+                        "scale" => scale = val.parse().ok()?,
+                        "bias" => bias = val.parse().ok()?,
+                        "state" => n_state = val.parse().ok()?,
+                        "metrics" => n_metrics = val.parse().ok()?,
+                        _ => return None,
+                    }
+                }
+                Some(StubProgram::Affine {
+                    scale,
+                    bias,
+                    n_state,
+                    n_metrics,
+                })
             }
+            "init" => {
+                let mut dims = Vec::new();
+                for w in words {
+                    let (key, val) = w.split_once('=')?;
+                    if key != "dims" {
+                        return None;
+                    }
+                    for entry in val.split(',') {
+                        if entry.is_empty() {
+                            dims.push(Vec::new()); // scalar leaf
+                            continue;
+                        }
+                        let mut shape = Vec::new();
+                        for d in entry.split('x') {
+                            shape.push(d.parse().ok()?);
+                        }
+                        dims.push(shape);
+                    }
+                }
+                Some(StubProgram::Init { dims })
+            }
+            "evalchunks" => {
+                let (mut batch, mut x_arg, mut n_metrics) = (1, 0, 0);
+                for w in words {
+                    let (key, val) = w.split_once('=')?;
+                    match key {
+                        "batch" => batch = val.parse().ok()?,
+                        "x" => x_arg = val.parse().ok()?,
+                        "metrics" => n_metrics = val.parse().ok()?,
+                        _ => return None,
+                    }
+                }
+                Some(StubProgram::EvalChunks {
+                    batch,
+                    x_arg,
+                    n_metrics,
+                })
+            }
+            _ => None,
         }
-        Some(prog)
     }
 
     fn run(&self, args: &[Arc<Literal>]) -> Result<Vec<PjRtBuffer>> {
-        if args.len() < self.n_state {
+        match self {
+            StubProgram::Affine {
+                scale,
+                bias,
+                n_state,
+                n_metrics,
+            } => Self::run_affine(args, *scale, *bias, *n_state, *n_metrics),
+            StubProgram::Init { dims } => Self::run_init(args, dims),
+            StubProgram::EvalChunks {
+                batch,
+                x_arg,
+                n_metrics,
+            } => Self::run_evalchunks(args, *batch, *x_arg, *n_metrics),
+        }
+    }
+
+    fn run_affine(
+        args: &[Arc<Literal>],
+        scale: f32,
+        bias: f32,
+        n_state: usize,
+        n_metrics: usize,
+    ) -> Result<Vec<PjRtBuffer>> {
+        if args.len() < n_state {
             return Err(err(format!(
-                "stub program wants >= {} args, got {}",
-                self.n_state,
+                "stub program wants >= {n_state} args, got {}",
                 args.len()
             )));
         }
-        let mut outs = Vec::with_capacity(self.n_state + self.n_metrics);
-        for arg in args.iter().take(self.n_state) {
+        let mut outs = Vec::with_capacity(n_state + n_metrics);
+        for arg in args.iter().take(n_state) {
             let lit = match arg.as_ref() {
                 Literal::Array { dims, data } => {
                     let data = match data {
-                        Data::F32(v) => Data::F32(
-                            v.iter().map(|&x| x * self.scale + self.bias).collect(),
-                        ),
+                        Data::F32(v) => {
+                            Data::F32(v.iter().map(|&x| x * scale + bias).collect())
+                        }
                         Data::I32(v) => Data::I32(v.clone()),
                     };
                     Literal::Array {
@@ -354,16 +473,105 @@ impl StubProgram {
             };
             outs.push(PjRtBuffer::from_literal(lit));
         }
-        let s: f64 = args
-            .iter()
-            .enumerate()
-            .map(|(i, a)| (i + 1) as f64 * a.mean())
-            .sum();
-        for j in 0..self.n_metrics {
+        let s = metric_mix(args.iter().map(|a| a.mean()));
+        for j in 0..n_metrics {
             let v = ((j + 1) as f64 * s) as f32;
             outs.push(PjRtBuffer::from_literal(Literal::scalar(v)));
         }
         Ok(outs)
+    }
+
+    fn run_init(args: &[Arc<Literal>], dims: &[Vec<i64>]) -> Result<Vec<PjRtBuffer>> {
+        let seed = match args.first().map(|a| a.as_ref()) {
+            Some(Literal::Array { data: Data::I32(v), .. }) if !v.is_empty() => {
+                v[0] as i64
+            }
+            Some(Literal::Array { data: Data::F32(v), .. }) if !v.is_empty() => {
+                v[0] as i64
+            }
+            _ => return Err(err("init stub wants a scalar seed argument")),
+        };
+        let mut outs = Vec::with_capacity(dims.len());
+        for (leaf, shape) in dims.iter().enumerate() {
+            let n: i64 = shape.iter().product::<i64>().max(1);
+            let data: Vec<f32> = (0..n)
+                .map(|k| init_value(seed, leaf as i64, k))
+                .collect();
+            outs.push(PjRtBuffer::from_literal(Literal::Array {
+                dims: shape.clone(),
+                data: Data::F32(data),
+            }));
+        }
+        Ok(outs)
+    }
+
+    fn run_evalchunks(
+        args: &[Arc<Literal>],
+        batch: usize,
+        x_arg: usize,
+        n_metrics: usize,
+    ) -> Result<Vec<PjRtBuffer>> {
+        let y_arg = x_arg + 1;
+        if args.len() <= y_arg {
+            return Err(err(format!(
+                "evalchunks stub wants > {y_arg} args, got {}",
+                args.len()
+            )));
+        }
+        let (x_dims, x_data) = match args[x_arg].as_ref() {
+            Literal::Array {
+                dims,
+                data: Data::F32(v),
+            } => (dims, v),
+            _ => return Err(err("evalchunks stub: x must be an f32 array")),
+        };
+        let y_data = match args[y_arg].as_ref() {
+            Literal::Array {
+                data: Data::I32(v), ..
+            } => v,
+            _ => return Err(err("evalchunks stub: y must be an i32 array")),
+        };
+        let rows = *x_dims.first().unwrap_or(&0) as usize;
+        if batch == 0 || rows == 0 || rows % batch != 0 {
+            return Err(err(format!(
+                "evalchunks stub: {rows} rows not a multiple of batch {batch}"
+            )));
+        }
+        if y_data.len() != rows {
+            return Err(err("evalchunks stub: y rows != x rows"));
+        }
+        let feat = x_data.len() / rows;
+        let n_chunks = rows / batch;
+        // Broadcast-arg means are chunk-invariant; cache them once.
+        let bc_means: Vec<f64> = args.iter().map(|a| a.mean()).collect();
+        let mut per_chunk = vec![Vec::with_capacity(n_chunks); n_metrics];
+        for c in 0..n_chunks {
+            let mx = mean_f32(&x_data[c * batch * feat..(c + 1) * batch * feat]);
+            let my = mean_i32(&y_data[c * batch..(c + 1) * batch]);
+            // same argument order (and therefore f64 addition order) as
+            // the per-batch affine program sees for this chunk
+            let s = metric_mix(args.iter().enumerate().map(|(i, _)| {
+                if i == x_arg {
+                    mx
+                } else if i == y_arg {
+                    my
+                } else {
+                    bc_means[i]
+                }
+            }));
+            for (j, v) in per_chunk.iter_mut().enumerate() {
+                v.push(((j + 1) as f64 * s) as f32);
+            }
+        }
+        Ok(per_chunk
+            .into_iter()
+            .map(|v| {
+                PjRtBuffer::from_literal(Literal::Array {
+                    dims: vec![n_chunks as i64],
+                    data: Data::F32(v),
+                })
+            })
+            .collect())
     }
 }
 
@@ -400,7 +608,7 @@ pub struct XlaComputation {
 impl XlaComputation {
     pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
         XlaComputation {
-            stub: proto.stub,
+            stub: proto.stub.clone(),
             name: proto.name.clone(),
         }
     }
@@ -427,7 +635,7 @@ impl PjRtClient {
 
     pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
         Ok(PjRtLoadedExecutable {
-            stub: comp.stub,
+            stub: comp.stub.clone(),
             name: comp.name.clone(),
         })
     }
@@ -510,7 +718,7 @@ pub struct PjRtLoadedExecutable {
 
 impl PjRtLoadedExecutable {
     fn run(&self, args: Vec<Arc<Literal>>) -> Result<Vec<Vec<PjRtBuffer>>> {
-        match self.stub {
+        match &self.stub {
             Some(prog) => Ok(vec![prog.run(&args)?]),
             None => Err(Error::Unsupported(format!(
                 "host backend cannot execute real HLO ('{}'); link the native \
@@ -563,16 +771,37 @@ mod tests {
     fn stub_directive_parses() {
         let p = StubProgram::parse("// STUB: affine scale=0.5 bias=0.25 state=2 metrics=1")
             .unwrap();
-        assert_eq!(p.scale, 0.5);
-        assert_eq!(p.bias, 0.25);
-        assert_eq!(p.n_state, 2);
-        assert_eq!(p.n_metrics, 1);
+        assert_eq!(
+            p,
+            StubProgram::Affine {
+                scale: 0.5,
+                bias: 0.25,
+                n_state: 2,
+                n_metrics: 1
+            }
+        );
+        let p = StubProgram::parse("// STUB: init dims=3x3x1x16,16,16x4").unwrap();
+        assert_eq!(
+            p,
+            StubProgram::Init {
+                dims: vec![vec![3, 3, 1, 16], vec![16], vec![16, 4]]
+            }
+        );
+        let p = StubProgram::parse("// STUB: evalchunks batch=8 x=5 metrics=2").unwrap();
+        assert_eq!(
+            p,
+            StubProgram::EvalChunks {
+                batch: 8,
+                x_arg: 5,
+                n_metrics: 2
+            }
+        );
         assert!(StubProgram::parse("HloModule jit_step").is_none());
     }
 
     #[test]
     fn stub_program_executes() {
-        let prog = StubProgram {
+        let prog = StubProgram::Affine {
             scale: 2.0,
             bias: 1.0,
             n_state: 1,
@@ -591,6 +820,83 @@ mod tests {
         let m2 = outs[2].to_literal_sync().unwrap().to_vec::<f32>().unwrap()[0];
         assert_eq!(m1, 22.0);
         assert_eq!(m2, 44.0);
+    }
+
+    #[test]
+    fn init_stub_is_seed_deterministic() {
+        let prog = StubProgram::Init {
+            dims: vec![vec![2, 3], vec![4]],
+        };
+        let a = prog.run(&[Arc::new(Literal::scalar(7i32))]).unwrap();
+        let b = prog.run(&[Arc::new(Literal::scalar(7i32))]).unwrap();
+        let c = prog.run(&[Arc::new(Literal::scalar(8i32))]).unwrap();
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[0].array_shape().unwrap().dims(), &[2, 3]);
+        let va = a[0].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+        let vb = b[0].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+        let vc = c[0].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+        assert_eq!(va, vb);
+        assert_ne!(va, vc);
+        assert!(va.iter().all(|v| (-0.5..=0.5).contains(v)));
+    }
+
+    /// The whole point of `evalchunks`: chunk `c` of one batched call
+    /// equals what the per-batch `affine` program returns for that
+    /// chunk's slice, bitwise.
+    #[test]
+    fn evalchunks_matches_per_batch_affine_bitwise() {
+        let state = Arc::new(Literal::vec1(&[0.25f32, -0.75, 0.5]));
+        let xs: Vec<f32> = (0..12).map(|i| i as f32 * 0.37 - 2.0).collect();
+        let ys: Vec<i32> = (0..6).map(|i| i % 4).collect();
+        let tau = Arc::new(Literal::scalar(0.66f32));
+        let batch = 2;
+        let chunked = StubProgram::EvalChunks {
+            batch,
+            x_arg: 1,
+            n_metrics: 2,
+        };
+        let x_all = Arc::new(Literal::vec1(&xs).reshape(&[6, 2]).unwrap());
+        let y_all = Arc::new(Literal::vec1(&ys));
+        let outs = chunked
+            .run(&[state.clone(), x_all, y_all, tau.clone()])
+            .unwrap();
+        assert_eq!(outs.len(), 2);
+        let loss_v = outs[0].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+        let acc_v = outs[1].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+        assert_eq!(loss_v.len(), 3);
+        let per_batch = StubProgram::Affine {
+            scale: 1.0,
+            bias: 0.0,
+            n_state: 0,
+            n_metrics: 2,
+        };
+        for c in 0..3 {
+            let xc = Arc::new(
+                Literal::vec1(&xs[c * batch * 2..(c + 1) * batch * 2])
+                    .reshape(&[2, 2])
+                    .unwrap(),
+            );
+            let yc = Arc::new(Literal::vec1(&ys[c * batch..(c + 1) * batch]));
+            let m = per_batch
+                .run(&[state.clone(), xc, yc, tau.clone()])
+                .unwrap();
+            let l = m[0].to_literal_sync().unwrap().to_vec::<f32>().unwrap()[0];
+            let a = m[1].to_literal_sync().unwrap().to_vec::<f32>().unwrap()[0];
+            assert_eq!(loss_v[c].to_bits(), l.to_bits(), "chunk {c} loss");
+            assert_eq!(acc_v[c].to_bits(), a.to_bits(), "chunk {c} acc");
+        }
+    }
+
+    #[test]
+    fn evalchunks_rejects_ragged_rows() {
+        let prog = StubProgram::EvalChunks {
+            batch: 4,
+            x_arg: 0,
+            n_metrics: 1,
+        };
+        let x = Arc::new(Literal::vec1(&[0f32; 6]).reshape(&[6, 1]).unwrap());
+        let y = Arc::new(Literal::vec1(&[0i32; 6]));
+        assert!(prog.run(&[x, y]).is_err());
     }
 
     #[test]
