@@ -17,7 +17,9 @@ fn main() -> mixprec::Result<()> {
     let fast = std::env::var("MIXPREC_E2E_FAST").is_ok();
     let ctx = Context::load_default(if fast { 0.25 } else { 1.0 })?;
     let model = "resnet8";
-    let runner = ctx.runner(model)?;
+    // shared cache: the headline run, the sweep and the fixed
+    // baselines reuse one upload per eval split
+    let runner = ctx.runner_shared(model)?;
 
     let mut cfg = PipelineConfig::quick(model);
     if fast {

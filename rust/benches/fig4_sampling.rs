@@ -22,7 +22,7 @@ fn main() {
             &["model", "method", "lambda", "size kB", "test acc"],
         );
         for model in &models {
-            let runner = ctx.runner(model)?;
+            let runner = scale.runner(ctx, model)?;
             let base = scale.config(model);
 
             // fixed-precision baselines (w2/w4/w8 a8)

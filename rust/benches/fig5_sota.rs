@@ -15,7 +15,7 @@ use mixprec::util::table::{f4, Table};
 fn main() {
     benchkit::run_bench("fig5_sota", |ctx, scale| {
         let model = std::env::var("MIXPREC_MODEL").unwrap_or_else(|_| "resnet8".into());
-        let runner = ctx.runner(&model)?;
+        let runner = scale.runner(ctx, &model)?;
         let base = scale.config(&model);
         let lambdas = default_lambdas(scale.points);
         let mut table = Table::new(
@@ -35,7 +35,7 @@ fn main() {
                     format!("{:.2}", r.size_kb),
                     f4(r.test_acc),
                 ]);
-                front.insert(Point::new(r.size_kb, r.test_acc, m.label()));
+                front.insert(Point::new(r.size_kb, r.test_acc, m.label()))?;
             }
             fronts.push((m.label(), front));
         }
@@ -57,7 +57,7 @@ fn main() {
                 format!("{:.2}", r.size_kb),
                 f4(r.test_acc),
             ]);
-            front.insert(Point::new(r.size_kb, r.test_acc, "P+M"));
+            front.insert(Point::new(r.size_kb, r.test_acc, "P+M"))?;
         }
         fronts.push(("PIT+MixPrec".into(), front));
         table.emit("fig5_sota.csv");

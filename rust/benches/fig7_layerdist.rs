@@ -14,7 +14,7 @@ use mixprec::util::table::Table;
 fn main() {
     benchkit::run_bench("fig7_layerdist", |ctx, scale| {
         let model = std::env::var("MIXPREC_MODEL").unwrap_or_else(|_| "dscnn".into());
-        let runner = ctx.runner(&model)?;
+        let runner = scale.runner(ctx, &model)?;
         let graph = ctx.graph(&model);
         let mut base = scale.config(&model);
         base.lambda = 2.0; // high strength: where the methods differ most

@@ -17,7 +17,7 @@ use mixprec::util::table::{pct, Table};
 fn main() {
     benchkit::run_bench("fig8_regdist", |ctx, scale| {
         let model = std::env::var("MIXPREC_MODEL").unwrap_or_else(|_| "resnet8".into());
-        let runner = ctx.runner(&model)?;
+        let runner = scale.runner(ctx, &model)?;
         let graph = ctx.graph(&model);
         let base = scale.config(&model);
         let lambdas = default_lambdas(scale.points.max(3));

@@ -16,7 +16,7 @@ use mixprec::util::table::{f4, Table};
 fn main() {
     benchkit::run_bench("fig9_act", |ctx, scale| {
         let model = std::env::var("MIXPREC_MODEL").unwrap_or_else(|_| "resnet8".into());
-        let runner = ctx.runner(&model)?;
+        let runner = scale.runner(ctx, &model)?;
         let base = scale.config(&model);
         let lambdas = default_lambdas(scale.points);
         let mut table = Table::new(

@@ -13,6 +13,7 @@
 
 use std::time::Instant;
 
+use mixprec::baselines::compare_methods;
 use mixprec::coordinator::{
     default_lambdas, sweep_lambdas, Context, EvalBufs, MaskBufs, SweepMode,
     SweepOptions, SweepResult,
@@ -31,7 +32,10 @@ fn sweep_json(sw: &SweepResult, seconds: f64) -> Json {
     o.insert("runs", Json::Num(sw.runs.len() as f64));
     o.insert("warmup_steps_run", Json::Num(sw.warmup_steps_run as f64));
     o.insert("warmup_steps_saved", Json::Num(sw.warmup_steps_saved as f64));
+    o.insert("warmup_reused", Json::Bool(sw.warmup_reused));
     o.insert("shared_warmup_s", Json::Num(sw.shared_warmup_s));
+    o.insert("split_uploads", Json::Num(sw.split_uploads as f64));
+    o.insert("split_reuses", Json::Num(sw.split_reuses as f64));
     o.insert("total_transfer_bytes", Json::Num(traffic as f64));
     Json::Obj(o)
 }
@@ -57,12 +61,16 @@ fn run() -> mixprec::Result<()> {
     let ctx = Context::load(&dir, scale.data_frac)?;
     let runner = ctx.runner(fixture::STUB_MODEL)?;
     let mut cfg = scale.config(fixture::STUB_MODEL);
+    // this bench measures the device-resident sharing paths; pin the
+    // knobs they depend on regardless of MIXPREC_* overrides
     cfg.batched_eval = true;
+    cfg.host_resident = false;
     let lambdas = default_lambdas(5);
     let shared_seed = |mode| SweepOptions {
         workers: scale.workers,
         mode,
         vary_seeds: false,
+        share_warmup: false, // this leg isolates fork-vs-independent
     };
 
     // ---- forked vs independent 5-lambda sweeps ----------------------
@@ -145,6 +153,49 @@ fn run() -> mixprec::Result<()> {
         b2_h2d + b2_d2h
     );
 
+    // ---- compare-level sharing: one warmup + one upload per split ---
+    // fresh context => fresh SharedRunCache, so the earlier legs don't
+    // pre-warm what this section is measuring
+    let cmp_ctx = Context::load(&dir, scale.data_frac)?;
+    let cmp_lambdas = default_lambdas(2);
+    let cmp_opts = |share_warmup| SweepOptions {
+        workers: scale.workers,
+        mode: SweepMode::ForkedWarmup,
+        vary_seeds: false,
+        share_warmup,
+    };
+    let (sh_opts, un_opts) = (cmp_opts(true), cmp_opts(false));
+    let runner_sh = cmp_ctx.runner_shared(fixture::STUB_MODEL)?;
+    let t0 = Instant::now();
+    let cmp_sh = compare_methods(&runner_sh, &cfg, &cmp_lambdas, "size", &sh_opts, &[])?;
+    let cmp_sh_s = t0.elapsed().as_secs_f64();
+    let runner_un = cmp_ctx.runner(fixture::STUB_MODEL)?;
+    let t0 = Instant::now();
+    let cmp_un = compare_methods(&runner_un, &cfg, &cmp_lambdas, "size", &un_opts, &[])?;
+    let cmp_un_s = t0.elapsed().as_secs_f64();
+
+    // acceptance: one warmup + one upload per touched split across all
+    // four method sweeps, fronts bitwise identical to unshared
+    assert_eq!(cmp_sh.warmups_run, 1, "compare did not share the warmup");
+    assert_eq!(cmp_sh.warmups_reused, 3);
+    assert_eq!(cmp_sh.split_uploads, 2, "expected one upload per eval split");
+    assert_eq!(
+        cmp_sh.split_reuses,
+        (4 * cmp_lambdas.len() * 2 - 2) as u64,
+        "every other split request must hit the cache"
+    );
+    let cmp_fronts_equal = cmp_sh
+        .sweeps
+        .iter()
+        .zip(&cmp_un.sweeps)
+        .all(|((_, a), (_, b))| key(&a.front()) == key(&b.front()));
+    assert!(cmp_fronts_equal, "shared compare front diverged from unshared");
+    println!(
+        "compare: shared {cmp_sh_s:6.2}s ({} warmup run, {} reused, {} split uploads) \
+         | unshared {cmp_un_s:6.2}s ({} warmup runs)",
+        cmp_sh.warmups_run, cmp_sh.warmups_reused, cmp_sh.split_uploads, cmp_un.warmups_run
+    );
+
     let mut o = JsonObj::new();
     o.insert("bench", Json::Str("sweep_fork".into()));
     o.insert("mode", Json::Str("stub".into()));
@@ -163,6 +214,20 @@ fn run() -> mixprec::Result<()> {
     ev.insert("batched_cached_call", eval_leg(b2_h2d, b2_d2h));
     o.insert("eval_bytes_per_call", Json::Obj(ev));
     o.insert("fronts_equal", Json::Bool(fronts_equal));
+    let mut cm = JsonObj::new();
+    cm.insert("lambdas", Json::Num(cmp_lambdas.len() as f64));
+    cm.insert("warmups_run", Json::Num(cmp_sh.warmups_run as f64));
+    cm.insert("warmups_reused", Json::Num(cmp_sh.warmups_reused as f64));
+    cm.insert("split_uploads", Json::Num(cmp_sh.split_uploads as f64));
+    cm.insert("split_reuses", Json::Num(cmp_sh.split_reuses as f64));
+    cm.insert("seconds_shared", Json::Num(cmp_sh_s));
+    cm.insert("seconds_unshared", Json::Num(cmp_un_s));
+    cm.insert(
+        "speedup_vs_unshared",
+        Json::Num(cmp_un_s / cmp_sh_s.max(1e-12)),
+    );
+    cm.insert("fronts_equal_unshared", Json::Bool(cmp_fronts_equal));
+    o.insert("compare", Json::Obj(cm));
     benchkit::write_bench_json("sweep_fork", &Json::Obj(o))?;
     std::fs::remove_dir_all(&dir).ok();
     Ok(())

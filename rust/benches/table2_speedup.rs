@@ -31,7 +31,7 @@ fn main() {
             ],
         );
         for model in &models {
-            let runner = ctx.runner(model)?;
+            let runner = scale.runner(ctx, model)?;
             let base = scale.config(model);
             let lambdas = default_lambdas(2);
 

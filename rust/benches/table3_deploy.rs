@@ -61,7 +61,7 @@ fn pick_hml<'a>(runs: &'a [RunResult], metric: &str, floor: f64) -> Vec<(&'stati
 fn main() {
     benchkit::run_bench("table3_deploy", |ctx, scale| {
         let model = std::env::var("MIXPREC_MODEL").unwrap_or_else(|_| "resnet8".into());
-        let runner = ctx.runner(&model)?;
+        let runner = scale.runner(ctx, &model)?;
         let base = scale.config(&model);
         let lambdas = default_lambdas(scale.points);
         let mut table = Table::new(

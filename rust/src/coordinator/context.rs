@@ -3,18 +3,23 @@
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use crate::coordinator::phases::Runner;
 use crate::data::{DataConfig, DataSet};
 use crate::error::Result;
 use crate::graph::ModelGraph;
-use crate::runtime::{Engine, Manifest};
+use crate::runtime::{Engine, Manifest, SharedRunCache};
 
 pub struct Context {
     pub eng: Engine,
     pub man: Manifest,
     graphs: BTreeMap<String, ModelGraph>,
     data: BTreeMap<String, DataSet>,
+    /// Context-wide device-buffer cache (eval splits + warm pool),
+    /// attached to runners built via [`Context::runner_shared`]. One
+    /// per context — i.e. one per process for the CLI and benches.
+    cache: Arc<SharedRunCache>,
 }
 
 impl Context {
@@ -51,6 +56,7 @@ impl Context {
             man,
             graphs,
             data,
+            cache: Arc::new(SharedRunCache::new()),
         })
     }
 
@@ -75,6 +81,40 @@ impl Context {
             &self.graphs[model],
             &self.data[model],
         ))
+    }
+
+    /// A runner wired to the context-wide [`SharedRunCache`]: eval
+    /// splits upload once per context, and sweeps can share warmups
+    /// across methods. Results are bitwise identical to
+    /// [`Context::runner`]; only the upload/warmup accounting moves.
+    pub fn runner_shared(&self, model: &str) -> Result<Runner<'_>> {
+        Ok(self.runner(model)?.with_cache(Arc::clone(&self.cache)))
+    }
+
+    /// The one place the sharing knobs map to a runner (the CLI flags
+    /// and the bench env vars both route here): the cache is attached
+    /// when *either* knob is on — the warm pool lives on the cache, so
+    /// warmup sharing must survive `share_eval = false` — and
+    /// [`Runner::share_eval`] then gates just the eval-split pool.
+    /// (Warm-pool use is gated by `SweepOptions::share_warmup`, which
+    /// the caller derives from the same knob.)
+    pub fn runner_with_sharing(
+        &self,
+        model: &str,
+        share_eval: bool,
+        share_warmup: bool,
+    ) -> Result<Runner<'_>> {
+        if share_eval || share_warmup {
+            Ok(self.runner_shared(model)?.with_eval_sharing(share_eval))
+        } else {
+            self.runner(model)
+        }
+    }
+
+    /// The context-wide shared cache (counter inspection; runners get
+    /// it via [`Context::runner_shared`]).
+    pub fn shared_cache(&self) -> &Arc<SharedRunCache> {
+        &self.cache
     }
 
     pub fn models(&self) -> Vec<String> {

@@ -3,6 +3,16 @@
 //! Every figure in the paper's evaluation plots the Pareto-optimal
 //! subset of a lambda sweep (accuracy up, cost down). Invariants are
 //! property-tested in `rust/tests/prop_invariants.rs`.
+//!
+//! NaN coordinates are rejected at [`ParetoFront::insert`]: every
+//! comparison against NaN is false, so a NaN point would be dominated
+//! by nothing, dominate nothing, evict nothing and never be evicted —
+//! silently breaking the sorted-by-cost invariant and making the
+//! `partial_cmp().unwrap()` in the iso-queries panic. Because `insert`
+//! errors instead, a front can never contain a non-finite-ordered
+//! point and those unwraps are safe.
+
+use crate::error::{Error, Result};
 
 /// One evaluated design point.
 #[derive(Debug, Clone, PartialEq)]
@@ -42,31 +52,47 @@ impl ParetoFront {
         Self::default()
     }
 
+    /// Build a front from an iterator, *skipping* NaN-coordinate
+    /// points (the figure harnesses feed this straight from sweep
+    /// results where a NaN means "metric not computed"; dropping the
+    /// point is the only sensible aggregate behavior). Use
+    /// [`ParetoFront::insert`] directly to surface the error instead.
     pub fn from_points(points: impl IntoIterator<Item = Point>) -> Self {
         let mut f = Self::new();
         for p in points {
-            f.insert(p);
+            let _ = f.insert(p);
         }
         f
     }
 
-    /// Insert a point; returns true if it joined the front. A point
-    /// dominated by — or coordinate-identical to — a front member is
-    /// rejected, so the front is a set in (cost, acc) space.
-    pub fn insert(&mut self, p: Point) -> bool {
+    /// Insert a point; returns `Ok(true)` if it joined the front. A
+    /// point dominated by — or coordinate-identical to — a front
+    /// member is rejected (`Ok(false)`), so the front is a set in
+    /// (cost, acc) space. A NaN coordinate is an error: NaN poisons
+    /// every dominance comparison (see module docs), so it must never
+    /// enter the front.
+    pub fn insert(&mut self, p: Point) -> Result<bool> {
+        if p.cost.is_nan() || p.acc.is_nan() {
+            return Err(Error::Config(format!(
+                "ParetoFront::insert: NaN coordinate (cost={}, acc={}, tag='{}') \
+                 — NaN compares false with everything and would corrupt the \
+                 dominance order",
+                p.cost, p.acc, p.tag
+            )));
+        }
         if self
             .points
             .iter()
             .any(|q| q.dominates(&p) || (q.cost == p.cost && q.acc == p.acc))
         {
-            return false;
+            return Ok(false);
         }
         self.points.retain(|q| !p.dominates(q));
         let pos = self
             .points
             .partition_point(|q| (q.cost, -q.acc) < (p.cost, -p.acc));
         self.points.insert(pos, p);
-        true
+        Ok(true)
     }
 
     pub fn points(&self) -> &[Point] {
@@ -121,14 +147,42 @@ mod tests {
     #[test]
     fn front_filters_dominated() {
         let mut f = ParetoFront::new();
-        assert!(f.insert(Point::new(10.0, 0.5, "x")));
-        assert!(f.insert(Point::new(5.0, 0.4, "y")));
-        assert!(f.insert(Point::new(20.0, 0.9, "z")));
-        assert!(!f.insert(Point::new(25.0, 0.85, "dominated")));
+        assert!(f.insert(Point::new(10.0, 0.5, "x")).unwrap());
+        assert!(f.insert(Point::new(5.0, 0.4, "y")).unwrap());
+        assert!(f.insert(Point::new(20.0, 0.9, "z")).unwrap());
+        assert!(!f.insert(Point::new(25.0, 0.85, "dominated")).unwrap());
         assert_eq!(f.len(), 3);
         // inserting a dominating point evicts
-        assert!(f.insert(Point::new(4.0, 0.95, "super")));
+        assert!(f.insert(Point::new(4.0, 0.95, "super")).unwrap());
         assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn nan_points_are_rejected_with_an_error() {
+        let mut f = ParetoFront::new();
+        assert!(f.insert(Point::new(1.0, 0.5, "ok")).unwrap());
+        assert!(f.insert(Point::new(f64::NAN, 0.9, "bad cost")).is_err());
+        assert!(f.insert(Point::new(2.0, f64::NAN, "bad acc")).is_err());
+        // the front is untouched and the iso queries (which unwrap
+        // partial_cmp) stay safe
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.iso_accuracy(0.4).unwrap().tag, "ok");
+        assert_eq!(f.best_acc().unwrap().tag, "ok");
+    }
+
+    #[test]
+    fn from_points_skips_nan_instead_of_poisoning() {
+        let f = ParetoFront::from_points([
+            Point::new(2.0, 0.6, "a"),
+            Point::new(f64::NAN, 0.9, "nan"),
+            Point::new(1.0, f64::NAN, "nan2"),
+            Point::new(3.0, 0.8, "b"),
+        ]);
+        assert_eq!(f.len(), 2);
+        assert!(f.points().iter().all(|p| !p.cost.is_nan() && !p.acc.is_nan()));
+        // sorted-by-cost invariant holds (a NaN member used to break it)
+        assert_eq!(f.points()[0].tag, "a");
+        assert_eq!(f.iso_cost(2.5).unwrap().tag, "a");
     }
 
     #[test]

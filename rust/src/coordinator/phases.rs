@@ -18,8 +18,11 @@
 //! **once** and forks every worker from the shared snapshot — the
 //! fork is bitwise identical to a run that warmed up itself.
 //!
-//! Evaluation is batched: each split is uploaded once per run into
-//! [`EvalBufs`] and one `eval_batched` dispatch returns per-chunk
+//! Evaluation is batched: each split is uploaded once into
+//! [`EvalBufs`] — once per run unshared, or once per
+//! [`SharedRunCache`] when the runner carries one (so every fork of a
+//! sweep and every method sweep of a `compare` reuses one upload per
+//! split) — and one `eval_batched` dispatch returns per-chunk
 //! loss/acc reductions computed on device, with the host applying the
 //! same real-count weighting as the per-batch loop — results are
 //! bitwise identical (ragged final chunk included) while moving far
@@ -37,8 +40,8 @@ use crate::data::{BatchIter, DataSet, Split};
 use crate::error::{Error, Result};
 use crate::graph::ModelGraph;
 use crate::runtime::{
-    DeviceState, Engine, Manifest, ModelManifest, StateSnapshot, StepArg, StepFn,
-    TransferStats,
+    DeviceState, Engine, EvalKey, EvalSplit, Manifest, ModelManifest, SharedRunCache,
+    StateSnapshot, StepArg, StepFn, TransferStats,
 };
 use crate::util::rng::Pcg64;
 use crate::util::tensor::Tensor;
@@ -244,28 +247,41 @@ impl MaskBufs {
     }
 }
 
-/// Device-resident evaluation data, uploaded lazily once per run and
+/// Device-resident evaluation data, resolved lazily per split and
 /// reused by every `evaluate_batched` call — the second per-run upload
 /// cache alongside [`MaskBufs`]. Each split is padded exactly like the
 /// per-batch iterator pads (tail chunk repeats samples), so the
 /// device-side chunk reductions are bitwise identical to the per-batch
 /// dispatch loop.
+///
+/// Two backings:
+/// * [`EvalBufs::new`] — private uploads, one per run (the pre-cache
+///   behavior; transfer is charged to this run).
+/// * [`EvalBufs::shared`] — splits come from a
+///   [`SharedRunCache`], so every fork of a sweep and every method
+///   sweep of a `compare` reuses **one** upload per split per cache
+///   (per process in the CLI). Only the run that performs the upload
+///   is charged; the bytes on device are identical either way, so
+///   eval results are bitwise unchanged.
 #[derive(Default)]
 pub struct EvalBufs {
-    slots: [Option<SplitBufs>; 3],
-}
-
-struct SplitBufs {
-    x: Arc<xla::PjRtBuffer>,
-    y: Arc<xla::PjRtBuffer>,
-    /// Real (unpadded) sample count per chunk, for the host-side
-    /// weighted mean over the per-chunk device reductions.
-    real: Vec<f64>,
+    slots: [Option<Arc<EvalSplit>>; 3],
+    shared: Option<Arc<SharedRunCache>>,
 }
 
 impl EvalBufs {
+    /// Per-run (unshared) eval buffers.
     pub fn new() -> Self {
         EvalBufs::default()
+    }
+
+    /// Eval buffers backed by a shared cache: the split upload is
+    /// looked up (and published) under its [`EvalKey`] fingerprint.
+    pub fn shared(cache: Arc<SharedRunCache>) -> Self {
+        EvalBufs {
+            slots: Default::default(),
+            shared: Some(cache),
+        }
     }
 
     fn slot(split: Split) -> usize {
@@ -276,8 +292,19 @@ impl EvalBufs {
         }
     }
 
-    /// Upload a split on first use; the one-time upload is charged to
-    /// `stats` so batched and per-batch eval traffic stay comparable.
+    fn split_name(split: Split) -> &'static str {
+        match split {
+            Split::Train => "train",
+            Split::Val => "val",
+            Split::Test => "test",
+        }
+    }
+
+    /// Resolve a split on first use — from the shared cache when one
+    /// is attached, else by uploading privately. The upload is charged
+    /// to `stats` exactly once per cache (shared) or once per run
+    /// (private) so batched and per-batch eval traffic stay
+    /// comparable.
     fn get_or_upload(
         &mut self,
         eng: &Engine,
@@ -285,7 +312,7 @@ impl EvalBufs {
         batch: usize,
         split: Split,
         stats: &mut TransferStats,
-    ) -> Result<&SplitBufs> {
+    ) -> Result<&EvalSplit> {
         let i = Self::slot(split);
         if self.slots[i].is_none() {
             let n = match split {
@@ -293,27 +320,48 @@ impl EvalBufs {
                 Split::Val => data.cfg.n_val,
                 Split::Test => data.cfg.n_test,
             };
-            let chunks = BatchIter::eval_batches(n, batch);
-            let sample = data.cfg.h * data.cfg.w * data.cfg.c;
-            let mut xs = Vec::with_capacity(chunks.len() * batch * sample);
-            let mut ys = Vec::with_capacity(chunks.len() * batch);
-            let mut real = Vec::with_capacity(chunks.len());
-            for idx in &chunks {
-                let (x, y) = data.batch(split, idx, batch);
-                xs.extend_from_slice(x.as_f32());
-                ys.extend_from_slice(y.as_i32());
-                real.push(idx.len() as f64);
+            let upload = || -> Result<EvalSplit> {
+                let chunks = BatchIter::eval_batches(n, batch);
+                let sample = data.cfg.h * data.cfg.w * data.cfg.c;
+                let mut xs = Vec::with_capacity(chunks.len() * batch * sample);
+                let mut ys = Vec::with_capacity(chunks.len() * batch);
+                let mut real = Vec::with_capacity(chunks.len());
+                for idx in &chunks {
+                    let (x, y) = data.batch(split, idx, batch);
+                    xs.extend_from_slice(x.as_f32());
+                    ys.extend_from_slice(y.as_i32());
+                    real.push(idx.len() as f64);
+                }
+                let n_pad = chunks.len() * batch;
+                let xt = Tensor::f32(vec![n_pad, data.cfg.h, data.cfg.w, data.cfg.c], xs);
+                let yt = Tensor::i32(vec![n_pad], ys);
+                let h2d_bytes = ((xt.len() + yt.len()) * 4) as u64;
+                Ok(EvalSplit {
+                    x: eng.upload_tensor(&xt)?,
+                    y: eng.upload_tensor(&yt)?,
+                    real,
+                    h2d_bytes,
+                })
+            };
+            let (entry, uploaded) = match &self.shared {
+                Some(cache) => {
+                    let key = EvalKey {
+                        split: Self::split_name(split),
+                        batch,
+                        n,
+                        data_fp: data.cfg.fingerprint(),
+                    };
+                    cache.get_or_upload_split(key, upload)?
+                }
+                None => (Arc::new(upload()?), true),
+            };
+            if uploaded {
+                stats.h2d_bytes += entry.h2d_bytes;
+                stats.h2d_tensors += 2;
             }
-            let n_pad = chunks.len() * batch;
-            let xt = Tensor::f32(vec![n_pad, data.cfg.h, data.cfg.w, data.cfg.c], xs);
-            let yt = Tensor::i32(vec![n_pad], ys);
-            let x = eng.upload_tensor(&xt)?;
-            let y = eng.upload_tensor(&yt)?;
-            stats.h2d_bytes += ((xt.len() + yt.len()) * 4) as u64;
-            stats.h2d_tensors += 2;
-            self.slots[i] = Some(SplitBufs { x, y, real });
+            self.slots[i] = Some(entry);
         }
-        Ok(self.slots[i].as_ref().expect("slot just filled"))
+        Ok(self.slots[i].as_deref().expect("slot just filled"))
     }
 }
 
@@ -382,6 +430,16 @@ pub struct Runner<'a> {
     pub mm: &'a ModelManifest,
     pub graph: &'a ModelGraph,
     pub data: &'a DataSet,
+    /// Shared device-buffer cache (eval splits + warm pool). `None`
+    /// (the `Runner::new` default) keeps every upload private to the
+    /// run — the pre-cache behavior; `Context::runner_shared` attaches
+    /// the context-wide cache.
+    pub cache: Option<Arc<SharedRunCache>>,
+    /// Route eval-split uploads through the attached cache (default
+    /// `true`). Turning this off (`--share-eval-bufs off`) keeps the
+    /// warm pool usable while every run uploads its own splits — the
+    /// two sharing knobs stay independent.
+    pub share_eval: bool,
 }
 
 impl<'a> Runner<'a> {
@@ -398,7 +456,48 @@ impl<'a> Runner<'a> {
             mm,
             graph,
             data,
+            cache: None,
+            share_eval: true,
         }
+    }
+
+    /// Attach a shared run cache: eval splits resolve through it (if
+    /// [`Runner::share_eval`] is left on), and sweeps (with
+    /// `SweepOptions::share_warmup`) publish/reuse `WarmStart`s keyed
+    /// by warmup fingerprint.
+    pub fn with_cache(mut self, cache: Arc<SharedRunCache>) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Toggle eval-split sharing independently of the warm pool (a
+    /// cache-carrying runner with `share_eval = false` still shares
+    /// warmups across sweeps but uploads eval splits per run).
+    pub fn with_eval_sharing(mut self, share_eval: bool) -> Self {
+        self.share_eval = share_eval;
+        self
+    }
+
+    /// Eval buffers for one run: shared-cache-backed when a cache is
+    /// attached and eval sharing is on, private otherwise. Results are
+    /// bitwise identical.
+    fn eval_bufs(&self) -> EvalBufs {
+        match &self.cache {
+            Some(c) if self.share_eval => EvalBufs::shared(Arc::clone(c)),
+            _ => EvalBufs::new(),
+        }
+    }
+
+    /// Warm-pool key for `cfg`: a canonical rendering of the same
+    /// [`WarmupFingerprint`] that `run_from` re-validates structurally
+    /// on every fork — two configs share a key iff every knob the
+    /// warmup phase reads matches.
+    pub fn warmup_cache_key(&self, cfg: &PipelineConfig) -> String {
+        format!(
+            "{:?}|data={:016x}",
+            WarmupFingerprint::of(cfg, self.data.cfg.n_train),
+            self.data.cfg.fingerprint()
+        )
     }
 
     /// Evaluate accuracy/loss over a whole split with the current
@@ -667,7 +766,7 @@ impl<'a> Runner<'a> {
         // masks + (lazily) the device-resident eval splits.
         let leaves = ResolvedLeaves::new(self.mm, self.graph)?;
         let mask_bufs = MaskBufs::new(self.eng, &cfg.masks)?;
-        let mut eval_bufs = EvalBufs::new();
+        let mut eval_bufs = self.eval_bufs();
         let mut history = ws.history.clone();
         let mut timing = Timing::default();
         let mut steps_run = 0usize;

@@ -13,8 +13,10 @@
 //! (Sec. 5, Table 2). [`SweepMode::Independent`] keeps the legacy
 //! one-warmup-per-lambda behavior for equivalence testing.
 
+use std::sync::Arc;
+
 use crate::coordinator::pareto::{ParetoFront, Point};
-use crate::coordinator::phases::{PipelineConfig, RunResult, Runner};
+use crate::coordinator::phases::{PipelineConfig, RunResult, Runner, WarmStart};
 use crate::cost::Normalizer;
 use crate::error::Result;
 use crate::graph::ModelGraph;
@@ -66,6 +68,14 @@ pub struct SweepOptions {
     /// matching the default forked mode; set both `Independent` and
     /// `vary_seeds` to restore the legacy sweep exactly.
     pub vary_seeds: bool,
+    /// `ForkedWarmup` + a cache-carrying runner only: publish this
+    /// sweep's `WarmStart` to (and reuse one from) the runner's
+    /// [`SharedRunCache`](crate::runtime::SharedRunCache) warm pool,
+    /// keyed by the warmup fingerprint. Lets `compare`'s four method
+    /// sweeps — whose warmup-phase knobs match by construction — share
+    /// **one** warmup; a sweep whose fingerprint differs always warms
+    /// up itself (default `true`; a no-op without a cache).
+    pub share_warmup: bool,
 }
 
 impl Default for SweepOptions {
@@ -74,6 +84,7 @@ impl Default for SweepOptions {
             workers: 1,
             mode: SweepMode::default(),
             vary_seeds: false,
+            share_warmup: true,
         }
     }
 }
@@ -86,15 +97,29 @@ pub struct SweepResult {
     pub metric: String,
     pub mode: SweepMode,
     /// Warmup steps actually executed across the whole sweep (one
-    /// phase for `ForkedWarmup`, one per lambda for `Independent`).
+    /// phase for `ForkedWarmup`, one per lambda for `Independent`,
+    /// zero when the warmup came from the shared pool).
     pub warmup_steps_run: usize,
     /// Warmup steps the shared phase saved vs. an independent sweep.
     pub warmup_steps_saved: usize,
+    /// Warmup *phases* this sweep executed (`Independent`: one per
+    /// lambda; `ForkedWarmup`: one, or zero on a warm-pool hit) — the
+    /// unit `compare`'s warmups-run accounting sums.
+    pub warmup_phases_run: usize,
+    /// The warmup was served from the cross-method `WarmStart` pool
+    /// (its steps/time/traffic are charged to the sweep that ran it).
+    pub warmup_reused: bool,
     /// Wall-clock of the shared warmup phase (`ForkedWarmup` only;
     /// independent warmup time is inside each run's `timing`).
     pub shared_warmup_s: f64,
     /// Host<->device traffic of the shared warmup phase.
     pub shared_warmup: TransferStats,
+    /// Eval-split uploads performed through the shared cache during
+    /// this sweep (0 without a cache; at most one per split per
+    /// process with one).
+    pub split_uploads: u64,
+    /// Eval-split requests this sweep served from the shared cache.
+    pub split_reuses: u64,
 }
 
 impl SweepResult {
@@ -163,15 +188,21 @@ pub fn sweep_lambdas(
         mode: opts.mode,
         warmup_steps_run: 0,
         warmup_steps_saved: 0,
+        warmup_phases_run: 0,
+        warmup_reused: false,
         shared_warmup_s: 0.0,
         shared_warmup: TransferStats::default(),
+        split_uploads: 0,
+        split_reuses: 0,
     };
     if lambdas.is_empty() {
         return Ok(result);
     }
+    let cache_before = runner.cache.as_ref().map(|c| c.stats());
     let outs = match opts.mode {
         SweepMode::Independent => {
             result.warmup_steps_run = independent_warmup;
+            result.warmup_phases_run = lambdas.len();
             parallel_map(lambdas, opts.workers, |i, &lam| {
                 let mut cfg = base.clone();
                 cfg.lambda = lam as f32;
@@ -182,12 +213,29 @@ pub fn sweep_lambdas(
             })
         }
         SweepMode::ForkedWarmup => {
-            let ws = runner.warmup(base)?;
-            result.warmup_steps_run = ws.steps_run;
+            // resolve the shared warmup: from the cross-method pool
+            // when sharing is on and the runner carries a cache (the
+            // pool key renders every warmup-phase knob; `run_from`
+            // re-validates the structured fingerprint per fork), else
+            // run it here
+            let (ws, fresh): (Arc<WarmStart>, bool) = match &runner.cache {
+                Some(cache) if opts.share_warmup => {
+                    cache.get_or_warm(&runner.warmup_cache_key(base), || runner.warmup(base))?
+                }
+                _ => (Arc::new(runner.warmup(base)?), true),
+            };
+            if fresh {
+                result.warmup_steps_run = ws.steps_run;
+                result.warmup_phases_run = 1;
+                result.shared_warmup_s = ws.warmup_s;
+                result.shared_warmup = ws.transfer;
+            } else {
+                // steps/time/traffic were charged to the sweep that
+                // actually ran the phase
+                result.warmup_reused = true;
+            }
             result.warmup_steps_saved =
-                independent_warmup.saturating_sub(ws.steps_run);
-            result.shared_warmup_s = ws.warmup_s;
-            result.shared_warmup = ws.transfer;
+                independent_warmup.saturating_sub(result.warmup_steps_run);
             parallel_map(lambdas, opts.workers, |_i, &lam| {
                 let mut cfg = base.clone();
                 cfg.lambda = lam as f32;
@@ -197,6 +245,11 @@ pub fn sweep_lambdas(
     };
     for r in outs {
         result.runs.push(r?);
+    }
+    if let (Some(cache), Some(before)) = (&runner.cache, cache_before) {
+        let d = cache.stats().since(&before);
+        result.split_uploads = d.split_uploads;
+        result.split_reuses = d.split_reuses;
     }
     Ok(result)
 }
@@ -246,8 +299,12 @@ mod tests {
             mode: SweepMode::Independent,
             warmup_steps_run: 0,
             warmup_steps_saved: 0,
+            warmup_phases_run: 0,
+            warmup_reused: false,
             shared_warmup_s: 0.0,
             shared_warmup: TransferStats::default(),
+            split_uploads: 0,
+            split_reuses: 0,
         };
         let sw = mk_sweep(vec![mk(0.1, 8, 0.9), mk(1.0, 4, 0.8)], "size");
         let front = sw.front_normalized(&g).unwrap();

@@ -58,6 +58,33 @@ impl DataConfig {
         self.n_test = ((self.n_test as f64 * frac) as usize).max(32);
         self
     }
+
+    /// Stable identity of the dataset this config generates.
+    /// [`DataSet::generate`] is a pure function of the config, so two
+    /// equal fingerprints guarantee byte-identical splits — the key
+    /// property the shared eval-split cache
+    /// (`runtime::SharedRunCache`) relies on. FNV-1a over every field
+    /// (floats by bit pattern).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        let mut mix = |v: u64| {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100_0000_01b3);
+            }
+        };
+        mix(self.h as u64);
+        mix(self.w as u64);
+        mix(self.c as u64);
+        mix(self.num_classes as u64);
+        mix(self.n_train as u64);
+        mix(self.n_val as u64);
+        mix(self.n_test as u64);
+        mix(self.signal.to_bits() as u64);
+        mix(self.noise.to_bits() as u64);
+        mix(self.seed);
+        h
+    }
 }
 
 /// A fully materialized dataset (train/val/test).

@@ -6,13 +6,14 @@
 //!   compare  — joint vs baselines (fig. 5 style) at bench scale
 //!   deploy   — discretize + NE16 refine + reorder/split report
 //!   qdemo    — run the integer-conv Pallas artifact end to end
+//!   fixture  — write the offline stub fixture (CI / smoke testing)
 //!   info     — manifest/artifact inventory
 
 use mixprec::assignment::PrecisionMasks;
 use mixprec::baselines::Method;
 use mixprec::coordinator::{
-    default_lambdas, sweep_lambdas, Context, PipelineConfig, Sampling, SweepMode,
-    SweepOptions,
+    default_lambdas, sweep_lambdas, Context, PipelineConfig, Runner, Sampling,
+    SweepMode, SweepOptions,
 };
 use mixprec::cost::{Mpic, Ne16, Size};
 use mixprec::deploy::{refine_for_ne16, reorder_assignment, split_layers};
@@ -22,7 +23,7 @@ use mixprec::util::table::{f2, f4, Table};
 
 fn usage() -> ! {
     eprintln!(
-        "usage: mixprec <search|sweep|compare|deploy|qdemo|info> [options]
+        "usage: mixprec <search|sweep|compare|deploy|qdemo|fixture|info> [options]
   common options:
     --model resnet8|dscnn|resnet10   (default resnet8)
     --reg size|mpic|ne16|bitops      (default size)
@@ -38,6 +39,10 @@ fn usage() -> ! {
     --vary-seeds          independent mode only: derive a distinct
                           seed per lambda (the pre-fork legacy sweep)
     --per-batch-eval      disable the batched device-resident eval
+    --share-eval-bufs on|off  share eval-split uploads across all
+                          runs/methods of this process (default on)
+    --share-warmup on|off seed matching sweeps from one shared warmup
+                          (compare's four methods; default on)
     --seed <n>            RNG seed
     --act-search          open activation precisions {{2,4,8}}
     --verbose"
@@ -75,7 +80,20 @@ fn build_sweep_opts(a: &Args) -> mixprec::Result<SweepOptions> {
         workers: a.usize_or("workers", 1),
         mode,
         vary_seeds: a.has("vary-seeds"),
+        share_warmup: a.bool_or("share-warmup", true),
     })
+}
+
+/// Build the model runner from the independent `--share-eval-bufs` /
+/// `--share-warmup` knobs (warm-pool *use* is consulted per sweep via
+/// `build_sweep_opts`; the attach-or-not rule lives in
+/// `Context::runner_with_sharing`).
+fn build_runner<'a>(ctx: &'a Context, a: &Args, model: &str) -> mixprec::Result<Runner<'a>> {
+    ctx.runner_with_sharing(
+        model,
+        a.bool_or("share-eval-bufs", true),
+        a.bool_or("share-warmup", true),
+    )
 }
 
 fn main() {
@@ -128,10 +146,24 @@ fn run(cmd: &str, a: &Args) -> mixprec::Result<()> {
                 72.0 * 3.0 * 0.25
             );
         }
+        "fixture" => {
+            let dir = std::path::PathBuf::from(a.str_or("dir", "fixture_artifacts"));
+            mixprec::runtime::fixture::write_stub_fixture(&dir)?;
+            println!(
+                "wrote stub fixture (model '{}') to {}",
+                mixprec::runtime::fixture::STUB_MODEL,
+                dir.display()
+            );
+            println!(
+                "run against it with MIXPREC_ARTIFACTS={} mixprec <cmd> --model {}",
+                dir.display(),
+                mixprec::runtime::fixture::STUB_MODEL
+            );
+        }
         "search" => {
             let cfg = build_cfg(a);
             let ctx = Context::load_default(cfg.data_frac)?;
-            let runner = ctx.runner(&cfg.model)?;
+            let runner = build_runner(&ctx, a, &cfg.model)?;
             let r = runner.run(&cfg)?;
             let rr = [(Method::Joint.label(), &r)];
             println!("{}", report::runs_table("search result", &rr).to_markdown());
@@ -142,7 +174,7 @@ fn run(cmd: &str, a: &Args) -> mixprec::Result<()> {
             let lambdas = a.f64_list("lambdas", &default_lambdas(a.usize_or("points", 5)));
             let opts = build_sweep_opts(a)?;
             let ctx = Context::load_default(cfg.data_frac)?;
-            let runner = ctx.runner(&cfg.model)?;
+            let runner = build_runner(&ctx, a, &cfg.model)?;
             let sw = sweep_lambdas(&runner, &cfg, &lambdas, &cfg.reg.clone(), &opts)?;
             if sw.warmup_steps_saved > 0 {
                 println!(
@@ -181,28 +213,35 @@ fn run(cmd: &str, a: &Args) -> mixprec::Result<()> {
             let lambdas = a.f64_list("lambdas", &default_lambdas(a.usize_or("points", 3)));
             let opts = build_sweep_opts(a)?;
             let ctx = Context::load_default(cfg.data_frac)?;
-            let runner = ctx.runner(&cfg.model)?;
-            let mut rows: Vec<(String, mixprec::coordinator::RunResult)> = Vec::new();
-            for m in [Method::Joint, Method::MixPrec, Method::EdMips, Method::Pit] {
-                let mcfg = m.configure(&cfg);
-                let sw = sweep_lambdas(&runner, &mcfg, &lambdas, &cfg.reg.clone(), &opts)?;
-                for r in sw.runs {
+            let runner = build_runner(&ctx, a, &cfg.model)?;
+            let cr = mixprec::baselines::compare_methods(
+                &runner,
+                &cfg,
+                &lambdas,
+                &cfg.reg.clone(),
+                &opts,
+                &[2, 4, 8],
+            )?;
+            let mut rows: Vec<(String, &mixprec::coordinator::RunResult)> = Vec::new();
+            for (m, sw) in &cr.sweeps {
+                for r in &sw.runs {
                     rows.push((m.label(), r));
                 }
             }
-            for (b, r) in [2u32, 4, 8]
-                .iter()
-                .zip(mixprec::baselines::fixed_baselines(&runner, &cfg, &[2, 4, 8])?)
-            {
+            for (b, r) in [2u32, 4, 8].iter().zip(&cr.fixed) {
                 rows.push((format!("w{b}a8"), r));
             }
-            let refs: Vec<(String, &_)> = rows.iter().map(|(l, r)| (l.clone(), r)).collect();
-            println!("{}", report::runs_table("method comparison", &refs).to_markdown());
+            println!("{}", report::runs_table("method comparison", &rows).to_markdown());
+            println!(
+                "shared cache: warmups run {} (reused {}), split uploads {} (reused {})",
+                cr.warmups_run, cr.warmups_reused, cr.split_uploads, cr.split_reuses
+            );
+            println!("compare total: {:.2}s", cr.total_time_s);
         }
         "deploy" => {
             let cfg = build_cfg(a);
             let ctx = Context::load_default(cfg.data_frac)?;
-            let runner = ctx.runner(&cfg.model)?;
+            let runner = build_runner(&ctx, a, &cfg.model)?;
             let r = runner.run(&cfg)?;
             let g = ctx.graph(&cfg.model);
             let mut asg = r.assignment.clone();

@@ -16,6 +16,10 @@
 //! * `MIXPREC_VARY_SEEDS=1` — independent mode only: distinct seed
 //!   per lambda (the pre-fork legacy sweep behavior)
 //! * `MIXPREC_BATCHED_EVAL=0` — fall back to the per-batch eval loop
+//! * `MIXPREC_SHARE_EVAL=0` — disable the shared eval-split cache
+//!   (each run uploads its own splits, the pre-cache behavior)
+//! * `MIXPREC_SHARE_WARMUP=0` — disable the cross-method `WarmStart`
+//!   pool (each sweep warms up itself)
 //! * `MIXPREC_HOST_RESIDENT=1` — force the seed's per-step full
 //!   host<->device marshal (baseline for the step-marshalling bench)
 //! * `MIXPREC_BENCH_DIR` — where `BENCH_*.json` trend files land
@@ -24,7 +28,7 @@
 use std::path::PathBuf;
 use std::time::Instant;
 
-use crate::coordinator::{Context, PipelineConfig, SweepMode, SweepOptions, TempSchedule};
+use crate::coordinator::{Context, PipelineConfig, Runner, SweepMode, SweepOptions, TempSchedule};
 use crate::error::Result;
 use crate::util::json::Json;
 
@@ -54,6 +58,12 @@ pub struct BenchScale {
     pub vary_seeds: bool,
     pub batched_eval: bool,
     pub host_resident: bool,
+    /// Share eval-split uploads through the context cache
+    /// (`MIXPREC_SHARE_EVAL`, default on).
+    pub share_eval: bool,
+    /// Share warmups across matching sweeps (`MIXPREC_SHARE_WARMUP`,
+    /// default on).
+    pub share_warmup: bool,
 }
 
 impl BenchScale {
@@ -83,6 +93,8 @@ impl BenchScale {
             vary_seeds: env_usize("MIXPREC_VARY_SEEDS", 0) != 0,
             batched_eval: env_usize("MIXPREC_BATCHED_EVAL", 1) != 0,
             host_resident: env_usize("MIXPREC_HOST_RESIDENT", 0) != 0,
+            share_eval: env_usize("MIXPREC_SHARE_EVAL", 1) != 0,
+            share_warmup: env_usize("MIXPREC_SHARE_WARMUP", 1) != 0,
         }
     }
 
@@ -108,7 +120,16 @@ impl BenchScale {
             workers: self.workers,
             mode: self.sweep_mode,
             vary_seeds: self.vary_seeds,
+            share_warmup: self.share_warmup,
         }
+    }
+
+    /// Model runner for a figure harness, from the independent
+    /// `MIXPREC_SHARE_EVAL` / `MIXPREC_SHARE_WARMUP` knobs (warm-pool
+    /// *use* is governed per sweep via [`BenchScale::sweep_opts`]; the
+    /// attach-or-not rule lives in `Context::runner_with_sharing`).
+    pub fn runner<'a>(&self, ctx: &'a Context, model: &str) -> Result<Runner<'a>> {
+        ctx.runner_with_sharing(model, self.share_eval, self.share_warmup)
     }
 }
 

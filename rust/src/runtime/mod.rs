@@ -11,9 +11,11 @@ pub mod device;
 pub mod fixture;
 pub mod literal;
 pub mod manifest;
+pub mod shared;
 pub mod state;
 
 pub use client::{Engine, Executable};
 pub use device::{DeviceState, StateSnapshot, TransferStats};
 pub use manifest::{ArtifactDesc, DType, LeafDesc, LeafId, Manifest, ModelManifest};
+pub use shared::{CacheStats, EvalKey, EvalSplit, SharedRunCache};
 pub use state::{Metrics, StepArg, StepFn, TrainState};

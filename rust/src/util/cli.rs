@@ -80,8 +80,8 @@ impl Args {
 
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
         match self.get(key) {
-            Some("true") | Some("1") | Some("yes") => true,
-            Some("false") | Some("0") | Some("no") => false,
+            Some("true") | Some("1") | Some("yes") | Some("on") => true,
+            Some("false") | Some("0") | Some("no") | Some("off") => false,
             Some(_) => default,
             None => default,
         }
@@ -135,6 +135,14 @@ mod tests {
         assert_eq!(a.usize_or("steps", 7), 7);
         assert_eq!(a.str_or("model", "resnet8"), "resnet8");
         assert!(!a.bool_or("x", false));
+    }
+
+    #[test]
+    fn on_off_switches() {
+        let a = parse(&["--share-eval-bufs=off", "--share-warmup", "on"]);
+        assert!(!a.bool_or("share-eval-bufs", true));
+        assert!(a.bool_or("share-warmup", false));
+        assert!(a.bool_or("absent", true));
     }
 
     #[test]

@@ -447,13 +447,18 @@ fn pareto_front_edge_cases() {
 
     // exact duplicates: second insert is rejected, first tag survives
     let mut f = ParetoFront::new();
-    assert!(f.insert(Point::new(1.0, 0.5, "first")));
-    assert!(!f.insert(Point::new(1.0, 0.5, "second")));
+    assert!(f.insert(Point::new(1.0, 0.5, "first")).unwrap());
+    assert!(!f.insert(Point::new(1.0, 0.5, "second")).unwrap());
     assert_eq!(f.len(), 1);
     assert_eq!(f.points()[0].tag, "first");
 
+    // NaN coordinates error out instead of poisoning the dominance
+    // order (they compare false with everything)
+    assert!(f.insert(Point::new(f64::NAN, 0.5, "nan")).is_err());
+    assert_eq!(f.len(), 1);
+
     // same cost, better accuracy still evicts
-    assert!(f.insert(Point::new(1.0, 0.9, "better")));
+    assert!(f.insert(Point::new(1.0, 0.9, "better")).unwrap());
     assert_eq!(f.len(), 1);
     assert_eq!(f.points()[0].tag, "better");
 

@@ -1,0 +1,234 @@
+//! `SharedRunCache` end-to-end contract, on the stub fixture:
+//!
+//! (a) a shared-cache `compare` is **bitwise identical** to the
+//!     unshared flow — per-run assignments, accuracies, full
+//!     histories, and per-method fronts;
+//! (b) `compare`'s four method sweeps run the warmup **once** (their
+//!     warmup fingerprints match by construction) and upload each
+//!     eval split **once per process**, not once per fork;
+//! (c) a sweep whose warmup fingerprint differs runs its own warmup —
+//!     the pool never false-shares;
+//! (d) the split-upload counters attribute the one upload to the run
+//!     that performed it and nothing to the reusers.
+
+use std::path::PathBuf;
+
+use mixprec::baselines::{compare_methods, CompareResult};
+use mixprec::coordinator::{sweep_lambdas, Context, PipelineConfig, SweepMode, SweepOptions};
+use mixprec::runtime::fixture;
+
+struct Fx {
+    dir: PathBuf,
+    ctx: Context,
+}
+
+impl Fx {
+    /// data_frac 0.07 -> ragged val/test splits (not a multiple of the
+    /// fixture batch), so the shared uploads cover the padded-tail
+    /// geometry too.
+    fn new(tag: &str) -> Fx {
+        let dir = std::env::temp_dir().join(format!(
+            "mixprec_sharedcache_{tag}_{}",
+            std::process::id()
+        ));
+        fixture::write_stub_fixture(&dir).expect("fixture");
+        let ctx = Context::load(&dir, 0.07).expect("context");
+        Fx { dir, ctx }
+    }
+}
+
+impl Drop for Fx {
+    fn drop(&mut self) {
+        std::fs::remove_dir_all(&self.dir).ok();
+    }
+}
+
+fn quick_cfg() -> PipelineConfig {
+    let mut cfg = PipelineConfig::quick(fixture::STUB_MODEL);
+    cfg.warmup_steps = 12;
+    cfg.search_steps = 24;
+    cfg.finetune_steps = 6;
+    cfg.eval_every = 8;
+    cfg.steps_per_epoch = 8;
+    cfg
+}
+
+fn opts(share_warmup: bool) -> SweepOptions {
+    SweepOptions {
+        workers: 1,
+        mode: SweepMode::ForkedWarmup,
+        vary_seeds: false,
+        share_warmup,
+    }
+}
+
+const LAMBDAS: [f64; 2] = [0.05, 5.0];
+
+fn run_compare(fx: &Fx, shared: bool, fixed_bits: &[u32]) -> CompareResult {
+    let runner = if shared {
+        fx.ctx.runner_shared(fixture::STUB_MODEL).unwrap()
+    } else {
+        fx.ctx.runner(fixture::STUB_MODEL).unwrap()
+    };
+    let cfg = quick_cfg();
+    compare_methods(&runner, &cfg, &LAMBDAS, "size", &opts(shared), fixed_bits).unwrap()
+}
+
+fn assert_history_eq(a: &[mixprec::coordinator::Record], b: &[mixprec::coordinator::Record]) {
+    assert_eq!(a.len(), b.len(), "history length diverged");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.phase, y.phase);
+        assert_eq!(x.step, y.step);
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "{}[{}] loss", x.phase, x.step);
+        assert_eq!(x.acc.to_bits(), y.acc.to_bits(), "{}[{}] acc", x.phase, x.step);
+        assert_eq!(x.cost.to_bits(), y.cost.to_bits(), "{}[{}] cost", x.phase, x.step);
+    }
+}
+
+/// (a) Shared and unshared `compare` are bitwise identical — fronts,
+/// histories, assignments, fixed baselines included.
+#[test]
+fn shared_compare_matches_unshared_bitwise() {
+    let fx = Fx::new("equiv");
+    // unshared first so the shared run can't "help" it through the
+    // (unused) context cache, then shared
+    let un = run_compare(&fx, false, &[2]);
+    let sh = run_compare(&fx, true, &[2]);
+    assert_eq!(sh.sweeps.len(), un.sweeps.len());
+    for ((ma, a), (mb, b)) in sh.sweeps.iter().zip(&un.sweeps) {
+        assert_eq!(ma.label(), mb.label());
+        assert_eq!(a.runs.len(), b.runs.len());
+        for (x, y) in a.runs.iter().zip(&b.runs) {
+            assert_eq!(x.lambda, y.lambda);
+            assert_eq!(x.assignment, y.assignment, "{} lam={}", ma.label(), x.lambda);
+            assert_eq!(x.val_acc.to_bits(), y.val_acc.to_bits());
+            assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits());
+            assert_history_eq(&x.history, &y.history);
+        }
+        let (fa, fb) = (a.front(), b.front());
+        assert_eq!(fa.len(), fb.len(), "{} front size diverged", ma.label());
+        for (p, q) in fa.points().iter().zip(fb.points()) {
+            assert_eq!(p.cost.to_bits(), q.cost.to_bits());
+            assert_eq!(p.acc.to_bits(), q.acc.to_bits());
+        }
+    }
+    for (x, y) in sh.fixed.iter().zip(&un.fixed) {
+        assert_eq!(x.assignment, y.assignment);
+        assert_eq!(x.val_acc.to_bits(), y.val_acc.to_bits());
+        assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits());
+    }
+}
+
+/// (b) One warmup across the four method sweeps; one upload per eval
+/// split per process.
+#[test]
+fn compare_shares_one_warmup_and_one_upload_per_split() {
+    let fx = Fx::new("counters");
+    let cr = run_compare(&fx, true, &[]);
+    assert_eq!(cr.warmups_run, 1, "expected exactly one warmup phase");
+    assert_eq!(cr.warmups_reused, 3, "three sweeps must reuse it");
+    // run_from touches val (search evals + final) and test (final):
+    // two splits, each uploaded once for the whole compare
+    assert_eq!(cr.split_uploads, 2, "one upload per touched split");
+    let runs = 4 * LAMBDAS.len();
+    assert_eq!(cr.split_reuses, (runs * 2 - 2) as u64);
+    // the first sweep ran the phase; the other three were seeded
+    let cfg = quick_cfg();
+    for (i, (m, sw)) in cr.sweeps.iter().enumerate() {
+        if i == 0 {
+            assert!(!sw.warmup_reused, "{} should have warmed up", m.label());
+            assert_eq!(sw.warmup_steps_run, cfg.warmup_steps);
+            assert_eq!(sw.warmup_phases_run, 1);
+            assert!(sw.shared_warmup.h2d_bytes > 0);
+        } else {
+            assert!(sw.warmup_reused, "{} should reuse the warmup", m.label());
+            assert_eq!(sw.warmup_steps_run, 0);
+            assert_eq!(sw.warmup_phases_run, 0);
+            assert_eq!(sw.shared_warmup_s, 0.0);
+            // everything an independent sweep would have spent is saved
+            assert_eq!(sw.warmup_steps_saved, cfg.warmup_steps * LAMBDAS.len());
+        }
+    }
+}
+
+/// (c) A mismatched warmup fingerprint runs its own warmup — no false
+/// sharing; a matching one reuses.
+#[test]
+fn mismatched_fingerprint_triggers_own_warmup() {
+    let fx = Fx::new("fingerprint");
+    let runner = fx.ctx.runner_shared(fixture::STUB_MODEL).unwrap();
+    let cfg = quick_cfg();
+    sweep_lambdas(&runner, &cfg, &LAMBDAS, "size", &opts(true)).unwrap();
+    let s1 = fx.ctx.shared_cache().stats();
+    assert_eq!((s1.warmups_run, s1.warmups_reused), (1, 0));
+
+    // different warmup trajectory -> its own pool entry
+    let mut longer = cfg.clone();
+    longer.warmup_steps += 4;
+    let sw = sweep_lambdas(&runner, &longer, &LAMBDAS, "size", &opts(true)).unwrap();
+    assert!(!sw.warmup_reused);
+    assert_eq!(sw.warmup_steps_run, longer.warmup_steps);
+    let s2 = fx.ctx.shared_cache().stats();
+    assert_eq!((s2.warmups_run, s2.warmups_reused), (2, 0));
+
+    // a seed change is also a different trajectory
+    let mut reseeded = cfg.clone();
+    reseeded.seed += 1;
+    let sw = sweep_lambdas(&runner, &reseeded, &LAMBDAS, "size", &opts(true)).unwrap();
+    assert!(!sw.warmup_reused);
+    assert_eq!(fx.ctx.shared_cache().stats().warmups_run, 3);
+
+    // the original config hits its entry
+    let sw = sweep_lambdas(&runner, &cfg, &LAMBDAS, "size", &opts(true)).unwrap();
+    assert!(sw.warmup_reused);
+    assert_eq!(sw.warmup_steps_run, 0);
+    assert_eq!(fx.ctx.shared_cache().stats().warmups_reused, 1);
+
+    // opting out bypasses the pool even with a cache attached
+    let sw = sweep_lambdas(&runner, &cfg, &LAMBDAS, "size", &opts(false)).unwrap();
+    assert!(!sw.warmup_reused);
+    assert_eq!(sw.warmup_steps_run, cfg.warmup_steps);
+    assert_eq!(fx.ctx.shared_cache().stats().warmups_run, 3, "pool untouched");
+}
+
+/// (d) Split uploads are per process (cache), not per fork: one run
+/// pays the upload, every other fork and sweep reuses it.
+#[test]
+fn split_uploads_once_per_process_not_per_fork() {
+    let fx = Fx::new("uploads");
+    let runner = fx.ctx.runner_shared(fixture::STUB_MODEL).unwrap();
+    let cfg = quick_cfg();
+    let lambdas = [0.05, 0.5, 5.0];
+    let first = sweep_lambdas(&runner, &cfg, &lambdas, "size", &opts(true)).unwrap();
+    assert_eq!(first.split_uploads, 2, "val + test uploaded once");
+    assert_eq!(first.split_reuses, (lambdas.len() * 2 - 2) as u64);
+    // exactly one fork was charged the upload bytes
+    let max_h2d = first.runs.iter().map(|r| r.transfer.h2d_bytes).max().unwrap();
+    let min_h2d = first.runs.iter().map(|r| r.transfer.h2d_bytes).min().unwrap();
+    assert!(
+        max_h2d > min_h2d,
+        "the uploading fork must carry the split bytes; the rest must not"
+    );
+
+    // a second sweep (different masks, same data) uploads nothing
+    let mut mix = cfg.clone();
+    mix.masks = mixprec::assignment::PrecisionMasks::mixprec();
+    let second = sweep_lambdas(&runner, &mix, &lambdas, "size", &opts(true)).unwrap();
+    assert_eq!(second.split_uploads, 0);
+    assert_eq!(second.split_reuses, (lambdas.len() * 2) as u64);
+
+    // an unshared runner on the same context never touches the cache
+    let lone = fx.ctx.runner(fixture::STUB_MODEL).unwrap();
+    let un = sweep_lambdas(&lone, &cfg, &lambdas, "size", &opts(true)).unwrap();
+    assert_eq!((un.split_uploads, un.split_reuses), (0, 0));
+    let cache = fx.ctx.shared_cache().stats();
+    assert_eq!(cache.split_uploads, 2, "whole process: still one upload per split");
+
+    // the knobs are independent: eval sharing off with the cache still
+    // attached keeps the warm pool alive while splits upload per run
+    let shared = fx.ctx.runner_shared(fixture::STUB_MODEL).unwrap();
+    let eval_off = shared.with_eval_sharing(false);
+    let sw = sweep_lambdas(&eval_off, &cfg, &lambdas, "size", &opts(true)).unwrap();
+    assert!(sw.warmup_reused, "warm pool must survive share_eval = off");
+    assert_eq!((sw.split_uploads, sw.split_reuses), (0, 0));
+}

@@ -64,6 +64,8 @@ fn opts(mode: SweepMode, workers: usize) -> SweepOptions {
         mode,
         // shared seed in both modes: the equivalence baseline
         vary_seeds: false,
+        // irrelevant here: these runners carry no shared cache
+        share_warmup: true,
     }
 }
 

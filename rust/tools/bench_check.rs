@@ -1,0 +1,322 @@
+//! CI bench-regression gate.
+//!
+//! Compares freshly produced `BENCH_<name>.json` trend files (written
+//! by the bench harnesses) against committed
+//! `BENCH_<name>.baseline.json` files and fails on regression. Only
+//! *deterministic* counters are gated — bytes per step, warmup phases
+//! run/saved, split uploads, equivalence booleans — never wall-clock,
+//! which is noise on shared CI runners.
+//!
+//! The baseline may carry a *subset* of the rule keys: a rule whose
+//! baseline key is absent is reported as skipped (committed baselines
+//! start conservative and tighten via `--update`). A rule whose
+//! *current* key is absent fails — a gated counter disappearing is
+//! itself a regression.
+//!
+//! ```sh
+//! cargo run --release --bin bench_check                # gate step_marshal + sweep_fork
+//! cargo run --release --bin bench_check -- sweep_fork  # gate one bench
+//! cargo run --release --bin bench_check -- --update    # refresh the gated keys in the
+//!                                                      # baselines from the current run
+//! ```
+//!
+//! Options: `--bench-dir <d>` (where `BENCH_*.json` live, default `.`,
+//! matching the benches' `MIXPREC_BENCH_DIR` default), `--baseline-dir
+//! <d>` (where `BENCH_*.baseline.json` live, default `.`).
+
+use std::path::{Path, PathBuf};
+use std::process::exit;
+
+use mixprec::util::cli::Args;
+use mixprec::util::json::{Json, JsonObj};
+
+/// Which way a counter is allowed to move.
+#[derive(Clone, Copy, PartialEq)]
+enum Dir {
+    /// Regression = current above baseline (bytes, uploads, phases).
+    LowerIsBetter,
+    /// Regression = current below baseline (savings, reuse counts).
+    HigherIsBetter,
+    /// Must match the baseline exactly (equivalence booleans).
+    Exact,
+}
+
+struct Rule {
+    bench: &'static str,
+    /// JSON path into the bench payload.
+    path: &'static [&'static str],
+    dir: Dir,
+    /// Relative tolerance for the numeric directions (0.10 = 10%).
+    tol: f64,
+}
+
+/// The gated counters. All are deterministic on the stub backend at
+/// fixed scale; tolerances leave room for benign drift (e.g. a new
+/// scalar knob adding a few bytes per step) while catching a real
+/// regression such as losing device residency or re-uploading per
+/// fork.
+const RULES: &[Rule] = &[
+    // step_marshal: the device-resident path must keep per-step
+    // traffic tiny (a host-resident regression is ~60x these numbers)
+    Rule {
+        bench: "step_marshal",
+        path: &["device", "h2d_bytes_per_step"],
+        dir: Dir::LowerIsBetter,
+        tol: 0.10,
+    },
+    Rule {
+        bench: "step_marshal",
+        path: &["device", "d2h_bytes_per_step"],
+        dir: Dir::LowerIsBetter,
+        tol: 0.10,
+    },
+    Rule {
+        bench: "step_marshal",
+        path: &["sections_equal"],
+        dir: Dir::Exact,
+        tol: 0.0,
+    },
+    // sweep_fork: warmup sharing within a sweep
+    Rule {
+        bench: "sweep_fork",
+        path: &["warmup_steps_saved"],
+        dir: Dir::HigherIsBetter,
+        tol: 0.0,
+    },
+    Rule {
+        bench: "sweep_fork",
+        path: &["forked", "warmup_steps_run"],
+        dir: Dir::LowerIsBetter,
+        tol: 0.0,
+    },
+    Rule {
+        bench: "sweep_fork",
+        path: &["fronts_equal"],
+        dir: Dir::Exact,
+        tol: 0.0,
+    },
+    // batched eval traffic: cached calls move only the two scalars
+    Rule {
+        bench: "sweep_fork",
+        path: &["eval_bytes_per_call", "batched_cached_call", "h2d_bytes"],
+        dir: Dir::LowerIsBetter,
+        tol: 0.0,
+    },
+    Rule {
+        bench: "sweep_fork",
+        path: &["eval_bytes_per_call", "batched_first_call", "h2d_bytes"],
+        dir: Dir::LowerIsBetter,
+        tol: 0.10,
+    },
+    // compare-level sharing: one warmup, one upload per split
+    Rule {
+        bench: "sweep_fork",
+        path: &["compare", "warmups_run"],
+        dir: Dir::LowerIsBetter,
+        tol: 0.0,
+    },
+    Rule {
+        bench: "sweep_fork",
+        path: &["compare", "warmups_reused"],
+        dir: Dir::HigherIsBetter,
+        tol: 0.0,
+    },
+    Rule {
+        bench: "sweep_fork",
+        path: &["compare", "split_uploads"],
+        dir: Dir::LowerIsBetter,
+        tol: 0.0,
+    },
+    Rule {
+        bench: "sweep_fork",
+        path: &["compare", "split_reuses"],
+        dir: Dir::HigherIsBetter,
+        tol: 0.0,
+    },
+    Rule {
+        bench: "sweep_fork",
+        path: &["compare", "fronts_equal_unshared"],
+        dir: Dir::Exact,
+        tol: 0.0,
+    },
+];
+
+const DEFAULT_BENCHES: [&str; 2] = ["step_marshal", "sweep_fork"];
+
+fn lookup<'a>(mut v: &'a Json, path: &[&str]) -> Option<&'a Json> {
+    for key in path {
+        match v.as_obj().and_then(|o| o.get(key)) {
+            Some(next) => v = next,
+            None => return None,
+        }
+    }
+    Some(v)
+}
+
+fn load(path: &Path) -> Option<Json> {
+    let text = std::fs::read_to_string(path).ok()?;
+    match Json::parse(&text) {
+        Ok(v) => Some(v),
+        Err(e) => {
+            eprintln!("bench_check: {} is not valid JSON: {e}", path.display());
+            None
+        }
+    }
+}
+
+fn fmt_path(path: &[&str]) -> String {
+    path.join(".")
+}
+
+/// Set a nested key path, creating intermediate objects as needed
+/// (insertion order — and therefore the committed baseline's diff
+/// stability — is preserved by `JsonObj`).
+fn set_path(v: &mut Json, path: &[&str], val: Json) {
+    if path.is_empty() {
+        *v = val;
+        return;
+    }
+    if !matches!(v, Json::Obj(_)) {
+        *v = Json::Obj(JsonObj::new());
+    }
+    if let Json::Obj(o) = v {
+        let mut child = o.get(path[0]).cloned().unwrap_or(Json::Null);
+        set_path(&mut child, &path[1..], val);
+        o.insert(path[0], child);
+    }
+}
+
+/// `--update`: refresh only the *gated* keys in the baseline, starting
+/// from the existing file when there is one — hand-written headroom
+/// notes (`_comment`) and any other curated keys survive, and noisy
+/// ungated fields (wall-clock seconds) never enter the baseline. The
+/// written values are exact measurements; re-add ceiling headroom by
+/// hand where the old baseline had it.
+fn updated_baseline(name: &str, cur: &Json, existing: Option<Json>) -> Json {
+    let mut base = existing.unwrap_or_else(|| {
+        let mut o = JsonObj::new();
+        o.insert("bench", Json::Str(name.into()));
+        Json::Obj(o)
+    });
+    for rule in RULES.iter().filter(|r| r.bench == name) {
+        if let Some(v) = lookup(cur, rule.path) {
+            set_path(&mut base, rule.path, v.clone());
+        }
+    }
+    base
+}
+
+/// One rule against one (current, baseline) pair. Returns Err(reason)
+/// on regression, Ok(Some(note)) on skip, Ok(None) on pass.
+fn check(rule: &Rule, cur: &Json, base: &Json) -> Result<Option<String>, String> {
+    let key = fmt_path(rule.path);
+    let Some(b) = lookup(base, rule.path) else {
+        return Ok(Some(format!("skip {key} (not in baseline)")));
+    };
+    let Some(c) = lookup(cur, rule.path) else {
+        return Err(format!("{key}: present in baseline but missing from current run"));
+    };
+    match rule.dir {
+        Dir::Exact => {
+            if c == b {
+                Ok(None)
+            } else {
+                Err(format!("{key}: expected {b}, got {c}"))
+            }
+        }
+        Dir::LowerIsBetter | Dir::HigherIsBetter => {
+            let (Some(cv), Some(bv)) = (c.as_f64(), b.as_f64()) else {
+                return Err(format!("{key}: expected numbers, got {c} vs baseline {b}"));
+            };
+            let slack = bv.abs() * rule.tol;
+            let regressed = match rule.dir {
+                Dir::LowerIsBetter => cv > bv + slack,
+                Dir::HigherIsBetter => cv < bv - slack,
+                Dir::Exact => unreachable!(),
+            };
+            if regressed {
+                let (cmp, limit) = match rule.dir {
+                    Dir::LowerIsBetter => ("<=", bv + slack),
+                    _ => (">=", bv - slack),
+                };
+                Err(format!(
+                    "{key}: {cv} (baseline {bv}, tolerance {:.0}%, want {cmp} {limit:.2})",
+                    rule.tol * 100.0
+                ))
+            } else {
+                Ok(None)
+            }
+        }
+    }
+}
+
+fn main() {
+    let a = Args::from_env();
+    let bench_dir = PathBuf::from(a.str_or("bench-dir", "."));
+    let baseline_dir = PathBuf::from(a.str_or("baseline-dir", "."));
+    let update = a.has("update");
+    let mut benches: Vec<String> = Vec::new();
+    let mut i = 0;
+    while let Some(p) = a.pos(i) {
+        benches.push(p.to_string());
+        i += 1;
+    }
+    if benches.is_empty() {
+        benches = DEFAULT_BENCHES.iter().map(|s| s.to_string()).collect();
+    }
+
+    let mut failures = 0usize;
+    for name in &benches {
+        let cur_path = bench_dir.join(format!("BENCH_{name}.json"));
+        let base_path = baseline_dir.join(format!("BENCH_{name}.baseline.json"));
+        let Some(cur) = load(&cur_path) else {
+            eprintln!(
+                "FAIL [{name}] no current trend file at {} (did the bench leg run?)",
+                cur_path.display()
+            );
+            failures += 1;
+            continue;
+        };
+        if update {
+            let merged = updated_baseline(name, &cur, load(&base_path));
+            std::fs::write(&base_path, merged.to_string_pretty())
+                .unwrap_or_else(|e| panic!("write {}: {e}", base_path.display()));
+            println!("updated gated keys in {}", base_path.display());
+            continue;
+        }
+        let Some(base) = load(&base_path) else {
+            eprintln!(
+                "FAIL [{name}] no baseline at {} (bootstrap with --update and commit it)",
+                base_path.display()
+            );
+            failures += 1;
+            continue;
+        };
+        let mut bench_failures = 0usize;
+        for rule in RULES.iter().filter(|r| r.bench == name) {
+            match check(rule, &cur, &base) {
+                Ok(None) => println!("  ok   [{name}] {}", fmt_path(rule.path)),
+                Ok(Some(note)) => println!("  note [{name}] {note}"),
+                Err(reason) => {
+                    eprintln!("  FAIL [{name}] {reason}");
+                    bench_failures += 1;
+                }
+            }
+        }
+        if bench_failures == 0 {
+            println!("PASS [{name}]");
+        } else {
+            eprintln!("FAIL [{name}] {bench_failures} regressed counter(s)");
+            failures += bench_failures;
+        }
+    }
+    if failures > 0 {
+        eprintln!(
+            "bench_check: {failures} regression(s). If intentional, refresh the \
+             baselines with `cargo run --release --bin bench_check -- --update` \
+             and commit the BENCH_*.baseline.json changes."
+        );
+        exit(1);
+    }
+    println!("bench_check: all gated counters within tolerance");
+}
