@@ -21,7 +21,9 @@
 use std::time::Instant;
 
 use mixprec::report::benchkit;
-use mixprec::runtime::{fixture, DeviceState, Engine, StepArg, StepFn, TransferStats};
+use mixprec::runtime::{
+    fixture, AllocStats, DeviceState, Engine, StepArg, StepFn, TransferStats,
+};
 use mixprec::util::json::{Json, JsonObj};
 
 fn env_steps(default: usize) -> usize {
@@ -32,7 +34,7 @@ fn env_steps(default: usize) -> usize {
         .max(1) // steps=0 would put NaN in the JSON
 }
 
-fn leg_json(seconds: f64, steps: usize, stats: &TransferStats) -> Json {
+fn leg_json(seconds: f64, steps: usize, stats: &TransferStats) -> JsonObj {
     let steps = (steps as f64).max(1.0); // steps=0 would emit NaN
     let mut o = JsonObj::new();
     o.insert("seconds", Json::Num(seconds));
@@ -45,7 +47,28 @@ fn leg_json(seconds: f64, steps: usize, stats: &TransferStats) -> Json {
         "d2h_bytes_per_step",
         Json::Num(stats.d2h_bytes as f64 / steps),
     );
-    Json::Obj(o)
+    o
+}
+
+/// Steady-state per-step donation/pool counters (the first step is
+/// excluded: it allocates the metric buffers the pool then recycles
+/// forever).
+fn alloc_json(o: &mut JsonObj, steady: &AllocStats, steady_steps: usize) {
+    let n = steady_steps.max(1) as f64;
+    o.insert(
+        "buffers_allocated_per_step",
+        Json::Num(steady.allocated as f64 / n),
+    );
+    o.insert("donated_per_step", Json::Num(steady.donated as f64 / n));
+    o.insert("pooled_per_step", Json::Num(steady.pooled as f64 / n));
+    o.insert(
+        "fallback_pinned_per_step",
+        Json::Num(steady.fallback_pinned as f64 / n),
+    );
+    o.insert(
+        "fallback_aliased_per_step",
+        Json::Num(steady.fallback_aliased as f64 / n),
+    );
 }
 
 /// Stub-backend leg: exercises the real marshalling code against the
@@ -64,6 +87,9 @@ fn run_stub() -> mixprec::Result<()> {
     let mask_a = eng.upload_tensor(&fixture::stub_search_extras(0)[4])?;
     let mask_b = eng.upload_tensor(&fixture::stub_search_extras(0)[5])?;
     let t0 = Instant::now();
+    // the first step allocates the metric buffers the pool then
+    // recycles; counters snapshotted after it isolate the steady state
+    let mut after_first: Option<AllocStats> = None;
     for step in 0..steps {
         let ex = fixture::stub_search_extras(step);
         search.step_device(
@@ -78,9 +104,25 @@ fn run_stub() -> mixprec::Result<()> {
                 StepArg::Device(&mask_b),
             ],
         )?;
+        if step == 0 {
+            after_first = Some(dev.alloc);
+        }
     }
     let dev_s = t0.elapsed().as_secs_f64();
     let dev_stats = dev.stats;
+    let steady = dev.alloc.since(&after_first.unwrap_or_default());
+    let steady_steps = steps.saturating_sub(1).max(1);
+    // acceptance: with every state leaf donated and every metric
+    // buffer pooled, the steady-state step loop allocates nothing
+    assert_eq!(
+        steady.allocated, 0,
+        "steady-state step loop allocated device buffers: {steady:?}"
+    );
+    assert_eq!(
+        steady.fallback_pinned + steady.fallback_aliased,
+        0,
+        "donation fell back with nothing pinning the state: {steady:?}"
+    );
 
     // ---- host-resident leg: forced full marshal every step ----------
     let mut host = DeviceState::from_host(init.clone());
@@ -113,6 +155,20 @@ fn run_stub() -> mixprec::Result<()> {
         "device-resident trajectory diverged from the full-marshal paths"
     );
 
+    // ---- untuple zero-copy accounting --------------------------------
+    // legacy tuple-output disassembly shares element payloads instead
+    // of deep-cloning them; count what the copies would have cost
+    let untuple_before = xla::untuple_saved_bytes();
+    let tuple_buf = eng.upload(&xla::Literal::tuple(vec![
+        xla::Literal::vec1(&vec![1.0f32; 4096]),
+        xla::Literal::vec1(&vec![2.0f32; 16]),
+    ]))?;
+    for _ in 0..64 {
+        let _ = tuple_buf.untuple();
+    }
+    let untuple_saved = xla::untuple_saved_bytes() - untuple_before;
+    assert!(untuple_saved > 0, "untuple copied payloads again");
+
     let speedup = host_s / dev_s.max(1e-12);
     println!(
         "device    {:9.0} steps/s  ({:.0} B/step h2d, {:.0} B/step d2h)",
@@ -120,6 +176,13 @@ fn run_stub() -> mixprec::Result<()> {
         dev_stats.h2d_bytes as f64 / steps as f64,
         dev_stats.d2h_bytes as f64 / steps as f64
     );
+    println!(
+        "          steady-state alloc/step: {} donated, {} pooled, {} allocated",
+        steady.donated as f64 / steady_steps as f64,
+        steady.pooled as f64 / steady_steps as f64,
+        steady.allocated as f64 / steady_steps as f64
+    );
+    println!("untuple   {untuple_saved} B of element copies avoided (64 calls)");
     println!(
         "host      {:9.0} steps/s  ({:.0} B/step h2d, {:.0} B/step d2h)",
         steps as f64 / host_s,
@@ -133,13 +196,17 @@ fn run_stub() -> mixprec::Result<()> {
     o.insert("bench", Json::Str("step_marshal".into()));
     o.insert("mode", Json::Str("stub".into()));
     o.insert("steps", Json::Num(steps as f64));
-    o.insert("device", leg_json(dev_s, steps, &dev_stats));
-    o.insert("host_resident", leg_json(host_s, steps, &host_stats));
+    o.insert("steady_steps", Json::Num(steady_steps as f64));
+    let mut dev_o = leg_json(dev_s, steps, &dev_stats);
+    alloc_json(&mut dev_o, &steady, steady_steps);
+    o.insert("device", Json::Obj(dev_o));
+    o.insert("host_resident", Json::Obj(leg_json(host_s, steps, &host_stats)));
     o.insert(
         "legacy_steps_per_sec",
         Json::Num(steps as f64 / legacy_s.max(1e-12)),
     );
     o.insert("speedup_vs_host_resident", Json::Num(speedup));
+    o.insert("untuple_bytes_saved", Json::Num(untuple_saved as f64));
     o.insert("sections_equal", Json::Bool(equal));
     benchkit::write_bench_json("step_marshal", &Json::Obj(o))?;
     std::fs::remove_dir_all(&dir).ok();
@@ -191,10 +258,14 @@ fn main() {
         o.insert("bench", Json::Str("step_marshal".into()));
         o.insert("mode", Json::Str("artifacts".into()));
         o.insert("model", Json::Str(model.into()));
-        o.insert("device", leg_json(dev.timing.total_s(), dev.steps_run, &dev.transfer));
+        let mut dev_o = leg_json(dev.timing.total_s(), dev.steps_run, &dev.transfer);
+        // whole-pipeline counters (init + snapshot windows included,
+        // unlike the stub leg's steady-state isolation)
+        alloc_json(&mut dev_o, &dev.alloc, dev.steps_run);
+        o.insert("device", Json::Obj(dev_o));
         o.insert(
             "host_resident",
-            leg_json(host.timing.total_s(), host.steps_run, &host.transfer),
+            Json::Obj(leg_json(host.timing.total_s(), host.steps_run, &host.transfer)),
         );
         o.insert(
             "per_phase_seconds_device",

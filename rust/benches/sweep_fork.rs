@@ -37,6 +37,12 @@ fn sweep_json(sw: &SweepResult, seconds: f64) -> Json {
     o.insert("split_uploads", Json::Num(sw.split_uploads as f64));
     o.insert("split_reuses", Json::Num(sw.split_reuses as f64));
     o.insert("total_transfer_bytes", Json::Num(traffic as f64));
+    let al = sw.alloc();
+    o.insert("buffers_donated", Json::Num(al.donated as f64));
+    o.insert("buffers_pooled", Json::Num(al.pooled as f64));
+    o.insert("buffers_allocated", Json::Num(al.allocated as f64));
+    o.insert("fallback_pinned", Json::Num(al.fallback_pinned as f64));
+    o.insert("fallback_aliased", Json::Num(al.fallback_aliased as f64));
     Json::Obj(o)
 }
 
@@ -108,6 +114,14 @@ fn run() -> mixprec::Result<()> {
     };
     let fronts_equal = key(&ff) == key(&fi);
     assert!(fronts_equal, "forked front != independent front");
+    // donation must engage on both sweep modes and never alias:
+    // pinned fallbacks are expected (forks + best-state snapshots),
+    // aliased ones would mean a recycled buffer escaped its refcount
+    for (label, sw) in [("forked", &forked), ("independent", &indep)] {
+        let al = sw.alloc();
+        assert!(al.donated > 0, "{label} sweep ran without donation");
+        assert_eq!(al.fallback_aliased, 0, "{label} sweep saw aliased fallbacks");
+    }
 
     println!(
         "forked  {forked_s:7.2}s  ({} warmup steps run, {} saved)",

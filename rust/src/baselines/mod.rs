@@ -14,6 +14,7 @@ use crate::assignment::PrecisionMasks;
 use crate::coordinator::phases::{PipelineConfig, RunResult, Runner};
 use crate::coordinator::sweep::{sweep_lambdas, SweepOptions, SweepResult};
 use crate::error::Result;
+use crate::runtime::AllocStats;
 
 /// Named baseline method.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -97,6 +98,10 @@ pub struct CompareResult {
     pub split_uploads: u64,
     /// Eval-split requests served from the shared cache.
     pub split_reuses: u64,
+    /// Donation / buffer-pool accounting aggregated over every method
+    /// sweep and fixed baseline of the comparison (the CI e2e leg
+    /// asserts a nonzero donation rate and zero aliased fallbacks).
+    pub alloc: AllocStats,
     /// Wall-clock of the whole comparison.
     pub total_time_s: f64,
 }
@@ -119,12 +124,14 @@ pub fn compare_methods(
     let mut sweeps = Vec::with_capacity(COMPARE_METHODS.len());
     let (mut warmups_run, mut warmups_reused) = (0usize, 0usize);
     let (mut split_uploads, mut split_reuses) = (0u64, 0u64);
+    let mut alloc = AllocStats::default();
     for m in COMPARE_METHODS {
         let sw = sweep_lambdas(runner, &m.configure(base), lambdas, metric, opts)?;
         warmups_run += sw.warmup_phases_run;
         warmups_reused += usize::from(sw.warmup_reused);
         split_uploads += sw.split_uploads;
         split_reuses += sw.split_reuses;
+        alloc.merge(&sw.alloc());
         sweeps.push((m, sw));
     }
     let fixed = if fixed_bits.is_empty() {
@@ -132,6 +139,9 @@ pub fn compare_methods(
     } else {
         fixed_baselines(runner, base, fixed_bits)?
     };
+    for r in &fixed {
+        alloc.merge(&r.alloc);
+    }
     Ok(CompareResult {
         sweeps,
         fixed,
@@ -139,6 +149,7 @@ pub fn compare_methods(
         warmups_reused,
         split_uploads,
         split_reuses,
+        alloc,
         total_time_s: t0.elapsed().as_secs_f64(),
     })
 }

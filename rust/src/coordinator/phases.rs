@@ -40,8 +40,8 @@ use crate::data::{BatchIter, DataSet, Split};
 use crate::error::{Error, Result};
 use crate::graph::ModelGraph;
 use crate::runtime::{
-    DeviceState, Engine, EvalKey, EvalSplit, Manifest, ModelManifest, SharedRunCache,
-    StateSnapshot, StepArg, StepFn, TransferStats,
+    AllocStats, DeviceState, Engine, EvalKey, EvalSplit, Manifest, ModelManifest,
+    SharedRunCache, StateSnapshot, StepArg, StepFn, TransferStats,
 };
 use crate::util::rng::Pcg64;
 use crate::util::tensor::Tensor;
@@ -215,6 +215,10 @@ pub struct RunResult {
     /// over the whole pipeline (the one-time mask upload via
     /// `MaskBufs` is outside the state and not counted).
     pub transfer: TransferStats,
+    /// Donation / buffer-pool accounting of the pipeline's device
+    /// steps (state leaves donated in place, outputs pooled, fresh
+    /// allocations, and both donation-fallback kinds).
+    pub alloc: AllocStats,
 }
 
 impl RunResult {
@@ -383,6 +387,8 @@ pub struct WarmStart {
     pub steps_run: usize,
     /// Host<->device traffic of init + warmup.
     pub transfer: TransferStats,
+    /// Donation / pool accounting of the warmup phase's steps.
+    pub alloc: AllocStats,
     // fingerprint: a fork must come from a config with the same
     // warmup trajectory (every knob the warmup phase reads)
     fingerprint: WarmupFingerprint,
@@ -714,6 +720,7 @@ impl<'a> Runner<'a> {
             warmup_s,
             steps_run,
             transfer: state.stats,
+            alloc: state.alloc,
             fingerprint: WarmupFingerprint::of(cfg, self.data.cfg.n_train),
         })
     }
@@ -729,6 +736,7 @@ impl<'a> Runner<'a> {
         r.timing.warmup_s = ws.warmup_s;
         r.steps_run += ws.steps_run;
         r.transfer.merge(&ws.transfer);
+        r.alloc.merge(&ws.alloc);
         Ok(r)
     }
 
@@ -884,8 +892,8 @@ impl<'a> Runner<'a> {
             }
         }
         match best {
-            Some(BestState::Dev(snap)) => state.restore(&snap),
-            Some(BestState::Host(host)) => state.restore_host(host),
+            Some(BestState::Dev(snap)) => state.restore(&snap, Some(self.eng.pool())),
+            Some(BestState::Host(host)) => state.restore_host(host, Some(self.eng.pool())),
             None => {}
         }
         timing.search_s = t0.elapsed().as_secs_f64();
@@ -984,6 +992,7 @@ impl<'a> Runner<'a> {
             timing,
             steps_run,
             transfer: state.stats,
+            alloc: state.alloc,
         })
     }
 }

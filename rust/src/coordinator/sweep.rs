@@ -20,7 +20,7 @@ use crate::coordinator::phases::{PipelineConfig, RunResult, Runner, WarmStart};
 use crate::cost::Normalizer;
 use crate::error::Result;
 use crate::graph::ModelGraph;
-use crate::runtime::TransferStats;
+use crate::runtime::{AllocStats, TransferStats};
 use crate::util::pool::parallel_map;
 
 /// Warmup-sharing strategy of a sweep.
@@ -114,6 +114,9 @@ pub struct SweepResult {
     pub shared_warmup_s: f64,
     /// Host<->device traffic of the shared warmup phase.
     pub shared_warmup: TransferStats,
+    /// Donation / pool accounting of the shared warmup phase (each
+    /// run's own steps are counted in its `RunResult::alloc`).
+    pub shared_warmup_alloc: AllocStats,
     /// Eval-split uploads performed through the shared cache during
     /// this sweep (0 without a cache; at most one per split per
     /// process with one).
@@ -150,6 +153,16 @@ impl SweepResult {
     /// search-time numerator).
     pub fn total_search_time_s(&self) -> f64 {
         self.shared_warmup_s + self.runs.iter().map(|r| r.timing.total_s()).sum::<f64>()
+    }
+
+    /// Donation / pool accounting aggregated over the shared warmup
+    /// phase and every run of the sweep.
+    pub fn alloc(&self) -> AllocStats {
+        let mut a = self.shared_warmup_alloc;
+        for r in &self.runs {
+            a.merge(&r.alloc);
+        }
+        a
     }
 
     /// Pareto front in (normalized cost, val accuracy) space: every
@@ -192,6 +205,7 @@ pub fn sweep_lambdas(
         warmup_reused: false,
         shared_warmup_s: 0.0,
         shared_warmup: TransferStats::default(),
+        shared_warmup_alloc: AllocStats::default(),
         split_uploads: 0,
         split_reuses: 0,
     };
@@ -229,6 +243,7 @@ pub fn sweep_lambdas(
                 result.warmup_phases_run = 1;
                 result.shared_warmup_s = ws.warmup_s;
                 result.shared_warmup = ws.transfer;
+                result.shared_warmup_alloc = ws.alloc;
             } else {
                 // steps/time/traffic were charged to the sweep that
                 // actually ran the phase
@@ -292,6 +307,7 @@ mod tests {
             timing: Timing::default(),
             steps_run: 0,
             transfer: Default::default(),
+            alloc: Default::default(),
         };
         let mk_sweep = |runs: Vec<RunResult>, metric: &str| SweepResult {
             runs,
@@ -303,6 +319,7 @@ mod tests {
             warmup_reused: false,
             shared_warmup_s: 0.0,
             shared_warmup: TransferStats::default(),
+            shared_warmup_alloc: AllocStats::default(),
             split_uploads: 0,
             split_reuses: 0,
         };

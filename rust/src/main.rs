@@ -167,6 +167,7 @@ fn run(cmd: &str, a: &Args) -> mixprec::Result<()> {
             let r = runner.run(&cfg)?;
             let rr = [(Method::Joint.label(), &r)];
             println!("{}", report::runs_table("search result", &rr).to_markdown());
+            println!("{}", report::alloc_line(&r.alloc));
             println!("{}", report::history_table(&r).to_markdown());
         }
         "sweep" => {
@@ -183,6 +184,7 @@ fn run(cmd: &str, a: &Args) -> mixprec::Result<()> {
                     sw.warmup_steps_run, sw.warmup_steps_saved, sw.shared_warmup_s
                 );
             }
+            println!("{}", report::alloc_line(&sw.alloc()));
             let rows: Vec<(String, &_)> = sw
                 .runs
                 .iter()
@@ -236,6 +238,7 @@ fn run(cmd: &str, a: &Args) -> mixprec::Result<()> {
                 "shared cache: warmups run {} (reused {}), split uploads {} (reused {})",
                 cr.warmups_run, cr.warmups_reused, cr.split_uploads, cr.split_reuses
             );
+            println!("{}", report::alloc_line(&cr.alloc));
             println!("compare total: {:.2}s", cr.total_time_s);
         }
         "deploy" => {

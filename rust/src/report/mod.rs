@@ -5,7 +5,18 @@ pub mod benchkit;
 
 use crate::coordinator::pareto::ParetoFront;
 use crate::coordinator::phases::RunResult;
+use crate::runtime::AllocStats;
 use crate::util::table::{f2, f4, Table};
+
+/// One-line donation / buffer-pool summary. The CI e2e leg greps this
+/// exact format ("alloc: donated N ..." and "aliased-fallback 0"), so
+/// keep it stable.
+pub fn alloc_line(a: &AllocStats) -> String {
+    format!(
+        "alloc: donated {} pooled {} allocated {} pinned-fallback {} aliased-fallback {}",
+        a.donated, a.pooled, a.allocated, a.fallback_pinned, a.fallback_aliased
+    )
+}
 
 /// Render a set of runs as the standard results table.
 pub fn runs_table(title: &str, runs: &[(String, &RunResult)]) -> Table {

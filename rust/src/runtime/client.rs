@@ -24,6 +24,12 @@ use crate::util::tensor::Tensor;
 pub struct Engine {
     client: xla::PjRtClient,
     cache: Mutex<HashMap<String, Arc<Executable>>>,
+    /// Size-classed pool of retired dead device allocations, shared by
+    /// every state/step bound to this engine (sweep workers included —
+    /// the pool is internally synchronized, and only refcount-1
+    /// payloads ever enter it). Outputs that cannot be donated draw
+    /// from here before allocating fresh.
+    pool: Arc<xla::BufferPool>,
 }
 
 // SAFETY: TfrtCpuClient (PJRT CPU) is internally synchronized; compile
@@ -45,11 +51,18 @@ impl Engine {
         Ok(Engine {
             client: xla::PjRtClient::cpu()?,
             cache: Mutex::new(HashMap::new()),
+            pool: Arc::new(xla::BufferPool::new()),
         })
     }
 
     pub fn platform(&self) -> String {
         self.client.platform_name()
+    }
+
+    /// The engine-wide buffer pool (retirement points live in
+    /// `DeviceState` / `StepFn`; see `runtime/README.md`).
+    pub fn pool(&self) -> &Arc<xla::BufferPool> {
+        &self.pool
     }
 
     /// Load + compile an HLO text file (cached by path).
@@ -115,6 +128,26 @@ impl Executable {
             }
         }
         Ok(bufs)
+    }
+
+    /// Donation-aware variant of [`Executable::run_buffers`]: inputs
+    /// carry per-argument donation intent, outputs that cannot reuse a
+    /// donated allocation draw from `pool`, and the backend's per-call
+    /// allocation accounting is returned alongside. The hot path of
+    /// `StepFn::step_device`.
+    pub fn run_buffers_d(
+        &self,
+        inputs: Vec<xla::ExecInput>,
+        pool: &xla::BufferPool,
+    ) -> Result<(Vec<xla::PjRtBuffer>, xla::ExecStats)> {
+        let (out, stats) = self.exe.execute_d(inputs, pool)?;
+        let bufs = Self::first_device(out)?;
+        if bufs.len() == 1 {
+            if let Some(parts) = bufs[0].untuple() {
+                return Ok((parts, stats));
+            }
+        }
+        Ok((bufs, stats))
     }
 
     fn first_device(out: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<xla::PjRtBuffer>> {

@@ -26,6 +26,13 @@
 //! (one-time uploads made directly via `Engine::upload*`, e.g. the
 //! per-run mask buffers, are not).
 //!
+//! Steps are also allocation-free in steady state: consumed-and-
+//! replaced sections leave via [`DeviceState::take_device_section`]
+//! and are *donated* to the executable (updated in place when
+//! exclusively owned), dead buffers are retired to the engine's
+//! `BufferPool`, and [`AllocStats`] counts every outcome. See
+//! `runtime/README.md` for the donation/pool invariants.
+//!
 //! See `runtime/README.md` for the full architecture notes.
 
 use std::collections::{BTreeMap, BTreeSet};
@@ -62,6 +69,79 @@ impl TransferStats {
     }
 }
 
+/// Cumulative device-allocation accounting of the step engine
+/// (`StepFn::step_device*` executions through this state; one count
+/// per output leaf). In steady state every state leaf is `donated`
+/// (updated in place) and every metric buffer is `pooled` (recycled
+/// from the previous step's retirees), so `allocated` stays at zero —
+/// the step loop is allocation-free.
+///
+/// The two fallback counters split *why* a donation didn't happen:
+/// `fallback_pinned` is the expected snapshot-window case (a
+/// `StateSnapshot` or fork still holds the leaf's outer `Arc`), while
+/// `fallback_aliased` means the backend saw a shared payload on a leaf
+/// the runtime believed it owned — buffer-level aliasing that should
+/// never occur (the CI e2e leg asserts it stays zero).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AllocStats {
+    /// Output leaves that needed a fresh device allocation.
+    pub allocated: u64,
+    /// State leaves updated in place via input-buffer donation.
+    pub donated: u64,
+    /// Output leaves recycled from the engine's `BufferPool`.
+    pub pooled: u64,
+    /// Donations skipped because a snapshot/fork pins the leaf.
+    pub fallback_pinned: u64,
+    /// Donations defeated by buffer-level payload sharing (never
+    /// expected from this runtime's own flows).
+    pub fallback_aliased: u64,
+}
+
+impl AllocStats {
+    pub fn merge(&mut self, other: &AllocStats) {
+        self.allocated += other.allocated;
+        self.donated += other.donated;
+        self.pooled += other.pooled;
+        self.fallback_pinned += other.fallback_pinned;
+        self.fallback_aliased += other.fallback_aliased;
+    }
+
+    /// Counter deltas accumulated after `before` was snapshotted.
+    pub fn since(&self, before: &AllocStats) -> AllocStats {
+        AllocStats {
+            allocated: self.allocated - before.allocated,
+            donated: self.donated - before.donated,
+            pooled: self.pooled - before.pooled,
+            fallback_pinned: self.fallback_pinned - before.fallback_pinned,
+            fallback_aliased: self.fallback_aliased - before.fallback_aliased,
+        }
+    }
+
+    /// Fold one backend execution's counters in (the backend's
+    /// donation-fallback is the aliased kind — the runtime counts its
+    /// own pin-level fallbacks before the backend ever sees the leaf).
+    pub(crate) fn absorb(&mut self, e: &xla::ExecStats) {
+        self.allocated += e.allocated;
+        self.donated += e.donated;
+        self.pooled += e.pooled;
+        self.fallback_aliased += e.fallback_copied;
+    }
+}
+
+/// Retire a dead device buffer to the pool iff this was its last outer
+/// handle. Snapshots, forks and caches share buffers by cloning the
+/// outer `Arc`, so a pinned buffer is refused here (returning `false`
+/// without touching `PoolStats` — that counter tracks only the pool's
+/// own inner-level check) — and the pool applies the same refcount-1
+/// rule to the inner payload `Arc` — which is what makes recycling
+/// safe by construction.
+pub(crate) fn retire_arc(pool: &xla::BufferPool, buf: Arc<xla::PjRtBuffer>) -> bool {
+    match Arc::try_unwrap(buf) {
+        Ok(b) => pool.retire(b),
+        Err(_) => false,
+    }
+}
+
 /// Cheap copy-on-write snapshot of the device side of a state: shared
 /// `Arc` handles, no payload copies. Restoring never mutates buffers
 /// in place — steps *replace* section buffers — so a snapshot stays
@@ -81,6 +161,8 @@ pub struct DeviceState {
     /// Sections where the host mirror is newer than the device copy.
     dev_stale: BTreeSet<String>,
     pub stats: TransferStats,
+    /// Donation / pool accounting for steps through this state.
+    pub alloc: AllocStats,
 }
 
 impl DeviceState {
@@ -93,6 +175,7 @@ impl DeviceState {
             host_stale: BTreeSet::new(),
             dev_stale,
             stats: TransferStats::default(),
+            alloc: AllocStats::default(),
         }
     }
 
@@ -110,6 +193,7 @@ impl DeviceState {
             host_stale: BTreeSet::new(),
             dev_stale: BTreeSet::new(),
             stats: TransferStats::default(),
+            alloc: AllocStats::default(),
         };
         st.stats.h2d_bytes += 4;
         st.stats.h2d_tensors += 1;
@@ -220,7 +304,14 @@ impl DeviceState {
         }
         self.stats.h2d_bytes += bytes;
         self.stats.h2d_tensors += tensors.len() as u64;
-        self.dev.insert(sec.to_string(), bufs);
+        if let Some(old) = self.dev.insert(sec.to_string(), bufs) {
+            // the re-upload displaced live buffers (e.g. the forced
+            // per-step marshal of host-resident mode): dead unless a
+            // snapshot pins them, so recycle what we exclusively own
+            for b in old {
+                retire_arc(eng.pool(), b);
+            }
+        }
         self.dev_stale.remove(sec);
         Ok(())
     }
@@ -249,17 +340,46 @@ impl DeviceState {
             .ok_or_else(|| Error::manifest(format!("no device section '{sec}'")))
     }
 
+    /// Remove and return a section's device buffers so the caller can
+    /// donate them as step inputs (`StepFn::step_device` does this for
+    /// every consumed-and-replaced section, then reinstalls the step's
+    /// outputs via [`DeviceState::set_device_section`]). If the step
+    /// fails in between, the section is left device-missing: host
+    /// accessors either still hold the current mirror (the section was
+    /// never stepped) or fail loudly on the missing device section —
+    /// never silently serve stale data.
+    pub fn take_device_section(&mut self, sec: &str) -> Result<Vec<Arc<xla::PjRtBuffer>>> {
+        if self.dev_stale.contains(sec) {
+            return Err(Error::msg(format!(
+                "device section '{sec}' is stale; sync_to_device first"
+            )));
+        }
+        self.dev
+            .remove(sec)
+            .ok_or_else(|| Error::manifest(format!("no device section '{sec}'")))
+    }
+
     /// Install a step's output buffers as the new live section; the
     /// host mirror becomes stale (synced lazily on next host access).
+    /// Displaced buffers — possible only for output sections the step
+    /// did not consume via [`DeviceState::take_device_section`] — are
+    /// retired to `pool` when one is given (refcount-1 rule applies).
     pub fn set_device_section(
         &mut self,
         sec: &str,
         bufs: Vec<Arc<xla::PjRtBuffer>>,
+        pool: Option<&xla::BufferPool>,
     ) -> Result<()> {
         if !self.host.sections.contains_key(sec) {
             return Err(Error::manifest(format!("state has no section '{sec}'")));
         }
-        self.dev.insert(sec.to_string(), bufs);
+        if let Some(old) = self.dev.insert(sec.to_string(), bufs) {
+            if let Some(pool) = pool {
+                for b in old {
+                    retire_arc(pool, b);
+                }
+            }
+        }
         self.dev_stale.remove(sec);
         self.host_stale.insert(sec.to_string());
         Ok(())
@@ -296,23 +416,43 @@ impl DeviceState {
             host_stale: snap.dev.keys().cloned().collect(),
             dev_stale: BTreeSet::new(),
             stats: TransferStats::default(),
+            alloc: AllocStats::default(),
         }
     }
 
-    /// Restore a snapshot; the host mirror becomes fully stale.
-    pub fn restore(&mut self, snap: &StateSnapshot) {
-        self.dev = snap.dev.clone();
+    /// Restore a snapshot; the host mirror becomes fully stale. The
+    /// displaced live buffers are dead after the swap, so they are
+    /// retired to `pool` when one is given (refcount-1 rule applies) —
+    /// the next step's copy-fallback outputs then recycle them instead
+    /// of allocating fresh.
+    pub fn restore(&mut self, snap: &StateSnapshot, pool: Option<&xla::BufferPool>) {
+        let displaced = std::mem::replace(&mut self.dev, snap.dev.clone());
+        if let Some(pool) = pool {
+            for bufs in displaced.into_values() {
+                for b in bufs {
+                    retire_arc(pool, b);
+                }
+            }
+        }
         self.dev_stale.clear();
         self.host_stale = self.host.sections.keys().cloned().collect();
     }
 
     /// Replace the state with a host-side copy (the host-resident
     /// best-state path, mirroring the seed's `state.clone()`):
-    /// everything re-uploads lazily before the next step.
-    pub fn restore_host(&mut self, host: TrainState) {
+    /// everything re-uploads lazily before the next step. Displaced
+    /// device buffers retire like in [`DeviceState::restore`].
+    pub fn restore_host(&mut self, host: TrainState, pool: Option<&xla::BufferPool>) {
         self.dev_stale = host.sections.keys().cloned().collect();
         self.host_stale.clear();
-        self.dev.clear();
+        let displaced = std::mem::take(&mut self.dev);
+        if let Some(pool) = pool {
+            for bufs in displaced.into_values() {
+                for b in bufs {
+                    retire_arc(pool, b);
+                }
+            }
+        }
         self.host = host;
     }
 

@@ -15,7 +15,7 @@ pub mod shared;
 pub mod state;
 
 pub use client::{Engine, Executable};
-pub use device::{DeviceState, StateSnapshot, TransferStats};
+pub use device::{AllocStats, DeviceState, StateSnapshot, TransferStats};
 pub use manifest::{ArtifactDesc, DType, LeafDesc, LeafId, Manifest, ModelManifest};
 pub use shared::{CacheStats, EvalKey, EvalSplit, SharedRunCache};
 pub use state::{Metrics, StepArg, StepFn, TrainState};

@@ -7,7 +7,7 @@
 //! compiled executable and marshals (state, batch, scalars) -> literals
 //! -> step -> (new state, metrics).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 
 use crate::error::{Error, Result};
@@ -163,6 +163,12 @@ pub struct StepFn {
     pub desc: ArtifactDesc,
     exe: Arc<Executable>,
     section_lens: BTreeMap<String, usize>,
+    /// State sections the artifact both consumes and replaces — their
+    /// input buffers are dead the moment the step returns, so
+    /// `step_device` donates them (in-place update when exclusively
+    /// owned). Sections the artifact only reads (e.g. `eval`'s
+    /// params/theta) are never donated: they stay live in the state.
+    donatable: BTreeSet<String>,
 }
 
 impl StepFn {
@@ -187,10 +193,17 @@ impl StepFn {
                 )));
             }
         }
+        let donatable = desc
+            .state_sections
+            .iter()
+            .filter(|s| desc.outputs.contains(*s))
+            .cloned()
+            .collect();
         Ok(StepFn {
             desc,
             exe,
             section_lens,
+            donatable,
         })
     }
 
@@ -287,11 +300,10 @@ impl StepFn {
                 extra.len()
             )));
         }
-        state.sync_to_device(eng, &self.desc.state_sections)?;
-        let mut inputs: Vec<Arc<xla::PjRtBuffer>> = Vec::new();
-        for sec in &self.desc.state_sections {
-            inputs.extend(state.device_bufs(sec)?.iter().cloned());
-        }
+        // Validate and stage every extra input *before* any state
+        // section is taken for donation: a bad extra (a swapped mask
+        // pair) must fail the step with the state fully intact.
+        let mut extra_ins: Vec<xla::ExecInput> = Vec::with_capacity(extra.len());
         for (a, d) in extra.iter().zip(&self.desc.extra_inputs) {
             match a {
                 StepArg::Host(t) => {
@@ -304,7 +316,7 @@ impl StepFn {
                     let buf = eng.upload_tensor(t)?;
                     state.stats.h2d_bytes += (t.len() * 4) as u64;
                     state.stats.h2d_tensors += 1;
-                    inputs.push(buf);
+                    extra_ins.push(xla::ExecInput::borrow(buf.as_ref()));
                 }
                 StepArg::Device(b) => {
                     // same validation the legacy host path applies to
@@ -322,12 +334,39 @@ impl StepFn {
                             d.name, d.shape, dims
                         )));
                     }
-                    inputs.push(Arc::clone(b));
+                    extra_ins.push(xla::ExecInput::borrow(b.as_ref()));
                 }
             }
         }
-        let refs: Vec<&xla::PjRtBuffer> = inputs.iter().map(|b| b.as_ref()).collect();
-        let outs = self.exe.run_buffers(&refs)?;
+        state.sync_to_device(eng, &self.desc.state_sections)?;
+        let pool: &xla::BufferPool = eng.pool();
+        let mut inputs: Vec<xla::ExecInput> = Vec::with_capacity(extra.len() + 16);
+        for sec in &self.desc.state_sections {
+            if self.donatable.contains(sec) {
+                // consumed-and-replaced this step: donate each leaf we
+                // exclusively own. A leaf pinned by a snapshot/fork
+                // (outer Arc shared) falls back to a borrow — the
+                // pinned payload is never mutated, by construction.
+                for arc in state.take_device_section(sec)? {
+                    match Arc::try_unwrap(arc) {
+                        Ok(buf) => inputs.push(xla::ExecInput::donate(buf)),
+                        Err(pinned) => {
+                            state.alloc.fallback_pinned += 1;
+                            inputs.push(xla::ExecInput::borrow(pinned.as_ref()));
+                        }
+                    }
+                }
+            } else {
+                // read-only section: stays live in the state, so the
+                // executable only ever borrows it
+                for b in state.device_bufs(sec)? {
+                    inputs.push(xla::ExecInput::borrow(b.as_ref()));
+                }
+            }
+        }
+        inputs.extend(extra_ins);
+        let (outs, estats) = self.exe.run_buffers_d(inputs, pool)?;
+        state.alloc.absorb(&estats);
         let n_state: usize = self
             .desc
             .outputs
@@ -347,7 +386,7 @@ impl StepFn {
             let n = self.section_lens[sec];
             let bufs: Vec<Arc<xla::PjRtBuffer>> =
                 outs.by_ref().take(n).map(Arc::new).collect();
-            state.set_device_section(sec, bufs)?;
+            state.set_device_section(sec, bufs, Some(pool))?;
         }
         Ok(outs.collect())
     }
@@ -356,7 +395,11 @@ impl StepFn {
     /// sections are the previous step's output buffers (uploaded only
     /// if a host touchpoint dirtied them), the outputs replace them
     /// without visiting the host, and only `extra` host args plus the
-    /// scalar metrics cross the boundary.
+    /// scalar metrics cross the boundary. Consumed-and-replaced
+    /// sections are *donated* — updated in place when nothing pins
+    /// them — and non-donatable outputs recycle pooled allocations, so
+    /// the steady-state loop performs zero device allocations
+    /// (`DeviceState::alloc` counts every outcome).
     pub fn step_device(
         &self,
         eng: &Engine,
@@ -370,6 +413,10 @@ impl StepFn {
             state.stats.d2h_bytes += 4;
             state.stats.d2h_tensors += 1;
             metrics.values.insert(name.clone(), v);
+            // downloaded and dead: recycle for the next step's metric
+            // outputs — this is what keeps the steady-state step loop
+            // allocation-free (state leaves are donated, metrics pooled)
+            eng.pool().retire(buf);
         }
         Ok(metrics)
     }
@@ -391,6 +438,7 @@ impl StepFn {
             state.stats.d2h_bytes += (t.len() * 4) as u64;
             state.stats.d2h_tensors += 1;
             outs.push(t);
+            eng.pool().retire(buf);
         }
         Ok(outs)
     }

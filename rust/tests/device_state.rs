@@ -185,7 +185,7 @@ fn snapshot_restore_returns_exact_state() {
         fx.step_dev(&search, &mut dev, step);
     }
     assert_ne!(dev.host_view().unwrap().sections, saved.sections);
-    dev.restore(&snap);
+    dev.restore(&snap, Some(fx.eng.pool()));
     assert_eq!(dev.host_view().unwrap().sections, saved.sections);
 }
 
@@ -217,6 +217,12 @@ fn device_residency_slashes_transfer_bytes() {
         dev.stats.d2h_bytes,
         compat.stats.d2h_bytes
     );
+    // the allocation side of the same story: every state leaf of every
+    // step was donated in place (16 leaves x 10 steps), with no
+    // fallback of either kind — nothing pins an unsnapshotted state
+    assert_eq!(dev.alloc.donated, 16 * 10);
+    assert_eq!(dev.alloc.fallback_pinned, 0);
+    assert_eq!(dev.alloc.fallback_aliased, 0);
 }
 
 /// Device-resident extras get the same shape validation the legacy

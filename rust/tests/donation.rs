@@ -1,0 +1,270 @@
+//! Donation-fallback safety tests for the allocation-free step
+//! engine. The contract under test: `step_device` donates every
+//! consumed-and-replaced state leaf (in-place update when exclusively
+//! owned), falls back to a copy whenever a snapshot or fork pins the
+//! leaf, recycles dead buffers through the engine's pool — and through
+//! all of it stays **bitwise identical** to the copying legacy path,
+//! with pinned payloads provably untouched.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use mixprec::runtime::{
+    fixture, DeviceState, Engine, Manifest, StateSnapshot, StepArg, StepFn, TrainState,
+};
+use mixprec::util::prop::Prop;
+
+/// Leaves per donatable step of the fixture's `search` artifact
+/// (params 5 + opt_w 5 + theta 3 + opt_th 3).
+const LEAVES: u64 = 16;
+/// Scalar metrics per `search` step.
+const METRICS: u64 = 3;
+
+struct Fx {
+    dir: PathBuf,
+    man: Manifest,
+    eng: Engine,
+}
+
+impl Fx {
+    fn new(tag: &str) -> Fx {
+        let dir = std::env::temp_dir().join(format!(
+            "mixprec_donation_{tag}_{}",
+            std::process::id()
+        ));
+        let man = fixture::write_stub_fixture(&dir).expect("fixture");
+        let eng = Engine::cpu().expect("engine");
+        Fx { dir, man, eng }
+    }
+
+    fn search(&self) -> StepFn {
+        let mm = self.man.model(fixture::STUB_MODEL).unwrap();
+        StepFn::bind(&self.eng, &self.man, mm, "search").expect("bind search")
+    }
+
+    fn init_state(&self) -> TrainState {
+        fixture::stub_train_state(self.man.model(fixture::STUB_MODEL).unwrap())
+    }
+
+    fn step_legacy(&self, search: &StepFn, st: &mut TrainState, step: usize) -> Vec<f32> {
+        let ex = fixture::stub_search_extras(step);
+        let m = search.step(st, &ex).expect("legacy step");
+        m.values.values().cloned().collect()
+    }
+
+    fn step_dev(&self, search: &StepFn, st: &mut DeviceState, step: usize) -> Vec<f32> {
+        let ex = fixture::stub_search_extras(step);
+        let args: Vec<StepArg> = ex.iter().map(StepArg::Host).collect();
+        let m = search
+            .step_device(&self.eng, st, &args)
+            .expect("device step");
+        m.values.values().cloned().collect()
+    }
+}
+
+impl Drop for Fx {
+    fn drop(&mut self) {
+        std::fs::remove_dir_all(&self.dir).ok();
+    }
+}
+
+/// Unpinned stepping donates every leaf every step, pools every metric
+/// buffer after the first step, and stays bitwise identical to the
+/// legacy full-marshal path.
+#[test]
+fn donated_steps_match_legacy_bitwise_and_are_alloc_free() {
+    let fx = Fx::new("steady");
+    let search = fx.search();
+    let mut legacy = fx.init_state();
+    let mut dev = DeviceState::from_host(legacy.clone());
+    const N: usize = 9;
+    for step in 0..N {
+        let m_legacy = fx.step_legacy(&search, &mut legacy, step);
+        let m_dev = fx.step_dev(&search, &mut dev, step);
+        assert_eq!(m_legacy, m_dev, "metrics diverged at step {step}");
+    }
+    assert_eq!(
+        dev.host_view().unwrap().sections,
+        legacy.sections,
+        "donated trajectory diverged from the copying path"
+    );
+    let al = dev.alloc;
+    assert_eq!(al.donated, LEAVES * N as u64, "every leaf donates every step");
+    assert_eq!(al.fallback_pinned, 0, "nothing pins an unsnapshotted state");
+    assert_eq!(al.fallback_aliased, 0, "buffer-level aliasing must never occur");
+    assert_eq!(al.allocated, METRICS, "only the first step's metrics allocate");
+    assert_eq!(al.pooled, METRICS * (N as u64 - 1), "metrics recycle thereafter");
+}
+
+/// A snapshot pins every leaf: the next step must fall back to copies
+/// (counted as pinned), the pinned payloads must restore bitwise
+/// intact afterwards, and the trajectory must still match legacy.
+#[test]
+fn snapshot_survives_donated_stepping_bitwise() {
+    let fx = Fx::new("snapshot");
+    let search = fx.search();
+    let mut legacy = fx.init_state();
+    let mut dev = DeviceState::from_host(legacy.clone());
+    for step in 0..2 {
+        fx.step_legacy(&search, &mut legacy, step);
+        fx.step_dev(&search, &mut dev, step);
+    }
+    let snap = dev.snapshot(&fx.eng).unwrap();
+    let saved = dev.to_host().unwrap();
+    let pinned_before = dev.alloc.fallback_pinned;
+    for step in 2..7 {
+        fx.step_legacy(&search, &mut legacy, step);
+        fx.step_dev(&search, &mut dev, step);
+    }
+    // only the first post-snapshot step found the leaves pinned; the
+    // step's own outputs are exclusively owned again
+    assert_eq!(dev.alloc.fallback_pinned - pinned_before, LEAVES);
+    assert_eq!(dev.alloc.fallback_aliased, 0);
+    // the copy-fallback path is bitwise identical too
+    assert_eq!(dev.host_view().unwrap().sections, legacy.sections);
+    assert_ne!(dev.host_view().unwrap().sections, saved.sections);
+    // N donated steps later, the pinned snapshot is untouched
+    dev.restore(&snap, Some(fx.eng.pool()));
+    assert_eq!(
+        dev.host_view().unwrap().sections,
+        saved.sections,
+        "donation mutated a snapshot-pinned payload"
+    );
+}
+
+/// Forked-warmup shape: two states forked off one snapshot step in
+/// lockstep. First steps fall back (the snapshot + sibling pin every
+/// leaf), later steps donate, trajectories stay identical, and the
+/// shared snapshot stays intact throughout.
+#[test]
+fn forks_share_snapshot_then_donate_independently() {
+    let fx = Fx::new("forks");
+    let search = fx.search();
+    let mut dev = DeviceState::from_host(fx.init_state());
+    for step in 0..2 {
+        fx.step_dev(&search, &mut dev, step);
+    }
+    let snap = dev.snapshot(&fx.eng).unwrap();
+    let base = dev.to_host().unwrap();
+    let mut f1 = DeviceState::from_snapshot(&snap);
+    let mut f2 = DeviceState::from_snapshot(&snap);
+    for step in 2..6 {
+        let m1 = fx.step_dev(&search, &mut f1, step);
+        let m2 = fx.step_dev(&search, &mut f2, step);
+        assert_eq!(m1, m2, "fork metrics diverged at step {step}");
+    }
+    assert_eq!(f1.host_view().unwrap().sections, f2.host_view().unwrap().sections);
+    for f in [&f1, &f2] {
+        assert_eq!(f.alloc.fallback_pinned, LEAVES, "one pinned first step per fork");
+        assert_eq!(f.alloc.fallback_aliased, 0);
+        assert_eq!(f.alloc.donated, LEAVES * 3, "later fork steps donate");
+    }
+    // the shared snapshot restores the exact pre-fork state
+    let mut check = DeviceState::from_snapshot(&snap);
+    assert_eq!(check.host_view().unwrap().sections, base.sections);
+}
+
+/// The pool-side refcount rule, end to end on runtime types: a buffer
+/// with a live clone is refused, the sole owner is accepted.
+#[test]
+fn pool_refuses_live_buffers_and_recycles_dead_ones() {
+    let eng = Engine::cpu().unwrap();
+    let pool = Arc::clone(eng.pool());
+    let before = pool.stats();
+    let buf = eng.upload(&xla::Literal::vec1(&[1f32, 2.0, 3.0])).unwrap();
+    // buffer-level clone keeps the payload alive: retire must refuse
+    let alias = (*buf).clone();
+    assert!(!pool.retire(alias), "pool accepted an aliased payload");
+    assert_eq!(pool.stats().refused - before.refused, 1);
+    // last handle: accepted, then served back out
+    let owned = Arc::try_unwrap(buf).ok().expect("sole outer handle");
+    assert!(pool.retire(owned));
+    assert_eq!(pool.stats().retired - before.retired, 1);
+}
+
+/// Property: across randomized interleavings of step / snapshot /
+/// restore / host-roundtrip, the donated+pooled engine stays bitwise
+/// identical to the legacy host path, the last snapshot is never
+/// corrupted, and no aliased fallback ever fires. If a pool-recycled
+/// buffer could alias a live `Arc`, one of these comparisons would
+/// diverge.
+#[test]
+fn prop_random_interleavings_never_corrupt_snapshots() {
+    let fx = Fx::new("prop");
+    let search = fx.search();
+    Prop::new(24).check(
+        "donation interleaving",
+        |rng| {
+            let n = 4 + (rng.next_u64() % 9) as usize;
+            (0..n).map(|_| (rng.next_u64() % 4) as u8).collect::<Vec<u8>>()
+        },
+        |ops: &Vec<u8>| {
+            // shrink by dropping any single op
+            (0..ops.len())
+                .map(|i| {
+                    let mut v = ops.clone();
+                    v.remove(i);
+                    v
+                })
+                .collect()
+        },
+        |ops| {
+            let mut legacy = fx.init_state();
+            let mut dev = DeviceState::from_host(legacy.clone());
+            let mut snap: Option<(StateSnapshot, TrainState)> = None;
+            let mut step = 0usize;
+            for (i, op) in ops.iter().enumerate() {
+                match *op {
+                    0 => {
+                        let ml = fx.step_legacy(&search, &mut legacy, step);
+                        let md = fx.step_dev(&search, &mut dev, step);
+                        if ml != md {
+                            return Err(format!("metrics diverged at op {i} (step {step})"));
+                        }
+                        step += 1;
+                    }
+                    1 => {
+                        let s = dev
+                            .snapshot(&fx.eng)
+                            .map_err(|e| format!("snapshot: {e}"))?;
+                        snap = Some((s, legacy.clone()));
+                    }
+                    2 => {
+                        if let Some((s, host)) = &snap {
+                            dev.restore(s, Some(fx.eng.pool()));
+                            legacy = host.clone();
+                        }
+                    }
+                    _ => {
+                        dev.force_host_roundtrip()
+                            .map_err(|e| format!("roundtrip: {e}"))?;
+                    }
+                }
+            }
+            let dev_host = dev
+                .host_view()
+                .map_err(|e| format!("host_view: {e}"))?
+                .sections
+                .clone();
+            if dev_host != legacy.sections {
+                return Err("device trajectory diverged from legacy".into());
+            }
+            if let Some((s, host)) = &snap {
+                let mut check = DeviceState::from_snapshot(s);
+                let snap_host = check
+                    .host_view()
+                    .map_err(|e| format!("snapshot view: {e}"))?;
+                if snap_host.sections != host.sections {
+                    return Err("live snapshot corrupted by donation/pooling".into());
+                }
+            }
+            if dev.alloc.fallback_aliased != 0 {
+                return Err(format!(
+                    "aliased donation fallback fired: {:?}",
+                    dev.alloc
+                ));
+            }
+            Ok(())
+        },
+    );
+}

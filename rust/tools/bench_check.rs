@@ -3,9 +3,15 @@
 //! Compares freshly produced `BENCH_<name>.json` trend files (written
 //! by the bench harnesses) against committed
 //! `BENCH_<name>.baseline.json` files and fails on regression. Only
-//! *deterministic* counters are gated — bytes per step, warmup phases
-//! run/saved, split uploads, equivalence booleans — never wall-clock,
-//! which is noise on shared CI runners.
+//! *deterministic* counters are gated by default — bytes per step,
+//! donation/pool counts, warmup phases run/saved, split uploads,
+//! equivalence booleans — never wall-clock, which is noise on shared
+//! CI runners. One exception is opt-in: with
+//! `MIXPREC_GATE_THROUGHPUT=1` (a dedicated CI leg on a quiet runner)
+//! the device leg's `steps_per_sec` is gated with a loose 0.5x
+//! tolerance, so a wall-clock collapse fails loudly too. The
+//! throughput key only enters a baseline when `--update` runs with the
+//! variable set.
 //!
 //! The baseline may carry a *subset* of the rule keys: a rule whose
 //! baseline key is absent is reported as skipped (committed baselines
@@ -48,6 +54,18 @@ struct Rule {
     dir: Dir,
     /// Relative tolerance for the numeric directions (0.10 = 10%).
     tol: f64,
+    /// Opt-in rules: gated only when this env var is set to "1"
+    /// (e.g. the loose throughput rule on a dedicated CI leg).
+    env: Option<&'static str>,
+}
+
+impl Rule {
+    fn enabled(&self) -> bool {
+        match self.env {
+            None => true,
+            Some(var) => matches!(std::env::var(var).as_deref(), Ok("1")),
+        }
+    }
 }
 
 /// The gated counters. All are deterministic on the stub backend at
@@ -63,18 +81,77 @@ const RULES: &[Rule] = &[
         path: &["device", "h2d_bytes_per_step"],
         dir: Dir::LowerIsBetter,
         tol: 0.10,
+        env: None,
     },
     Rule {
         bench: "step_marshal",
         path: &["device", "d2h_bytes_per_step"],
         dir: Dir::LowerIsBetter,
         tol: 0.10,
+        env: None,
+    },
+    // donation + pool: the steady-state step loop must stay
+    // allocation-free (every state leaf donated, metrics pooled) and
+    // never fall back outside snapshot windows
+    Rule {
+        bench: "step_marshal",
+        path: &["device", "buffers_allocated_per_step"],
+        dir: Dir::LowerIsBetter,
+        tol: 0.0,
+        env: None,
+    },
+    Rule {
+        bench: "step_marshal",
+        path: &["device", "donated_per_step"],
+        dir: Dir::HigherIsBetter,
+        tol: 0.0,
+        env: None,
+    },
+    Rule {
+        bench: "step_marshal",
+        path: &["device", "pooled_per_step"],
+        dir: Dir::HigherIsBetter,
+        tol: 0.0,
+        env: None,
+    },
+    Rule {
+        bench: "step_marshal",
+        path: &["device", "fallback_pinned_per_step"],
+        dir: Dir::LowerIsBetter,
+        tol: 0.0,
+        env: None,
+    },
+    Rule {
+        bench: "step_marshal",
+        path: &["device", "fallback_aliased_per_step"],
+        dir: Dir::LowerIsBetter,
+        tol: 0.0,
+        env: None,
+    },
+    // zero-copy untuple: the bench's fixed 64-call loop must keep
+    // avoiding the element deep-clones
+    Rule {
+        bench: "step_marshal",
+        path: &["untuple_bytes_saved"],
+        dir: Dir::HigherIsBetter,
+        tol: 0.0,
+        env: None,
     },
     Rule {
         bench: "step_marshal",
         path: &["sections_equal"],
         dir: Dir::Exact,
         tol: 0.0,
+        env: None,
+    },
+    // opt-in wall-clock gate: device steps/sec within 0.5x of baseline
+    // (dedicated CI leg; see module docs)
+    Rule {
+        bench: "step_marshal",
+        path: &["device", "steps_per_sec"],
+        dir: Dir::HigherIsBetter,
+        tol: 0.5,
+        env: Some("MIXPREC_GATE_THROUGHPUT"),
     },
     // sweep_fork: warmup sharing within a sweep
     Rule {
@@ -82,18 +159,28 @@ const RULES: &[Rule] = &[
         path: &["warmup_steps_saved"],
         dir: Dir::HigherIsBetter,
         tol: 0.0,
+        env: None,
     },
     Rule {
         bench: "sweep_fork",
         path: &["forked", "warmup_steps_run"],
         dir: Dir::LowerIsBetter,
         tol: 0.0,
+        env: None,
+    },
+    Rule {
+        bench: "sweep_fork",
+        path: &["forked", "fallback_aliased"],
+        dir: Dir::LowerIsBetter,
+        tol: 0.0,
+        env: None,
     },
     Rule {
         bench: "sweep_fork",
         path: &["fronts_equal"],
         dir: Dir::Exact,
         tol: 0.0,
+        env: None,
     },
     // batched eval traffic: cached calls move only the two scalars
     Rule {
@@ -101,12 +188,14 @@ const RULES: &[Rule] = &[
         path: &["eval_bytes_per_call", "batched_cached_call", "h2d_bytes"],
         dir: Dir::LowerIsBetter,
         tol: 0.0,
+        env: None,
     },
     Rule {
         bench: "sweep_fork",
         path: &["eval_bytes_per_call", "batched_first_call", "h2d_bytes"],
         dir: Dir::LowerIsBetter,
         tol: 0.10,
+        env: None,
     },
     // compare-level sharing: one warmup, one upload per split
     Rule {
@@ -114,30 +203,35 @@ const RULES: &[Rule] = &[
         path: &["compare", "warmups_run"],
         dir: Dir::LowerIsBetter,
         tol: 0.0,
+        env: None,
     },
     Rule {
         bench: "sweep_fork",
         path: &["compare", "warmups_reused"],
         dir: Dir::HigherIsBetter,
         tol: 0.0,
+        env: None,
     },
     Rule {
         bench: "sweep_fork",
         path: &["compare", "split_uploads"],
         dir: Dir::LowerIsBetter,
         tol: 0.0,
+        env: None,
     },
     Rule {
         bench: "sweep_fork",
         path: &["compare", "split_reuses"],
         dir: Dir::HigherIsBetter,
         tol: 0.0,
+        env: None,
     },
     Rule {
         bench: "sweep_fork",
         path: &["compare", "fronts_equal_unshared"],
         dir: Dir::Exact,
         tol: 0.0,
+        env: None,
     },
 ];
 
@@ -199,6 +293,22 @@ fn updated_baseline(name: &str, cur: &Json, existing: Option<Json>) -> Json {
         Json::Obj(o)
     });
     for rule in RULES.iter().filter(|r| r.bench == name) {
+        // An env-gated key is written only while its leg is enabled:
+        // a plain --update on a developer machine must not clobber a
+        // baseline measured on the dedicated (quiet) runner. A
+        // bootstrapped key that is skipped is called out loudly so it
+        // cannot go stale silently either.
+        if !rule.enabled() {
+            if lookup(&base, rule.path).is_some() {
+                eprintln!(
+                    "  WARN [{name}] left {} untouched ({} != 1); refresh it on \
+                     the dedicated leg if this update changes wall-clock",
+                    fmt_path(rule.path),
+                    rule.env.unwrap_or("?")
+                );
+            }
+            continue;
+        }
         if let Some(v) = lookup(cur, rule.path) {
             set_path(&mut base, rule.path, v.clone());
         }
@@ -294,6 +404,14 @@ fn main() {
         };
         let mut bench_failures = 0usize;
         for rule in RULES.iter().filter(|r| r.bench == name) {
+            if !rule.enabled() {
+                println!(
+                    "  note [{name}] skip {} ({}!=1)",
+                    fmt_path(rule.path),
+                    rule.env.unwrap_or("?")
+                );
+                continue;
+            }
             match check(rule, &cur, &base) {
                 Ok(None) => println!("  ok   [{name}] {}", fmt_path(rule.path)),
                 Ok(Some(note)) => println!("  note [{name}] {note}"),

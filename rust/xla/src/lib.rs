@@ -7,11 +7,11 @@
 //! backend*:
 //!
 //! * `Literal` is a host array (shape + flat f32/i32 data, row-major),
-//!   `PjRtBuffer` is a "device" buffer — an `Arc<Literal>` here, a real
-//!   device allocation under native PJRT. Uploads and downloads copy,
-//!   so host/device transfer costs remain observable and the
-//!   device-resident runtime's marshalling wins are measurable even
-//!   without native XLA.
+//!   `PjRtBuffer` is a "device" buffer — an `Arc`-shared [`Payload`]
+//!   here, a real device allocation under native PJRT. Uploads and
+//!   downloads copy, so host/device transfer costs remain observable
+//!   and the device-resident runtime's marshalling wins are measurable
+//!   even without native XLA.
 //! * Real HLO cannot be interpreted here: `execute` on an artifact
 //!   lowered by `aot.py` returns `Error::Unsupported`. Tests and
 //!   benches that need end-to-end execution use *stub programs* — HLO
@@ -22,10 +22,28 @@
 //!   result leaf), matching PJRT's `untuple_result` mode. The legacy
 //!   single-tuple-buffer shape is still handled by callers for
 //!   compatibility with native builds that compile without it.
+//! * [`PjRtLoadedExecutable::execute_d`] carries **per-argument
+//!   donation intent** ([`ExecInput`]): a donated buffer whose payload
+//!   is exclusively owned (refcount 1 at both the outer runtime `Arc`
+//!   and the inner payload `Arc`) is updated *in place* — affine's
+//!   `x*scale + bias` becomes a write-in-place loop over the existing
+//!   allocation — and otherwise silently falls back to a copy, so
+//!   buffers pinned by snapshots or caches are never corrupted by
+//!   construction. Outputs that cannot be donated draw from a
+//!   size-classed [`BufferPool`] of retired dead allocations before
+//!   allocating fresh; [`ExecStats`] counts all four outcomes. This is
+//!   the exact seam native PJRT input aliasing will later plug into.
+//!
+//! Donation never changes numerics: the in-place loop evaluates the
+//! same `x * scale + bias` expression as the copying path, and all
+//! argument reductions happen *before* any payload is mutated, so
+//! donated, pooled and copied runs are bitwise identical.
 
+use std::collections::HashMap;
 use std::fmt;
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, PoisonError};
 
 pub type Result<T> = std::result::Result<T, Error>;
 
@@ -69,7 +87,7 @@ fn err(msg: impl Into<String>) -> Error {
 // element types / shapes
 // ---------------------------------------------------------------------------
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ElementType {
     Pred,
     S8,
@@ -135,6 +153,13 @@ impl Data {
         match self {
             Data::F32(_) => ElementType::F32,
             Data::I32(_) => ElementType::S32,
+        }
+    }
+
+    fn clear(&mut self) {
+        match self {
+            Data::F32(v) => v.clear(),
+            Data::I32(v) => v.clear(),
         }
     }
 }
@@ -258,7 +283,9 @@ impl Literal {
     }
 
     /// Mean of all elements as f64 (stub-program metric helper).
-    fn mean(&self) -> f64 {
+    /// Uncached; stub programs go through [`Payload::mean`], which
+    /// memoizes per device allocation.
+    fn raw_mean(&self) -> f64 {
         match self {
             Literal::Array { data, .. } => {
                 let n = data.len();
@@ -274,6 +301,211 @@ impl Literal {
             Literal::Tuple(_) => 0.0,
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// device payloads
+// ---------------------------------------------------------------------------
+
+/// The device-side allocation behind a [`PjRtBuffer`]: the literal
+/// plus a memoized mean, so broadcast step arguments that never change
+/// (precision masks, scalar knobs, eval splits) are reduced **once**
+/// per allocation instead of once per step. The memo is invalidated
+/// whenever a donated payload is mutated in place, so it can never
+/// serve a stale reduction.
+#[derive(Debug)]
+pub struct Payload {
+    lit: Literal,
+    mean: OnceLock<f64>,
+}
+
+impl Payload {
+    fn new(lit: Literal) -> Payload {
+        Payload {
+            lit,
+            mean: OnceLock::new(),
+        }
+    }
+
+    /// The payload's literal (no copy).
+    pub fn literal(&self) -> &Literal {
+        &self.lit
+    }
+
+    /// Memoized mean of all elements (computed on first use per
+    /// allocation; bitwise identical to the uncached reduction).
+    fn mean(&self) -> f64 {
+        *self.mean.get_or_init(|| self.lit.raw_mean())
+    }
+
+    /// In-place `x * scale + bias` over an f32 array (identity for
+    /// i32) — the donation fast path. Evaluates the exact expression
+    /// the copying path maps, so results are bitwise identical. Resets
+    /// the memoized mean: the payload's contents changed.
+    fn affine_in_place(&mut self, scale: f32, bias: f32) {
+        if let Literal::Array {
+            data: Data::F32(v), ..
+        } = &mut self.lit
+        {
+            for x in v.iter_mut() {
+                *x = *x * scale + bias;
+            }
+        }
+        self.mean = OnceLock::new();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// buffer pool
+// ---------------------------------------------------------------------------
+
+/// Retired allocations kept per size class; beyond this the retiree is
+/// dropped (counted in [`PoolStats::discarded`]) so a long host-
+/// resident run cannot grow the pool without bound.
+const POOL_CLASS_CAP: usize = 32;
+
+/// Size-classed pool of dead device allocations. Outputs that cannot
+/// be donated draw from here before allocating fresh; the runtime
+/// retires displaced section buffers and downloaded metric buffers
+/// back into it.
+///
+/// Safety invariant: only payloads with **no** live handle ever enter
+/// the pool — [`BufferPool::retire`] refuses any buffer whose payload
+/// `Arc` is still shared (and the runtime's retire helper applies the
+/// same refcount-1 rule to its outer `Arc` first), so a recycled
+/// buffer can never alias a snapshot, cache entry, or in-flight
+/// argument.
+#[derive(Default)]
+pub struct BufferPool {
+    classes: Mutex<HashMap<(ElementType, usize), Vec<Data>>>,
+    retired: AtomicU64,
+    refused: AtomicU64,
+    discarded: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+/// Cumulative pool counters (monotonic).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Dead allocations accepted into the pool.
+    pub retired: u64,
+    /// Retire attempts refused because the payload `Arc` was still
+    /// shared — the pool's own (inner-level) refcount-1 check. The
+    /// runtime's outer-`Arc` check (`retire_arc`) refuses *before*
+    /// reaching the pool and is not counted here.
+    pub refused: u64,
+    /// Dead allocations dropped because their size class was full.
+    pub discarded: u64,
+    /// Output allocations served from the pool.
+    pub hits: u64,
+    /// Acquire attempts that found the class empty.
+    pub misses: u64,
+}
+
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+impl BufferPool {
+    pub fn new() -> Self {
+        BufferPool::default()
+    }
+
+    /// Retire a dead buffer's allocation for reuse. Accepts only
+    /// exclusively-owned array payloads (refcount 1); shared payloads
+    /// are refused — the caller keeps nothing either way, but a
+    /// refused payload stays alive through its other handles. Tuple
+    /// buffers retire element-wise; returns whether anything entered
+    /// the pool.
+    pub fn retire(&self, buf: PjRtBuffer) -> bool {
+        match buf.repr {
+            BufRepr::Arr(arc) => match Arc::try_unwrap(arc) {
+                Ok(payload) => match payload.lit {
+                    Literal::Array { data, .. } => self.retire_data(data),
+                    Literal::Tuple(_) => false,
+                },
+                Err(_) => {
+                    self.refused.fetch_add(1, Ordering::Relaxed);
+                    false
+                }
+            },
+            BufRepr::Tup(elems) => {
+                let mut any = false;
+                for e in elems {
+                    any |= self.retire(e);
+                }
+                any
+            }
+        }
+    }
+
+    fn retire_data(&self, data: Data) -> bool {
+        let key = (data.ty(), data.len());
+        if key.1 == 0 {
+            return false;
+        }
+        let mut map = lock(&self.classes);
+        let bucket = map.entry(key).or_default();
+        if bucket.len() >= POOL_CLASS_CAP {
+            self.discarded.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        bucket.push(data);
+        self.retired.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Pop a retired allocation of exactly this class, cleared (len 0,
+    /// capacity `n`), ready to be refilled.
+    pub(crate) fn acquire(&self, ty: ElementType, n: usize) -> Option<Data> {
+        let popped = lock(&self.classes).get_mut(&(ty, n)).and_then(Vec::pop);
+        match popped {
+            Some(mut d) => {
+                d.clear();
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(d)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Number of allocations currently pooled (tests/diagnostics).
+    pub fn pooled(&self) -> usize {
+        lock(&self.classes).values().map(Vec::len).sum()
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            retired: self.retired.load(Ordering::Relaxed),
+            refused: self.refused.load(Ordering::Relaxed),
+            discarded: self.discarded.load(Ordering::Relaxed),
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Per-execute allocation accounting for [`execute_d`]
+/// (`execute_d` = [`PjRtLoadedExecutable::execute_d`]). One count per
+/// output leaf: exactly one of `donated` / `pooled` / `allocated`
+/// fires per leaf, plus `fallback_copied` when donation was requested
+/// but the payload was shared at the buffer level.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ExecStats {
+    /// Output leaves that needed a fresh device allocation.
+    pub allocated: u64,
+    /// Donated inputs updated in place (zero allocation, zero copy).
+    pub donated: u64,
+    /// Output leaves served from the [`BufferPool`].
+    pub pooled: u64,
+    /// Donation requests that fell back to a copy because the payload
+    /// `Arc` was shared (buffer-level aliasing; the runtime's own
+    /// snapshot pins are counted separately, before the backend).
+    pub fallback_copied: u64,
 }
 
 // ---------------------------------------------------------------------------
@@ -294,7 +526,9 @@ impl Literal {
 ///   appends `metrics` scalar f32 outputs, each `(j+1) * S` where
 ///   `S = sum_i (i+1) * mean(arg_i)` over *all* arguments — so any
 ///   permutation or omission of inputs changes the metrics and is
-///   caught by the equivalence tests.
+///   caught by the equivalence tests. A donated state argument is
+///   updated in place when exclusively owned (all reductions happen
+///   first, so metrics see the pre-step values either way).
 /// * `init` takes a scalar seed and returns one deterministic
 ///   seed-dependent f32 array per `dims` entry (the state factory
 ///   behind `DeviceState::init` on the fixture).
@@ -356,6 +590,77 @@ fn init_value(seed: i64, leaf: i64, k: i64) -> f32 {
         .wrapping_add(k.wrapping_mul(104_729)))
     .rem_euclid(997);
     h as f32 / 997.0 - 0.5
+}
+
+/// Pool-first f32 output allocation: recycle a same-class retired
+/// buffer when one exists, else allocate fresh. Either way the result
+/// is empty with capacity `n`.
+fn take_f32(pool: &BufferPool, stats: &mut ExecStats, n: usize) -> Vec<f32> {
+    match pool.acquire(ElementType::F32, n) {
+        Some(Data::F32(v)) => {
+            stats.pooled += 1;
+            v
+        }
+        _ => {
+            stats.allocated += 1;
+            Vec::with_capacity(n)
+        }
+    }
+}
+
+/// Pool-first i32 output allocation (see [`take_f32`]).
+fn take_i32(pool: &BufferPool, stats: &mut ExecStats, n: usize) -> Vec<i32> {
+    match pool.acquire(ElementType::S32, n) {
+        Some(Data::I32(v)) => {
+            stats.pooled += 1;
+            v
+        }
+        _ => {
+            stats.allocated += 1;
+            Vec::with_capacity(n)
+        }
+    }
+}
+
+/// The copying affine step for one leaf (borrowed input, or donation
+/// defeated by sharing): pool-first output, same arithmetic as the
+/// in-place path.
+fn affine_copy(
+    p: &Payload,
+    scale: f32,
+    bias: f32,
+    pool: &BufferPool,
+    stats: &mut ExecStats,
+) -> PjRtBuffer {
+    let Literal::Array { dims, data } = &p.lit else {
+        unreachable!("affine args validated as arrays before dispatch");
+    };
+    let data = match data {
+        Data::F32(v) => {
+            let mut o = take_f32(pool, stats, v.len());
+            o.extend(v.iter().map(|&x| x * scale + bias));
+            Data::F32(o)
+        }
+        Data::I32(v) => {
+            let mut o = take_i32(pool, stats, v.len());
+            o.extend_from_slice(v);
+            Data::I32(o)
+        }
+    };
+    PjRtBuffer::from_literal(Literal::Array {
+        dims: dims.clone(),
+        data,
+    })
+}
+
+/// Pool-first scalar f32 output.
+fn scalar_out(pool: &BufferPool, stats: &mut ExecStats, v: f32) -> PjRtBuffer {
+    let mut o = take_f32(pool, stats, 1);
+    o.push(v);
+    PjRtBuffer::from_literal(Literal::Array {
+        dims: Vec::new(),
+        data: Data::F32(o),
+    })
 }
 
 impl StubProgram {
@@ -424,29 +729,36 @@ impl StubProgram {
         }
     }
 
-    fn run(&self, args: &[Arc<Literal>]) -> Result<Vec<PjRtBuffer>> {
+    fn run(
+        &self,
+        args: Vec<ExecInput>,
+        pool: &BufferPool,
+        stats: &mut ExecStats,
+    ) -> Result<Vec<PjRtBuffer>> {
         match self {
             StubProgram::Affine {
                 scale,
                 bias,
                 n_state,
                 n_metrics,
-            } => Self::run_affine(args, *scale, *bias, *n_state, *n_metrics),
-            StubProgram::Init { dims } => Self::run_init(args, dims),
+            } => Self::run_affine(args, *scale, *bias, *n_state, *n_metrics, pool, stats),
+            StubProgram::Init { dims } => Self::run_init(&args, dims, pool, stats),
             StubProgram::EvalChunks {
                 batch,
                 x_arg,
                 n_metrics,
-            } => Self::run_evalchunks(args, *batch, *x_arg, *n_metrics),
+            } => Self::run_evalchunks(&args, *batch, *x_arg, *n_metrics, pool, stats),
         }
     }
 
     fn run_affine(
-        args: &[Arc<Literal>],
+        args: Vec<ExecInput>,
         scale: f32,
         bias: f32,
         n_state: usize,
         n_metrics: usize,
+        pool: &BufferPool,
+        stats: &mut ExecStats,
     ) -> Result<Vec<PjRtBuffer>> {
         if args.len() < n_state {
             return Err(err(format!(
@@ -454,49 +766,71 @@ impl StubProgram {
                 args.len()
             )));
         }
-        let mut outs = Vec::with_capacity(n_state + n_metrics);
-        for arg in args.iter().take(n_state) {
-            let lit = match arg.as_ref() {
-                Literal::Array { dims, data } => {
-                    let data = match data {
-                        Data::F32(v) => {
-                            Data::F32(v.iter().map(|&x| x * scale + bias).collect())
-                        }
-                        Data::I32(v) => Data::I32(v.clone()),
-                    };
-                    Literal::Array {
-                        dims: dims.clone(),
-                        data,
-                    }
-                }
-                Literal::Tuple(_) => return Err(err("stub program takes array args only")),
-            };
-            outs.push(PjRtBuffer::from_literal(lit));
+        // Validate every argument and compute every reduction *before*
+        // any in-place mutation: a donated leaf's payload is an input
+        // to the metric mix, and a bad argument must fail the whole
+        // call without having touched any donated payload.
+        let mut means = Vec::with_capacity(args.len());
+        for a in &args {
+            means.push(a.array_payload()?.mean());
         }
-        let s = metric_mix(args.iter().map(|a| a.mean()));
+        let s = metric_mix(means.into_iter());
+        let mut outs = Vec::with_capacity(n_state + n_metrics);
+        for a in args.into_iter().take(n_state) {
+            outs.push(match a {
+                ExecInput::Donate(buf) => match buf.repr {
+                    BufRepr::Arr(mut arc) => match Arc::get_mut(&mut arc) {
+                        Some(p) => {
+                            // sole owner: the output *is* the input
+                            // allocation, updated in place
+                            p.affine_in_place(scale, bias);
+                            stats.donated += 1;
+                            PjRtBuffer {
+                                repr: BufRepr::Arr(arc),
+                            }
+                        }
+                        None => {
+                            // payload shared at the buffer level:
+                            // silently fall back to a copy
+                            stats.fallback_copied += 1;
+                            affine_copy(&arc, scale, bias, pool, stats)
+                        }
+                    },
+                    BufRepr::Tup(_) => unreachable!("validated as array above"),
+                },
+                ExecInput::Borrow(p) => affine_copy(&p, scale, bias, pool, stats),
+            });
+        }
         for j in 0..n_metrics {
             let v = ((j + 1) as f64 * s) as f32;
-            outs.push(PjRtBuffer::from_literal(Literal::scalar(v)));
+            outs.push(scalar_out(pool, stats, v));
         }
         Ok(outs)
     }
 
-    fn run_init(args: &[Arc<Literal>], dims: &[Vec<i64>]) -> Result<Vec<PjRtBuffer>> {
-        let seed = match args.first().map(|a| a.as_ref()) {
-            Some(Literal::Array { data: Data::I32(v), .. }) if !v.is_empty() => {
-                v[0] as i64
-            }
-            Some(Literal::Array { data: Data::F32(v), .. }) if !v.is_empty() => {
-                v[0] as i64
-            }
-            _ => return Err(err("init stub wants a scalar seed argument")),
+    fn run_init(
+        args: &[ExecInput],
+        dims: &[Vec<i64>],
+        pool: &BufferPool,
+        stats: &mut ExecStats,
+    ) -> Result<Vec<PjRtBuffer>> {
+        let seed = match args.first() {
+            Some(a) => match &a.array_payload()?.lit {
+                Literal::Array {
+                    data: Data::I32(v), ..
+                } if !v.is_empty() => v[0] as i64,
+                Literal::Array {
+                    data: Data::F32(v), ..
+                } if !v.is_empty() => v[0] as i64,
+                _ => return Err(err("init stub wants a scalar seed argument")),
+            },
+            None => return Err(err("init stub wants a scalar seed argument")),
         };
         let mut outs = Vec::with_capacity(dims.len());
         for (leaf, shape) in dims.iter().enumerate() {
             let n: i64 = shape.iter().product::<i64>().max(1);
-            let data: Vec<f32> = (0..n)
-                .map(|k| init_value(seed, leaf as i64, k))
-                .collect();
+            let mut data = take_f32(pool, stats, n as usize);
+            data.extend((0..n).map(|k| init_value(seed, leaf as i64, k)));
             outs.push(PjRtBuffer::from_literal(Literal::Array {
                 dims: shape.clone(),
                 data: Data::F32(data),
@@ -506,10 +840,12 @@ impl StubProgram {
     }
 
     fn run_evalchunks(
-        args: &[Arc<Literal>],
+        args: &[ExecInput],
         batch: usize,
         x_arg: usize,
         n_metrics: usize,
+        pool: &BufferPool,
+        stats: &mut ExecStats,
     ) -> Result<Vec<PjRtBuffer>> {
         let y_arg = x_arg + 1;
         if args.len() <= y_arg {
@@ -518,14 +854,14 @@ impl StubProgram {
                 args.len()
             )));
         }
-        let (x_dims, x_data) = match args[x_arg].as_ref() {
+        let (x_dims, x_data) = match &args[x_arg].array_payload()?.lit {
             Literal::Array {
                 dims,
                 data: Data::F32(v),
             } => (dims, v),
             _ => return Err(err("evalchunks stub: x must be an f32 array")),
         };
-        let y_data = match args[y_arg].as_ref() {
+        let y_data = match &args[y_arg].array_payload()?.lit {
             Literal::Array {
                 data: Data::I32(v), ..
             } => v,
@@ -542,9 +878,20 @@ impl StubProgram {
         }
         let feat = x_data.len() / rows;
         let n_chunks = rows / batch;
-        // Broadcast-arg means are chunk-invariant; cache them once.
-        let bc_means: Vec<f64> = args.iter().map(|a| a.mean()).collect();
-        let mut per_chunk = vec![Vec::with_capacity(n_chunks); n_metrics];
+        // Broadcast-arg means are chunk-invariant *and* call-invariant
+        // for resident buffers: `Payload::mean` memoizes them per
+        // allocation, so repeated evals over the same split/masks skip
+        // the whole-tensor reductions entirely.
+        let mut bc_means = Vec::with_capacity(args.len());
+        for a in args {
+            bc_means.push(a.array_payload()?.mean());
+        }
+        // Build each per-metric vector individually: `vec![..; n]`
+        // clones its template and `Vec::clone` drops the capacity
+        // hint, which made every vector reallocate while growing.
+        let mut per_chunk: Vec<Vec<f32>> = (0..n_metrics)
+            .map(|_| take_f32(pool, stats, n_chunks))
+            .collect();
         for c in 0..n_chunks {
             let mx = mean_f32(&x_data[c * batch * feat..(c + 1) * batch * feat]);
             let my = mean_i32(&y_data[c * batch..(c + 1) * batch]);
@@ -646,68 +993,151 @@ impl PjRtClient {
     }
 }
 
+/// Total payload bytes `untuple` would have deep-copied before it went
+/// zero-copy (process-wide; the step-marshal bench reports the delta).
+static UNTUPLE_SAVED_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Cumulative bytes saved by zero-copy [`PjRtBuffer::untuple`].
+pub fn untuple_saved_bytes() -> u64 {
+    UNTUPLE_SAVED_BYTES.load(Ordering::Relaxed)
+}
+
 /// A device-resident buffer. Cheap to share via `Arc`; downloading via
-/// [`PjRtBuffer::to_literal_sync`] copies.
+/// [`PjRtBuffer::to_literal_sync`] copies. Tuple buffers hold their
+/// element buffers as shared handles, so [`PjRtBuffer::untuple`]
+/// splits without copying any payload.
 #[derive(Debug, Clone)]
 pub struct PjRtBuffer {
-    lit: Arc<Literal>,
+    repr: BufRepr,
+}
+
+#[derive(Debug, Clone)]
+enum BufRepr {
+    /// Dense array payload — the unit of donation / pooling / sharing.
+    Arr(Arc<Payload>),
+    /// Tuple of already-shared element buffers.
+    Tup(Vec<PjRtBuffer>),
 }
 
 impl PjRtBuffer {
     fn from_literal(lit: Literal) -> Self {
-        PjRtBuffer { lit: Arc::new(lit) }
+        match lit {
+            Literal::Tuple(elems) => PjRtBuffer {
+                repr: BufRepr::Tup(elems.into_iter().map(PjRtBuffer::from_literal).collect()),
+            },
+            arr @ Literal::Array { .. } => PjRtBuffer {
+                repr: BufRepr::Arr(Arc::new(Payload::new(arr))),
+            },
+        }
+    }
+
+    fn to_literal(&self) -> Literal {
+        match &self.repr {
+            BufRepr::Arr(p) => p.lit.clone(),
+            BufRepr::Tup(elems) => {
+                Literal::Tuple(elems.iter().map(PjRtBuffer::to_literal).collect())
+            }
+        }
     }
 
     /// Download to host (copies the payload).
     pub fn to_literal_sync(&self) -> Result<Literal> {
-        Ok((*self.lit).clone())
+        Ok(self.to_literal())
     }
 
     /// Split a tuple buffer into per-leaf buffers **without leaving
-    /// the device**; `None` for non-tuple buffers. Legacy
-    /// (`return_tuple=True`) executables produce a single tuple
+    /// the device** and without copying: the returned buffers share
+    /// the tuple's element payloads. `None` for non-tuple buffers.
+    /// Legacy (`return_tuple=True`) executables produce a single tuple
     /// output, which the device-resident runtime disassembles through
     /// this. Under a native PJRT backend this maps to
     /// `untuple_result` / single-device-buffer disassembly.
     pub fn untuple(&self) -> Option<Vec<PjRtBuffer>> {
-        match self.lit.as_ref() {
-            Literal::Tuple(elems) => Some(
-                elems
-                    .iter()
-                    .cloned()
-                    .map(PjRtBuffer::from_literal)
-                    .collect(),
-            ),
-            Literal::Array { .. } => None,
+        match &self.repr {
+            BufRepr::Tup(elems) => {
+                let bytes: usize = elems.iter().map(PjRtBuffer::on_device_size_bytes).sum();
+                UNTUPLE_SAVED_BYTES.fetch_add(bytes as u64, Ordering::Relaxed);
+                Some(elems.clone())
+            }
+            BufRepr::Arr(_) => None,
         }
     }
 
     /// Shape of the on-device value (array buffers only; maps to
     /// `on_device_shape` under a native backend).
     pub fn array_shape(&self) -> Result<ArrayShape> {
-        self.lit.array_shape()
+        match &self.repr {
+            BufRepr::Arr(p) => p.lit.array_shape(),
+            BufRepr::Tup(_) => Err(err("tuple literal has no array shape")),
+        }
     }
 
     pub fn on_device_size_bytes(&self) -> usize {
-        self.lit.size_bytes()
+        match &self.repr {
+            BufRepr::Arr(p) => p.lit.size_bytes(),
+            BufRepr::Tup(elems) => elems.iter().map(PjRtBuffer::on_device_size_bytes).sum(),
+        }
     }
 }
 
 /// Argument kinds `execute` accepts: host literals (uploaded per call)
 /// or device buffers (zero-copy under this backend).
 pub trait BufferArgument {
-    fn as_literal_arc(&self) -> Arc<Literal>;
+    fn as_payload_arc(&self) -> Arc<Payload>;
 }
 
 impl BufferArgument for Literal {
-    fn as_literal_arc(&self) -> Arc<Literal> {
-        Arc::new(self.clone())
+    fn as_payload_arc(&self) -> Arc<Payload> {
+        Arc::new(Payload::new(self.clone()))
     }
 }
 
 impl BufferArgument for PjRtBuffer {
-    fn as_literal_arc(&self) -> Arc<Literal> {
-        self.lit.clone()
+    fn as_payload_arc(&self) -> Arc<Payload> {
+        match &self.repr {
+            BufRepr::Arr(p) => Arc::clone(p),
+            // legacy edge: a tuple buffer passed as an execute arg is
+            // reassembled (copies); stub programs reject tuples anyway
+            BufRepr::Tup(_) => Arc::new(Payload::new(self.to_literal())),
+        }
+    }
+}
+
+/// One [`execute_d`](PjRtLoadedExecutable::execute_d) argument with
+/// its donation intent. `Borrow` promises the payload survives the
+/// call untouched; `Donate` hands the buffer over — the backend may
+/// consume its allocation in place *iff* it is the sole owner, and
+/// silently copies otherwise.
+pub enum ExecInput {
+    Borrow(Arc<Payload>),
+    Donate(PjRtBuffer),
+}
+
+impl ExecInput {
+    /// Borrow any execute argument (host literal or device buffer).
+    pub fn borrow<B: BufferArgument>(arg: &B) -> ExecInput {
+        ExecInput::Borrow(arg.as_payload_arc())
+    }
+
+    /// Donate a buffer the caller no longer needs.
+    pub fn donate(buf: PjRtBuffer) -> ExecInput {
+        ExecInput::Donate(buf)
+    }
+
+    /// The argument's array payload; errors on tuple inputs (stub
+    /// programs take array args only) — checked before any mutation.
+    fn array_payload(&self) -> Result<&Payload> {
+        let p = match self {
+            ExecInput::Borrow(p) => p.as_ref(),
+            ExecInput::Donate(b) => match &b.repr {
+                BufRepr::Arr(p) => p.as_ref(),
+                BufRepr::Tup(_) => return Err(err("stub program takes array args only")),
+            },
+        };
+        match &p.lit {
+            Literal::Array { .. } => Ok(p),
+            Literal::Tuple(_) => Err(err("stub program takes array args only")),
+        }
     }
 }
 
@@ -717,9 +1147,17 @@ pub struct PjRtLoadedExecutable {
 }
 
 impl PjRtLoadedExecutable {
-    fn run(&self, args: Vec<Arc<Literal>>) -> Result<Vec<Vec<PjRtBuffer>>> {
+    fn run_d(
+        &self,
+        args: Vec<ExecInput>,
+        pool: &BufferPool,
+    ) -> Result<(Vec<Vec<PjRtBuffer>>, ExecStats)> {
         match &self.stub {
-            Some(prog) => Ok(vec![prog.run(&args)?]),
+            Some(prog) => {
+                let mut stats = ExecStats::default();
+                let outs = prog.run(args, pool, &mut stats)?;
+                Ok((vec![outs], stats))
+            }
             None => Err(Error::Unsupported(format!(
                 "host backend cannot execute real HLO ('{}'); link the native \
                  xla_extension backend or use a `// STUB:` program",
@@ -729,21 +1167,47 @@ impl PjRtLoadedExecutable {
     }
 
     /// Execute with owned arguments (device copies made per call for
-    /// host literals).
+    /// host literals). No donation, no pooling.
     pub fn execute<L: BufferArgument>(&self, args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
-        self.run(args.iter().map(|a| a.as_literal_arc()).collect())
+        let pool = BufferPool::new();
+        Ok(self
+            .run_d(args.iter().map(ExecInput::borrow).collect(), &pool)?
+            .0)
     }
 
     /// Execute with borrowed arguments (device buffers stay resident;
     /// nothing is copied under this backend).
     pub fn execute_b<L: BufferArgument>(&self, args: &[&L]) -> Result<Vec<Vec<PjRtBuffer>>> {
-        self.run(args.iter().map(|a| a.as_literal_arc()).collect())
+        let pool = BufferPool::new();
+        Ok(self
+            .run_d(args.iter().map(|a| ExecInput::borrow(*a)).collect(), &pool)?
+            .0)
+    }
+
+    /// Donation-aware execute: per-argument intent via [`ExecInput`],
+    /// non-donatable outputs drawn from `pool`, per-call allocation
+    /// accounting returned alongside the outputs. Under native PJRT
+    /// this maps to compile-time input/output aliasing plus a device
+    /// allocator arena; the per-argument API is the seam that wiring
+    /// will reuse.
+    pub fn execute_d(
+        &self,
+        args: Vec<ExecInput>,
+        pool: &BufferPool,
+    ) -> Result<(Vec<Vec<PjRtBuffer>>, ExecStats)> {
+        self.run_d(args, pool)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn run_prog(prog: &StubProgram, lits: &[Literal]) -> Result<Vec<PjRtBuffer>> {
+        let pool = BufferPool::new();
+        let mut stats = ExecStats::default();
+        prog.run(lits.iter().map(ExecInput::borrow).collect(), &pool, &mut stats)
+    }
 
     #[test]
     fn literal_roundtrip() {
@@ -807,11 +1271,8 @@ mod tests {
             n_state: 1,
             n_metrics: 2,
         };
-        let args = vec![
-            Arc::new(Literal::vec1(&[1f32, 3.0])),
-            Arc::new(Literal::scalar(10f32)),
-        ];
-        let outs = prog.run(&args).unwrap();
+        let args = vec![Literal::vec1(&[1f32, 3.0]), Literal::scalar(10f32)];
+        let outs = run_prog(&prog, &args).unwrap();
         assert_eq!(outs.len(), 3);
         let st = outs[0].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
         assert_eq!(st, vec![3.0, 7.0]);
@@ -822,14 +1283,134 @@ mod tests {
         assert_eq!(m2, 44.0);
     }
 
+    /// Donating a sole-owner buffer updates the payload in place (same
+    /// allocation in the output, `donated` counted, memoized mean
+    /// refreshed so the next step's metrics see the new values).
+    #[test]
+    fn donation_mutates_in_place_when_sole_owner() {
+        let prog = StubProgram::Affine {
+            scale: 2.0,
+            bias: 0.0,
+            n_state: 1,
+            n_metrics: 1,
+        };
+        let pool = BufferPool::new();
+        let client = PjRtClient::cpu().unwrap();
+        let state = client
+            .buffer_from_host_literal(&Literal::vec1(&[1f32, 3.0]))
+            .unwrap();
+        let knob = client.buffer_from_host_literal(&Literal::scalar(10f32)).unwrap();
+        // remember the allocation by address only — holding an Arc
+        // clone here would pin the payload and defeat the donation
+        let BufRepr::Arr(p) = &state.repr else { panic!() };
+        let p_in: *const Payload = Arc::as_ptr(p);
+        let mut stats = ExecStats::default();
+        let mut outs = prog
+            .run(
+                vec![ExecInput::donate(state), ExecInput::borrow(&knob)],
+                &pool,
+                &mut stats,
+            )
+            .unwrap();
+        assert_eq!((stats.donated, stats.fallback_copied), (1, 0));
+        let BufRepr::Arr(p_out) = &outs[0].repr else { panic!() };
+        assert_eq!(Arc::as_ptr(p_out), p_in, "donation must reuse the allocation");
+        assert_eq!(
+            outs[0].to_literal_sync().unwrap().to_vec::<f32>().unwrap(),
+            vec![2.0, 6.0]
+        );
+        // S = 1*mean([1,3]) + 2*mean([10]) = 22, computed pre-mutation
+        assert_eq!(
+            outs[1].to_literal_sync().unwrap().to_vec::<f32>().unwrap()[0],
+            22.0
+        );
+        // second step donating the output: mean memo must have been
+        // reset by the in-place update — S = 1*mean([2,6]) + 2*10 = 24
+        let state2 = outs.remove(0);
+        let mut stats2 = ExecStats::default();
+        let outs2 = prog
+            .run(
+                vec![ExecInput::donate(state2), ExecInput::borrow(&knob)],
+                &pool,
+                &mut stats2,
+            )
+            .unwrap();
+        assert_eq!(stats2.donated, 1);
+        assert_eq!(
+            outs2[1].to_literal_sync().unwrap().to_vec::<f32>().unwrap()[0],
+            24.0
+        );
+    }
+
+    /// A donated buffer whose payload is still shared (a clone exists)
+    /// must fall back to a copy: the clone's contents survive bitwise.
+    #[test]
+    fn donation_falls_back_when_payload_shared() {
+        let prog = StubProgram::Affine {
+            scale: 2.0,
+            bias: 0.0,
+            n_state: 1,
+            n_metrics: 0,
+        };
+        let pool = BufferPool::new();
+        let client = PjRtClient::cpu().unwrap();
+        let state = client
+            .buffer_from_host_literal(&Literal::vec1(&[1f32, 3.0]))
+            .unwrap();
+        let pinned = state.clone(); // buffer-level alias
+        let mut stats = ExecStats::default();
+        let outs = prog
+            .run(vec![ExecInput::donate(state)], &pool, &mut stats)
+            .unwrap();
+        assert_eq!((stats.donated, stats.fallback_copied), (0, 1));
+        assert_eq!(stats.allocated, 1);
+        assert_eq!(
+            outs[0].to_literal_sync().unwrap().to_vec::<f32>().unwrap(),
+            vec![2.0, 6.0]
+        );
+        assert_eq!(
+            pinned.to_literal_sync().unwrap().to_vec::<f32>().unwrap(),
+            vec![1.0, 3.0],
+            "pinned payload mutated by a fallback copy"
+        );
+    }
+
+    /// Retire/acquire round trip, refcount refusal, and the class cap.
+    #[test]
+    fn pool_recycles_retires_and_refuses() {
+        let pool = BufferPool::new();
+        let client = PjRtClient::cpu().unwrap();
+        let buf = client
+            .buffer_from_host_literal(&Literal::vec1(&[1f32, 2.0, 3.0]))
+            .unwrap();
+        let alias = buf.clone();
+        assert!(!pool.retire(alias), "pool accepted a live-aliased payload");
+        assert_eq!(pool.stats().refused, 1);
+        assert!(pool.retire(buf), "sole-owner retire refused");
+        assert_eq!(pool.pooled(), 1);
+        let got = pool.acquire(ElementType::F32, 3).expect("class hit");
+        assert_eq!(got.len(), 0, "acquired buffer must come back cleared");
+        assert!(pool.acquire(ElementType::F32, 3).is_none(), "pool emptied");
+        assert!(pool.acquire(ElementType::S32, 3).is_none(), "type is part of the class");
+        // cap: the class never grows past POOL_CLASS_CAP
+        for _ in 0..POOL_CLASS_CAP + 5 {
+            let b = client
+                .buffer_from_host_literal(&Literal::vec1(&[0f32, 0.0, 0.0]))
+                .unwrap();
+            pool.retire(b);
+        }
+        assert_eq!(pool.pooled(), POOL_CLASS_CAP);
+        assert_eq!(pool.stats().discarded, 5);
+    }
+
     #[test]
     fn init_stub_is_seed_deterministic() {
         let prog = StubProgram::Init {
             dims: vec![vec![2, 3], vec![4]],
         };
-        let a = prog.run(&[Arc::new(Literal::scalar(7i32))]).unwrap();
-        let b = prog.run(&[Arc::new(Literal::scalar(7i32))]).unwrap();
-        let c = prog.run(&[Arc::new(Literal::scalar(8i32))]).unwrap();
+        let a = run_prog(&prog, &[Literal::scalar(7i32)]).unwrap();
+        let b = run_prog(&prog, &[Literal::scalar(7i32)]).unwrap();
+        let c = run_prog(&prog, &[Literal::scalar(8i32)]).unwrap();
         assert_eq!(a.len(), 2);
         assert_eq!(a[0].array_shape().unwrap().dims(), &[2, 3]);
         let va = a[0].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
@@ -845,21 +1426,20 @@ mod tests {
     /// chunk's slice, bitwise.
     #[test]
     fn evalchunks_matches_per_batch_affine_bitwise() {
-        let state = Arc::new(Literal::vec1(&[0.25f32, -0.75, 0.5]));
+        let state = Literal::vec1(&[0.25f32, -0.75, 0.5]);
         let xs: Vec<f32> = (0..12).map(|i| i as f32 * 0.37 - 2.0).collect();
         let ys: Vec<i32> = (0..6).map(|i| i % 4).collect();
-        let tau = Arc::new(Literal::scalar(0.66f32));
+        let tau = Literal::scalar(0.66f32);
         let batch = 2;
         let chunked = StubProgram::EvalChunks {
             batch,
             x_arg: 1,
             n_metrics: 2,
         };
-        let x_all = Arc::new(Literal::vec1(&xs).reshape(&[6, 2]).unwrap());
-        let y_all = Arc::new(Literal::vec1(&ys));
-        let outs = chunked
-            .run(&[state.clone(), x_all, y_all, tau.clone()])
-            .unwrap();
+        let x_all = Literal::vec1(&xs).reshape(&[6, 2]).unwrap();
+        let y_all = Literal::vec1(&ys);
+        let outs =
+            run_prog(&chunked, &[state.clone(), x_all, y_all, tau.clone()]).unwrap();
         assert_eq!(outs.len(), 2);
         let loss_v = outs[0].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
         let acc_v = outs[1].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
@@ -871,15 +1451,11 @@ mod tests {
             n_metrics: 2,
         };
         for c in 0..3 {
-            let xc = Arc::new(
-                Literal::vec1(&xs[c * batch * 2..(c + 1) * batch * 2])
-                    .reshape(&[2, 2])
-                    .unwrap(),
-            );
-            let yc = Arc::new(Literal::vec1(&ys[c * batch..(c + 1) * batch]));
-            let m = per_batch
-                .run(&[state.clone(), xc, yc, tau.clone()])
+            let xc = Literal::vec1(&xs[c * batch * 2..(c + 1) * batch * 2])
+                .reshape(&[2, 2])
                 .unwrap();
+            let yc = Literal::vec1(&ys[c * batch..(c + 1) * batch]);
+            let m = run_prog(&per_batch, &[state.clone(), xc, yc, tau.clone()]).unwrap();
             let l = m[0].to_literal_sync().unwrap().to_vec::<f32>().unwrap()[0];
             let a = m[1].to_literal_sync().unwrap().to_vec::<f32>().unwrap()[0];
             assert_eq!(loss_v[c].to_bits(), l.to_bits(), "chunk {c} loss");
@@ -894,22 +1470,33 @@ mod tests {
             x_arg: 0,
             n_metrics: 1,
         };
-        let x = Arc::new(Literal::vec1(&[0f32; 6]).reshape(&[6, 1]).unwrap());
-        let y = Arc::new(Literal::vec1(&[0i32; 6]));
-        assert!(prog.run(&[x, y]).is_err());
+        let x = Literal::vec1(&[0f32; 6]).reshape(&[6, 1]).unwrap();
+        let y = Literal::vec1(&[0i32; 6]);
+        assert!(run_prog(&prog, &[x, y]).is_err());
     }
 
     #[test]
-    fn untuple_splits_on_device() {
+    fn untuple_splits_on_device_zero_copy() {
         let client = PjRtClient::cpu().unwrap();
         let t = Literal::tuple(vec![Literal::scalar(1f32), Literal::vec1(&[2f32, 3.0])]);
         let buf = client.buffer_from_host_literal(&t).unwrap();
+        let saved0 = untuple_saved_bytes();
         let parts = buf.untuple().unwrap();
         assert_eq!(parts.len(), 2);
         assert_eq!(
             parts[1].to_literal_sync().unwrap().to_vec::<f32>().unwrap(),
             vec![2.0, 3.0]
         );
+        // zero-copy: the split buffers share the tuple's payloads
+        let BufRepr::Tup(elems) = &buf.repr else { panic!() };
+        for (part, elem) in parts.iter().zip(elems) {
+            let BufRepr::Arr(p) = &part.repr else { panic!() };
+            let BufRepr::Arr(q) = &elem.repr else { panic!() };
+            assert!(Arc::ptr_eq(p, q), "untuple copied an element payload");
+        }
+        // the saved-bytes counter moved by exactly the tuple's payload
+        // (counter is global; other tests only add, so use >=)
+        assert!(untuple_saved_bytes() >= saved0 + 12);
         let arr = client.buffer_from_host_literal(&Literal::scalar(1f32)).unwrap();
         assert!(arr.untuple().is_none());
     }
