@@ -8,8 +8,10 @@
 //! snapshot forks and eval marshalling are exercised for real while
 //! the "compute" is near-free, isolating exactly the costs this
 //! rework removes. Asserts the acceptance contract: warmup runs once,
-//! the forked front is identical to the independent one, and batched
-//! eval moves strictly fewer host<->device bytes.
+//! the forked front is identical to the independent one, batched
+//! eval moves strictly fewer host<->device bytes, and a second
+//! "process" resuming from a shared `--warm-cache-dir` runs zero
+//! warmup steps with a bitwise-identical front.
 
 use std::time::Instant;
 
@@ -33,6 +35,9 @@ fn sweep_json(sw: &SweepResult, seconds: f64) -> Json {
     o.insert("warmup_steps_run", Json::Num(sw.warmup_steps_run as f64));
     o.insert("warmup_steps_saved", Json::Num(sw.warmup_steps_saved as f64));
     o.insert("warmup_reused", Json::Bool(sw.warmup_reused));
+    o.insert("warmup_loaded", Json::Bool(sw.warmup_loaded));
+    o.insert("warmups_loaded", Json::Num(sw.warmups_loaded as f64));
+    o.insert("warmups_persisted", Json::Num(sw.warmups_persisted as f64));
     o.insert("shared_warmup_s", Json::Num(sw.shared_warmup_s));
     o.insert("split_uploads", Json::Num(sw.split_uploads as f64));
     o.insert("split_reuses", Json::Num(sw.split_reuses as f64));
@@ -167,6 +172,44 @@ fn run() -> mixprec::Result<()> {
         b2_h2d + b2_d2h
     );
 
+    // ---- cross-process warm-start persistence -----------------------
+    // "process A" (fresh context + --warm-cache-dir) persists its
+    // warmup; "process B" (another fresh context on the same dir)
+    // resumes it: zero warmup steps run, front bitwise identical
+    let warm_dir = dir.join("warmcache");
+    let persist_opts = SweepOptions {
+        workers: scale.workers,
+        mode: SweepMode::ForkedWarmup,
+        vary_seeds: false,
+        share_warmup: true,
+    };
+    let ctx_a = Context::load(&dir, scale.data_frac)?;
+    ctx_a.shared_cache().set_warm_dir(Some(warm_dir.clone()));
+    let runner_a = ctx_a.runner_shared(fixture::STUB_MODEL)?;
+    let t0 = Instant::now();
+    let sw_a = sweep_lambdas(&runner_a, &cfg, &lambdas, "size", &persist_opts)?;
+    let persist_s = t0.elapsed().as_secs_f64();
+    assert_eq!(sw_a.warmup_steps_run, cfg.warmup_steps);
+    assert_eq!(sw_a.warmups_persisted, 1, "warmup was not persisted");
+    let ctx_b = Context::load(&dir, scale.data_frac)?;
+    ctx_b.shared_cache().set_warm_dir(Some(warm_dir.clone()));
+    let runner_b = ctx_b.runner_shared(fixture::STUB_MODEL)?;
+    let t0 = Instant::now();
+    let sw_b = sweep_lambdas(&runner_b, &cfg, &lambdas, "size", &persist_opts)?;
+    let resume_s = t0.elapsed().as_secs_f64();
+    // acceptance: a resumed process runs ZERO warmup steps and its
+    // front is bitwise identical to the persisting process's
+    assert_eq!(sw_b.warmup_steps_run, 0, "resume re-ran warmup steps");
+    assert!(sw_b.warmup_loaded, "warmup was not loaded from disk");
+    assert_eq!(sw_b.warmups_loaded, 1);
+    let persist_fronts_equal = key(&sw_a.front()) == key(&sw_b.front());
+    assert!(persist_fronts_equal, "resumed front diverged from persisted");
+    println!(
+        "warm persist: A {persist_s:6.2}s ({} warmup steps) | B {resume_s:6.2}s (0 \
+         warmup steps, loaded from disk)",
+        sw_a.warmup_steps_run
+    );
+
     // ---- compare-level sharing: one warmup + one upload per split ---
     // fresh context => fresh SharedRunCache, so the earlier legs don't
     // pre-warm what this section is measuring
@@ -242,6 +285,17 @@ fn run() -> mixprec::Result<()> {
     );
     cm.insert("fronts_equal_unshared", Json::Bool(cmp_fronts_equal));
     o.insert("compare", Json::Obj(cm));
+    let mut wp = JsonObj::new();
+    wp.insert("warmups_persisted", Json::Num(sw_a.warmups_persisted as f64));
+    wp.insert("warmups_loaded", Json::Num(sw_b.warmups_loaded as f64));
+    wp.insert(
+        "resume_warmup_steps_run",
+        Json::Num(sw_b.warmup_steps_run as f64),
+    );
+    wp.insert("seconds_persist", Json::Num(persist_s));
+    wp.insert("seconds_resume", Json::Num(resume_s));
+    wp.insert("fronts_equal", Json::Bool(persist_fronts_equal));
+    o.insert("warm_persist", Json::Obj(wp));
     benchkit::write_bench_json("sweep_fork", &Json::Obj(o))?;
     std::fs::remove_dir_all(&dir).ok();
     Ok(())

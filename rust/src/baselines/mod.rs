@@ -93,6 +93,16 @@ pub struct CompareResult {
     pub warmups_run: usize,
     /// Method sweeps seeded from the shared `WarmStart` pool.
     pub warmups_reused: usize,
+    /// Method sweeps whose warmup was restored from the cross-process
+    /// disk tier (`--warm-cache-dir`) — zero warmup steps run here.
+    pub warmups_loaded: u64,
+    /// Fresh warmups the method sweeps persisted to the disk tier.
+    pub warmups_persisted: u64,
+    /// Warmup steps actually executed across the method sweeps (0
+    /// when the one shared warmup was restored from disk; the fixed
+    /// baselines reallocate steps between phases, so their
+    /// fingerprint-distinct warmups are not counted here, as above).
+    pub warmup_steps_run: usize,
     /// Eval-split uploads performed during the method sweeps (at most
     /// one per split with a shared cache; one per run without).
     pub split_uploads: u64,
@@ -123,12 +133,17 @@ pub fn compare_methods(
     let t0 = Instant::now();
     let mut sweeps = Vec::with_capacity(COMPARE_METHODS.len());
     let (mut warmups_run, mut warmups_reused) = (0usize, 0usize);
+    let (mut warmups_loaded, mut warmups_persisted) = (0u64, 0u64);
+    let mut warmup_steps_run = 0usize;
     let (mut split_uploads, mut split_reuses) = (0u64, 0u64);
     let mut alloc = AllocStats::default();
     for m in COMPARE_METHODS {
         let sw = sweep_lambdas(runner, &m.configure(base), lambdas, metric, opts)?;
         warmups_run += sw.warmup_phases_run;
         warmups_reused += usize::from(sw.warmup_reused);
+        warmups_loaded += sw.warmups_loaded;
+        warmups_persisted += sw.warmups_persisted;
+        warmup_steps_run += sw.warmup_steps_run;
         split_uploads += sw.split_uploads;
         split_reuses += sw.split_reuses;
         alloc.merge(&sw.alloc());
@@ -147,6 +162,9 @@ pub fn compare_methods(
         fixed,
         warmups_run,
         warmups_reused,
+        warmups_loaded,
+        warmups_persisted,
+        warmup_steps_run,
         split_uploads,
         split_reuses,
         alloc,

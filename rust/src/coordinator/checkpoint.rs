@@ -1,43 +1,186 @@
-//! Binary checkpointing of `TrainState` (simple tagged format: magic,
-//! section count, per-section name + tensor list with shape/dtype).
+//! Binary checkpointing of `TrainState`.
+//!
+//! Two container versions coexist:
+//!
+//! * **v1** (`MIXPREC1`, headerless): the seed's tagged format with
+//!   32-bit counts/lengths. Still *read* transparently ([`load`]
+//!   sniffs the magic), and still writable via [`save_v1`] for
+//!   compatibility fixtures — but a v1 write now **hard-errors** on
+//!   any count that does not fit in `u32` (the seed silently
+//!   truncated `len() as u32`, corrupting tensors ≥ 4 Gi elements).
+//! * **v2** (`MIXPRECV` + `u32` version header): all counts/lengths
+//!   widened to `u64`, plus a trailing block of named binary
+//!   **extras** — opaque `(name, bytes)` sections the warm-start
+//!   persistence layer uses to carry RNG state, batch-iterator
+//!   position, history records, transfer/alloc accounting and the
+//!   structured warmup fingerprint alongside the state tensors.
+//!   [`save`] writes v2 with no extras; [`load`] ignores extras.
+//!
+//! [`save_with_extras_atomic`] is the concurrent-writer-safe entry:
+//! it writes to a same-directory temp file and `rename`s it into
+//! place, so a reader (another sweep worker consulting the shared
+//! `--warm-cache-dir`) can never observe a torn entry.
+//!
 //! Device-resident states checkpoint through the dirty-tracked sync
 //! layer: `save_device` downloads only the stale sections.
 
 use std::io::{Read, Write};
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::error::{Error, Result};
 use crate::runtime::{DeviceState, TrainState};
 use crate::util::tensor::{Tensor, TensorData};
 
-const MAGIC: &[u8; 8] = b"MIXPREC1";
+const MAGIC_V1: &[u8; 8] = b"MIXPREC1";
+const MAGIC_V2: &[u8; 8] = b"MIXPRECV";
+const VERSION: u32 = 2;
 
+/// Pre-allocation ceiling while decoding untrusted counts. Counts come
+/// straight from the file, so a corrupt entry (valid magic, bit-rotted
+/// length) must run out of bytes with a clean `Err` — never drive a
+/// count-sized up-front allocation that aborts the process and
+/// violates the warm-load "corruption degrades to a fresh warmup"
+/// contract. Collections still grow to any genuine size; this only
+/// bounds the *hint*.
+const DECODE_PREALLOC_CAP: usize = 1 << 20;
+
+/// Write `state` in the current (v2) container, no extras.
 pub fn save(state: &TrainState, path: &Path) -> Result<()> {
+    save_with_extras(state, &[], path)
+}
+
+/// Write `state` in the v2 container with named extra sections.
+pub fn save_with_extras(
+    state: &TrainState,
+    extras: &[(&str, Vec<u8>)],
+    path: &Path,
+) -> Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    f.write_all(MAGIC)?;
-    write_u32(&mut f, state.sections.len() as u32)?;
+    write_v2_body(state, extras, &mut f)?;
+    // surface buffered write errors here instead of swallowing them in
+    // the BufWriter drop — Ok must mean the bytes reached the OS
+    f.flush()?;
+    Ok(())
+}
+
+/// Atomic variant of [`save_with_extras`]: the payload lands in a
+/// same-directory temp file first and is `rename`d into place, so
+/// concurrent readers see either the old entry or the complete new
+/// one — never a torn write. Concurrent writers race benignly (both
+/// write equivalent payloads; the last rename wins).
+pub fn save_with_extras_atomic(
+    state: &TrainState,
+    extras: &[(&str, Vec<u8>)],
+    path: &Path,
+) -> Result<()> {
+    let dir = path.parent().unwrap_or_else(|| Path::new("."));
+    std::fs::create_dir_all(dir)?;
+    let base = path
+        .file_name()
+        .ok_or_else(|| Error::msg("atomic checkpoint save: path has no file name"))?
+        .to_string_lossy()
+        .to_string();
+    // pid + per-process sequence: two threads (e.g. two caches in one
+    // process) persisting the same key must not share a temp path, or
+    // the second create() truncates the first writer mid-stream and
+    // the interleaved bytes get renamed into place
+    static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+    let tmp = dir.join(format!(
+        ".{base}.tmp.{}.{}",
+        std::process::id(),
+        TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let write = || -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        write_v2_body(state, extras, &mut f)?;
+        f.flush()?;
+        Ok(())
+    };
+    if let Err(e) = write() {
+        std::fs::remove_file(&tmp).ok();
+        return Err(e);
+    }
+    std::fs::rename(&tmp, path).map_err(|e| {
+        std::fs::remove_file(&tmp).ok();
+        Error::from(e)
+    })
+}
+
+fn write_v2_body<W: Write>(
+    state: &TrainState,
+    extras: &[(&str, Vec<u8>)],
+    f: &mut W,
+) -> Result<()> {
+    f.write_all(MAGIC_V2)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    write_u64(f, state.sections.len() as u64)?;
+    for (name, tensors) in &state.sections {
+        write_str64(f, name)?;
+        write_u64(f, tensors.len() as u64)?;
+        for t in tensors {
+            write_u64(f, t.shape.len() as u64)?;
+            for &d in &t.shape {
+                write_u64(f, d as u64)?;
+            }
+            match &t.data {
+                TensorData::F32(v) => {
+                    f.write_all(&0u32.to_le_bytes())?;
+                    write_u64(f, v.len() as u64)?;
+                    for x in v {
+                        f.write_all(&x.to_le_bytes())?;
+                    }
+                }
+                TensorData::I32(v) => {
+                    f.write_all(&1u32.to_le_bytes())?;
+                    write_u64(f, v.len() as u64)?;
+                    for x in v {
+                        f.write_all(&x.to_le_bytes())?;
+                    }
+                }
+            }
+        }
+    }
+    write_u64(f, extras.len() as u64)?;
+    for (name, blob) in extras {
+        write_str64(f, name)?;
+        write_u64(f, blob.len() as u64)?;
+        f.write_all(blob)?;
+    }
+    Ok(())
+}
+
+/// Write `state` in the legacy v1 (32-bit) container. Any count that
+/// does not fit a `u32` is a hard error — the seed truncated silently.
+pub fn save_v1(state: &TrainState, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC_V1)?;
+    write_u32(&mut f, checked_u32(state.sections.len(), "section count")?)?;
     for (name, tensors) in &state.sections {
         write_str(&mut f, name)?;
-        write_u32(&mut f, tensors.len() as u32)?;
+        write_u32(&mut f, checked_u32(tensors.len(), "tensor count")?)?;
         for t in tensors {
-            write_u32(&mut f, t.shape.len() as u32)?;
+            write_u32(&mut f, checked_u32(t.shape.len(), "rank")?)?;
             for &d in &t.shape {
-                write_u32(&mut f, d as u32)?;
+                write_u32(&mut f, checked_u32(d, "dimension")?)?;
             }
             match &t.data {
                 TensorData::F32(v) => {
                     write_u32(&mut f, 0)?;
-                    write_u32(&mut f, v.len() as u32)?;
+                    write_u32(&mut f, checked_u32(v.len(), "element count")?)?;
                     for x in v {
                         f.write_all(&x.to_le_bytes())?;
                     }
                 }
                 TensorData::I32(v) => {
                     write_u32(&mut f, 1)?;
-                    write_u32(&mut f, v.len() as u32)?;
+                    write_u32(&mut f, checked_u32(v.len(), "element count")?)?;
                     for x in v {
                         f.write_all(&x.to_le_bytes())?;
                     }
@@ -45,56 +188,139 @@ pub fn save(state: &TrainState, path: &Path) -> Result<()> {
             }
         }
     }
+    f.flush()?;
     Ok(())
 }
 
+fn checked_u32(n: usize, what: &str) -> Result<u32> {
+    u32::try_from(n).map_err(|_| {
+        Error::msg(format!(
+            "checkpoint v1: {what} {n} exceeds the 32-bit container limit \
+             (write with the v2 `save` instead of truncating)"
+        ))
+    })
+}
+
+/// Load a checkpoint of either container version (extras, if any, are
+/// skipped — use [`load_with_extras`] to read them).
 pub fn load(path: &Path) -> Result<TrainState> {
+    Ok(load_with_extras(path)?.0)
+}
+
+/// Load a checkpoint plus its extra sections (empty for v1 files,
+/// which have none).
+pub fn load_with_extras(path: &Path) -> Result<(TrainState, Vec<(String, Vec<u8>)>)> {
     let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
     let mut magic = [0u8; 8];
     f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
+    if &magic == MAGIC_V1 {
+        return Ok((load_v1_body(&mut f)?, Vec::new()));
+    }
+    if &magic != MAGIC_V2 {
         return Err(Error::msg("bad checkpoint magic"));
     }
-    let nsec = read_u32(&mut f)? as usize;
+    let version = read_u32(&mut f)?;
+    if version != VERSION {
+        return Err(Error::msg(format!(
+            "unsupported checkpoint version {version} (this build reads <= {VERSION})"
+        )));
+    }
+    load_v2_body(&mut f)
+}
+
+fn load_v1_body<R: Read>(f: &mut R) -> Result<TrainState> {
+    let nsec = read_u32(f)? as usize;
     let mut state = TrainState::default();
     for _ in 0..nsec {
-        let name = read_str(&mut f)?;
-        let nt = read_u32(&mut f)? as usize;
-        let mut tensors = Vec::with_capacity(nt);
+        let name = read_str(f)?;
+        let nt = read_u32(f)? as usize;
+        let mut tensors = Vec::with_capacity(nt.min(DECODE_PREALLOC_CAP));
         for _ in 0..nt {
-            let rank = read_u32(&mut f)? as usize;
-            let mut shape = Vec::with_capacity(rank);
+            let rank = read_u32(f)? as usize;
+            let mut shape = Vec::with_capacity(rank.min(64));
             for _ in 0..rank {
-                shape.push(read_u32(&mut f)? as usize);
+                shape.push(read_u32(f)? as usize);
             }
-            let dtype = read_u32(&mut f)?;
-            let n = read_u32(&mut f)? as usize;
-            let t = match dtype {
-                0 => {
-                    let mut v = vec![0f32; n];
-                    for x in &mut v {
-                        let mut b = [0u8; 4];
-                        f.read_exact(&mut b)?;
-                        *x = f32::from_le_bytes(b);
-                    }
-                    Tensor::f32(shape, v)
-                }
-                1 => {
-                    let mut v = vec![0i32; n];
-                    for x in &mut v {
-                        let mut b = [0u8; 4];
-                        f.read_exact(&mut b)?;
-                        *x = i32::from_le_bytes(b);
-                    }
-                    Tensor::i32(shape, v)
-                }
-                other => return Err(Error::msg(format!("bad dtype tag {other}"))),
-            };
-            tensors.push(t);
+            let dtype = read_u32(f)?;
+            let n = read_u32(f)? as usize;
+            tensors.push(read_tensor_payload(f, shape, dtype, n)?);
         }
         state.sections.insert(name, tensors);
     }
     Ok(state)
+}
+
+fn load_v2_body<R: Read>(f: &mut R) -> Result<(TrainState, Vec<(String, Vec<u8>)>)> {
+    let nsec = read_len(f)?;
+    let mut state = TrainState::default();
+    for _ in 0..nsec {
+        let name = read_str64(f)?;
+        let nt = read_len(f)?;
+        let mut tensors = Vec::with_capacity(nt.min(DECODE_PREALLOC_CAP));
+        for _ in 0..nt {
+            let rank = read_len(f)?;
+            let mut shape = Vec::with_capacity(rank.min(64));
+            for _ in 0..rank {
+                shape.push(read_len(f)?);
+            }
+            let dtype = read_u32(f)?;
+            let n = read_len(f)?;
+            tensors.push(read_tensor_payload(f, shape, dtype, n)?);
+        }
+        state.sections.insert(name, tensors);
+    }
+    let n_extras = read_len(f)?;
+    let mut extras = Vec::with_capacity(n_extras.min(DECODE_PREALLOC_CAP));
+    for _ in 0..n_extras {
+        let name = read_str64(f)?;
+        let len = read_len(f)?;
+        let mut blob = Vec::with_capacity(len.min(DECODE_PREALLOC_CAP));
+        let got = f.by_ref().take(len as u64).read_to_end(&mut blob)?;
+        if got != len {
+            return Err(Error::msg("truncated extra in checkpoint"));
+        }
+        extras.push((name, blob));
+    }
+    Ok((state, extras))
+}
+
+fn read_tensor_payload<R: Read>(
+    f: &mut R,
+    shape: Vec<usize>,
+    dtype: u32,
+    n: usize,
+) -> Result<Tensor> {
+    // a corrupt shape/count pair must be an Err here, not the
+    // shape-product assert panic inside the Tensor constructors
+    let expect = shape
+        .iter()
+        .try_fold(1usize, |a, &d| a.checked_mul(d));
+    if expect != Some(n) {
+        return Err(Error::msg(format!(
+            "checkpoint tensor shape {shape:?} does not describe {n} elements"
+        )));
+    }
+    match dtype {
+        0 => {
+            let mut v = Vec::with_capacity(n.min(DECODE_PREALLOC_CAP));
+            for _ in 0..n {
+                let mut b = [0u8; 4];
+                f.read_exact(&mut b)?;
+                v.push(f32::from_le_bytes(b));
+            }
+            Ok(Tensor::f32(shape, v))
+        }
+        1 => {
+            let mut v = Vec::with_capacity(n.min(DECODE_PREALLOC_CAP));
+            for _ in 0..n {
+                let mut b = [0u8; 4];
+                f.read_exact(&mut b)?;
+                v.push(i32::from_le_bytes(b));
+            }
+            Ok(Tensor::i32(shape, v))
+        }
+        other => Err(Error::msg(format!("bad dtype tag {other}"))),
+    }
 }
 
 /// Checkpoint a device-resident state (syncs stale sections to the
@@ -120,25 +346,143 @@ fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
     Ok(u32::from_le_bytes(b))
 }
 
+fn write_u64<W: Write>(w: &mut W, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// A v2 length/count, checked into `usize` (a 32-bit host refusing a
+/// >4 GiB tensor is an error, not a truncation).
+fn read_len<R: Read>(r: &mut R) -> Result<usize> {
+    usize::try_from(read_u64(r)?)
+        .map_err(|_| Error::msg("checkpoint length exceeds this platform's usize"))
+}
+
 fn write_str<W: Write>(w: &mut W, s: &str) -> Result<()> {
-    write_u32(w, s.len() as u32)?;
+    write_u32(w, checked_u32(s.len(), "string length")?)?;
     w.write_all(s.as_bytes())?;
     Ok(())
 }
 
 fn read_str<R: Read>(r: &mut R) -> Result<String> {
     let n = read_u32(r)? as usize;
-    let mut b = vec![0u8; n];
-    r.read_exact(&mut b)?;
+    read_str_body(r, n)
+}
+
+fn write_str64<W: Write>(w: &mut W, s: &str) -> Result<()> {
+    write_u64(w, s.len() as u64)?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn read_str64<R: Read>(r: &mut R) -> Result<String> {
+    let n = read_len(r)?;
+    read_str_body(r, n)
+}
+
+fn read_str_body<R: Read>(r: &mut R, n: usize) -> Result<String> {
+    let mut b = Vec::with_capacity(n.min(DECODE_PREALLOC_CAP));
+    let got = r.by_ref().take(n as u64).read_to_end(&mut b)?;
+    if got != n {
+        return Err(Error::msg("truncated string in checkpoint"));
+    }
     String::from_utf8(b).map_err(|_| Error::msg("bad utf-8 in checkpoint"))
+}
+
+/// Little-endian byte-blob (de)serialization helpers for the extras
+/// sections (the warm-start layer encodes RNG words, iterator state,
+/// history records and the structured fingerprint through these).
+pub(crate) mod wire {
+    /// Append primitives, all little-endian.
+    pub fn put_u64(b: &mut Vec<u8>, v: u64) {
+        b.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u32(b: &mut Vec<u8>, v: u32) {
+        b.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u8(b: &mut Vec<u8>, v: u8) {
+        b.push(v);
+    }
+
+    /// Length-prefixed byte run.
+    pub fn put_bytes(b: &mut Vec<u8>, s: &[u8]) {
+        put_u64(b, s.len() as u64);
+        b.extend_from_slice(s);
+    }
+
+    /// Cursor over an extras blob. Every accessor returns `None` past
+    /// the end — decoding a corrupt blob degrades to "no warm entry",
+    /// never a panic.
+    pub struct Rd<'a> {
+        buf: &'a [u8],
+        pos: usize,
+    }
+
+    impl<'a> Rd<'a> {
+        pub fn new(buf: &'a [u8]) -> Self {
+            Rd { buf, pos: 0 }
+        }
+
+        fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+            let end = self.pos.checked_add(n)?;
+            let s = self.buf.get(self.pos..end)?;
+            self.pos = end;
+            Some(s)
+        }
+
+        pub fn u64(&mut self) -> Option<u64> {
+            Some(u64::from_le_bytes(self.take(8)?.try_into().ok()?))
+        }
+
+        pub fn u32(&mut self) -> Option<u32> {
+            Some(u32::from_le_bytes(self.take(4)?.try_into().ok()?))
+        }
+
+        pub fn u8(&mut self) -> Option<u8> {
+            Some(self.take(1)?[0])
+        }
+
+        pub fn len_of(&mut self) -> Option<usize> {
+            usize::try_from(self.u64()?).ok()
+        }
+
+        pub fn bytes(&mut self) -> Option<&'a [u8]> {
+            let n = self.len_of()?;
+            self.take(n)
+        }
+
+        /// True iff the whole blob was consumed (trailing garbage in
+        /// a decoded extra is treated as corruption by callers).
+        pub fn done(&self) -> bool {
+            self.pos == self.buf.len()
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::Prop;
+    use crate::util::rng::Pcg64;
 
-    #[test]
-    fn roundtrip() {
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "mixprec_ckpt_{tag}_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample_state() -> TrainState {
         let mut st = TrainState::default();
         st.sections.insert(
             "params".into(),
@@ -149,7 +493,13 @@ mod tests {
         );
         st.sections
             .insert("theta".into(), vec![Tensor::i32(vec![3], vec![1, 2, 3])]);
-        let dir = std::env::temp_dir().join("mixprec_ckpt_test");
+        st
+    }
+
+    #[test]
+    fn roundtrip_v2() {
+        let st = sample_state();
+        let dir = tmpdir("v2");
         let path = dir.join("a.ckpt");
         save(&st, &path).unwrap();
         let back = load(&path).unwrap();
@@ -158,12 +508,170 @@ mod tests {
     }
 
     #[test]
-    fn rejects_bad_magic() {
-        let dir = std::env::temp_dir().join("mixprec_ckpt_test2");
-        std::fs::create_dir_all(&dir).unwrap();
+    fn v1_files_still_load() {
+        let st = sample_state();
+        let dir = tmpdir("v1compat");
+        let path = dir.join("old.ckpt");
+        save_v1(&st, &path).unwrap();
+        // sanity: it really is the legacy headerless layout
+        let head = std::fs::read(&path).unwrap();
+        assert_eq!(&head[..8], MAGIC_V1);
+        let back = load(&path).unwrap();
+        assert_eq!(back.sections, st.sections);
+        let (back2, extras) = load_with_extras(&path).unwrap();
+        assert_eq!(back2.sections, st.sections);
+        assert!(extras.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn extras_roundtrip_in_order() {
+        let st = sample_state();
+        let dir = tmpdir("extras");
+        let path = dir.join("x.ckpt");
+        let extras = vec![
+            ("rng", vec![1u8, 2, 3]),
+            ("meta", Vec::new()),
+            ("fingerprint", (0..200u8).collect()),
+        ];
+        save_with_extras(&st, &extras, &path).unwrap();
+        // plain load ignores extras
+        assert_eq!(load(&path).unwrap().sections, st.sections);
+        let (back, got) = load_with_extras(&path).unwrap();
+        assert_eq!(back.sections, st.sections);
+        let want: Vec<(String, Vec<u8>)> = extras
+            .into_iter()
+            .map(|(n, b)| (n.to_string(), b))
+            .collect();
+        assert_eq!(got, want);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn atomic_save_replaces_and_leaves_no_temp() {
+        let st = sample_state();
+        let dir = tmpdir("atomic");
+        let path = dir.join("w.ckpt");
+        std::fs::write(&path, b"garbage that must be replaced").unwrap();
+        save_with_extras_atomic(&st, &[("rng", vec![9u8])], &path).unwrap();
+        let (back, extras) = load_with_extras(&path).unwrap();
+        assert_eq!(back.sections, st.sections);
+        assert_eq!(extras, vec![("rng".to_string(), vec![9u8])]);
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains("tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "temp file left behind: {leftovers:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_future_version() {
+        let dir = tmpdir("bad");
         let path = dir.join("bad.ckpt");
         std::fs::write(&path, b"NOTMAGIC____").unwrap();
         assert!(load(&path).is_err());
+        let mut future = Vec::new();
+        future.extend_from_slice(MAGIC_V2);
+        future.extend_from_slice(&99u32.to_le_bytes());
+        future.extend_from_slice(&0u64.to_le_bytes());
+        std::fs::write(&path, &future).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("version 99"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Random states round-trip through both containers, and the two
+    /// containers agree with each other (cross-version property).
+    #[test]
+    fn prop_cross_version_roundtrip() {
+        let dir = tmpdir("prop");
+        let gen_state = |rng: &mut Pcg64| {
+            let mut st = TrainState::default();
+            let nsec = 1 + rng.below(3) as usize;
+            for s in 0..nsec {
+                let nt = rng.below(3) as usize + 1;
+                let mut tensors = Vec::new();
+                for _ in 0..nt {
+                    let rank = rng.below(3) as usize;
+                    let shape: Vec<usize> =
+                        (0..rank).map(|_| 1 + rng.below(4) as usize).collect();
+                    let n: usize = shape.iter().product();
+                    if rng.below(2) == 0 {
+                        let v: Vec<f32> =
+                            (0..n).map(|_| rng.range_f32(-10.0, 10.0)).collect();
+                        tensors.push(Tensor::f32(shape, v));
+                    } else {
+                        let v: Vec<i32> =
+                            (0..n).map(|_| rng.below(1000) as i32 - 500).collect();
+                        tensors.push(Tensor::i32(shape, v));
+                    }
+                }
+                st.sections.insert(format!("sec{s}"), tensors);
+            }
+            StateCase(st)
+        };
+        let dir2 = dir.clone();
+        Prop::new(48).check(
+            "checkpoint v1/v2 cross-version roundtrip",
+            gen_state,
+            |_| Vec::new(),
+            move |StateCase(st)| {
+                let p1 = dir2.join("p1.ckpt");
+                let p2 = dir2.join("p2.ckpt");
+                save_v1(st, &p1).map_err(|e| e.to_string())?;
+                save(st, &p2).map_err(|e| e.to_string())?;
+                let b1 = load(&p1).map_err(|e| e.to_string())?;
+                let b2 = load(&p2).map_err(|e| e.to_string())?;
+                if b1.sections != st.sections {
+                    return Err("v1 roundtrip diverged".into());
+                }
+                if b2.sections != st.sections {
+                    return Err("v2 roundtrip diverged".into());
+                }
+                if b1.sections != b2.sections {
+                    return Err("v1 and v2 disagree".into());
+                }
+                Ok(())
+            },
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Debug wrapper so `Prop` can print a failing case.
+    #[derive(Clone)]
+    struct StateCase(TrainState);
+
+    impl std::fmt::Debug for StateCase {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            let shapes: Vec<_> = self
+                .0
+                .sections
+                .iter()
+                .map(|(k, v)| (k.clone(), v.iter().map(|t| t.shape.clone()).collect::<Vec<_>>()))
+                .collect();
+            write!(f, "StateCase{shapes:?}")
+        }
+    }
+
+    #[test]
+    fn wire_rd_handles_truncation() {
+        let mut b = Vec::new();
+        wire::put_u64(&mut b, 7);
+        wire::put_bytes(&mut b, b"abc");
+        let mut rd = wire::Rd::new(&b);
+        assert_eq!(rd.u64(), Some(7));
+        assert_eq!(rd.bytes(), Some(&b"abc"[..]));
+        assert!(rd.done());
+        assert_eq!(rd.u64(), None, "past-the-end reads are None, not panics");
+        // truncated length prefix
+        let mut rd = wire::Rd::new(&b[..4]);
+        assert_eq!(rd.u64(), None);
+        // length prefix promising more bytes than exist
+        let mut huge = Vec::new();
+        wire::put_u64(&mut huge, u64::MAX);
+        let mut rd = wire::Rd::new(&huge);
+        assert_eq!(rd.bytes(), None);
     }
 }

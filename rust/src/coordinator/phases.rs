@@ -30,13 +30,15 @@
 //! artifact (or `batched_eval = false`) fall back to the per-batch
 //! path.
 
+use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::assignment::{self, Assignment, PrecisionMasks, ResolvedLeaves};
+use crate::coordinator::checkpoint::{self, wire};
 use crate::coordinator::schedule::{EarlyStop, ExpDecay, TempSchedule};
 use crate::cost::{BitOps, CostModel, Mpic, Ne16, Size};
-use crate::data::{BatchIter, DataSet, Split};
+use crate::data::{BatchIter, BatchIterState, DataSet, Split};
 use crate::error::{Error, Result};
 use crate::graph::ModelGraph;
 use crate::runtime::{
@@ -394,6 +396,230 @@ pub struct WarmStart {
     fingerprint: WarmupFingerprint,
 }
 
+/// History-record phase names <-> the byte tags the warm file stores
+/// (bit-pattern-stable, unlike persisting the strings ad hoc).
+fn phase_tag(phase: &str) -> Option<u8> {
+    match phase {
+        "warmup" => Some(0),
+        "search" => Some(1),
+        "finetune" => Some(2),
+        _ => None,
+    }
+}
+
+fn phase_from_tag(tag: u8) -> Option<&'static str> {
+    match tag {
+        0 => Some("warmup"),
+        1 => Some("search"),
+        2 => Some("finetune"),
+        _ => None,
+    }
+}
+
+impl WarmStart {
+    /// Serialize this warm start into the v2 checkpoint container:
+    /// the post-warmup state tensors as regular sections, plus extras
+    /// carrying the RNG words, the exact `BatchIter` position, the
+    /// warmup history (float fields as bit patterns, so a resumed
+    /// run's records are bitwise identical), the transfer/alloc
+    /// accounting, and the structured [`WarmupFingerprint`] +
+    /// dataset fingerprint for load-time revalidation. The write is
+    /// atomic (temp + rename), so concurrent sweep workers sharing
+    /// one `--warm-cache-dir` never read a torn entry.
+    fn persist(&self, data_fp: u64, path: &Path) -> Result<()> {
+        let mut rng_b = Vec::with_capacity(32);
+        for w in self.rng.to_raw() {
+            wire::put_u64(&mut rng_b, w);
+        }
+
+        let it = self.train_iter.state();
+        let mut it_b = Vec::with_capacity(48 + it.order.len() * 8);
+        wire::put_u64(&mut it_b, it.batch as u64);
+        wire::put_u64(&mut it_b, it.pos as u64);
+        wire::put_u64(&mut it_b, it.epoch as u64);
+        wire::put_u8(&mut it_b, it.shuffle as u8);
+        for w in it.rng {
+            wire::put_u64(&mut it_b, w);
+        }
+        wire::put_u64(&mut it_b, it.order.len() as u64);
+        for &i in &it.order {
+            wire::put_u64(&mut it_b, i as u64);
+        }
+
+        let mut hist_b = Vec::with_capacity(8 + self.history.len() * 24);
+        wire::put_u64(&mut hist_b, self.history.len() as u64);
+        for r in &self.history {
+            let tag = phase_tag(r.phase).ok_or_else(|| {
+                Error::msg(format!("unknown history phase '{}'", r.phase))
+            })?;
+            wire::put_u8(&mut hist_b, tag);
+            wire::put_u64(&mut hist_b, r.step as u64);
+            wire::put_u32(&mut hist_b, r.loss.to_bits());
+            wire::put_u32(&mut hist_b, r.acc.to_bits());
+            wire::put_u32(&mut hist_b, r.cost.to_bits());
+        }
+
+        let mut meta_b = Vec::with_capacity(88);
+        wire::put_u64(&mut meta_b, self.warmup_s.to_bits());
+        wire::put_u64(&mut meta_b, self.steps_run as u64);
+        for v in [
+            self.transfer.h2d_bytes,
+            self.transfer.d2h_bytes,
+            self.transfer.h2d_tensors,
+            self.transfer.d2h_tensors,
+        ] {
+            wire::put_u64(&mut meta_b, v);
+        }
+        for v in [
+            self.alloc.allocated,
+            self.alloc.donated,
+            self.alloc.pooled,
+            self.alloc.fallback_pinned,
+            self.alloc.fallback_aliased,
+        ] {
+            wire::put_u64(&mut meta_b, v);
+        }
+
+        let mut fp_b = self.fingerprint.encode();
+        wire::put_u64(&mut fp_b, data_fp);
+
+        let extras: Vec<(&str, Vec<u8>)> = vec![
+            ("rng", rng_b),
+            ("iter", it_b),
+            ("history", hist_b),
+            ("meta", meta_b),
+            ("fingerprint", fp_b),
+        ];
+        // download the snapshot last and serialize the borrowed view —
+        // no second host copy of the (potentially multi-GiB) state
+        let mut ds = DeviceState::from_snapshot(&self.snap);
+        checkpoint::save_with_extras_atomic(ds.host_view()?, &extras, path)
+    }
+
+    /// Reconstruct a warm start persisted by [`WarmStart::persist`].
+    /// Validates the stored structured fingerprint and dataset
+    /// fingerprint against the caller's expectation *before* touching
+    /// the device; returns `None` — never an error — on any mismatch,
+    /// missing extra, truncation or decode failure, so a stale or
+    /// foreign warm file degrades to a fresh warmup, never a wrong
+    /// resume. The restored snapshot re-uploads the exact f32/i32
+    /// payloads the original downloaded, so forks from it are bitwise
+    /// identical to forks from the in-process warm start.
+    fn try_load(
+        eng: &Engine,
+        path: &Path,
+        expect: &WarmupFingerprint,
+        expect_data_fp: u64,
+    ) -> Option<WarmStart> {
+        let (state, extras) = checkpoint::load_with_extras(path).ok()?;
+        let get = |name: &str| {
+            extras
+                .iter()
+                .find(|(n, _)| n == name)
+                .map(|(_, b)| b.as_slice())
+        };
+
+        // fingerprint first: the cheap structural reject must happen
+        // before any upload work
+        let mut rd = wire::Rd::new(get("fingerprint")?);
+        let fp = WarmupFingerprint::decode(&mut rd)?;
+        let data_fp = rd.u64()?;
+        if !rd.done() || fp != *expect || data_fp != expect_data_fp {
+            return None;
+        }
+
+        let mut rd = wire::Rd::new(get("rng")?);
+        let rng = Pcg64::from_raw([rd.u64()?, rd.u64()?, rd.u64()?, rd.u64()?]);
+        if !rd.done() {
+            return None;
+        }
+
+        let mut rd = wire::Rd::new(get("iter")?);
+        let batch = usize::try_from(rd.u64()?).ok()?;
+        let pos = usize::try_from(rd.u64()?).ok()?;
+        let epoch = usize::try_from(rd.u64()?).ok()?;
+        let shuffle = rd.u8()? != 0;
+        let it_rng = [rd.u64()?, rd.u64()?, rd.u64()?, rd.u64()?];
+        let n_order = usize::try_from(rd.u64()?).ok()?;
+        let mut order = Vec::with_capacity(n_order.min(1 << 20));
+        for _ in 0..n_order {
+            order.push(usize::try_from(rd.u64()?).ok()?);
+        }
+        // content validation, not just framing: a decodable-but-insane
+        // iterator state must fall back, not panic/misbehave later —
+        // the order must be a full index set over the expected train
+        // split (same size, every index in range) with a live cursor
+        if !rd.done()
+            || batch == 0
+            || order.len() != expect.n_train
+            || pos > order.len()
+            || order.iter().any(|&i| i >= order.len())
+        {
+            return None;
+        }
+        let train_iter = BatchIter::from_state(BatchIterState {
+            order,
+            pos,
+            batch,
+            rng: it_rng,
+            shuffle,
+            epoch,
+        });
+
+        let mut rd = wire::Rd::new(get("history")?);
+        let n_hist = usize::try_from(rd.u64()?).ok()?;
+        let mut history = Vec::with_capacity(n_hist.min(1 << 20));
+        for _ in 0..n_hist {
+            history.push(Record {
+                phase: phase_from_tag(rd.u8()?)?,
+                step: usize::try_from(rd.u64()?).ok()?,
+                loss: f32::from_bits(rd.u32()?),
+                acc: f32::from_bits(rd.u32()?),
+                cost: f32::from_bits(rd.u32()?),
+            });
+        }
+        if !rd.done() {
+            return None;
+        }
+
+        let mut rd = wire::Rd::new(get("meta")?);
+        let warmup_s = f64::from_bits(rd.u64()?);
+        let steps_run = usize::try_from(rd.u64()?).ok()?;
+        let transfer = TransferStats {
+            h2d_bytes: rd.u64()?,
+            d2h_bytes: rd.u64()?,
+            h2d_tensors: rd.u64()?,
+            d2h_tensors: rd.u64()?,
+        };
+        let alloc = AllocStats {
+            allocated: rd.u64()?,
+            donated: rd.u64()?,
+            pooled: rd.u64()?,
+            fallback_pinned: rd.u64()?,
+            fallback_aliased: rd.u64()?,
+        };
+        if !rd.done() {
+            return None;
+        }
+
+        // upload the persisted state and snapshot it — the same Arc
+        // handles every fork of this process will share
+        let mut ds = DeviceState::from_host(state);
+        let snap = ds.snapshot(eng).ok()?;
+        Some(WarmStart {
+            snap,
+            rng,
+            train_iter,
+            history,
+            warmup_s,
+            steps_run,
+            transfer,
+            alloc,
+            fingerprint: fp,
+        })
+    }
+}
+
 /// The `PipelineConfig` knobs the warmup phase actually consumes —
 /// compared field-for-field before a fork so `run_from` can never
 /// silently continue from a foreign warmup trajectory.
@@ -426,6 +652,50 @@ impl WarmupFingerprint {
             host_resident: cfg.host_resident,
             n_train,
         }
+    }
+
+    /// Canonical binary encoding, field-by-field and little-endian —
+    /// a *stable identity*, unlike the `Debug` rendering (float
+    /// formatting and derived-`Debug` layout are not guaranteed across
+    /// rustc versions). The warm pool keys on its FNV hash and the
+    /// on-disk warm file stores it verbatim for structural
+    /// revalidation on load.
+    fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(64 + self.model.len());
+        wire::put_bytes(&mut b, self.model.as_bytes());
+        wire::put_u64(&mut b, self.seed);
+        wire::put_u64(&mut b, self.warmup_steps as u64);
+        wire::put_u64(&mut b, self.steps_per_epoch as u64);
+        wire::put_u64(&mut b, self.eval_every as u64);
+        wire::put_u32(&mut b, self.lr_w_bits);
+        wire::put_u32(&mut b, self.lr_decay_bits);
+        wire::put_u8(&mut b, self.host_resident as u8);
+        wire::put_u64(&mut b, self.n_train as u64);
+        b
+    }
+
+    /// Inverse of [`WarmupFingerprint::encode`]; `None` on any
+    /// truncation or malformed field (callers fall back to a fresh
+    /// warmup, never an error).
+    fn decode(rd: &mut wire::Rd<'_>) -> Option<Self> {
+        let model = String::from_utf8(rd.bytes()?.to_vec()).ok()?;
+        Some(WarmupFingerprint {
+            model,
+            seed: rd.u64()?,
+            warmup_steps: usize::try_from(rd.u64()?).ok()?,
+            steps_per_epoch: usize::try_from(rd.u64()?).ok()?,
+            eval_every: usize::try_from(rd.u64()?).ok()?,
+            lr_w_bits: rd.u32()?,
+            lr_decay_bits: rd.u32()?,
+            host_resident: rd.u8()? != 0,
+            n_train: usize::try_from(rd.u64()?).ok()?,
+        })
+    }
+
+    /// FNV-1a hash of the canonical encoding — the same scheme as
+    /// `DataConfig::fingerprint` / `EvalKey::data_fp`.
+    fn fnv(&self) -> u64 {
+        crate::util::fnv1a(&self.encode())
     }
 }
 
@@ -494,16 +764,40 @@ impl<'a> Runner<'a> {
         }
     }
 
-    /// Warm-pool key for `cfg`: a canonical rendering of the same
-    /// [`WarmupFingerprint`] that `run_from` re-validates structurally
-    /// on every fork — two configs share a key iff every knob the
-    /// warmup phase reads matches.
+    /// Warm-pool key for `cfg`: the FNV hash of the canonical binary
+    /// [`WarmupFingerprint`] encoding plus the dataset fingerprint —
+    /// the same `WarmupFingerprint` that `run_from` re-validates
+    /// structurally on every fork, so two configs share a key iff
+    /// every knob the warmup phase reads matches. (The previous
+    /// Debug-rendered key was not a stable identity: float formatting
+    /// and derived-`Debug` layout may change across rustc versions,
+    /// which matters once the key also names on-disk warm files.) An
+    /// FNV collision between distinct fingerprints is caught by
+    /// `run_from`'s structural check (in-memory) and by the warm
+    /// file's stored fingerprint (on disk) — both degrade safely, the
+    /// pool never silently serves a foreign trajectory.
     pub fn warmup_cache_key(&self, cfg: &PipelineConfig) -> String {
         format!(
-            "{:?}|data={:016x}",
-            WarmupFingerprint::of(cfg, self.data.cfg.n_train),
+            "{:016x}-{:016x}",
+            WarmupFingerprint::of(cfg, self.data.cfg.n_train).fnv(),
             self.data.cfg.fingerprint()
         )
+    }
+
+    /// Try to restore a persisted [`WarmStart`] for `cfg` from
+    /// `path`. Returns `None` — never an error — on any decode
+    /// failure or fingerprint mismatch, so the caller falls back to a
+    /// fresh warmup (the cross-process analog of `run_from`'s
+    /// per-fork validation).
+    pub fn try_load_warm(&self, path: &Path, cfg: &PipelineConfig) -> Option<WarmStart> {
+        let expect = WarmupFingerprint::of(cfg, self.data.cfg.n_train);
+        WarmStart::try_load(self.eng, path, &expect, self.data.cfg.fingerprint())
+    }
+
+    /// Persist `ws` for cross-process reuse (atomic temp + rename;
+    /// see [`WarmStart::persist`]).
+    pub fn persist_warm(&self, ws: &WarmStart, path: &Path) -> Result<()> {
+        ws.persist(self.data.cfg.fingerprint(), path)
     }
 
     /// Evaluate accuracy/loss over a whole split with the current

@@ -20,7 +20,7 @@ use crate::coordinator::phases::{PipelineConfig, RunResult, Runner, WarmStart};
 use crate::cost::Normalizer;
 use crate::error::Result;
 use crate::graph::ModelGraph;
-use crate::runtime::{AllocStats, TransferStats};
+use crate::runtime::{AllocStats, TransferStats, WarmSource};
 use crate::util::pool::parallel_map;
 
 /// Warmup-sharing strategy of a sweep.
@@ -109,6 +109,16 @@ pub struct SweepResult {
     /// The warmup was served from the cross-method `WarmStart` pool
     /// (its steps/time/traffic are charged to the sweep that ran it).
     pub warmup_reused: bool,
+    /// The warmup was restored from the cross-process disk tier
+    /// (`--warm-cache-dir`): zero warmup steps ran in this process,
+    /// and the persisted accounting stayed with the process that ran
+    /// the phase.
+    pub warmup_loaded: bool,
+    /// Warm entries this sweep restored from the disk tier (cache
+    /// delta; 0 or 1 — at most its own warmup).
+    pub warmups_loaded: u64,
+    /// Fresh warmups this sweep wrote back to the disk tier.
+    pub warmups_persisted: u64,
     /// Wall-clock of the shared warmup phase (`ForkedWarmup` only;
     /// independent warmup time is inside each run's `timing`).
     pub shared_warmup_s: f64,
@@ -203,6 +213,9 @@ pub fn sweep_lambdas(
         warmup_steps_saved: 0,
         warmup_phases_run: 0,
         warmup_reused: false,
+        warmup_loaded: false,
+        warmups_loaded: 0,
+        warmups_persisted: 0,
         shared_warmup_s: 0.0,
         shared_warmup: TransferStats::default(),
         shared_warmup_alloc: AllocStats::default(),
@@ -229,25 +242,34 @@ pub fn sweep_lambdas(
         SweepMode::ForkedWarmup => {
             // resolve the shared warmup: from the cross-method pool
             // when sharing is on and the runner carries a cache (the
-            // pool key renders every warmup-phase knob; `run_from`
+            // pool key hashes every warmup-phase knob; `run_from`
             // re-validates the structured fingerprint per fork), else
-            // run it here
-            let (ws, fresh): (Arc<WarmStart>, bool) = match &runner.cache {
-                Some(cache) if opts.share_warmup => {
-                    cache.get_or_warm(&runner.warmup_cache_key(base), || runner.warmup(base))?
-                }
-                _ => (Arc::new(runner.warmup(base)?), true),
+            // run it here. With a warm dir attached to the cache, the
+            // pool also consults the cross-process disk tier before
+            // running the phase, and persists a fresh phase for the
+            // next process — any unloadable or mismatched file simply
+            // falls back to a fresh warmup.
+            let (ws, src): (Arc<WarmStart>, WarmSource) = match &runner.cache {
+                Some(cache) if opts.share_warmup => cache.get_or_warm_persistent(
+                    &runner.warmup_cache_key(base),
+                    |path| runner.try_load_warm(path, base),
+                    || runner.warmup(base),
+                    |path, ws| runner.persist_warm(ws, path),
+                )?,
+                _ => (Arc::new(runner.warmup(base)?), WarmSource::Built),
             };
-            if fresh {
-                result.warmup_steps_run = ws.steps_run;
-                result.warmup_phases_run = 1;
-                result.shared_warmup_s = ws.warmup_s;
-                result.shared_warmup = ws.transfer;
-                result.shared_warmup_alloc = ws.alloc;
-            } else {
-                // steps/time/traffic were charged to the sweep that
-                // actually ran the phase
-                result.warmup_reused = true;
+            match src {
+                WarmSource::Built => {
+                    result.warmup_steps_run = ws.steps_run;
+                    result.warmup_phases_run = 1;
+                    result.shared_warmup_s = ws.warmup_s;
+                    result.shared_warmup = ws.transfer;
+                    result.shared_warmup_alloc = ws.alloc;
+                }
+                // steps/time/traffic were charged to the sweep (or,
+                // for `Loaded`, the process) that ran the phase
+                WarmSource::Reused => result.warmup_reused = true,
+                WarmSource::Loaded => result.warmup_loaded = true,
             }
             result.warmup_steps_saved =
                 independent_warmup.saturating_sub(result.warmup_steps_run);
@@ -265,6 +287,8 @@ pub fn sweep_lambdas(
         let d = cache.stats().since(&before);
         result.split_uploads = d.split_uploads;
         result.split_reuses = d.split_reuses;
+        result.warmups_loaded = d.warmups_loaded;
+        result.warmups_persisted = d.warmups_persisted;
     }
     Ok(result)
 }
@@ -317,6 +341,9 @@ mod tests {
             warmup_steps_saved: 0,
             warmup_phases_run: 0,
             warmup_reused: false,
+            warmup_loaded: false,
+            warmups_loaded: 0,
+            warmups_persisted: 0,
             shared_warmup_s: 0.0,
             shared_warmup: TransferStats::default(),
             shared_warmup_alloc: AllocStats::default(),

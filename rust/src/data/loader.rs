@@ -23,6 +23,22 @@ pub struct BatchIter {
     pub epoch: usize,
 }
 
+/// The exact iteration state of a [`BatchIter`], detached from the
+/// iterator for cross-process persistence (the warm-start checkpoint
+/// stores it field-by-field). [`BatchIter::from_state`] restores an
+/// iterator that yields the same batch sequence the original would
+/// have continued with.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchIterState {
+    pub order: Vec<usize>,
+    pub pos: usize,
+    pub batch: usize,
+    /// Shuffle RNG words (`Pcg64::to_raw`).
+    pub rng: [u64; 4],
+    pub shuffle: bool,
+    pub epoch: usize,
+}
+
 impl BatchIter {
     pub fn new(n: usize, batch: usize, seed: u64, shuffle: bool) -> Self {
         let mut it = BatchIter {
@@ -55,6 +71,30 @@ impl BatchIter {
             self.pos += 1;
         }
         out
+    }
+
+    /// Detach the exact iteration state (see [`BatchIterState`]).
+    pub fn state(&self) -> BatchIterState {
+        BatchIterState {
+            order: self.order.clone(),
+            pos: self.pos,
+            batch: self.batch,
+            rng: self.rng.to_raw(),
+            shuffle: self.shuffle,
+            epoch: self.epoch,
+        }
+    }
+
+    /// Rebuild an iterator from a detached state.
+    pub fn from_state(s: BatchIterState) -> Self {
+        BatchIter {
+            order: s.order,
+            pos: s.pos,
+            batch: s.batch,
+            rng: Pcg64::from_raw(s.rng),
+            shuffle: s.shuffle,
+            epoch: s.epoch,
+        }
     }
 
     /// Number of batches per epoch (ceil).
@@ -107,6 +147,19 @@ mod tests {
         assert_eq!(it.next_batch(), vec![4, 5]);
         assert_eq!(it.next_batch(), vec![0, 1]);
         assert_eq!(it.epoch, 1);
+    }
+
+    #[test]
+    fn state_roundtrip_resumes_sequence() {
+        let mut a = BatchIter::new(37, 5, 123, true);
+        for _ in 0..9 {
+            a.next_batch(); // cross an epoch boundary (reshuffle state)
+        }
+        let mut b = BatchIter::from_state(a.state());
+        for _ in 0..20 {
+            assert_eq!(a.next_batch(), b.next_batch());
+            assert_eq!(a.epoch, b.epoch);
+        }
     }
 
     #[test]

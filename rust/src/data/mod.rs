@@ -11,5 +11,5 @@
 pub mod loader;
 pub mod synthetic;
 
-pub use loader::{BatchIter, Split};
+pub use loader::{BatchIter, BatchIterState, Split};
 pub use synthetic::{DataConfig, DataSet};

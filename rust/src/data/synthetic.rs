@@ -66,24 +66,24 @@ impl DataConfig {
     /// (`runtime::SharedRunCache`) relies on. FNV-1a over every field
     /// (floats by bit pattern).
     pub fn fingerprint(&self) -> u64 {
-        let mut h = 0xcbf2_9ce4_8422_2325u64;
-        let mut mix = |v: u64| {
-            for b in v.to_le_bytes() {
-                h ^= b as u64;
-                h = h.wrapping_mul(0x100_0000_01b3);
-            }
-        };
-        mix(self.h as u64);
-        mix(self.w as u64);
-        mix(self.c as u64);
-        mix(self.num_classes as u64);
-        mix(self.n_train as u64);
-        mix(self.n_val as u64);
-        mix(self.n_test as u64);
-        mix(self.signal.to_bits() as u64);
-        mix(self.noise.to_bits() as u64);
-        mix(self.seed);
-        h
+        let mut b = Vec::with_capacity(80);
+        for v in [
+            self.h as u64,
+            self.w as u64,
+            self.c as u64,
+            self.num_classes as u64,
+            self.n_train as u64,
+            self.n_val as u64,
+            self.n_test as u64,
+            self.signal.to_bits() as u64,
+            self.noise.to_bits() as u64,
+            self.seed,
+        ] {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        // byte stream identical to the previous inline field-wise mix,
+        // so fingerprints (and therefore cache keys) are unchanged
+        crate::util::fnv1a(&b)
     }
 }
 

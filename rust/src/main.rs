@@ -43,6 +43,12 @@ fn usage() -> ! {
                           runs/methods of this process (default on)
     --share-warmup on|off seed matching sweeps from one shared warmup
                           (compare's four methods; default on)
+    --warm-cache-dir <d>  persist warm starts to <d> and resume from
+                          entries found there: a second process (or a
+                          fleet worker) pointed at a populated dir
+                          runs zero warmup steps. Stale/corrupt
+                          entries fall back to a fresh warmup.
+                          (env: MIXPREC_WARM_DIR)
     --seed <n>            RNG seed
     --act-search          open activation precisions {{2,4,8}}
     --verbose"
@@ -87,8 +93,15 @@ fn build_sweep_opts(a: &Args) -> mixprec::Result<SweepOptions> {
 /// Build the model runner from the independent `--share-eval-bufs` /
 /// `--share-warmup` knobs (warm-pool *use* is consulted per sweep via
 /// `build_sweep_opts`; the attach-or-not rule lives in
-/// `Context::runner_with_sharing`).
+/// `Context::runner_with_sharing`), and attach the warm-start disk
+/// tier when `--warm-cache-dir` / `MIXPREC_WARM_DIR` names one.
 fn build_runner<'a>(ctx: &'a Context, a: &Args, model: &str) -> mixprec::Result<Runner<'a>> {
+    let warm_dir = a
+        .get("warm-cache-dir")
+        .map(|d| d.to_string())
+        .or_else(|| std::env::var("MIXPREC_WARM_DIR").ok());
+    ctx.shared_cache()
+        .set_warm_dir(warm_dir.map(std::path::PathBuf::from));
     ctx.runner_with_sharing(
         model,
         a.bool_or("share-eval-bufs", true),
@@ -184,6 +197,12 @@ fn run(cmd: &str, a: &Args) -> mixprec::Result<()> {
                     sw.warmup_steps_run, sw.warmup_steps_saved, sw.shared_warmup_s
                 );
             }
+            if sw.warmup_loaded {
+                println!("warm start loaded from cache dir: warmup_steps_run 0");
+            }
+            if sw.warmups_persisted > 0 {
+                println!("warm start persisted to cache dir");
+            }
             println!("{}", report::alloc_line(&sw.alloc()));
             let rows: Vec<(String, &_)> = sw
                 .runs
@@ -234,10 +253,7 @@ fn run(cmd: &str, a: &Args) -> mixprec::Result<()> {
                 rows.push((format!("w{b}a8"), r));
             }
             println!("{}", report::runs_table("method comparison", &rows).to_markdown());
-            println!(
-                "shared cache: warmups run {} (reused {}), split uploads {} (reused {})",
-                cr.warmups_run, cr.warmups_reused, cr.split_uploads, cr.split_reuses
-            );
+            println!("{}", report::cache_line(&cr));
             println!("{}", report::alloc_line(&cr.alloc));
             println!("compare total: {:.2}s", cr.total_time_s);
         }

@@ -20,6 +20,9 @@
 //!   (each run uploads its own splits, the pre-cache behavior)
 //! * `MIXPREC_SHARE_WARMUP=0` — disable the cross-method `WarmStart`
 //!   pool (each sweep warms up itself)
+//! * `MIXPREC_WARM_DIR` — attach the cross-process warm-start disk
+//!   tier: warmups persist here and later processes resume from them
+//!   with zero warmup steps (unset: in-memory sharing only)
 //! * `MIXPREC_HOST_RESIDENT=1` — force the seed's per-step full
 //!   host<->device marshal (baseline for the step-marshalling bench)
 //! * `MIXPREC_BENCH_DIR` — where `BENCH_*.json` trend files land
@@ -64,6 +67,9 @@ pub struct BenchScale {
     /// Share warmups across matching sweeps (`MIXPREC_SHARE_WARMUP`,
     /// default on).
     pub share_warmup: bool,
+    /// Cross-process warm-start disk tier (`MIXPREC_WARM_DIR`; unset
+    /// keeps the warm pool in-memory only).
+    pub warm_dir: Option<PathBuf>,
 }
 
 impl BenchScale {
@@ -95,6 +101,7 @@ impl BenchScale {
             host_resident: env_usize("MIXPREC_HOST_RESIDENT", 0) != 0,
             share_eval: env_usize("MIXPREC_SHARE_EVAL", 1) != 0,
             share_warmup: env_usize("MIXPREC_SHARE_WARMUP", 1) != 0,
+            warm_dir: std::env::var("MIXPREC_WARM_DIR").ok().map(PathBuf::from),
         }
     }
 
@@ -128,7 +135,10 @@ impl BenchScale {
     /// `MIXPREC_SHARE_EVAL` / `MIXPREC_SHARE_WARMUP` knobs (warm-pool
     /// *use* is governed per sweep via [`BenchScale::sweep_opts`]; the
     /// attach-or-not rule lives in `Context::runner_with_sharing`).
+    /// `MIXPREC_WARM_DIR` attaches the warm-start disk tier to the
+    /// context's cache.
     pub fn runner<'a>(&self, ctx: &'a Context, model: &str) -> Result<Runner<'a>> {
+        ctx.shared_cache().set_warm_dir(self.warm_dir.clone());
         ctx.runner_with_sharing(model, self.share_eval, self.share_warmup)
     }
 }

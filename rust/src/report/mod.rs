@@ -3,6 +3,7 @@
 
 pub mod benchkit;
 
+use crate::baselines::CompareResult;
 use crate::coordinator::pareto::ParetoFront;
 use crate::coordinator::phases::RunResult;
 use crate::runtime::AllocStats;
@@ -15,6 +16,24 @@ pub fn alloc_line(a: &AllocStats) -> String {
     format!(
         "alloc: donated {} pooled {} allocated {} pinned-fallback {} aliased-fallback {}",
         a.donated, a.pooled, a.allocated, a.fallback_pinned, a.fallback_aliased
+    )
+}
+
+/// One-line shared-cache summary for a `compare`. The CI e2e leg
+/// greps exact tokens out of this line — "warmups run N (reused M)",
+/// "warmups_loaded N", "warmups_persisted N", "warmup_steps_run N",
+/// "split uploads N " — so keep the format stable.
+pub fn cache_line(cr: &CompareResult) -> String {
+    format!(
+        "shared cache: warmups run {} (reused {}), warmups_loaded {}, \
+         warmups_persisted {}, warmup_steps_run {}, split uploads {} (reused {})",
+        cr.warmups_run,
+        cr.warmups_reused,
+        cr.warmups_loaded,
+        cr.warmups_persisted,
+        cr.warmup_steps_run,
+        cr.split_uploads,
+        cr.split_reuses
     )
 }
 

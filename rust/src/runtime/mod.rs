@@ -17,5 +17,5 @@ pub mod state;
 pub use client::{Engine, Executable};
 pub use device::{AllocStats, DeviceState, StateSnapshot, TransferStats};
 pub use manifest::{ArtifactDesc, DType, LeafDesc, LeafId, Manifest, ModelManifest};
-pub use shared::{CacheStats, EvalKey, EvalSplit, SharedRunCache};
+pub use shared::{CacheStats, EvalKey, EvalSplit, SharedRunCache, WarmSource};
 pub use state::{Metrics, StepArg, StepFn, TrainState};

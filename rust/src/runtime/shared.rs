@@ -1,4 +1,5 @@
-//! Process-wide sharing of run-invariant device uploads.
+//! Process-wide sharing of run-invariant device uploads, with an
+//! optional cross-process disk tier for warm starts.
 //!
 //! Two costs survived the PR-2 rework because they were scoped *per
 //! run*: every `Runner::run_from` fork re-uploaded the padded eval
@@ -18,20 +19,44 @@
 //!   unshared upload would produce (the dataset generator is
 //!   deterministic), so shared and unshared evals are bitwise
 //!   identical.
-//! * **WarmStart pool** — [`SharedRunCache::get_or_warm`] keyed by the
-//!   caller-rendered warmup fingerprint string. The value is opaque to
+//! * **WarmStart pool** — [`SharedRunCache::get_or_warm`] /
+//!   [`SharedRunCache::get_or_warm_persistent`] keyed by the
+//!   caller-rendered warmup fingerprint hash. The value is opaque to
 //!   this layer (`Arc<dyn Any>`) so the runtime does not depend on the
 //!   coordinator's `WarmStart`; the typed accessor fails loudly if a
 //!   key ever maps to a foreign type (false sharing), and the
 //!   coordinator re-validates the structured fingerprint on every
 //!   fork (`Runner::run_from`).
 //!
-//! Locking: each pool is a `Mutex<HashMap>` and the lock is held
-//! *across* the miss closure. That serializes concurrent misses on the
-//! same pool, which is exactly the point — two sweeps racing on one
-//! fingerprint must produce one warmup, not two. Hits only touch the
-//! map briefly. Sweep workers never take these locks (forks receive
-//! `Arc`s resolved before the fan-out; `EvalBufs` memoizes per run).
+//! # Disk tier (cross-process warm starts)
+//!
+//! With a warm directory attached ([`SharedRunCache::set_warm_dir`],
+//! `--warm-cache-dir` / `MIXPREC_WARM_DIR` upstream),
+//! [`SharedRunCache::get_or_warm_persistent`] consults
+//! `warm-<fnv(key)>.ckpt` in that directory **before** running the
+//! miss closure: a loadable, fingerprint-valid file yields a
+//! [`WarmSource::Loaded`] entry with zero warmup steps run in this
+//! process, and a fresh build is written back atomically (temp file +
+//! rename) so concurrent workers sharing the directory never read a
+//! torn entry. Loading is deliberately infallible-by-fallback: a
+//! missing, corrupt, torn, or fingerprint-mismatched file degrades to
+//! a fresh warmup (the load hook returns `None`), never an error and
+//! never a wrong resume. Serialization itself lives with the caller —
+//! the load/persist hooks — because the payload type is opaque here.
+//!
+//! # Locking
+//!
+//! Each pool is a map of per-entry **once-slots**. The whole-map
+//! mutex is held only long enough to find-or-insert a slot; the miss
+//! closure runs with *no* map-wide lock held. Same-key misses still
+//! coalesce to one build — late arrivals wait on the slot's condvar
+//! and receive the published value — but *distinct* keys build
+//! concurrently: two workers warming different fingerprints (or
+//! uploading different splits) no longer serialize behind one
+//! multi-second warmup. (The pre-PR-5 implementation held the pool
+//! mutex across the closure, serializing everything.) A builder that
+//! fails or panics resets its slot to idle and wakes the waiters, one
+//! of which retries — a failed build never poisons the key.
 //!
 //! Sharing is bypassed (the caller falls back to per-run uploads) when
 //! no cache is attached to the `Runner` — the default for directly
@@ -41,10 +66,13 @@
 
 use std::any::Any;
 use std::collections::HashMap;
+use std::hash::Hash;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, PoisonError};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 
 use crate::error::{Error, Result};
+use crate::util::fnv1a;
 
 /// One eval split resident on device: the padded x/y buffers (padded
 /// exactly like the per-batch iterator pads — tail chunk repeats
@@ -86,8 +114,13 @@ pub struct CacheStats {
     pub split_reuses: u64,
     /// Warm entries built fresh (warmup phases actually run).
     pub warmups_run: u64,
-    /// Warm entries served from the pool (warmup phases skipped).
+    /// Warm entries served from the in-memory pool (warmup skipped).
     pub warmups_reused: u64,
+    /// Warm entries restored from the disk tier (zero warmup steps
+    /// run in this process).
+    pub warmups_loaded: u64,
+    /// Fresh warm entries written back to the disk tier.
+    pub warmups_persisted: u64,
 }
 
 impl CacheStats {
@@ -98,28 +131,150 @@ impl CacheStats {
             split_reuses: self.split_reuses - before.split_reuses,
             warmups_run: self.warmups_run - before.warmups_run,
             warmups_reused: self.warmups_reused - before.warmups_reused,
+            warmups_loaded: self.warmups_loaded - before.warmups_loaded,
+            warmups_persisted: self.warmups_persisted - before.warmups_persisted,
         }
     }
 }
 
+/// Where a warm entry came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WarmSource {
+    /// The miss closure ran in this call (warmup phase executed).
+    Built,
+    /// Served from the in-memory pool (another sweep of this process
+    /// built or loaded it).
+    Reused,
+    /// Restored from the disk tier — zero warmup steps run here.
+    Loaded,
+}
+
+/// A panicked holder must not brick a lock for everyone else: take
+/// the data regardless of poison (every protected structure is left
+/// consistent — slots transition atomically under their lock).
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Per-entry once-state: one build at a time per key, concurrent
+/// builds across keys.
+struct Slot<V> {
+    state: Mutex<SlotState<V>>,
+    cv: Condvar,
+}
+
+enum SlotState<V> {
+    /// No value yet and no build in flight.
+    Idle,
+    /// A builder is inside the miss closure; waiters sleep on `cv`.
+    Building,
+    Ready(V),
+}
+
+impl<V> Slot<V> {
+    fn new() -> Self {
+        Slot {
+            state: Mutex::new(SlotState::Idle),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+/// What a successful build produced (threaded out so the caller can
+/// count disk loads separately from fresh builds).
+enum BuildKind {
+    Built,
+    Loaded,
+}
+
+/// Reset-on-unwind guard: if the miss closure fails or panics, the
+/// slot returns to `Idle` and waiters wake so one of them can retry —
+/// a stuck `Building` state would strand them forever.
+struct BuildReset<'a, V> {
+    slot: &'a Slot<V>,
+}
+
+impl<V> Drop for BuildReset<'_, V> {
+    fn drop(&mut self) {
+        *lock(&self.slot.state) = SlotState::Idle;
+        self.slot.cv.notify_all();
+    }
+}
+
+/// Pool shape shared by both caches: per-key once-slots behind one
+/// briefly-held map lock.
+type SlotMap<K, V> = Mutex<HashMap<K, Arc<Slot<V>>>>;
+
+/// The type-erased warm-pool value.
+type WarmValue = Arc<dyn Any + Send + Sync>;
+
+/// The shared get-or-build protocol: find-or-insert the key's slot
+/// (brief map lock), then resolve against the slot alone. Returns the
+/// value and `Some(kind)` iff this call ran the build.
+fn slot_get_or_build<K, V, F>(
+    map: &SlotMap<K, V>,
+    key: K,
+    build: F,
+) -> Result<(V, Option<BuildKind>)>
+where
+    K: Eq + Hash,
+    V: Clone,
+    F: FnOnce() -> Result<(V, BuildKind)>,
+{
+    let slot = {
+        let mut m = lock(map);
+        Arc::clone(m.entry(key).or_insert_with(|| Arc::new(Slot::new())))
+    };
+    let mut st = lock(&slot.state);
+    loop {
+        match &*st {
+            SlotState::Ready(v) => return Ok((v.clone(), None)),
+            SlotState::Building => {
+                st = slot.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+            }
+            SlotState::Idle => break,
+        }
+    }
+    *st = SlotState::Building;
+    drop(st);
+    // the miss closure runs with NO lock held: distinct keys build
+    // concurrently; same-key callers wait on this slot's condvar
+    let guard = BuildReset { slot: &slot };
+    match build() {
+        Ok((v, kind)) => {
+            std::mem::forget(guard);
+            *lock(&slot.state) = SlotState::Ready(v.clone());
+            slot.cv.notify_all();
+            Ok((v, Some(kind)))
+        }
+        // `guard` drops here: Idle + notify, so a waiter can retry
+        Err(e) => Err(e),
+    }
+}
+
+/// Disk-tier file name for a warm-pool key (hash, not the raw key —
+/// stable, collision-checked downstream by the stored fingerprint,
+/// and free of path-hostile characters).
+fn warm_file_name(key: &str) -> String {
+    format!("warm-{:016x}.ckpt", fnv1a(key.as_bytes()))
+}
+
 /// Shared device-buffer cache across methods and runs. One per
 /// `coordinator::Context` (and therefore one per CLI/bench process);
-/// see the module docs for what it pools and when it is bypassed.
+/// see the module docs for what it pools, the per-entry locking, and
+/// the optional cross-process disk tier.
 #[derive(Default)]
 pub struct SharedRunCache {
-    eval: Mutex<HashMap<EvalKey, Arc<EvalSplit>>>,
-    warm: Mutex<HashMap<String, Arc<dyn Any + Send + Sync>>>,
+    eval: SlotMap<EvalKey, Arc<EvalSplit>>,
+    warm: SlotMap<String, WarmValue>,
+    /// Disk tier root for warm entries (`None` = in-memory only).
+    warm_dir: Mutex<Option<PathBuf>>,
     split_uploads: AtomicU64,
     split_reuses: AtomicU64,
     warmups_run: AtomicU64,
     warmups_reused: AtomicU64,
-}
-
-/// A panicked holder must not brick the cache for everyone else: take
-/// the data regardless of poison (the maps are always left in a
-/// consistent state — entries are inserted fully built).
-fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(PoisonError::into_inner)
+    warmups_loaded: AtomicU64,
+    warmups_persisted: AtomicU64,
 }
 
 impl SharedRunCache {
@@ -127,56 +282,160 @@ impl SharedRunCache {
         SharedRunCache::default()
     }
 
+    /// Attach (or detach) the warm-start disk tier.
+    /// [`SharedRunCache::get_or_warm_persistent`] consults this
+    /// directory before running a warmup and writes fresh warmups
+    /// back; `None` keeps the pool in-memory only.
+    pub fn set_warm_dir(&self, dir: Option<PathBuf>) {
+        *lock(&self.warm_dir) = dir;
+    }
+
+    /// The attached warm-start disk-tier root, if any.
+    pub fn warm_dir(&self) -> Option<PathBuf> {
+        lock(&self.warm_dir).clone()
+    }
+
+    /// Disk-tier path a warm-pool key maps to under the attached
+    /// directory (`None` without one). Exposed for tests and
+    /// diagnostics — the persistence flow derives it internally.
+    pub fn warm_file_path(&self, key: &str) -> Option<PathBuf> {
+        self.warm_dir().map(|d| d.join(warm_file_name(key)))
+    }
+
     /// Fetch the device-resident split for `key`, running `upload` on
     /// first use. Returns the split and whether this call uploaded it
     /// (so the caller can charge the transfer to exactly one run).
     /// Every hit is fingerprint-checked against the key before being
-    /// handed out.
+    /// handed out. Distinct keys upload concurrently; same-key racers
+    /// coalesce to one upload.
     pub fn get_or_upload_split(
         &self,
         key: EvalKey,
         upload: impl FnOnce() -> Result<EvalSplit>,
     ) -> Result<(Arc<EvalSplit>, bool)> {
-        let mut map = lock(&self.eval);
-        if let Some(hit) = map.get(&key) {
-            verify_split(&key, hit)?;
+        let vkey = key.clone();
+        let (entry, built) = slot_get_or_build(&self.eval, key, || {
+            let entry = Arc::new(upload()?);
+            // a fresh upload must satisfy its own key too — catches a
+            // caller keying one split's upload under another's identity
+            verify_split(&vkey, &entry)?;
+            Ok((entry, BuildKind::Built))
+        })?;
+        if built.is_some() {
+            self.split_uploads.fetch_add(1, Ordering::Relaxed);
+            Ok((entry, true))
+        } else {
+            verify_split(&vkey, &entry)?;
             self.split_reuses.fetch_add(1, Ordering::Relaxed);
-            return Ok((Arc::clone(hit), false));
+            Ok((entry, false))
         }
-        let entry = Arc::new(upload()?);
-        // a fresh upload must satisfy its own key too — catches a
-        // caller keying one split's upload under another's identity
-        verify_split(&key, &entry)?;
-        map.insert(key, Arc::clone(&entry));
-        self.split_uploads.fetch_add(1, Ordering::Relaxed);
-        Ok((entry, true))
     }
 
-    /// Fetch the warm entry for `key`, running `make` on first use.
-    /// Returns the entry and whether this call built it. The pool is
-    /// type-erased; a key resolving to a different concrete type is an
-    /// error (false sharing), never a silent reinterpretation.
+    /// Fetch the warm entry for `key`, running `make` on first use —
+    /// in-memory only (no disk tier, regardless of
+    /// [`SharedRunCache::set_warm_dir`]: generic entries carry no
+    /// serializer). Returns the entry and whether this call built it.
+    /// The pool is type-erased; a key resolving to a different
+    /// concrete type is an error (false sharing), never a silent
+    /// reinterpretation.
     pub fn get_or_warm<T, F>(&self, key: &str, make: F) -> Result<(Arc<T>, bool)>
     where
         T: Send + Sync + 'static,
         F: FnOnce() -> Result<T>,
     {
-        let mut map = lock(&self.warm);
-        if let Some(hit) = map.get(key) {
-            let typed = Arc::clone(hit).downcast::<T>().map_err(|_| {
-                Error::msg(format!(
-                    "shared cache: warm entry '{key}' holds a foreign type \
-                     (false sharing across fingerprints)"
-                ))
-            })?;
-            self.warmups_reused.fetch_add(1, Ordering::Relaxed);
-            return Ok((typed, false));
-        }
-        let v = Arc::new(make()?);
-        let erased = Arc::clone(&v) as Arc<dyn Any + Send + Sync>;
-        map.insert(key.to_string(), erased);
-        self.warmups_run.fetch_add(1, Ordering::Relaxed);
-        Ok((v, true))
+        let (v, src) = self.warm_entry(
+            key,
+            None::<(PathBuf, fn(&Path) -> Option<T>, fn(&Path, &T) -> Result<()>)>,
+            make,
+        )?;
+        Ok((v, src == WarmSource::Built))
+    }
+
+    /// Like [`SharedRunCache::get_or_warm`], plus the disk tier: with
+    /// a warm directory attached, `load` is offered the entry's file
+    /// path *before* `make` runs (return `None` to decline — corrupt
+    /// or mismatched files must fall back to a fresh build, never
+    /// error), and a fresh build is handed to `persist`, which must
+    /// write atomically (the coordinator routes this to the v2
+    /// checkpoint's temp-file + rename writer). A persist failure is
+    /// reported on stderr but never fails the compute path.
+    pub fn get_or_warm_persistent<T, L, F, P>(
+        &self,
+        key: &str,
+        load: L,
+        make: F,
+        persist: P,
+    ) -> Result<(Arc<T>, WarmSource)>
+    where
+        T: Send + Sync + 'static,
+        L: FnOnce(&Path) -> Option<T>,
+        F: FnOnce() -> Result<T>,
+        P: FnOnce(&Path, &T) -> Result<()>,
+    {
+        let disk = self
+            .warm_dir()
+            .map(|d| (d.join(warm_file_name(key)), load, persist));
+        self.warm_entry(key, disk, make)
+    }
+
+    /// Shared implementation of the two warm accessors.
+    fn warm_entry<T, L, F, P>(
+        &self,
+        key: &str,
+        disk: Option<(PathBuf, L, P)>,
+        make: F,
+    ) -> Result<(Arc<T>, WarmSource)>
+    where
+        T: Send + Sync + 'static,
+        L: FnOnce(&Path) -> Option<T>,
+        F: FnOnce() -> Result<T>,
+        P: FnOnce(&Path, &T) -> Result<()>,
+    {
+        let (erased, built) = slot_get_or_build(&self.warm, key.to_string(), || {
+            let mut persist_to = None;
+            if let Some((path, load, persist)) = disk {
+                if let Some(v) = load(&path) {
+                    let v: WarmValue = Arc::new(v);
+                    return Ok((v, BuildKind::Loaded));
+                }
+                persist_to = Some((path, persist));
+            }
+            let typed = Arc::new(make()?);
+            if let Some((path, persist)) = persist_to {
+                match persist(&path, typed.as_ref()) {
+                    Ok(()) => {
+                        self.warmups_persisted.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(e) => eprintln!(
+                        "warm cache: failed to persist '{}': {e} (continuing \
+                         without the disk entry)",
+                        path.display()
+                    ),
+                }
+            }
+            Ok((typed as WarmValue, BuildKind::Built))
+        })?;
+        let typed = erased.downcast::<T>().map_err(|_| {
+            Error::msg(format!(
+                "shared cache: warm entry '{key}' holds a foreign type \
+                 (false sharing across fingerprints)"
+            ))
+        })?;
+        let src = match built {
+            Some(BuildKind::Built) => {
+                self.warmups_run.fetch_add(1, Ordering::Relaxed);
+                WarmSource::Built
+            }
+            Some(BuildKind::Loaded) => {
+                self.warmups_loaded.fetch_add(1, Ordering::Relaxed);
+                WarmSource::Loaded
+            }
+            None => {
+                self.warmups_reused.fetch_add(1, Ordering::Relaxed);
+                WarmSource::Reused
+            }
+        };
+        Ok((typed, src))
     }
 
     /// Snapshot of the cumulative counters.
@@ -186,6 +445,8 @@ impl SharedRunCache {
             split_reuses: self.split_reuses.load(Ordering::Relaxed),
             warmups_run: self.warmups_run.load(Ordering::Relaxed),
             warmups_reused: self.warmups_reused.load(Ordering::Relaxed),
+            warmups_loaded: self.warmups_loaded.load(Ordering::Relaxed),
+            warmups_persisted: self.warmups_persisted.load(Ordering::Relaxed),
         }
     }
 }
@@ -222,6 +483,7 @@ mod tests {
     use super::*;
     use crate::runtime::client::Engine;
     use crate::util::tensor::Tensor;
+    use std::time::Duration;
 
     fn split(eng: &Engine, n: usize, batch: usize) -> EvalSplit {
         let chunks = n.div_ceil(batch);
@@ -247,6 +509,25 @@ mod tests {
             n,
             data_fp: 7,
         }
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "mixprec_warmdisk_{tag}_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn persist_u64(p: &Path, v: &u64) -> Result<()> {
+        std::fs::write(p, v.to_le_bytes())?;
+        Ok(())
+    }
+
+    fn load_u64(p: &Path) -> Option<u64> {
+        let b: [u8; 8] = std::fs::read(p).ok()?.try_into().ok()?;
+        Some(u64::from_le_bytes(b))
     }
 
     #[test]
@@ -319,5 +600,170 @@ mod tests {
         assert!(res.is_err());
         let (_, fresh) = cache.get_or_warm("fp", || Ok(5usize)).unwrap();
         assert!(fresh, "failed build must not poison the key");
+    }
+
+    /// A panicking builder must not strand same-key waiters: the slot
+    /// resets and the next caller builds.
+    #[test]
+    fn panicked_build_resets_the_slot() {
+        let cache = SharedRunCache::new();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            cache
+                .get_or_warm::<usize, _>("fp", || panic!("builder died"))
+                .ok();
+        }));
+        assert!(r.is_err());
+        let (v, fresh) = cache.get_or_warm("fp", || Ok(9usize)).unwrap();
+        assert!(fresh && *v == 9);
+    }
+
+    /// The per-entry locking contract: two threads building *distinct*
+    /// keys must overlap inside their miss closures. Each builder
+    /// rendezvouses with the other before returning; if the pool
+    /// serialized misses behind one lock, the second builder could
+    /// never enter and the first would time out.
+    #[test]
+    fn distinct_keys_build_concurrently() {
+        let cache = Arc::new(SharedRunCache::new());
+        let gate = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let mut handles = Vec::new();
+        for key in ["fp-a", "fp-b"] {
+            let cache = Arc::clone(&cache);
+            let gate = Arc::clone(&gate);
+            handles.push(std::thread::spawn(move || {
+                cache
+                    .get_or_warm(key, || {
+                        let (m, cv) = &*gate;
+                        let mut entered = m.lock().unwrap();
+                        *entered += 1;
+                        cv.notify_all();
+                        let (_g, timeout) = cv
+                            .wait_timeout_while(entered, Duration::from_secs(10), |n| *n < 2)
+                            .unwrap();
+                        if timeout.timed_out() {
+                            return Err(Error::msg(
+                                "other builder never entered: misses serialized",
+                            ));
+                        }
+                        Ok(1usize)
+                    })
+                    .unwrap()
+            }));
+        }
+        for h in handles {
+            let (_, fresh) = h.join().unwrap();
+            assert!(fresh, "both distinct-key builders must build");
+        }
+        assert_eq!(cache.stats().warmups_run, 2);
+    }
+
+    /// Same-key racers coalesce: one build, everyone else reuses.
+    #[test]
+    fn same_key_misses_coalesce_to_one_build() {
+        let cache = Arc::new(SharedRunCache::new());
+        let builds = Arc::new(AtomicU64::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let cache = Arc::clone(&cache);
+            let builds = Arc::clone(&builds);
+            handles.push(std::thread::spawn(move || {
+                let (v, _) = cache
+                    .get_or_warm("fp", || {
+                        builds.fetch_add(1, Ordering::SeqCst);
+                        std::thread::sleep(Duration::from_millis(50));
+                        Ok(7usize)
+                    })
+                    .unwrap();
+                *v
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 7);
+        }
+        assert_eq!(builds.load(Ordering::SeqCst), 1, "misses must coalesce");
+        let st = cache.stats();
+        assert_eq!((st.warmups_run, st.warmups_reused), (1, 3));
+    }
+
+    /// Disk tier: a fresh build persists; a second cache ("process")
+    /// over the same directory loads instead of building; in-memory
+    /// hits never touch the disk again.
+    #[test]
+    fn warm_disk_tier_persists_and_loads() {
+        let dir = tmpdir("roundtrip");
+        let cache = SharedRunCache::new();
+        cache.set_warm_dir(Some(dir.clone()));
+        let (v, src) = cache
+            .get_or_warm_persistent("k", load_u64, || Ok(41u64), persist_u64)
+            .unwrap();
+        assert_eq!((*v, src), (41, WarmSource::Built));
+        assert_eq!(cache.stats().warmups_persisted, 1);
+        assert!(cache.warm_file_path("k").unwrap().exists());
+
+        // second "process": fresh cache, same directory
+        let cache2 = SharedRunCache::new();
+        cache2.set_warm_dir(Some(dir.clone()));
+        let (v2, src2) = cache2
+            .get_or_warm_persistent(
+                "k",
+                load_u64,
+                || Err(Error::msg("must load, not build")),
+                persist_u64,
+            )
+            .unwrap();
+        assert_eq!((*v2, src2), (41, WarmSource::Loaded));
+        let st = cache2.stats();
+        assert_eq!((st.warmups_loaded, st.warmups_run, st.warmups_persisted), (1, 0, 0));
+
+        // third call on the same cache: in-memory reuse, no disk I/O
+        let (_, src3) = cache2
+            .get_or_warm_persistent(
+                "k",
+                |_| panic!("must not reload"),
+                || Err(Error::msg("must not rebuild")),
+                persist_u64,
+            )
+            .unwrap();
+        assert_eq!(src3, WarmSource::Reused);
+        assert_eq!(cache2.stats().warmups_loaded, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A corrupt disk entry degrades to a fresh build (never an
+    /// error), which then rewrites the entry.
+    #[test]
+    fn warm_disk_tier_corrupt_entry_falls_back() {
+        let dir = tmpdir("corrupt");
+        let cache = SharedRunCache::new();
+        cache.set_warm_dir(Some(dir.clone()));
+        let path = cache.warm_file_path("k").unwrap();
+        std::fs::write(&path, b"not eight bytes!!").unwrap();
+        let (v, src) = cache
+            .get_or_warm_persistent("k", load_u64, || Ok(5u64), persist_u64)
+            .unwrap();
+        assert_eq!((*v, src), (5, WarmSource::Built));
+        let st = cache.stats();
+        assert_eq!((st.warmups_run, st.warmups_loaded, st.warmups_persisted), (1, 0, 1));
+        // the rewrite is now loadable
+        assert_eq!(load_u64(&path), Some(5));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Without a warm directory the persistent accessor is the plain
+    /// in-memory pool (hooks never run).
+    #[test]
+    fn warm_disk_tier_inactive_without_dir() {
+        let cache = SharedRunCache::new();
+        let (v, src) = cache
+            .get_or_warm_persistent(
+                "k",
+                |_| panic!("no dir, no load"),
+                || Ok(3u64),
+                |_, _| panic!("no dir, no persist"),
+            )
+            .unwrap();
+        assert_eq!((*v, src), (3, WarmSource::Built));
+        assert_eq!(cache.stats().warmups_persisted, 0);
+        assert!(cache.warm_file_path("k").is_none());
     }
 }

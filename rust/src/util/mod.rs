@@ -9,3 +9,15 @@ pub mod prop;
 pub mod rng;
 pub mod table;
 pub mod tensor;
+
+/// FNV-1a over a byte run — the repo-wide fingerprint hash (the same
+/// scheme `DataConfig::fingerprint` applies field-wise). Used to key
+/// the warm-start pool and name its on-disk entries.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}

@@ -1,0 +1,240 @@
+//! Cross-process warm-start persistence (`--warm-cache-dir`), on the
+//! stub fixture. "Two processes" are emulated by two `Context`s — each
+//! owns its own engine, `SharedRunCache` and device buffers, so
+//! nothing but the shared directory can carry state between them.
+//!
+//! Contract under test (ISSUE 5 acceptance):
+//! (a) process A persists its warmup; process B pointed at the same
+//!     `--warm-cache-dir` runs **zero** warmup steps and produces a
+//!     Pareto front (and per-run histories) bitwise identical to A's
+//!     in-process warmup;
+//! (b) a corrupted warm file falls back to a fresh warmup — never an
+//!     error, never a wrong resume — and is rewritten;
+//! (c) a fingerprint-mismatched file (foreign config, or a legacy v1
+//!     checkpoint) is rejected structurally and falls back.
+
+use std::path::PathBuf;
+
+use mixprec::coordinator::{sweep_lambdas, Context, PipelineConfig, SweepMode, SweepOptions};
+use mixprec::runtime::fixture;
+
+struct Fx {
+    dir: PathBuf,
+    warm: PathBuf,
+}
+
+impl Fx {
+    /// data_frac 0.07 -> ragged val/test splits, so the persisted
+    /// state + iterator cover the padded-tail geometry too.
+    fn new(tag: &str) -> Fx {
+        let dir = std::env::temp_dir().join(format!(
+            "mixprec_warmpersist_{tag}_{}",
+            std::process::id()
+        ));
+        fixture::write_stub_fixture(&dir).expect("fixture");
+        let warm = dir.join("warmcache");
+        Fx { dir, warm }
+    }
+
+    /// A fresh "process": its own engine, cache and buffers, sharing
+    /// only the artifacts directory and the warm-cache directory.
+    fn process(&self) -> Context {
+        let ctx = Context::load(&self.dir, 0.07).expect("context");
+        ctx.shared_cache().set_warm_dir(Some(self.warm.clone()));
+        ctx
+    }
+}
+
+impl Drop for Fx {
+    fn drop(&mut self) {
+        std::fs::remove_dir_all(&self.dir).ok();
+    }
+}
+
+fn quick_cfg() -> PipelineConfig {
+    let mut cfg = PipelineConfig::quick(fixture::STUB_MODEL);
+    cfg.warmup_steps = 12;
+    cfg.search_steps = 24;
+    cfg.finetune_steps = 6;
+    cfg.eval_every = 8;
+    cfg.steps_per_epoch = 8;
+    cfg
+}
+
+fn opts() -> SweepOptions {
+    SweepOptions {
+        workers: 1,
+        mode: SweepMode::ForkedWarmup,
+        vary_seeds: false,
+        share_warmup: true,
+    }
+}
+
+const LAMBDAS: [f64; 2] = [0.05, 5.0];
+
+fn front_bits(sw: &mixprec::coordinator::SweepResult) -> Vec<(u64, u64)> {
+    sw.front()
+        .points()
+        .iter()
+        .map(|p| (p.cost.to_bits(), p.acc.to_bits()))
+        .collect()
+}
+
+/// (a) Persist in process A, resume in process B: zero warmup steps,
+/// bitwise-identical fronts, histories and accuracies.
+#[test]
+fn second_process_runs_zero_warmup_steps_with_identical_front() {
+    let fx = Fx::new("resume");
+    let cfg = quick_cfg();
+
+    // process A: fresh warmup, persisted to the shared directory
+    let ctx_a = fx.process();
+    let runner_a = ctx_a.runner_shared(fixture::STUB_MODEL).unwrap();
+    let sw_a = sweep_lambdas(&runner_a, &cfg, &LAMBDAS, "size", &opts()).unwrap();
+    assert_eq!(sw_a.warmup_steps_run, cfg.warmup_steps);
+    assert!(!sw_a.warmup_loaded);
+    assert_eq!(sw_a.warmups_persisted, 1, "warmup must be persisted");
+    let warm_file = ctx_a
+        .shared_cache()
+        .warm_file_path(&runner_a.warmup_cache_key(&cfg))
+        .unwrap();
+    assert!(warm_file.exists(), "no warm file at {warm_file:?}");
+
+    // process B: same directory, fresh everything else
+    let ctx_b = fx.process();
+    let runner_b = ctx_b.runner_shared(fixture::STUB_MODEL).unwrap();
+    let sw_b = sweep_lambdas(&runner_b, &cfg, &LAMBDAS, "size", &opts()).unwrap();
+    assert_eq!(sw_b.warmup_steps_run, 0, "resume must run ZERO warmup steps");
+    assert_eq!(sw_b.warmup_phases_run, 0);
+    assert!(sw_b.warmup_loaded, "warmup must come from the disk tier");
+    assert_eq!(sw_b.warmups_loaded, 1);
+    assert_eq!(sw_b.warmups_persisted, 0, "nothing new to persist");
+    assert_eq!(
+        sw_b.warmup_steps_saved,
+        cfg.warmup_steps * LAMBDAS.len(),
+        "everything an independent sweep would have spent is saved"
+    );
+    let st_b = ctx_b.shared_cache().stats();
+    assert_eq!((st_b.warmups_run, st_b.warmups_loaded), (0, 1));
+
+    // bitwise equivalence: fronts, accuracies, full histories
+    // (warmup records included — they ride in the warm file)
+    assert_eq!(front_bits(&sw_a), front_bits(&sw_b), "front diverged");
+    assert_eq!(sw_a.runs.len(), sw_b.runs.len());
+    for (a, b) in sw_a.runs.iter().zip(&sw_b.runs) {
+        assert_eq!(a.lambda, b.lambda);
+        assert_eq!(a.assignment, b.assignment, "lam={}", a.lambda);
+        assert_eq!(a.val_acc.to_bits(), b.val_acc.to_bits());
+        assert_eq!(a.test_acc.to_bits(), b.test_acc.to_bits());
+        assert_eq!(a.history.len(), b.history.len(), "history length diverged");
+        for (x, y) in a.history.iter().zip(&b.history) {
+            assert_eq!(x.phase, y.phase);
+            assert_eq!(x.step, y.step);
+            assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "{}[{}]", x.phase, x.step);
+            assert_eq!(x.acc.to_bits(), y.acc.to_bits(), "{}[{}]", x.phase, x.step);
+            assert_eq!(x.cost.to_bits(), y.cost.to_bits(), "{}[{}]", x.phase, x.step);
+        }
+    }
+
+    // a third "process" reuses the same entry (load path is stable)
+    let ctx_c = fx.process();
+    let runner_c = ctx_c.runner_shared(fixture::STUB_MODEL).unwrap();
+    let sw_c = sweep_lambdas(&runner_c, &cfg, &LAMBDAS, "size", &opts()).unwrap();
+    assert_eq!(sw_c.warmup_steps_run, 0);
+    assert_eq!(front_bits(&sw_a), front_bits(&sw_c));
+}
+
+/// (b) A corrupted (or truncated/torn) warm file degrades to a fresh
+/// warmup without error, produces the same results, and is rewritten.
+#[test]
+fn corrupted_warm_file_falls_back_to_fresh_warmup() {
+    let fx = Fx::new("corrupt");
+    let cfg = quick_cfg();
+
+    let ctx_a = fx.process();
+    let runner_a = ctx_a.runner_shared(fixture::STUB_MODEL).unwrap();
+    let sw_a = sweep_lambdas(&runner_a, &cfg, &LAMBDAS, "size", &opts()).unwrap();
+    let warm_file = ctx_a
+        .shared_cache()
+        .warm_file_path(&runner_a.warmup_cache_key(&cfg))
+        .unwrap();
+
+    for garbage in [&b"complete garbage"[..], &b""[..]] {
+        std::fs::write(&warm_file, garbage).unwrap();
+        let ctx_b = fx.process();
+        let runner_b = ctx_b.runner_shared(fixture::STUB_MODEL).unwrap();
+        let sw_b = sweep_lambdas(&runner_b, &cfg, &LAMBDAS, "size", &opts()).unwrap();
+        assert_eq!(
+            sw_b.warmup_steps_run, cfg.warmup_steps,
+            "corrupt entry must mean a fresh warmup"
+        );
+        assert!(!sw_b.warmup_loaded);
+        assert_eq!(sw_b.warmups_loaded, 0);
+        assert_eq!(sw_b.warmups_persisted, 1, "fresh warmup rewrites the entry");
+        assert_eq!(front_bits(&sw_a), front_bits(&sw_b), "fallback diverged");
+    }
+
+    // a truncated-but-valid-prefix file (torn write simulation — the
+    // atomic rename makes this unobservable in practice, but the
+    // decoder must still reject it)
+    let full = std::fs::read(&warm_file).unwrap();
+    std::fs::write(&warm_file, &full[..full.len() / 2]).unwrap();
+    let ctx_b = fx.process();
+    let runner_b = ctx_b.runner_shared(fixture::STUB_MODEL).unwrap();
+    let sw_b = sweep_lambdas(&runner_b, &cfg, &LAMBDAS, "size", &opts()).unwrap();
+    assert_eq!(sw_b.warmup_steps_run, cfg.warmup_steps);
+    assert_eq!(front_bits(&sw_a), front_bits(&sw_b));
+}
+
+/// (c) A structurally mismatched entry — a foreign config's warm file
+/// placed at this key's path, or a legacy v1 checkpoint — is rejected
+/// by the stored fingerprint and falls back to a fresh warmup.
+#[test]
+fn mismatched_fingerprint_falls_back_to_fresh_warmup() {
+    let fx = Fx::new("mismatch");
+    let cfg = quick_cfg();
+
+    // persist under cfg...
+    let ctx_a = fx.process();
+    let runner_a = ctx_a.runner_shared(fixture::STUB_MODEL).unwrap();
+    sweep_lambdas(&runner_a, &cfg, &LAMBDAS, "size", &opts()).unwrap();
+    let file_a = ctx_a
+        .shared_cache()
+        .warm_file_path(&runner_a.warmup_cache_key(&cfg))
+        .unwrap();
+
+    // ...then plant A's file at the path a *different* config resolves
+    // (simulating a filename/hash collision across fingerprints)
+    let mut other = cfg.clone();
+    other.warmup_steps += 4;
+    let file_other = ctx_a
+        .shared_cache()
+        .warm_file_path(&runner_a.warmup_cache_key(&other))
+        .unwrap();
+    assert_ne!(file_a, file_other, "distinct fingerprints, distinct files");
+    std::fs::copy(&file_a, &file_other).unwrap();
+
+    let ctx_b = fx.process();
+    let runner_b = ctx_b.runner_shared(fixture::STUB_MODEL).unwrap();
+    let sw = sweep_lambdas(&runner_b, &other, &LAMBDAS, "size", &opts()).unwrap();
+    assert_eq!(
+        sw.warmup_steps_run, other.warmup_steps,
+        "foreign fingerprint must not seed a resume"
+    );
+    assert!(!sw.warmup_loaded);
+
+    // a legacy v1 checkpoint at the expected path: loads as a state
+    // with no extras -> decode declines -> fresh warmup, no error
+    let mut st = mixprec::runtime::TrainState::default();
+    st.sections.insert(
+        "params".into(),
+        vec![mixprec::util::tensor::Tensor::scalar_f32(1.0)],
+    );
+    mixprec::coordinator::checkpoint::save_v1(&st, &file_a).unwrap();
+    let ctx_c = fx.process();
+    let runner_c = ctx_c.runner_shared(fixture::STUB_MODEL).unwrap();
+    let sw = sweep_lambdas(&runner_c, &cfg, &LAMBDAS, "size", &opts()).unwrap();
+    assert_eq!(sw.warmup_steps_run, cfg.warmup_steps);
+    assert!(!sw.warmup_loaded);
+    assert_eq!(sw.warmups_persisted, 1, "entry rewritten in v2 form");
+}

@@ -233,6 +233,37 @@ const RULES: &[Rule] = &[
         tol: 0.0,
         env: None,
     },
+    // cross-process warm starts: the persisting run writes exactly one
+    // disk entry, the resuming run loads it, runs ZERO warmup steps,
+    // and reproduces the front bitwise
+    Rule {
+        bench: "sweep_fork",
+        path: &["warm_persist", "warmups_persisted"],
+        dir: Dir::HigherIsBetter,
+        tol: 0.0,
+        env: None,
+    },
+    Rule {
+        bench: "sweep_fork",
+        path: &["warm_persist", "warmups_loaded"],
+        dir: Dir::HigherIsBetter,
+        tol: 0.0,
+        env: None,
+    },
+    Rule {
+        bench: "sweep_fork",
+        path: &["warm_persist", "resume_warmup_steps_run"],
+        dir: Dir::LowerIsBetter,
+        tol: 0.0,
+        env: None,
+    },
+    Rule {
+        bench: "sweep_fork",
+        path: &["warm_persist", "fronts_equal"],
+        dir: Dir::Exact,
+        tol: 0.0,
+        env: None,
+    },
 ];
 
 const DEFAULT_BENCHES: [&str; 2] = ["step_marshal", "sweep_fork"];

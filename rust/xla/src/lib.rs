@@ -364,6 +364,28 @@ impl Payload {
 /// resident run cannot grow the pool without bound.
 const POOL_CLASS_CAP: usize = 32;
 
+/// Default global byte budget of retained allocations (all size
+/// classes together). The per-class entry cap alone lets retained
+/// memory scale with leaf size (32 entries of an MB-scale leaf is tens
+/// of MB per class), so the pool also enforces this byte ceiling —
+/// generous for the stub fixture's KB-scale leaves, bounded for a
+/// native backend. Override with `MIXPREC_POOL_BUDGET_BYTES`.
+const POOL_DEFAULT_BUDGET_BYTES: u64 = 16 * 1024 * 1024;
+
+fn pool_budget_from_env() -> u64 {
+    std::env::var("MIXPREC_POOL_BUDGET_BYTES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(POOL_DEFAULT_BUDGET_BYTES)
+}
+
+struct PoolInner {
+    classes: HashMap<(ElementType, usize), Vec<Data>>,
+    /// Payload bytes currently retained across every class (kept in
+    /// lockstep with `classes` under the one mutex).
+    held_bytes: u64,
+}
+
 /// Size-classed pool of dead device allocations. Outputs that cannot
 /// be donated draw from here before allocating fresh; the runtime
 /// retires displaced section buffers and downloaded metric buffers
@@ -375,14 +397,30 @@ const POOL_CLASS_CAP: usize = 32;
 /// same refcount-1 rule to its outer `Arc` first), so a recycled
 /// buffer can never alias a snapshot, cache entry, or in-flight
 /// argument.
-#[derive(Default)]
+///
+/// Retention is bounded two ways: per class by entry count
+/// ([`POOL_CLASS_CAP`]) and globally by a byte budget (default
+/// [`POOL_DEFAULT_BUDGET_BYTES`], env-tunable via
+/// `MIXPREC_POOL_BUDGET_BYTES`). When admitting a retiree would exceed
+/// the budget, the pool evicts retirees from its **largest** size
+/// classes first (counted in [`PoolStats::evicted`]) — small hot
+/// classes stay populated while the big, rarely-reacquired retirees
+/// that dominate retained memory go first.
 pub struct BufferPool {
-    classes: Mutex<HashMap<(ElementType, usize), Vec<Data>>>,
+    inner: Mutex<PoolInner>,
+    budget_bytes: u64,
     retired: AtomicU64,
     refused: AtomicU64,
     discarded: AtomicU64,
+    evicted: AtomicU64,
     hits: AtomicU64,
     misses: AtomicU64,
+}
+
+impl Default for BufferPool {
+    fn default() -> Self {
+        BufferPool::with_budget(pool_budget_from_env())
+    }
 }
 
 /// Cumulative pool counters (monotonic).
@@ -395,12 +433,18 @@ pub struct PoolStats {
     /// runtime's outer-`Arc` check (`retire_arc`) refuses *before*
     /// reaching the pool and is not counted here.
     pub refused: u64,
-    /// Dead allocations dropped because their size class was full.
+    /// Dead allocations dropped because their size class was full, or
+    /// because they alone would not fit the byte budget.
     pub discarded: u64,
+    /// Previously-retained allocations dropped (largest classes first)
+    /// to admit a new retiree under the byte budget.
+    pub evicted: u64,
     /// Output allocations served from the pool.
     pub hits: u64,
     /// Acquire attempts that found the class empty.
     pub misses: u64,
+    /// Payload bytes currently retained (gauge, not monotonic).
+    pub held_bytes: u64,
 }
 
 fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
@@ -410,6 +454,29 @@ fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
 impl BufferPool {
     pub fn new() -> Self {
         BufferPool::default()
+    }
+
+    /// A pool with an explicit global byte budget (tests, or embedders
+    /// that size retention to their own working set).
+    pub fn with_budget(budget_bytes: u64) -> Self {
+        BufferPool {
+            inner: Mutex::new(PoolInner {
+                classes: HashMap::new(),
+                held_bytes: 0,
+            }),
+            budget_bytes,
+            retired: AtomicU64::new(0),
+            refused: AtomicU64::new(0),
+            discarded: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// The configured global byte budget.
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_bytes
     }
 
     /// Retire a dead buffer's allocation for reuse. Accepts only
@@ -442,16 +509,46 @@ impl BufferPool {
 
     fn retire_data(&self, data: Data) -> bool {
         let key = (data.ty(), data.len());
+        let bytes = (key.1 * 4) as u64;
         if key.1 == 0 {
             return false;
         }
-        let mut map = lock(&self.classes);
-        let bucket = map.entry(key).or_default();
-        if bucket.len() >= POOL_CLASS_CAP {
+        // an allocation larger than the whole budget can never be
+        // retained — drop it outright instead of emptying the pool
+        if bytes > self.budget_bytes {
             self.discarded.fetch_add(1, Ordering::Relaxed);
             return false;
         }
-        bucket.push(data);
+        let mut inner = lock(&self.inner);
+        if inner
+            .classes
+            .get(&key)
+            .is_some_and(|b| b.len() >= POOL_CLASS_CAP)
+        {
+            self.discarded.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        // byte budget: evict retirees from the largest classes first
+        // until the newcomer fits (terminates: held <= budget and
+        // bytes <= budget, and every eviction strictly shrinks held)
+        while inner.held_bytes + bytes > self.budget_bytes {
+            let largest = inner
+                .classes
+                .iter()
+                .filter(|(_, b)| !b.is_empty())
+                .map(|(&k, _)| k)
+                .max_by_key(|&(_, n)| n)
+                .expect("held_bytes > 0 implies a non-empty class");
+            let victim = inner
+                .classes
+                .get_mut(&largest)
+                .and_then(Vec::pop)
+                .expect("class chosen non-empty");
+            inner.held_bytes -= (victim.len() * 4) as u64;
+            self.evicted.fetch_add(1, Ordering::Relaxed);
+        }
+        inner.classes.entry(key).or_default().push(data);
+        inner.held_bytes += bytes;
         self.retired.fetch_add(1, Ordering::Relaxed);
         true
     }
@@ -459,14 +556,18 @@ impl BufferPool {
     /// Pop a retired allocation of exactly this class, cleared (len 0,
     /// capacity `n`), ready to be refilled.
     pub(crate) fn acquire(&self, ty: ElementType, n: usize) -> Option<Data> {
-        let popped = lock(&self.classes).get_mut(&(ty, n)).and_then(Vec::pop);
+        let mut inner = lock(&self.inner);
+        let popped = inner.classes.get_mut(&(ty, n)).and_then(Vec::pop);
         match popped {
             Some(mut d) => {
+                inner.held_bytes -= (d.len() * 4) as u64;
+                drop(inner);
                 d.clear();
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 Some(d)
             }
             None => {
+                drop(inner);
                 self.misses.fetch_add(1, Ordering::Relaxed);
                 None
             }
@@ -475,7 +576,7 @@ impl BufferPool {
 
     /// Number of allocations currently pooled (tests/diagnostics).
     pub fn pooled(&self) -> usize {
-        lock(&self.classes).values().map(Vec::len).sum()
+        lock(&self.inner).classes.values().map(Vec::len).sum()
     }
 
     pub fn stats(&self) -> PoolStats {
@@ -483,8 +584,10 @@ impl BufferPool {
             retired: self.retired.load(Ordering::Relaxed),
             refused: self.refused.load(Ordering::Relaxed),
             discarded: self.discarded.load(Ordering::Relaxed),
+            evicted: self.evicted.load(Ordering::Relaxed),
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
+            held_bytes: lock(&self.inner).held_bytes,
         }
     }
 }
@@ -1401,6 +1504,62 @@ mod tests {
         }
         assert_eq!(pool.pooled(), POOL_CLASS_CAP);
         assert_eq!(pool.stats().discarded, 5);
+    }
+
+    /// Byte budget: the pool evicts largest-class retirees first to
+    /// admit newcomers, keeps `held_bytes` exact, and drops a retiree
+    /// that alone exceeds the budget.
+    #[test]
+    fn pool_byte_budget_evicts_largest_first() {
+        let pool = BufferPool::with_budget(100); // 25 f32 elements
+        let client = PjRtClient::cpu().unwrap();
+        let big = client
+            .buffer_from_host_literal(&Literal::vec1(&[1f32; 20]))
+            .unwrap();
+        assert!(pool.retire(big)); // 80 bytes held
+        assert_eq!(pool.stats().held_bytes, 80);
+        let small = client
+            .buffer_from_host_literal(&Literal::vec1(&[1f32, 2.0, 3.0]))
+            .unwrap();
+        // 80 + 12 > 100: the 20-element class is evicted to admit it
+        assert!(pool.retire(small));
+        let st = pool.stats();
+        assert_eq!(st.evicted, 1);
+        assert_eq!(st.held_bytes, 12);
+        assert!(pool.acquire(ElementType::F32, 20).is_none(), "evicted");
+        assert!(pool.acquire(ElementType::F32, 3).is_some(), "small kept");
+        assert_eq!(pool.stats().held_bytes, 0);
+        // a retiree bigger than the whole budget is discarded outright
+        let huge = client
+            .buffer_from_host_literal(&Literal::vec1(&[0f32; 64]))
+            .unwrap();
+        assert!(!pool.retire(huge));
+        assert_eq!(pool.stats().discarded, 1);
+        assert_eq!(pool.stats().held_bytes, 0);
+    }
+
+    /// Multiple evictions run until the newcomer fits.
+    #[test]
+    fn pool_byte_budget_multi_eviction() {
+        let pool = BufferPool::with_budget(64); // 16 f32 elements
+        let client = PjRtClient::cpu().unwrap();
+        for _ in 0..2 {
+            let b = client
+                .buffer_from_host_literal(&Literal::vec1(&[0f32; 6]))
+                .unwrap();
+            assert!(pool.retire(b)); // 2 x 24 bytes
+        }
+        assert_eq!(pool.stats().held_bytes, 48);
+        let big = client
+            .buffer_from_host_literal(&Literal::vec1(&[0f32; 16]))
+            .unwrap();
+        // 48 + 64 > 64 twice over: both 6-element retirees must go
+        assert!(pool.retire(big));
+        let st = pool.stats();
+        assert_eq!(st.evicted, 2);
+        assert_eq!(st.held_bytes, 64);
+        assert_eq!(pool.pooled(), 1);
+        assert!(pool.acquire(ElementType::F32, 16).is_some());
     }
 
     #[test]
