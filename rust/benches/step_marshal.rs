@@ -71,6 +71,123 @@ fn alloc_json(o: &mut JsonObj, steady: &AllocStats, steady_steps: usize) {
     );
 }
 
+/// Download every output and snapshot its f32 bit pattern, so legs can
+/// be compared for *bitwise* equality (`==` on f32 would let -0.0/NaN
+/// slip through).
+fn out_bits(outs: &[xla::PjRtBuffer]) -> mixprec::Result<Vec<Vec<u32>>> {
+    let mut all = Vec::with_capacity(outs.len());
+    for b in outs {
+        let v = b.to_literal_sync()?.to_vec::<f32>()?;
+        all.push(v.into_iter().map(f32::to_bits).collect());
+    }
+    Ok(all)
+}
+
+/// Time `iters` dispatches of `exe` over resident buffers under the
+/// given execution options; returns (seconds, first-iteration bits).
+fn time_exec(
+    exe: &xla::PjRtLoadedExecutable,
+    bufs: &[xla::PjRtBuffer],
+    opts: &xla::ExecOptions,
+    iters: usize,
+) -> mixprec::Result<(f64, Vec<Vec<u32>>)> {
+    let pool = xla::BufferPool::new();
+    let t0 = Instant::now();
+    let mut first: Option<Vec<Vec<u32>>> = None;
+    for _ in 0..iters {
+        let args: Vec<xla::ExecInput> = bufs.iter().map(xla::ExecInput::borrow).collect();
+        let (outs, _) = exe.execute_d_opts(args, &pool, opts)?;
+        if first.is_none() {
+            first = Some(out_bits(&outs[0])?);
+        }
+    }
+    Ok((t0.elapsed().as_secs_f64(), first.unwrap()))
+}
+
+/// Kernel-level leg: the step legs below are marshalling-bound by
+/// design (the fixture moves ~552 B/step), so the execution-core
+/// rewrite is timed here on synthetic leaves large enough for the
+/// chunked kernels and the thread pool to dominate. The scalar
+/// reference path must stay bitwise identical at any thread count —
+/// asserted, not sampled. Returns (affine speedup vs the scalar
+/// reference, eval chunks scored per second, threads used).
+fn run_kernel_leg(dir: &std::path::Path) -> mixprec::Result<(f64, f64, usize)> {
+    const LEAVES: usize = 8;
+    const LEAF: usize = 1 << 18; // 256 Ki f32 per leaf, 8 MiB per pass
+    const ITERS: usize = 24;
+    const ROWS: usize = 4096;
+    const FEAT: usize = 128;
+    const BATCH: usize = 64;
+    let threads = xla::configured_threads().max(4);
+
+    let client = xla::PjRtClient::cpu()?;
+    let compile = |name: &str, directive: &str| -> mixprec::Result<xla::PjRtLoadedExecutable> {
+        let path = dir.join(name);
+        std::fs::write(&path, format!("{directive}\n"))?;
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        Ok(client.compile(&xla::XlaComputation::from_proto(&proto))?)
+    };
+    let affine = compile(
+        "kernel_affine.hlo.txt",
+        "// STUB: affine scale=0.999 bias=0.0005 state=8 metrics=3",
+    )?;
+    let eval = compile(
+        "kernel_eval.hlo.txt",
+        "// STUB: evalchunks batch=64 x=1 metrics=2",
+    )?;
+
+    // resident synthetic state: values are arbitrary but NaN-free, and
+    // uploading once up front keeps the timed loops compute-only
+    let leaves: Vec<xla::PjRtBuffer> = (0..LEAVES)
+        .map(|leaf| {
+            let v: Vec<f32> = (0..LEAF)
+                .map(|k| (k % 991) as f32 * 0.001 - 0.45 + leaf as f32 * 0.01)
+                .collect();
+            client.buffer_from_host_literal(&xla::Literal::vec1(&v))
+        })
+        .collect::<xla::Result<_>>()?;
+    let state: Vec<f32> = (0..64).map(|k| (k % 7) as f32 * 0.1).collect();
+    let x: Vec<f32> = (0..ROWS * FEAT).map(|k| (k % 883) as f32 * 0.001 - 0.4).collect();
+    let y: Vec<i32> = (0..ROWS).map(|k| (k % 10) as i32).collect();
+    let eval_bufs = vec![
+        client.buffer_from_host_literal(&xla::Literal::vec1(&state))?,
+        client.buffer_from_host_literal(
+            &xla::Literal::vec1(&x).reshape(&[ROWS as i64, FEAT as i64])?,
+        )?,
+        client.buffer_from_host_literal(&xla::Literal::vec1(&y))?,
+    ];
+
+    let reference = xla::ExecOptions { threads: 1, reference: true, force_parallel: false };
+    let vectorized = xla::ExecOptions { threads, reference: false, force_parallel: true };
+
+    let (scal_s, scal_bits) = time_exec(&affine, &leaves, &reference, ITERS)?;
+    let (vec_s, vec_bits) = time_exec(&affine, &leaves, &vectorized, ITERS)?;
+    assert_eq!(
+        scal_bits, vec_bits,
+        "vectorized/threaded affine diverged from the scalar reference"
+    );
+    let (escal_s, escal_bits) = time_exec(&eval, &eval_bufs, &reference, ITERS)?;
+    let (evec_s, evec_bits) = time_exec(&eval, &eval_bufs, &vectorized, ITERS)?;
+    assert_eq!(
+        escal_bits, evec_bits,
+        "vectorized/threaded evalchunks diverged from the scalar reference"
+    );
+
+    let speedup = scal_s / vec_s.max(1e-12);
+    let chunks = (ROWS / BATCH * ITERS) as f64;
+    let eval_cps = chunks / evec_s.max(1e-12);
+    println!(
+        "kernel    affine {LEAVES}x{} f32: scalar {scal_s:.3}s, {threads} threads \
+         {vec_s:.3}s ({speedup:.2}x)",
+        LEAF
+    );
+    println!(
+        "kernel    evalchunks: {eval_cps:.0} chunks/s ({:.2}x vs scalar)",
+        escal_s / evec_s.max(1e-12)
+    );
+    Ok((speedup, eval_cps, threads))
+}
+
 /// Stub-backend leg: exercises the real marshalling code against the
 /// host backend. Returns (seconds, stats, final host sections).
 fn run_stub() -> mixprec::Result<()> {
@@ -169,6 +286,9 @@ fn run_stub() -> mixprec::Result<()> {
     let untuple_saved = xla::untuple_saved_bytes() - untuple_before;
     assert!(untuple_saved > 0, "untuple copied payloads again");
 
+    // ---- kernel-level leg: the execution core itself -----------------
+    let (kernel_speedup, eval_cps, kernel_threads) = run_kernel_leg(&dir)?;
+
     let speedup = host_s / dev_s.max(1e-12);
     println!(
         "device    {:9.0} steps/s  ({:.0} B/step h2d, {:.0} B/step d2h)",
@@ -195,10 +315,13 @@ fn run_stub() -> mixprec::Result<()> {
     let mut o = JsonObj::new();
     o.insert("bench", Json::Str("step_marshal".into()));
     o.insert("mode", Json::Str("stub".into()));
+    o.insert("xla_threads", Json::Num(kernel_threads as f64));
     o.insert("steps", Json::Num(steps as f64));
     o.insert("steady_steps", Json::Num(steady_steps as f64));
     let mut dev_o = leg_json(dev_s, steps, &dev_stats);
     alloc_json(&mut dev_o, &steady, steady_steps);
+    dev_o.insert("speedup_vs_scalar", Json::Num(kernel_speedup));
+    dev_o.insert("eval_chunks_per_sec", Json::Num(eval_cps));
     o.insert("device", Json::Obj(dev_o));
     o.insert("host_resident", Json::Obj(leg_json(host_s, steps, &host_stats)));
     o.insert(

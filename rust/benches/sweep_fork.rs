@@ -256,6 +256,7 @@ fn run() -> mixprec::Result<()> {
     let mut o = JsonObj::new();
     o.insert("bench", Json::Str("sweep_fork".into()));
     o.insert("mode", Json::Str("stub".into()));
+    o.insert("xla_threads", Json::Num(xla::configured_threads() as f64));
     o.insert("lambdas", Json::Num(lambdas.len() as f64));
     o.insert("warmup_steps", Json::Num(cfg.warmup_steps as f64));
     o.insert("warmup_steps_saved", Json::Num(forked.warmup_steps_saved as f64));

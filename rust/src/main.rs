@@ -48,7 +48,12 @@ fn usage() -> ! {
                           fleet worker) pointed at a populated dir
                           runs zero warmup steps. Stale/corrupt
                           entries fall back to a fresh warmup.
-                          (env: MIXPREC_WARM_DIR)
+                          (env: MIXPREC_WARM_DIR; pruned at attach
+                          time per MIXPREC_WARM_DIR_MAX / _TTL_SECS)
+    --xla-threads <n>     backend execution threads (default: available
+                          parallelism; 1 = sequential scalar-era
+                          behavior, bitwise identical either way)
+                          (env: MIXPREC_XLA_THREADS)
     --seed <n>            RNG seed
     --act-search          open activation precisions {{2,4,8}}
     --verbose"
@@ -114,6 +119,11 @@ fn main() {
     let cmd = a.pos(0).unwrap_or("").to_string();
     if cmd.is_empty() {
         usage();
+    }
+    // must land before the first backend dispatch: the thread count is
+    // read once per process (see xla::configured_threads)
+    if let Some(n) = a.get("xla-threads") {
+        std::env::set_var("MIXPREC_XLA_THREADS", n);
     }
     if let Err(e) = run(&cmd, &a) {
         eprintln!("error: {e}");
@@ -255,6 +265,7 @@ fn run(cmd: &str, a: &Args) -> mixprec::Result<()> {
             println!("{}", report::runs_table("method comparison", &rows).to_markdown());
             println!("{}", report::cache_line(&cr));
             println!("{}", report::alloc_line(&cr.alloc));
+            println!("backend threads: {}", ctx.eng.threads());
             println!("compare total: {:.2}s", cr.total_time_s);
         }
         "deploy" => {

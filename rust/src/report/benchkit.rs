@@ -25,6 +25,9 @@
 //!   with zero warmup steps (unset: in-memory sharing only)
 //! * `MIXPREC_HOST_RESIDENT=1` — force the seed's per-step full
 //!   host<->device marshal (baseline for the step-marshalling bench)
+//! * `MIXPREC_XLA_THREADS` — backend execution threads (default:
+//!   available parallelism; `1` pins the sequential path — results
+//!   are bitwise identical at any count, only throughput changes)
 //! * `MIXPREC_BENCH_DIR` — where `BENCH_*.json` trend files land
 //!   (default: current directory)
 

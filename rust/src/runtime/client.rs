@@ -86,11 +86,21 @@ impl Engine {
         self.cache.lock().unwrap().len()
     }
 
+    /// Backend execution thread count (`MIXPREC_XLA_THREADS`, else
+    /// available parallelism) — reported by the CLI and benches so runs
+    /// are attributable to a configuration.
+    pub fn threads(&self) -> usize {
+        xla::configured_threads()
+    }
+
     /// Copy a host literal into a device buffer. The `Arc` lets the
     /// device-resident state and its snapshots share buffers without
-    /// further copies.
+    /// further copies. Pool-first: the backing allocation recycles a
+    /// retired same-class buffer when one exists, so per-step `Host`
+    /// uploads (batch slices, scalar knobs) that the step loop retires
+    /// after each dispatch allocate nothing in steady state.
     pub fn upload(&self, lit: &xla::Literal) -> Result<Arc<xla::PjRtBuffer>> {
-        Ok(Arc::new(self.client.buffer_from_host_literal(lit)?))
+        Ok(Arc::new(self.client.buffer_from_host_literal_pooled(lit, &self.pool)?))
     }
 
     /// Convert + upload a host tensor in one call.

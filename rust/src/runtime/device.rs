@@ -30,8 +30,14 @@
 //! replaced sections leave via [`DeviceState::take_device_section`]
 //! and are *donated* to the executable (updated in place when
 //! exclusively owned), dead buffers are retired to the engine's
-//! `BufferPool`, and [`AllocStats`] counts every outcome. See
-//! `runtime/README.md` for the donation/pool invariants.
+//! `BufferPool`, and [`AllocStats`] counts every outcome. Per-step
+//! `StepArg::Host` uploads close the loop: `Engine::upload*` draws
+//! their backing allocations pool-first and `dispatch_device` retires
+//! them once the step has consumed its borrows, so not even the batch
+//! and scalar knobs allocate in steady state. See `runtime/README.md`
+//! for the donation/pool invariants and the backend execution model
+//! (vectorized kernels, `MIXPREC_XLA_THREADS` thread pool, fused
+//! step+metric dispatch — all bitwise-identical to the scalar path).
 //!
 //! See `runtime/README.md` for the full architecture notes.
 

@@ -44,6 +44,15 @@
 //! never a wrong resume. Serialization itself lives with the caller —
 //! the load/persist hooks — because the payload type is opaque here.
 //!
+//! Attaching a directory also garbage-collects it: entries past an
+//! age budget (`MIXPREC_WARM_DIR_TTL_SECS`, off by default) and then
+//! the oldest entries beyond a count budget (`MIXPREC_WARM_DIR_MAX`,
+//! default 256, 0 = unlimited) are pruned, so fleets churning configs
+//! stop accumulating one `warm-<fnv>.ckpt` per fingerprint forever.
+//! Only `warm-*.ckpt` files are touched, and a racing unlink by a
+//! concurrent worker is ignored — GC can only ever delete, never
+//! corrupt, and a pruned entry simply costs one fresh warmup.
+//!
 //! # Locking
 //!
 //! Each pool is a map of per-entry **once-slots**. The whole-map
@@ -70,6 +79,7 @@ use std::hash::Hash;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::time::{Duration, SystemTime};
 
 use crate::error::{Error, Result};
 use crate::util::fnv1a;
@@ -259,6 +269,73 @@ fn warm_file_name(key: &str) -> String {
     format!("warm-{:016x}.ckpt", fnv1a(key.as_bytes()))
 }
 
+/// Default count budget of the warm disk tier (entries are ~KB-scale,
+/// so this bounds a shared directory to a few hundred KB).
+const WARM_DIR_DEFAULT_MAX: usize = 256;
+
+fn warm_dir_max_from_env() -> usize {
+    std::env::var("MIXPREC_WARM_DIR_MAX")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(WARM_DIR_DEFAULT_MAX)
+}
+
+fn warm_dir_ttl_from_env() -> Option<Duration> {
+    std::env::var("MIXPREC_WARM_DIR_TTL_SECS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .map(Duration::from_secs)
+}
+
+/// Prune the warm disk tier: drop `warm-*.ckpt` entries whose mtime is
+/// at least `ttl` old, then the oldest entries beyond `max_entries`
+/// (0 = unlimited). Runs at attach time ([`SharedRunCache::set_warm_dir`])
+/// so a long-lived fleet GCs the directory it shares without any extra
+/// coordination. Everything here is best-effort and concurrent-safe:
+/// non-matching files are never touched, unlink races with other
+/// workers are ignored (the entry is gone either way), and an
+/// unreadable directory is simply left alone.
+pub(crate) fn gc_warm_dir(dir: &Path, max_entries: usize, ttl: Option<Duration>) {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    let mut files: Vec<(SystemTime, PathBuf)> = Vec::new();
+    for entry in entries.flatten() {
+        let is_warm = entry
+            .file_name()
+            .to_str()
+            .is_some_and(|n| n.starts_with("warm-") && n.ends_with(".ckpt"));
+        let Ok(meta) = entry.metadata() else { continue };
+        if !is_warm || !meta.is_file() {
+            continue;
+        }
+        // an unreadable mtime sorts as oldest — prune it first rather
+        // than letting it dodge both budgets forever
+        let mtime = meta.modified().unwrap_or(SystemTime::UNIX_EPOCH);
+        files.push((mtime, entry.path()));
+    }
+    if let Some(ttl) = ttl {
+        files.retain(|(mtime, path)| {
+            let age = SystemTime::now().duration_since(*mtime).unwrap_or_default();
+            if age >= ttl {
+                let _ = std::fs::remove_file(path);
+                false
+            } else {
+                true
+            }
+        });
+    }
+    if max_entries == 0 || files.len() <= max_entries {
+        return;
+    }
+    // oldest first, ties broken by name: deterministic prune order
+    files.sort();
+    let excess = files.len() - max_entries;
+    for (_, path) in &files[..excess] {
+        let _ = std::fs::remove_file(path);
+    }
+}
+
 /// Shared device-buffer cache across methods and runs. One per
 /// `coordinator::Context` (and therefore one per CLI/bench process);
 /// see the module docs for what it pools, the per-entry locking, and
@@ -285,8 +362,14 @@ impl SharedRunCache {
     /// Attach (or detach) the warm-start disk tier.
     /// [`SharedRunCache::get_or_warm_persistent`] consults this
     /// directory before running a warmup and writes fresh warmups
-    /// back; `None` keeps the pool in-memory only.
+    /// back; `None` keeps the pool in-memory only. Attaching also
+    /// garbage-collects the directory against the count/age budgets
+    /// (`MIXPREC_WARM_DIR_MAX` / `MIXPREC_WARM_DIR_TTL_SECS`; see
+    /// [`gc_warm_dir`]).
     pub fn set_warm_dir(&self, dir: Option<PathBuf>) {
+        if let Some(d) = &dir {
+            gc_warm_dir(d, warm_dir_max_from_env(), warm_dir_ttl_from_env());
+        }
         *lock(&self.warm_dir) = dir;
     }
 
@@ -747,6 +830,52 @@ mod tests {
         // the rewrite is now loadable
         assert_eq!(load_u64(&path), Some(5));
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Count-budget GC keeps the newest entries (oldest pruned first,
+    /// name-tiebroken) and never touches non-matching files.
+    #[test]
+    fn warm_dir_gc_prunes_by_count_keeping_newest() {
+        let dir = tmpdir("gc_count");
+        let name = |i: usize| format!("warm-{i:016x}.ckpt");
+        for i in 0..5 {
+            std::fs::write(dir.join(name(i)), b"x").unwrap();
+        }
+        std::fs::write(dir.join("other.txt"), b"x").unwrap();
+        std::fs::write(dir.join("warm-nope.tmp"), b"x").unwrap();
+        gc_warm_dir(&dir, 2, None);
+        let survivors: Vec<bool> = (0..5).map(|i| dir.join(name(i)).exists()).collect();
+        assert_eq!(survivors, [false, false, false, true, true]);
+        assert!(dir.join("other.txt").exists(), "foreign file pruned");
+        assert!(dir.join("warm-nope.tmp").exists(), "non-ckpt file pruned");
+        // under budget: nothing more to prune
+        gc_warm_dir(&dir, 2, None);
+        assert!(dir.join(name(3)).exists() && dir.join(name(4)).exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A zero TTL makes every entry stale: the age budget alone prunes
+    /// the whole tier (count budget 0 = unlimited stays out of the way).
+    #[test]
+    fn warm_dir_gc_ttl_prunes_stale_entries() {
+        let dir = tmpdir("gc_ttl");
+        std::fs::write(dir.join("warm-00aa.ckpt"), b"x").unwrap();
+        std::fs::write(dir.join("keepme.txt"), b"x").unwrap();
+        gc_warm_dir(&dir, 0, Some(Duration::ZERO));
+        assert!(!dir.join("warm-00aa.ckpt").exists());
+        assert!(dir.join("keepme.txt").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Attach-time GC is best-effort: a missing directory neither
+    /// panics nor blocks the attach.
+    #[test]
+    fn warm_dir_gc_tolerates_missing_dir() {
+        let cache = SharedRunCache::new();
+        let ghost = std::env::temp_dir().join("mixprec_warm_gc_never_created");
+        gc_warm_dir(&ghost, 2, Some(Duration::ZERO));
+        cache.set_warm_dir(Some(ghost.clone()));
+        assert_eq!(cache.warm_dir(), Some(ghost));
     }
 
     /// Without a warm directory the persistent accessor is the plain

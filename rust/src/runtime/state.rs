@@ -12,7 +12,7 @@ use std::sync::Arc;
 
 use crate::error::{Error, Result};
 use crate::runtime::client::{Engine, Executable};
-use crate::runtime::device::DeviceState;
+use crate::runtime::device::{retire_arc, DeviceState};
 use crate::runtime::literal::{literal_to_tensor, tensor_to_literal};
 use crate::runtime::manifest::{ArtifactDesc, LeafId, Manifest, ModelManifest};
 use crate::util::tensor::Tensor;
@@ -304,6 +304,11 @@ impl StepFn {
         // section is taken for donation: a bad extra (a swapped mask
         // pair) must fail the step with the state fully intact.
         let mut extra_ins: Vec<xla::ExecInput> = Vec::with_capacity(extra.len());
+        // Per-step uploads (pool-first in `Engine::upload`) are kept
+        // alive across the dispatch, then retired below: the step is
+        // their only consumer, so afterwards each is exclusively owned
+        // again and its allocation feeds the next step's uploads.
+        let mut step_uploads: Vec<Arc<xla::PjRtBuffer>> = Vec::with_capacity(extra.len());
         for (a, d) in extra.iter().zip(&self.desc.extra_inputs) {
             match a {
                 StepArg::Host(t) => {
@@ -317,6 +322,7 @@ impl StepFn {
                     state.stats.h2d_bytes += (t.len() * 4) as u64;
                     state.stats.h2d_tensors += 1;
                     extra_ins.push(xla::ExecInput::borrow(buf.as_ref()));
+                    step_uploads.push(buf);
                 }
                 StepArg::Device(b) => {
                     // same validation the legacy host path applies to
@@ -367,6 +373,11 @@ impl StepFn {
         inputs.extend(extra_ins);
         let (outs, estats) = self.exe.run_buffers_d(inputs, pool)?;
         state.alloc.absorb(&estats);
+        // the dispatch dropped its borrows, so each upload is sole-
+        // owned again: retire the dead allocations for reuse
+        for b in step_uploads {
+            retire_arc(pool, b);
+        }
         let n_state: usize = self
             .desc
             .outputs

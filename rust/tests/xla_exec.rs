@@ -1,0 +1,365 @@
+//! Bitwise-equivalence tests for the vectorized / multi-threaded /
+//! fused execution core of the `xla` host backend.
+//!
+//! The contract under test: for any stub program, any argument shapes
+//! (including empty leaves and ragged eval tails), any mix of
+//! donation / pin / borrow intents, and any thread count, the chunked
+//! parallel fused path produces outputs and `ExecStats` **bitwise
+//! identical** to the retained scalar reference path
+//! (`ExecOptions::reference`), and repeated runs on a multi-thread
+//! pool are identical to each other.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use mixprec::util::prop::Prop;
+use mixprec::util::rng::Pcg64;
+use xla::{ExecOptions, PjRtLoadedExecutable};
+
+/// Thread counts every case is checked at (the configured count is
+/// appended so the CI `MIXPREC_XLA_THREADS={1,4}` legs also exercise
+/// the persistent global pool, not just scoped teams).
+fn thread_counts() -> Vec<usize> {
+    let mut ts = vec![1, 2, 8];
+    ts.push(xla::configured_threads());
+    ts
+}
+
+/// Write a one-line `// STUB:` program and compile it through the
+/// public artifact path (text file -> proto -> computation -> exe).
+fn compile(directive: &str) -> PjRtLoadedExecutable {
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    let name = format!("mixprec_xla_exec_{}", std::process::id());
+    let dir: PathBuf = std::env::temp_dir().join(name);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("p{}.hlo.txt", NEXT.fetch_add(1, Ordering::Relaxed)));
+    std::fs::write(&path, format!("{directive}\n")).unwrap();
+    let proto = xla::HloModuleProto::from_text_file(&path).unwrap();
+    let client = xla::PjRtClient::cpu().unwrap();
+    client.compile(&xla::XlaComputation::from_proto(&proto)).unwrap()
+}
+
+/// One output leaf as raw bits (f32 compared by `to_bits`, never `==`,
+/// so -0.0 vs 0.0 or NaN payload drift cannot slip through).
+fn bits(lit: &xla::Literal) -> Vec<u32> {
+    match lit.to_vec::<f32>() {
+        Ok(v) => v.iter().map(|x| x.to_bits()).collect(),
+        Err(_) => lit.to_vec::<i32>().unwrap().iter().map(|&x| x as u32).collect(),
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Intent {
+    /// Borrowed: the executable must copy, never mutate.
+    Borrow,
+    /// Donated and exclusively owned: updated in place.
+    DonateOwned,
+    /// Donated but aliased by a live clone: silent fallback copy.
+    DonatePinned,
+}
+
+/// One property case: an `affine` program plus its argument plan.
+/// Data is regenerated from `seed` per run, so the reference and every
+/// threaded variant see byte-identical inputs and alias states.
+#[derive(Debug, Clone)]
+struct AffineCase {
+    /// (element count, intent, i32 leaf) per state leaf.
+    leaves: Vec<(usize, Intent, bool)>,
+    /// Element counts of trailing broadcast (metric-only) args.
+    extras: Vec<usize>,
+    n_metrics: usize,
+    seed: u64,
+}
+
+fn gen_affine(rng: &mut Pcg64) -> AffineCase {
+    const LENS: [usize; 7] = [0, 1, 7, 8, 9, 33, 257];
+    let leaves = (0..rng.below(6))
+        .map(|_| {
+            let len = LENS[rng.below(LENS.len() as u64) as usize];
+            let intent = match rng.below(3) {
+                0 => Intent::Borrow,
+                1 => Intent::DonateOwned,
+                _ => Intent::DonatePinned,
+            };
+            (len, intent, rng.below(4) == 0)
+        })
+        .collect();
+    let extras = (0..rng.below(3)).map(|_| 1 + rng.below(8) as usize).collect();
+    AffineCase {
+        leaves,
+        extras,
+        n_metrics: rng.below(4) as usize,
+        seed: rng.next_u64(),
+    }
+}
+
+fn shrink_affine(c: &AffineCase) -> Vec<AffineCase> {
+    let mut out = Vec::new();
+    for i in 0..c.leaves.len() {
+        let mut s = c.clone();
+        s.leaves.remove(i);
+        out.push(s);
+    }
+    for i in 0..c.extras.len() {
+        let mut s = c.clone();
+        s.extras.remove(i);
+        out.push(s);
+    }
+    if c.n_metrics > 0 {
+        let mut s = c.clone();
+        s.n_metrics -= 1;
+        out.push(s);
+    }
+    out
+}
+
+/// Build the case's arguments fresh and execute once. Returns every
+/// output leaf's bits plus the backend's allocation counters.
+fn run_affine(
+    exe: &PjRtLoadedExecutable,
+    case: &AffineCase,
+    opts: &ExecOptions,
+) -> Result<(Vec<Vec<u32>>, xla::ExecStats), String> {
+    let mut rng = Pcg64::new(case.seed);
+    let client = xla::PjRtClient::cpu().unwrap();
+    let mut pins = Vec::new(); // clones that defeat donation
+    let mut args = Vec::new();
+    for &(len, intent, is_i32) in &case.leaves {
+        let lit = if is_i32 {
+            let v: Vec<i32> = (0..len).map(|_| rng.below(200) as i32 - 100).collect();
+            xla::Literal::vec1(&v)
+        } else {
+            let v: Vec<f32> = (0..len).map(|_| rng.range_f32(-2.0, 2.0)).collect();
+            xla::Literal::vec1(&v)
+        };
+        let buf = client.buffer_from_host_literal(&lit).unwrap();
+        match intent {
+            Intent::Borrow => args.push(xla::ExecInput::borrow(&buf)),
+            Intent::DonateOwned => args.push(xla::ExecInput::donate(buf)),
+            Intent::DonatePinned => {
+                pins.push(buf.clone());
+                args.push(xla::ExecInput::donate(buf));
+            }
+        }
+    }
+    for &len in &case.extras {
+        let v: Vec<f32> = (0..len).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        args.push(xla::ExecInput::borrow(&xla::Literal::vec1(&v)));
+    }
+    let pool = xla::BufferPool::new();
+    let (outs, stats) = exe.execute_d_opts(args, &pool, opts).map_err(|e| e.to_string())?;
+    let res = outs[0]
+        .iter()
+        .map(|b| bits(&b.to_literal_sync().unwrap()))
+        .collect();
+    drop(pins);
+    Ok((res, stats))
+}
+
+/// The reference options: scalar kernels, strictly sequential.
+fn reference() -> ExecOptions {
+    ExecOptions {
+        threads: 1,
+        reference: true,
+        force_parallel: false,
+    }
+}
+
+/// Chunked + threaded + fused, forced through the parallel path even
+/// for sub-threshold programs.
+fn vectorized(threads: usize) -> ExecOptions {
+    ExecOptions {
+        threads,
+        reference: false,
+        force_parallel: true,
+    }
+}
+
+/// Property: the vectorized/threaded/fused affine path is bitwise
+/// identical to the scalar reference — outputs *and* ExecStats — for
+/// every leaf count, leaf length (incl. empty), element type, and
+/// donation/pin/borrow mix, at every tested thread count.
+#[test]
+fn affine_threaded_matches_scalar_reference_bitwise() {
+    Prop::new(40).check(
+        "affine vectorized == scalar reference",
+        gen_affine,
+        shrink_affine,
+        |case| {
+            let exe = compile(&format!(
+                "// STUB: affine scale=0.999 bias=0.0005 state={} metrics={}",
+                case.leaves.len(),
+                case.n_metrics
+            ));
+            let (want, want_stats) = run_affine(&exe, case, &reference())?;
+            for t in thread_counts() {
+                let (got, got_stats) = run_affine(&exe, case, &vectorized(t))?;
+                if got != want {
+                    return Err(format!("outputs diverged at {t} threads"));
+                }
+                if got_stats != want_stats {
+                    return Err(format!(
+                        "ExecStats diverged at {t} threads: {got_stats:?} vs {want_stats:?}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// One `evalchunks` property case. `ragged` appends a partial tail
+/// chunk, which the program must reject identically on every path.
+#[derive(Debug, Clone)]
+struct EvalCase {
+    batch: usize,
+    chunks: usize,
+    feat: usize,
+    /// Broadcast args before x (x_arg = lead).
+    lead: usize,
+    /// Broadcast args after y.
+    trail: usize,
+    ragged: bool,
+    seed: u64,
+}
+
+fn gen_eval(rng: &mut Pcg64) -> EvalCase {
+    EvalCase {
+        batch: 1 + rng.below(5) as usize,
+        chunks: 1 + rng.below(6) as usize,
+        feat: 1 + rng.below(4) as usize,
+        lead: rng.below(3) as usize,
+        trail: rng.below(2) as usize,
+        ragged: rng.below(5) == 0,
+        seed: rng.next_u64(),
+    }
+}
+
+fn shrink_eval(c: &EvalCase) -> Vec<EvalCase> {
+    let mut out = Vec::new();
+    for (i, v) in [c.batch, c.chunks, c.feat].into_iter().enumerate() {
+        if v > 1 {
+            let mut s = c.clone();
+            match i {
+                0 => s.batch -= 1,
+                1 => s.chunks -= 1,
+                _ => s.feat -= 1,
+            }
+            out.push(s);
+        }
+    }
+    for (i, v) in [c.lead, c.trail].into_iter().enumerate() {
+        if v > 0 {
+            let mut s = c.clone();
+            match i {
+                0 => s.lead -= 1,
+                _ => s.trail -= 1,
+            }
+            out.push(s);
+        }
+    }
+    if c.ragged {
+        let mut s = c.clone();
+        s.ragged = false;
+        out.push(s);
+    }
+    out
+}
+
+fn run_eval(
+    exe: &PjRtLoadedExecutable,
+    case: &EvalCase,
+    opts: &ExecOptions,
+) -> Result<Vec<Vec<u32>>, String> {
+    let mut rng = Pcg64::new(case.seed);
+    let rows = case.batch * case.chunks + usize::from(case.ragged);
+    let mut args = Vec::new();
+    for _ in 0..case.lead {
+        let v: Vec<f32> = (0..3).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        args.push(xla::ExecInput::borrow(&xla::Literal::vec1(&v)));
+    }
+    let x: Vec<f32> = (0..rows * case.feat).map(|_| rng.range_f32(-2.0, 2.0)).collect();
+    let x = xla::Literal::vec1(&x)
+        .reshape(&[rows as i64, case.feat as i64])
+        .unwrap();
+    args.push(xla::ExecInput::borrow(&x));
+    let y: Vec<i32> = (0..rows).map(|_| rng.below(10) as i32).collect();
+    args.push(xla::ExecInput::borrow(&xla::Literal::vec1(&y)));
+    for _ in 0..case.trail {
+        let v: Vec<f32> = (0..2).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        args.push(xla::ExecInput::borrow(&xla::Literal::vec1(&v)));
+    }
+    let pool = xla::BufferPool::new();
+    let (outs, _) = exe.execute_d_opts(args, &pool, opts).map_err(|e| e.to_string())?;
+    Ok(outs[0]
+        .iter()
+        .map(|b| bits(&b.to_literal_sync().unwrap()))
+        .collect())
+}
+
+/// Property: chunk-parallel `evalchunks` scoring is bitwise identical
+/// to the scalar reference, and ragged tails fail identically (same
+/// error, state untouched) on every path.
+#[test]
+fn evalchunks_threaded_matches_scalar_reference_bitwise() {
+    Prop::new(32).check(
+        "evalchunks vectorized == scalar reference",
+        gen_eval,
+        shrink_eval,
+        |case| {
+            let exe = compile(&format!(
+                "// STUB: evalchunks batch={} x={} metrics=2",
+                case.batch, case.lead
+            ));
+            let want = run_eval(&exe, case, &reference());
+            for t in thread_counts() {
+                let got = run_eval(&exe, case, &vectorized(t));
+                match (&want, &got) {
+                    (Ok(w), Ok(g)) if w == g => {}
+                    (Err(w), Err(g)) if w == g => {}
+                    _ => return Err(format!("paths diverged at {t} threads: {want:?} vs {got:?}")),
+                }
+            }
+            // one extra row is only actually ragged when batch > 1
+            if case.ragged && case.batch > 1 && want.is_ok() {
+                return Err("ragged tail must be rejected".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Running the same program three times on a multi-thread pool, with a
+/// leaf set big enough to clear the parallelism threshold on its own,
+/// yields bit-identical outputs every time — and identical to the
+/// scalar reference.
+#[test]
+fn multithreaded_execution_is_deterministic_across_runs() {
+    let exe = compile("// STUB: affine scale=0.999 bias=0.0005 state=8 metrics=3");
+    let case = AffineCase {
+        // 8 leaves x 8192 elems = 64K elements: above PAR_MIN_ELEMS
+        // without force_parallel, so the default path also threads
+        leaves: vec![(8192, Intent::Borrow, false); 8],
+        extras: vec![4, 1],
+        n_metrics: 3,
+        seed: 0xd5ee_d001,
+    };
+    let (want, want_stats) = run_affine(&exe, &case, &reference()).unwrap();
+    for run in 0..3 {
+        let (got, got_stats) = run_affine(&exe, &case, &vectorized(8)).unwrap();
+        assert_eq!(got, want, "run {run} diverged from the scalar reference");
+        assert_eq!(got_stats, want_stats, "run {run} counters diverged");
+    }
+    // the default options (no force_parallel) take the threaded path
+    // for this size and must also be identical
+    let (got, got_stats) = run_affine(&exe, &case, &ExecOptions::default()).unwrap();
+    assert_eq!(got, want);
+    assert_eq!(got_stats, want_stats);
+}
+
+/// The thread-count knob resolves to something sane everywhere the
+/// runtime reports it.
+#[test]
+fn configured_threads_is_positive() {
+    assert!(xla::configured_threads() >= 1);
+}

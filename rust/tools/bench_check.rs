@@ -153,6 +153,15 @@ const RULES: &[Rule] = &[
         tol: 0.5,
         env: Some("MIXPREC_GATE_THROUGHPUT"),
     },
+    // batched-eval scoring throughput from the kernel-level leg (same
+    // quiet-runner opt-in and loose tolerance as steps_per_sec)
+    Rule {
+        bench: "step_marshal",
+        path: &["device", "eval_chunks_per_sec"],
+        dir: Dir::HigherIsBetter,
+        tol: 0.5,
+        env: Some("MIXPREC_GATE_THROUGHPUT"),
+    },
     // sweep_fork: warmup sharing within a sweep
     Rule {
         bench: "sweep_fork",

@@ -1,0 +1,802 @@
+//! Stub-program execution: directive parsing, per-call options, and
+//! the vectorized / multi-threaded / fused execution core.
+//!
+//! One dispatch makes exactly **one fused pass** over its arguments
+//! ([`fused_arg_means`]) to produce the per-argument means that feed
+//! *every* metric output — arguments are never re-walked per metric —
+//! then updates independent state leaves (or scores independent eval
+//! chunks) in parallel through a [`ParRunner`]. Per-leaf / per-chunk
+//! results and [`ExecStats`] deltas land in preallocated index-order
+//! slots and are merged in argument order, so output order,
+//! `metric_mix` addition order, and every counter are identical to the
+//! sequential scalar path at any thread count.
+
+use std::sync::Arc;
+
+use crate::kernels::{self, scalar};
+use crate::pool::{configured_threads, global_pool, BufferPool, ParRunner, TakeSlots};
+use crate::{err, BufRepr, Data, ElementType, ExecInput, Literal, Payload, PjRtBuffer, Result};
+
+/// Per-execute allocation accounting for
+/// [`execute_d`](crate::PjRtLoadedExecutable::execute_d). One count
+/// per output leaf: exactly one of `donated` / `pooled` / `allocated`
+/// fires per leaf, plus `fallback_copied` when donation was requested
+/// but the payload was shared at the buffer level.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ExecStats {
+    /// Output leaves that needed a fresh device allocation.
+    pub allocated: u64,
+    /// Donated inputs updated in place (zero allocation, zero copy).
+    pub donated: u64,
+    /// Output leaves served from the `BufferPool`.
+    pub pooled: u64,
+    /// Donation requests that fell back to a copy because the payload
+    /// `Arc` was shared (buffer-level aliasing; the runtime's own
+    /// snapshot pins are counted separately, before the backend).
+    pub fallback_copied: u64,
+}
+
+impl ExecStats {
+    /// Fold a per-task delta in. All fields are sums, so merging the
+    /// index-ordered deltas of a parallel dispatch gives totals
+    /// identical to the sequential path.
+    fn merge(&mut self, o: &ExecStats) {
+        self.allocated += o.allocated;
+        self.donated += o.donated;
+        self.pooled += o.pooled;
+        self.fallback_copied += o.fallback_copied;
+    }
+}
+
+/// Per-call execution options for
+/// [`execute_d_opts`](crate::PjRtLoadedExecutable::execute_d_opts).
+#[derive(Debug, Clone)]
+pub struct ExecOptions {
+    /// Worker threads for this call. Defaults to
+    /// [`configured_threads`] (`MIXPREC_XLA_THREADS`, else available
+    /// parallelism); 1 runs inline on the calling thread.
+    pub threads: usize,
+    /// Run the retained scalar reference kernels (per-element loops,
+    /// strictly sequential) instead of the chunked parallel core. The
+    /// equivalence tests assert both paths are bitwise identical.
+    pub reference: bool,
+    /// Parallelize even below the element-count threshold; tests use
+    /// this to force tiny programs through the thread pool.
+    pub force_parallel: bool,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        ExecOptions {
+            threads: configured_threads(),
+            reference: false,
+            force_parallel: false,
+        }
+    }
+}
+
+/// Below this many total elements a dispatch stays sequential: the
+/// stub fixture's steps are microseconds long and a thread handoff
+/// would dominate. The threshold depends only on input shapes (never
+/// on timing) and both sides of it are bitwise identical, so which
+/// path a program takes can never change results.
+pub(crate) const PAR_MIN_ELEMS: usize = 16 * 1024;
+
+/// Pick the runner for one dispatch over `total_elems` elements.
+fn runner_for(opts: &ExecOptions, total_elems: usize) -> ParRunner<'static> {
+    if opts.reference || opts.threads <= 1 {
+        return ParRunner::Seq;
+    }
+    if !opts.force_parallel && total_elems < PAR_MIN_ELEMS {
+        return ParRunner::Seq;
+    }
+    if opts.threads == configured_threads() {
+        return match global_pool() {
+            Some(p) => ParRunner::Pool(p),
+            None => ParRunner::Seq,
+        };
+    }
+    ParRunner::Scoped(opts.threads)
+}
+
+/// Element count of an argument (0 for invalid args — validation
+/// proper happens in [`fused_arg_means`]; this only sizes the work).
+fn arg_elems(a: &ExecInput) -> usize {
+    match a.array_payload() {
+        Ok(p) => p.lit.element_count(),
+        Err(_) => 0,
+    }
+}
+
+/// The fused argument pass: compute every argument's mean (memoized
+/// per payload) once per dispatch, in parallel across arguments, and
+/// validate in argument order. This one vector feeds **all** metric
+/// outputs — the step+metric fusion the per-metric re-walk used to
+/// pay for.
+fn fused_arg_means(args: &[ExecInput], runner: &ParRunner<'_>) -> Result<Vec<f64>> {
+    let per_arg = runner.run(args.len(), |i| args[i].array_payload().map(Payload::mean));
+    // surface the first *argument-order* error, matching the scalar
+    // reference path regardless of completion order
+    per_arg.into_iter().collect()
+}
+
+// ---------------------------------------------------------------------------
+// stub programs
+// ---------------------------------------------------------------------------
+
+/// A deterministic program the host backend can actually run, parsed
+/// from the first `// STUB:` line of an HLO text file. Three kinds:
+///
+/// ```text
+/// // STUB: affine scale=0.995 bias=0.001 state=8 metrics=3
+/// // STUB: init dims=3x3x1x16,16,16x4
+/// // STUB: evalchunks batch=8 x=8 metrics=2
+/// ```
+///
+/// * `affine` takes the first `state` arguments as the new state
+///   (`x * scale + bias` elementwise for f32, identity for i32) and
+///   appends `metrics` scalar f32 outputs, each `(j+1) * S` where
+///   `S = sum_i (i+1) * mean(arg_i)` over *all* arguments — so any
+///   permutation or omission of inputs changes the metrics and is
+///   caught by the equivalence tests. A donated state argument is
+///   updated in place when exclusively owned (all reductions happen
+///   first, so metrics see the pre-step values either way).
+/// * `init` takes a scalar seed and returns one deterministic
+///   seed-dependent f32 array per `dims` entry (the state factory
+///   behind `DeviceState::init` on the fixture).
+/// * `evalchunks` is the multi-batch eval program: argument `x` (f32,
+///   leading dim `n`) and the following argument `y` are split into
+///   `n / batch` chunks, every other argument is broadcast, and each
+///   metric comes back as an `[n_chunks]` vector whose element `c` is
+///   exactly what `affine` would have produced for chunk `c` alone —
+///   per-chunk reductions stay on device, bitwise identical to the
+///   per-batch dispatch loop.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StubProgram {
+    Affine {
+        scale: f32,
+        bias: f32,
+        n_state: usize,
+        n_metrics: usize,
+    },
+    Init {
+        dims: Vec<Vec<i64>>,
+    },
+    EvalChunks {
+        batch: usize,
+        x_arg: usize,
+        n_metrics: usize,
+    },
+}
+
+/// Pool-first f32 output allocation: recycle a same-class retired
+/// buffer when one exists, else allocate fresh. Either way the result
+/// is empty with capacity `n`.
+fn take_f32(pool: &BufferPool, stats: &mut ExecStats, n: usize) -> Vec<f32> {
+    match pool.acquire(ElementType::F32, n) {
+        Some(Data::F32(v)) => {
+            stats.pooled += 1;
+            v
+        }
+        _ => {
+            stats.allocated += 1;
+            Vec::with_capacity(n)
+        }
+    }
+}
+
+/// Pool-first i32 output allocation (see [`take_f32`]).
+fn take_i32(pool: &BufferPool, stats: &mut ExecStats, n: usize) -> Vec<i32> {
+    match pool.acquire(ElementType::S32, n) {
+        Some(Data::I32(v)) => {
+            stats.pooled += 1;
+            v
+        }
+        _ => {
+            stats.allocated += 1;
+            Vec::with_capacity(n)
+        }
+    }
+}
+
+/// The copying affine step for one leaf (borrowed input, or donation
+/// defeated by sharing): pool-first output, same arithmetic as the
+/// in-place path.
+fn affine_copy(
+    p: &Payload,
+    scale: f32,
+    bias: f32,
+    reference: bool,
+    pool: &BufferPool,
+    stats: &mut ExecStats,
+) -> PjRtBuffer {
+    let Literal::Array { dims, data } = &p.lit else {
+        unreachable!("affine args validated as arrays before dispatch");
+    };
+    let data = match data {
+        Data::F32(v) => {
+            let mut o = take_f32(pool, stats, v.len());
+            if reference {
+                scalar::affine_extend(&mut o, v, scale, bias);
+            } else {
+                kernels::affine_extend(&mut o, v, scale, bias);
+            }
+            Data::F32(o)
+        }
+        Data::I32(v) => {
+            let mut o = take_i32(pool, stats, v.len());
+            o.extend_from_slice(v);
+            Data::I32(o)
+        }
+    };
+    PjRtBuffer::from_literal(Literal::Array {
+        dims: dims.clone(),
+        data,
+    })
+}
+
+/// Pool-first scalar f32 output.
+fn scalar_out(pool: &BufferPool, stats: &mut ExecStats, v: f32) -> PjRtBuffer {
+    let mut o = take_f32(pool, stats, 1);
+    o.push(v);
+    PjRtBuffer::from_literal(Literal::Array {
+        dims: Vec::new(),
+        data: Data::F32(o),
+    })
+}
+
+/// One state leaf of an `affine` step: in-place when donated and
+/// exclusively owned, copying otherwise.
+fn affine_leaf(
+    a: ExecInput,
+    scale: f32,
+    bias: f32,
+    reference: bool,
+    pool: &BufferPool,
+    stats: &mut ExecStats,
+) -> PjRtBuffer {
+    match a {
+        ExecInput::Donate(buf) => match buf.repr {
+            BufRepr::Arr(mut arc) => match Arc::get_mut(&mut arc) {
+                Some(p) => {
+                    // sole owner: the output *is* the input
+                    // allocation, updated in place
+                    p.affine_in_place(scale, bias, reference);
+                    stats.donated += 1;
+                    PjRtBuffer {
+                        repr: BufRepr::Arr(arc),
+                    }
+                }
+                None => {
+                    // payload shared at the buffer level: silently
+                    // fall back to a copy
+                    stats.fallback_copied += 1;
+                    affine_copy(&arc, scale, bias, reference, pool, stats)
+                }
+            },
+            BufRepr::Tup(_) => unreachable!("validated as array above"),
+        },
+        ExecInput::Borrow(p) => affine_copy(&p, scale, bias, reference, pool, stats),
+    }
+}
+
+impl StubProgram {
+    pub(crate) fn parse(line: &str) -> Option<StubProgram> {
+        let rest = line.trim().strip_prefix("//")?.trim().strip_prefix("STUB:")?;
+        let mut words = rest.split_whitespace();
+        match words.next()? {
+            "affine" => {
+                let (mut scale, mut bias, mut n_state, mut n_metrics) = (1.0, 0.0, 0, 0);
+                for w in words {
+                    let (key, val) = w.split_once('=')?;
+                    match key {
+                        "scale" => scale = val.parse().ok()?,
+                        "bias" => bias = val.parse().ok()?,
+                        "state" => n_state = val.parse().ok()?,
+                        "metrics" => n_metrics = val.parse().ok()?,
+                        _ => return None,
+                    }
+                }
+                Some(StubProgram::Affine {
+                    scale,
+                    bias,
+                    n_state,
+                    n_metrics,
+                })
+            }
+            "init" => {
+                let mut dims = Vec::new();
+                for w in words {
+                    let (key, val) = w.split_once('=')?;
+                    if key != "dims" {
+                        return None;
+                    }
+                    for entry in val.split(',') {
+                        if entry.is_empty() {
+                            dims.push(Vec::new()); // scalar leaf
+                            continue;
+                        }
+                        let mut shape = Vec::new();
+                        for d in entry.split('x') {
+                            shape.push(d.parse().ok()?);
+                        }
+                        dims.push(shape);
+                    }
+                }
+                Some(StubProgram::Init { dims })
+            }
+            "evalchunks" => {
+                let (mut batch, mut x_arg, mut n_metrics) = (1, 0, 0);
+                for w in words {
+                    let (key, val) = w.split_once('=')?;
+                    match key {
+                        "batch" => batch = val.parse().ok()?,
+                        "x" => x_arg = val.parse().ok()?,
+                        "metrics" => n_metrics = val.parse().ok()?,
+                        _ => return None,
+                    }
+                }
+                Some(StubProgram::EvalChunks {
+                    batch,
+                    x_arg,
+                    n_metrics,
+                })
+            }
+            _ => None,
+        }
+    }
+
+    pub(crate) fn run(
+        &self,
+        args: Vec<ExecInput>,
+        pool: &BufferPool,
+        stats: &mut ExecStats,
+        opts: &ExecOptions,
+    ) -> Result<Vec<PjRtBuffer>> {
+        match self {
+            StubProgram::Affine {
+                scale,
+                bias,
+                n_state,
+                n_metrics,
+            } => Self::run_affine(args, *scale, *bias, *n_state, *n_metrics, pool, stats, opts),
+            StubProgram::Init { dims } => Self::run_init(&args, dims, pool, stats, opts),
+            StubProgram::EvalChunks {
+                batch,
+                x_arg,
+                n_metrics,
+            } => Self::run_evalchunks(&args, *batch, *x_arg, *n_metrics, pool, stats, opts),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_affine(
+        args: Vec<ExecInput>,
+        scale: f32,
+        bias: f32,
+        n_state: usize,
+        n_metrics: usize,
+        pool: &BufferPool,
+        stats: &mut ExecStats,
+        opts: &ExecOptions,
+    ) -> Result<Vec<PjRtBuffer>> {
+        if args.len() < n_state {
+            return Err(err(format!(
+                "stub program wants >= {n_state} args, got {}",
+                args.len()
+            )));
+        }
+        let state_elems: usize = args[..n_state].iter().map(arg_elems).sum();
+        let runner = runner_for(opts, state_elems);
+        // Validate every argument and compute every reduction *before*
+        // any in-place mutation: a donated leaf's payload is an input
+        // to the metric mix, and a bad argument must fail the whole
+        // call without having touched any donated payload.
+        let means = fused_arg_means(&args, &runner)?;
+        let s = kernels::metric_mix(means.into_iter());
+        // Independent state leaves update in parallel; outputs and
+        // stats deltas land in index-order slots, so output order and
+        // counter totals match the sequential path exactly. (Non-state
+        // trailing args are dropped here, exactly as the sequential
+        // path dropped them after its means pass.)
+        let mut state_args = args;
+        state_args.truncate(n_state);
+        let slots = TakeSlots::new(state_args);
+        let reference = opts.reference;
+        let leaves = runner.run(n_state, |i| {
+            let mut st = ExecStats::default();
+            let out = affine_leaf(slots.take(i), scale, bias, reference, pool, &mut st);
+            (out, st)
+        });
+        let mut outs = Vec::with_capacity(n_state + n_metrics);
+        for (buf, st) in leaves {
+            stats.merge(&st);
+            outs.push(buf);
+        }
+        for j in 0..n_metrics {
+            let v = ((j + 1) as f64 * s) as f32;
+            outs.push(scalar_out(pool, stats, v));
+        }
+        Ok(outs)
+    }
+
+    fn run_init(
+        args: &[ExecInput],
+        dims: &[Vec<i64>],
+        pool: &BufferPool,
+        stats: &mut ExecStats,
+        opts: &ExecOptions,
+    ) -> Result<Vec<PjRtBuffer>> {
+        let seed = match args.first() {
+            Some(a) => match &a.array_payload()?.lit {
+                Literal::Array {
+                    data: Data::I32(v), ..
+                } if !v.is_empty() => v[0] as i64,
+                Literal::Array {
+                    data: Data::F32(v), ..
+                } if !v.is_empty() => v[0] as i64,
+                _ => return Err(err("init stub wants a scalar seed argument")),
+            },
+            None => return Err(err("init stub wants a scalar seed argument")),
+        };
+        let total: usize = dims
+            .iter()
+            .map(|s| s.iter().product::<i64>().max(1) as usize)
+            .sum();
+        let runner = runner_for(opts, total);
+        // independent leaf fills; each value depends only on
+        // (seed, leaf, k), so partitioning cannot change results
+        let leaves = runner.run(dims.len(), |leaf| {
+            let shape = &dims[leaf];
+            let n: i64 = shape.iter().product::<i64>().max(1);
+            let mut st = ExecStats::default();
+            let mut data = take_f32(pool, &mut st, n as usize);
+            data.extend((0..n).map(|k| kernels::init_value(seed, leaf as i64, k)));
+            let buf = PjRtBuffer::from_literal(Literal::Array {
+                dims: shape.clone(),
+                data: Data::F32(data),
+            });
+            (buf, st)
+        });
+        let mut outs = Vec::with_capacity(dims.len());
+        for (buf, st) in leaves {
+            stats.merge(&st);
+            outs.push(buf);
+        }
+        Ok(outs)
+    }
+
+    fn run_evalchunks(
+        args: &[ExecInput],
+        batch: usize,
+        x_arg: usize,
+        n_metrics: usize,
+        pool: &BufferPool,
+        stats: &mut ExecStats,
+        opts: &ExecOptions,
+    ) -> Result<Vec<PjRtBuffer>> {
+        let y_arg = x_arg + 1;
+        if args.len() <= y_arg {
+            return Err(err(format!(
+                "evalchunks stub wants > {y_arg} args, got {}",
+                args.len()
+            )));
+        }
+        let (x_dims, x_data) = match &args[x_arg].array_payload()?.lit {
+            Literal::Array {
+                dims,
+                data: Data::F32(v),
+            } => (dims, v),
+            _ => return Err(err("evalchunks stub: x must be an f32 array")),
+        };
+        let y_data = match &args[y_arg].array_payload()?.lit {
+            Literal::Array {
+                data: Data::I32(v), ..
+            } => v,
+            _ => return Err(err("evalchunks stub: y must be an i32 array")),
+        };
+        let rows = *x_dims.first().unwrap_or(&0) as usize;
+        if batch == 0 || rows == 0 || rows % batch != 0 {
+            return Err(err(format!(
+                "evalchunks stub: {rows} rows not a multiple of batch {batch}"
+            )));
+        }
+        if y_data.len() != rows {
+            return Err(err("evalchunks stub: y rows != x rows"));
+        }
+        let feat = x_data.len() / rows;
+        let n_chunks = rows / batch;
+        let runner = runner_for(opts, x_data.len());
+        // Broadcast-arg means are chunk-invariant *and* call-invariant
+        // for resident buffers: `Payload::mean` memoizes them per
+        // allocation, so repeated evals over the same split/masks skip
+        // the whole-tensor reductions entirely. This is the same fused
+        // pass the affine step uses.
+        let bc_means = fused_arg_means(args, &runner)?;
+        // Independent chunks score in parallel: chunk `c`'s mix is a
+        // pure function of its own slices plus the broadcast means,
+        // and lands in slot `c` — per-chunk f64 addition order is the
+        // per-batch program's, regardless of which thread ran it.
+        let reference = opts.reference;
+        let mixes = runner.run(n_chunks, |c| {
+            let xs = &x_data[c * batch * feat..(c + 1) * batch * feat];
+            let ys = &y_data[c * batch..(c + 1) * batch];
+            let (mx, my) = if reference {
+                (scalar::mean_f32(xs), scalar::mean_i32(ys))
+            } else {
+                (kernels::mean_f32(xs), kernels::mean_i32(ys))
+            };
+            // same argument order (and therefore f64 addition order)
+            // as the per-batch affine program sees for this chunk
+            kernels::metric_mix((0..args.len()).map(|i| {
+                if i == x_arg {
+                    mx
+                } else if i == y_arg {
+                    my
+                } else {
+                    bc_means[i]
+                }
+            }))
+        });
+        // Build each per-metric vector individually: `vec![..; n]`
+        // clones its template and `Vec::clone` drops the capacity
+        // hint, which made every vector reallocate while growing.
+        let mut per_chunk: Vec<Vec<f32>> = (0..n_metrics)
+            .map(|_| take_f32(pool, stats, n_chunks))
+            .collect();
+        for (j, v) in per_chunk.iter_mut().enumerate() {
+            for &s in &mixes {
+                v.push(((j + 1) as f64 * s) as f32);
+            }
+        }
+        Ok(per_chunk
+            .into_iter()
+            .map(|v| {
+                PjRtBuffer::from_literal(Literal::Array {
+                    dims: vec![n_chunks as i64],
+                    data: Data::F32(v),
+                })
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::PjRtClient;
+
+    fn run_prog(prog: &StubProgram, lits: &[Literal]) -> Result<Vec<PjRtBuffer>> {
+        let pool = BufferPool::new();
+        let mut stats = ExecStats::default();
+        prog.run(
+            lits.iter().map(ExecInput::borrow).collect(),
+            &pool,
+            &mut stats,
+            &ExecOptions::default(),
+        )
+    }
+
+    #[test]
+    fn stub_directive_parses() {
+        let p = StubProgram::parse("// STUB: affine scale=0.5 bias=0.25 state=2 metrics=1")
+            .unwrap();
+        assert_eq!(
+            p,
+            StubProgram::Affine {
+                scale: 0.5,
+                bias: 0.25,
+                n_state: 2,
+                n_metrics: 1
+            }
+        );
+        let p = StubProgram::parse("// STUB: init dims=3x3x1x16,16,16x4").unwrap();
+        assert_eq!(
+            p,
+            StubProgram::Init {
+                dims: vec![vec![3, 3, 1, 16], vec![16], vec![16, 4]]
+            }
+        );
+        let p = StubProgram::parse("// STUB: evalchunks batch=8 x=5 metrics=2").unwrap();
+        assert_eq!(
+            p,
+            StubProgram::EvalChunks {
+                batch: 8,
+                x_arg: 5,
+                n_metrics: 2
+            }
+        );
+        assert!(StubProgram::parse("HloModule jit_step").is_none());
+    }
+
+    #[test]
+    fn stub_program_executes() {
+        let prog = StubProgram::Affine {
+            scale: 2.0,
+            bias: 1.0,
+            n_state: 1,
+            n_metrics: 2,
+        };
+        let args = vec![Literal::vec1(&[1f32, 3.0]), Literal::scalar(10f32)];
+        let outs = run_prog(&prog, &args).unwrap();
+        assert_eq!(outs.len(), 3);
+        let st = outs[0].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+        assert_eq!(st, vec![3.0, 7.0]);
+        // S = 1*mean([1,3]) + 2*mean([10]) = 2 + 20 = 22
+        let m1 = outs[1].to_literal_sync().unwrap().to_vec::<f32>().unwrap()[0];
+        let m2 = outs[2].to_literal_sync().unwrap().to_vec::<f32>().unwrap()[0];
+        assert_eq!(m1, 22.0);
+        assert_eq!(m2, 44.0);
+    }
+
+    /// Donating a sole-owner buffer updates the payload in place (same
+    /// allocation in the output, `donated` counted, memoized mean
+    /// refreshed so the next step's metrics see the new values).
+    #[test]
+    fn donation_mutates_in_place_when_sole_owner() {
+        let prog = StubProgram::Affine {
+            scale: 2.0,
+            bias: 0.0,
+            n_state: 1,
+            n_metrics: 1,
+        };
+        let pool = BufferPool::new();
+        let client = PjRtClient::cpu().unwrap();
+        let state = client
+            .buffer_from_host_literal(&Literal::vec1(&[1f32, 3.0]))
+            .unwrap();
+        let knob = client.buffer_from_host_literal(&Literal::scalar(10f32)).unwrap();
+        // remember the allocation by address only — holding an Arc
+        // clone here would pin the payload and defeat the donation
+        let BufRepr::Arr(p) = &state.repr else { panic!() };
+        let p_in: *const Payload = Arc::as_ptr(p);
+        let mut stats = ExecStats::default();
+        let mut outs = prog
+            .run(
+                vec![ExecInput::donate(state), ExecInput::borrow(&knob)],
+                &pool,
+                &mut stats,
+                &ExecOptions::default(),
+            )
+            .unwrap();
+        assert_eq!((stats.donated, stats.fallback_copied), (1, 0));
+        let BufRepr::Arr(p_out) = &outs[0].repr else { panic!() };
+        assert_eq!(Arc::as_ptr(p_out), p_in, "donation must reuse the allocation");
+        assert_eq!(
+            outs[0].to_literal_sync().unwrap().to_vec::<f32>().unwrap(),
+            vec![2.0, 6.0]
+        );
+        // S = 1*mean([1,3]) + 2*mean([10]) = 22, computed pre-mutation
+        assert_eq!(
+            outs[1].to_literal_sync().unwrap().to_vec::<f32>().unwrap()[0],
+            22.0
+        );
+        // second step donating the output: mean memo must have been
+        // reset by the in-place update — S = 1*mean([2,6]) + 2*10 = 24
+        let state2 = outs.remove(0);
+        let mut stats2 = ExecStats::default();
+        let outs2 = prog
+            .run(
+                vec![ExecInput::donate(state2), ExecInput::borrow(&knob)],
+                &pool,
+                &mut stats2,
+                &ExecOptions::default(),
+            )
+            .unwrap();
+        assert_eq!(stats2.donated, 1);
+        assert_eq!(
+            outs2[1].to_literal_sync().unwrap().to_vec::<f32>().unwrap()[0],
+            24.0
+        );
+    }
+
+    /// A donated buffer whose payload is still shared (a clone exists)
+    /// must fall back to a copy: the clone's contents survive bitwise.
+    #[test]
+    fn donation_falls_back_when_payload_shared() {
+        let prog = StubProgram::Affine {
+            scale: 2.0,
+            bias: 0.0,
+            n_state: 1,
+            n_metrics: 0,
+        };
+        let pool = BufferPool::new();
+        let client = PjRtClient::cpu().unwrap();
+        let state = client
+            .buffer_from_host_literal(&Literal::vec1(&[1f32, 3.0]))
+            .unwrap();
+        let pinned = state.clone(); // buffer-level alias
+        let mut stats = ExecStats::default();
+        let outs = prog
+            .run(
+                vec![ExecInput::donate(state)],
+                &pool,
+                &mut stats,
+                &ExecOptions::default(),
+            )
+            .unwrap();
+        assert_eq!((stats.donated, stats.fallback_copied), (0, 1));
+        assert_eq!(stats.allocated, 1);
+        assert_eq!(
+            outs[0].to_literal_sync().unwrap().to_vec::<f32>().unwrap(),
+            vec![2.0, 6.0]
+        );
+        assert_eq!(
+            pinned.to_literal_sync().unwrap().to_vec::<f32>().unwrap(),
+            vec![1.0, 3.0],
+            "pinned payload mutated by a fallback copy"
+        );
+    }
+
+    #[test]
+    fn init_stub_is_seed_deterministic() {
+        let prog = StubProgram::Init {
+            dims: vec![vec![2, 3], vec![4]],
+        };
+        let a = run_prog(&prog, &[Literal::scalar(7i32)]).unwrap();
+        let b = run_prog(&prog, &[Literal::scalar(7i32)]).unwrap();
+        let c = run_prog(&prog, &[Literal::scalar(8i32)]).unwrap();
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[0].array_shape().unwrap().dims(), &[2, 3]);
+        let va = a[0].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+        let vb = b[0].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+        let vc = c[0].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+        assert_eq!(va, vb);
+        assert_ne!(va, vc);
+        assert!(va.iter().all(|v| (-0.5..=0.5).contains(v)));
+    }
+
+    /// The whole point of `evalchunks`: chunk `c` of one batched call
+    /// equals what the per-batch `affine` program returns for that
+    /// chunk's slice, bitwise.
+    #[test]
+    fn evalchunks_matches_per_batch_affine_bitwise() {
+        let state = Literal::vec1(&[0.25f32, -0.75, 0.5]);
+        let xs: Vec<f32> = (0..12).map(|i| i as f32 * 0.37 - 2.0).collect();
+        let ys: Vec<i32> = (0..6).map(|i| i % 4).collect();
+        let tau = Literal::scalar(0.66f32);
+        let batch = 2;
+        let chunked = StubProgram::EvalChunks {
+            batch,
+            x_arg: 1,
+            n_metrics: 2,
+        };
+        let x_all = Literal::vec1(&xs).reshape(&[6, 2]).unwrap();
+        let y_all = Literal::vec1(&ys);
+        let outs =
+            run_prog(&chunked, &[state.clone(), x_all, y_all, tau.clone()]).unwrap();
+        assert_eq!(outs.len(), 2);
+        let loss_v = outs[0].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+        let acc_v = outs[1].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+        assert_eq!(loss_v.len(), 3);
+        let per_batch = StubProgram::Affine {
+            scale: 1.0,
+            bias: 0.0,
+            n_state: 0,
+            n_metrics: 2,
+        };
+        for c in 0..3 {
+            let xc = Literal::vec1(&xs[c * batch * 2..(c + 1) * batch * 2])
+                .reshape(&[2, 2])
+                .unwrap();
+            let yc = Literal::vec1(&ys[c * batch..(c + 1) * batch]);
+            let m = run_prog(&per_batch, &[state.clone(), xc, yc, tau.clone()]).unwrap();
+            let l = m[0].to_literal_sync().unwrap().to_vec::<f32>().unwrap()[0];
+            let a = m[1].to_literal_sync().unwrap().to_vec::<f32>().unwrap()[0];
+            assert_eq!(loss_v[c].to_bits(), l.to_bits(), "chunk {c} loss");
+            assert_eq!(acc_v[c].to_bits(), a.to_bits(), "chunk {c} acc");
+        }
+    }
+
+    #[test]
+    fn evalchunks_rejects_ragged_rows() {
+        let prog = StubProgram::EvalChunks {
+            batch: 4,
+            x_arg: 0,
+            n_metrics: 1,
+        };
+        let x = Literal::vec1(&[0f32; 6]).reshape(&[6, 1]).unwrap();
+        let y = Literal::vec1(&[0i32; 6]);
+        assert!(run_prog(&prog, &[x, y]).is_err());
+    }
+}

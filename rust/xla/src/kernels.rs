@@ -1,0 +1,211 @@
+//! Chunked, autovectorizer-friendly inner loops over `&[f32]` /
+//! `&[i32]` slices — the compute kernels behind the stub programs.
+//!
+//! Two rules keep every kernel bitwise identical to the retained
+//! scalar reference path (the [`scalar`] submodule, selected by
+//! `ExecOptions::reference`):
+//!
+//! * The affine map `x * scale + bias` is elementwise: chunking only
+//!   changes how many elements the compiler maps per instruction,
+//!   never the expression a given element sees, so any chunk width is
+//!   bitwise-safe.
+//! * The mean/metric reductions accumulate into **one** sequential
+//!   `f64` accumulator, in slice order. That addition order is part of
+//!   the backend's bitwise contract ([`metric_mix`] mixes per-argument
+//!   means in argument order, and `evalchunks` must reproduce the
+//!   per-batch program's metrics bitwise); the chunking below
+//!   vectorizes the `f32 -> f64` conversions but never reassociates
+//!   the adds — a multi-accumulator reduction would change the bits.
+
+/// Chunk width of the fixed-width inner loop bodies: one AVX2 register
+/// of f32 lanes; narrower targets simply see an unrolled loop.
+pub(crate) const LANES: usize = 8;
+
+/// In-place affine map `x = x * scale + bias` — the donation fast
+/// path. Chunked so the compiler maps `LANES` elements per iteration.
+pub(crate) fn affine_in_place(v: &mut [f32], scale: f32, bias: f32) {
+    let mut chunks = v.chunks_exact_mut(LANES);
+    for c in &mut chunks {
+        for x in c.iter_mut() {
+            *x = *x * scale + bias;
+        }
+    }
+    for x in chunks.into_remainder() {
+        *x = *x * scale + bias;
+    }
+}
+
+/// Affine map appended onto a cleared output vector — the copying
+/// path. The fixed-width stack temporary keeps the hot loop free of
+/// `Vec` capacity checks so it autovectorizes.
+pub(crate) fn affine_extend(out: &mut Vec<f32>, src: &[f32], scale: f32, bias: f32) {
+    out.reserve(src.len());
+    let mut chunks = src.chunks_exact(LANES);
+    for c in &mut chunks {
+        let mut t = [0.0f32; LANES];
+        for (o, &x) in t.iter_mut().zip(c) {
+            *o = x * scale + bias;
+        }
+        out.extend_from_slice(&t);
+    }
+    for &x in chunks.remainder() {
+        out.push(x * scale + bias);
+    }
+}
+
+/// Mean of an f32 slice as f64. Single sequential accumulator: the
+/// addition order is frozen (see module docs); only the widening
+/// conversions run `LANES` at a time.
+pub(crate) fn mean_f32(v: &[f32]) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    let mut acc = 0.0f64;
+    let mut chunks = v.chunks_exact(LANES);
+    for c in &mut chunks {
+        let mut t = [0.0f64; LANES];
+        for (o, &x) in t.iter_mut().zip(c) {
+            *o = x as f64;
+        }
+        for &x in &t {
+            acc += x;
+        }
+    }
+    for &x in chunks.remainder() {
+        acc += x as f64;
+    }
+    acc / v.len() as f64
+}
+
+/// Mean of an i32 slice as f64 (same frozen addition order).
+pub(crate) fn mean_i32(v: &[i32]) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    let mut acc = 0.0f64;
+    let mut chunks = v.chunks_exact(LANES);
+    for c in &mut chunks {
+        let mut t = [0.0f64; LANES];
+        for (o, &x) in t.iter_mut().zip(c) {
+            *o = x as f64;
+        }
+        for &x in &t {
+            acc += x;
+        }
+    }
+    for &x in chunks.remainder() {
+        acc += x as f64;
+    }
+    acc / v.len() as f64
+}
+
+/// Weighted-mean mix of all (virtual) arguments, in argument order —
+/// the shared metric formula of `affine` and `evalchunks`. Addition
+/// order is part of the contract: `evalchunks` must reproduce it
+/// bitwise per chunk.
+pub(crate) fn metric_mix(means: impl Iterator<Item = f64>) -> f64 {
+    means
+        .enumerate()
+        .map(|(i, m)| (i + 1) as f64 * m)
+        .sum()
+}
+
+/// Deterministic seed-dependent fill for the `init` program.
+pub(crate) fn init_value(seed: i64, leaf: i64, k: i64) -> f32 {
+    let h = (seed
+        .wrapping_mul(1_000_003)
+        .wrapping_add(leaf.wrapping_mul(7_919))
+        .wrapping_add(k.wrapping_mul(104_729)))
+    .rem_euclid(997);
+    h as f32 / 997.0 - 0.5
+}
+
+/// The original per-element loops, retained verbatim as the scalar
+/// reference path (`ExecOptions::reference`). The equivalence tests
+/// assert the chunked kernels above are bitwise identical to these.
+pub(crate) mod scalar {
+    pub(crate) fn affine_in_place(v: &mut [f32], scale: f32, bias: f32) {
+        for x in v.iter_mut() {
+            *x = *x * scale + bias;
+        }
+    }
+
+    pub(crate) fn affine_extend(out: &mut Vec<f32>, src: &[f32], scale: f32, bias: f32) {
+        out.extend(src.iter().map(|&x| x * scale + bias));
+    }
+
+    pub(crate) fn mean_f32(v: &[f32]) -> f64 {
+        if v.is_empty() {
+            return 0.0;
+        }
+        v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64
+    }
+
+    pub(crate) fn mean_i32(v: &[i32]) -> f64 {
+        if v.is_empty() {
+            return 0.0;
+        }
+        v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic pseudo-random fill exercising the full f32 range
+    /// of interest (mixed signs, non-dyadic values).
+    fn data(n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| ((i as f32 * 0.731).sin() * 3.7) + (i % 13) as f32 * 0.011)
+            .collect()
+    }
+
+    /// The chunked affine kernels are bitwise identical to the scalar
+    /// reference for every length around the LANES boundaries.
+    #[test]
+    fn affine_kernels_match_scalar_bitwise() {
+        for n in [0, 1, 7, 8, 9, 16, 31, 257] {
+            let src = data(n);
+            let (mut a, mut b) = (src.clone(), src.clone());
+            affine_in_place(&mut a, 0.999, 0.0005);
+            scalar::affine_in_place(&mut b, 0.999, 0.0005);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&a), bits(&b), "in-place len {n}");
+            let (mut oa, mut ob) = (Vec::new(), Vec::new());
+            affine_extend(&mut oa, &src, -1.25, 0.75);
+            scalar::affine_extend(&mut ob, &src, -1.25, 0.75);
+            assert_eq!(bits(&oa), bits(&ob), "extend len {n}");
+        }
+    }
+
+    /// The chunked means keep the scalar reference's exact f64
+    /// addition order, so they are bitwise identical for any length.
+    #[test]
+    fn mean_kernels_match_scalar_bitwise() {
+        for n in [0, 1, 7, 8, 9, 63, 64, 65, 1000] {
+            let v = data(n);
+            assert_eq!(
+                mean_f32(&v).to_bits(),
+                scalar::mean_f32(&v).to_bits(),
+                "f32 mean len {n}"
+            );
+            let w: Vec<i32> = (0..n as i32).map(|i| i * 37 - 1000).collect();
+            assert_eq!(
+                mean_i32(&w).to_bits(),
+                scalar::mean_i32(&w).to_bits(),
+                "i32 mean len {n}"
+            );
+        }
+    }
+
+    #[test]
+    fn init_value_stays_in_range() {
+        for s in 0..4 {
+            for k in 0..100 {
+                let v = init_value(s, 3, k);
+                assert!((-0.5..=0.5).contains(&v));
+            }
+        }
+    }
+}

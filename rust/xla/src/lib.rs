@@ -34,16 +34,30 @@
 //!   allocating fresh; [`ExecStats`] counts all four outcomes. This is
 //!   the exact seam native PJRT input aliasing will later plug into.
 //!
-//! Donation never changes numerics: the in-place loop evaluates the
-//! same `x * scale + bias` expression as the copying path, and all
-//! argument reductions happen *before* any payload is mutated, so
-//! donated, pooled and copied runs are bitwise identical.
+//! The execution core itself is split across three modules: `kernels`
+//! holds the chunked, autovectorizer-friendly slice loops (plus the
+//! retained scalar reference path), `pool` holds the [`BufferPool`]
+//! and the deterministic [`ThreadPool`] (`MIXPREC_XLA_THREADS`), and
+//! `exec` fuses them into the stub-program dispatch: one pass over the
+//! arguments produces every metric, and independent state leaves /
+//! eval chunks run in parallel with slot-ordered results.
+//!
+//! Neither donation, vectorization, threading nor fusion changes
+//! numerics: every path evaluates the same elementwise expressions and
+//! the same sequentially-ordered f64 reductions, so donated, pooled,
+//! copied, threaded and sequential runs are all bitwise identical.
 
-use std::collections::HashMap;
 use std::fmt;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, OnceLock, PoisonError};
+use std::sync::{Arc, OnceLock};
+
+mod exec;
+mod kernels;
+mod pool;
+
+pub use exec::{ExecOptions, ExecStats, StubProgram};
+pub use pool::{configured_threads, BufferPool, PoolStats, ThreadPool};
 
 pub type Result<T> = std::result::Result<T, Error>;
 
@@ -79,7 +93,7 @@ impl From<std::io::Error> for Error {
     }
 }
 
-fn err(msg: impl Into<String>) -> Error {
+pub(crate) fn err(msg: impl Into<String>) -> Error {
     Error::Msg(msg.into())
 }
 
@@ -142,21 +156,21 @@ pub enum Data {
 }
 
 impl Data {
-    fn len(&self) -> usize {
+    pub(crate) fn len(&self) -> usize {
         match self {
             Data::F32(v) => v.len(),
             Data::I32(v) => v.len(),
         }
     }
 
-    fn ty(&self) -> ElementType {
+    pub(crate) fn ty(&self) -> ElementType {
         match self {
             Data::F32(_) => ElementType::F32,
             Data::I32(_) => ElementType::S32,
         }
     }
 
-    fn clear(&mut self) {
+    pub(crate) fn clear(&mut self) {
         match self {
             Data::F32(v) => v.clear(),
             Data::I32(v) => v.clear(),
@@ -284,20 +298,15 @@ impl Literal {
 
     /// Mean of all elements as f64 (stub-program metric helper).
     /// Uncached; stub programs go through [`Payload::mean`], which
-    /// memoizes per device allocation.
+    /// memoizes per device allocation. The chunked kernels keep the
+    /// f64 addition order the scalar reduction used, so this stays
+    /// bitwise stable across backend revisions.
     fn raw_mean(&self) -> f64 {
         match self {
-            Literal::Array { data, .. } => {
-                let n = data.len();
-                if n == 0 {
-                    return 0.0;
-                }
-                let sum: f64 = match data {
-                    Data::F32(v) => v.iter().map(|&x| x as f64).sum(),
-                    Data::I32(v) => v.iter().map(|&x| x as f64).sum(),
-                };
-                sum / n as f64
-            }
+            Literal::Array { data, .. } => match data {
+                Data::F32(v) => kernels::mean_f32(v),
+                Data::I32(v) => kernels::mean_i32(v),
+            },
             Literal::Tuple(_) => 0.0,
         }
     }
@@ -315,12 +324,12 @@ impl Literal {
 /// serve a stale reduction.
 #[derive(Debug)]
 pub struct Payload {
-    lit: Literal,
+    pub(crate) lit: Literal,
     mean: OnceLock<f64>,
 }
 
 impl Payload {
-    fn new(lit: Literal) -> Payload {
+    pub(crate) fn new(lit: Literal) -> Payload {
         Payload {
             lit,
             mean: OnceLock::new(),
@@ -334,694 +343,27 @@ impl Payload {
 
     /// Memoized mean of all elements (computed on first use per
     /// allocation; bitwise identical to the uncached reduction).
-    fn mean(&self) -> f64 {
+    pub(crate) fn mean(&self) -> f64 {
         *self.mean.get_or_init(|| self.lit.raw_mean())
     }
 
     /// In-place `x * scale + bias` over an f32 array (identity for
     /// i32) — the donation fast path. Evaluates the exact expression
-    /// the copying path maps, so results are bitwise identical. Resets
-    /// the memoized mean: the payload's contents changed.
-    fn affine_in_place(&mut self, scale: f32, bias: f32) {
+    /// the copying path maps (chunked kernel, or the scalar reference
+    /// loop when `reference`), so results are bitwise identical.
+    /// Resets the memoized mean: the payload's contents changed.
+    pub(crate) fn affine_in_place(&mut self, scale: f32, bias: f32, reference: bool) {
         if let Literal::Array {
             data: Data::F32(v), ..
         } = &mut self.lit
         {
-            for x in v.iter_mut() {
-                *x = *x * scale + bias;
+            if reference {
+                kernels::scalar::affine_in_place(v, scale, bias);
+            } else {
+                kernels::affine_in_place(v, scale, bias);
             }
         }
         self.mean = OnceLock::new();
-    }
-}
-
-// ---------------------------------------------------------------------------
-// buffer pool
-// ---------------------------------------------------------------------------
-
-/// Retired allocations kept per size class; beyond this the retiree is
-/// dropped (counted in [`PoolStats::discarded`]) so a long host-
-/// resident run cannot grow the pool without bound.
-const POOL_CLASS_CAP: usize = 32;
-
-/// Default global byte budget of retained allocations (all size
-/// classes together). The per-class entry cap alone lets retained
-/// memory scale with leaf size (32 entries of an MB-scale leaf is tens
-/// of MB per class), so the pool also enforces this byte ceiling —
-/// generous for the stub fixture's KB-scale leaves, bounded for a
-/// native backend. Override with `MIXPREC_POOL_BUDGET_BYTES`.
-const POOL_DEFAULT_BUDGET_BYTES: u64 = 16 * 1024 * 1024;
-
-fn pool_budget_from_env() -> u64 {
-    std::env::var("MIXPREC_POOL_BUDGET_BYTES")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(POOL_DEFAULT_BUDGET_BYTES)
-}
-
-struct PoolInner {
-    classes: HashMap<(ElementType, usize), Vec<Data>>,
-    /// Payload bytes currently retained across every class (kept in
-    /// lockstep with `classes` under the one mutex).
-    held_bytes: u64,
-}
-
-/// Size-classed pool of dead device allocations. Outputs that cannot
-/// be donated draw from here before allocating fresh; the runtime
-/// retires displaced section buffers and downloaded metric buffers
-/// back into it.
-///
-/// Safety invariant: only payloads with **no** live handle ever enter
-/// the pool — [`BufferPool::retire`] refuses any buffer whose payload
-/// `Arc` is still shared (and the runtime's retire helper applies the
-/// same refcount-1 rule to its outer `Arc` first), so a recycled
-/// buffer can never alias a snapshot, cache entry, or in-flight
-/// argument.
-///
-/// Retention is bounded two ways: per class by entry count
-/// ([`POOL_CLASS_CAP`]) and globally by a byte budget (default
-/// [`POOL_DEFAULT_BUDGET_BYTES`], env-tunable via
-/// `MIXPREC_POOL_BUDGET_BYTES`). When admitting a retiree would exceed
-/// the budget, the pool evicts retirees from its **largest** size
-/// classes first (counted in [`PoolStats::evicted`]) — small hot
-/// classes stay populated while the big, rarely-reacquired retirees
-/// that dominate retained memory go first.
-pub struct BufferPool {
-    inner: Mutex<PoolInner>,
-    budget_bytes: u64,
-    retired: AtomicU64,
-    refused: AtomicU64,
-    discarded: AtomicU64,
-    evicted: AtomicU64,
-    hits: AtomicU64,
-    misses: AtomicU64,
-}
-
-impl Default for BufferPool {
-    fn default() -> Self {
-        BufferPool::with_budget(pool_budget_from_env())
-    }
-}
-
-/// Cumulative pool counters (monotonic).
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
-pub struct PoolStats {
-    /// Dead allocations accepted into the pool.
-    pub retired: u64,
-    /// Retire attempts refused because the payload `Arc` was still
-    /// shared — the pool's own (inner-level) refcount-1 check. The
-    /// runtime's outer-`Arc` check (`retire_arc`) refuses *before*
-    /// reaching the pool and is not counted here.
-    pub refused: u64,
-    /// Dead allocations dropped because their size class was full, or
-    /// because they alone would not fit the byte budget.
-    pub discarded: u64,
-    /// Previously-retained allocations dropped (largest classes first)
-    /// to admit a new retiree under the byte budget.
-    pub evicted: u64,
-    /// Output allocations served from the pool.
-    pub hits: u64,
-    /// Acquire attempts that found the class empty.
-    pub misses: u64,
-    /// Payload bytes currently retained (gauge, not monotonic).
-    pub held_bytes: u64,
-}
-
-fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(PoisonError::into_inner)
-}
-
-impl BufferPool {
-    pub fn new() -> Self {
-        BufferPool::default()
-    }
-
-    /// A pool with an explicit global byte budget (tests, or embedders
-    /// that size retention to their own working set).
-    pub fn with_budget(budget_bytes: u64) -> Self {
-        BufferPool {
-            inner: Mutex::new(PoolInner {
-                classes: HashMap::new(),
-                held_bytes: 0,
-            }),
-            budget_bytes,
-            retired: AtomicU64::new(0),
-            refused: AtomicU64::new(0),
-            discarded: AtomicU64::new(0),
-            evicted: AtomicU64::new(0),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-        }
-    }
-
-    /// The configured global byte budget.
-    pub fn budget_bytes(&self) -> u64 {
-        self.budget_bytes
-    }
-
-    /// Retire a dead buffer's allocation for reuse. Accepts only
-    /// exclusively-owned array payloads (refcount 1); shared payloads
-    /// are refused — the caller keeps nothing either way, but a
-    /// refused payload stays alive through its other handles. Tuple
-    /// buffers retire element-wise; returns whether anything entered
-    /// the pool.
-    pub fn retire(&self, buf: PjRtBuffer) -> bool {
-        match buf.repr {
-            BufRepr::Arr(arc) => match Arc::try_unwrap(arc) {
-                Ok(payload) => match payload.lit {
-                    Literal::Array { data, .. } => self.retire_data(data),
-                    Literal::Tuple(_) => false,
-                },
-                Err(_) => {
-                    self.refused.fetch_add(1, Ordering::Relaxed);
-                    false
-                }
-            },
-            BufRepr::Tup(elems) => {
-                let mut any = false;
-                for e in elems {
-                    any |= self.retire(e);
-                }
-                any
-            }
-        }
-    }
-
-    fn retire_data(&self, data: Data) -> bool {
-        let key = (data.ty(), data.len());
-        let bytes = (key.1 * 4) as u64;
-        if key.1 == 0 {
-            return false;
-        }
-        // an allocation larger than the whole budget can never be
-        // retained — drop it outright instead of emptying the pool
-        if bytes > self.budget_bytes {
-            self.discarded.fetch_add(1, Ordering::Relaxed);
-            return false;
-        }
-        let mut inner = lock(&self.inner);
-        if inner
-            .classes
-            .get(&key)
-            .is_some_and(|b| b.len() >= POOL_CLASS_CAP)
-        {
-            self.discarded.fetch_add(1, Ordering::Relaxed);
-            return false;
-        }
-        // byte budget: evict retirees from the largest classes first
-        // until the newcomer fits (terminates: held <= budget and
-        // bytes <= budget, and every eviction strictly shrinks held)
-        while inner.held_bytes + bytes > self.budget_bytes {
-            let largest = inner
-                .classes
-                .iter()
-                .filter(|(_, b)| !b.is_empty())
-                .map(|(&k, _)| k)
-                .max_by_key(|&(_, n)| n)
-                .expect("held_bytes > 0 implies a non-empty class");
-            let victim = inner
-                .classes
-                .get_mut(&largest)
-                .and_then(Vec::pop)
-                .expect("class chosen non-empty");
-            inner.held_bytes -= (victim.len() * 4) as u64;
-            self.evicted.fetch_add(1, Ordering::Relaxed);
-        }
-        inner.classes.entry(key).or_default().push(data);
-        inner.held_bytes += bytes;
-        self.retired.fetch_add(1, Ordering::Relaxed);
-        true
-    }
-
-    /// Pop a retired allocation of exactly this class, cleared (len 0,
-    /// capacity `n`), ready to be refilled.
-    pub(crate) fn acquire(&self, ty: ElementType, n: usize) -> Option<Data> {
-        let mut inner = lock(&self.inner);
-        let popped = inner.classes.get_mut(&(ty, n)).and_then(Vec::pop);
-        match popped {
-            Some(mut d) => {
-                inner.held_bytes -= (d.len() * 4) as u64;
-                drop(inner);
-                d.clear();
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                Some(d)
-            }
-            None => {
-                drop(inner);
-                self.misses.fetch_add(1, Ordering::Relaxed);
-                None
-            }
-        }
-    }
-
-    /// Number of allocations currently pooled (tests/diagnostics).
-    pub fn pooled(&self) -> usize {
-        lock(&self.inner).classes.values().map(Vec::len).sum()
-    }
-
-    pub fn stats(&self) -> PoolStats {
-        PoolStats {
-            retired: self.retired.load(Ordering::Relaxed),
-            refused: self.refused.load(Ordering::Relaxed),
-            discarded: self.discarded.load(Ordering::Relaxed),
-            evicted: self.evicted.load(Ordering::Relaxed),
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            held_bytes: lock(&self.inner).held_bytes,
-        }
-    }
-}
-
-/// Per-execute allocation accounting for [`execute_d`]
-/// (`execute_d` = [`PjRtLoadedExecutable::execute_d`]). One count per
-/// output leaf: exactly one of `donated` / `pooled` / `allocated`
-/// fires per leaf, plus `fallback_copied` when donation was requested
-/// but the payload was shared at the buffer level.
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
-pub struct ExecStats {
-    /// Output leaves that needed a fresh device allocation.
-    pub allocated: u64,
-    /// Donated inputs updated in place (zero allocation, zero copy).
-    pub donated: u64,
-    /// Output leaves served from the [`BufferPool`].
-    pub pooled: u64,
-    /// Donation requests that fell back to a copy because the payload
-    /// `Arc` was shared (buffer-level aliasing; the runtime's own
-    /// snapshot pins are counted separately, before the backend).
-    pub fallback_copied: u64,
-}
-
-// ---------------------------------------------------------------------------
-// stub programs
-// ---------------------------------------------------------------------------
-
-/// A deterministic program the host backend can actually run, parsed
-/// from the first `// STUB:` line of an HLO text file. Three kinds:
-///
-/// ```text
-/// // STUB: affine scale=0.995 bias=0.001 state=8 metrics=3
-/// // STUB: init dims=3x3x1x16,16,16x4
-/// // STUB: evalchunks batch=8 x=8 metrics=2
-/// ```
-///
-/// * `affine` takes the first `state` arguments as the new state
-///   (`x * scale + bias` elementwise for f32, identity for i32) and
-///   appends `metrics` scalar f32 outputs, each `(j+1) * S` where
-///   `S = sum_i (i+1) * mean(arg_i)` over *all* arguments — so any
-///   permutation or omission of inputs changes the metrics and is
-///   caught by the equivalence tests. A donated state argument is
-///   updated in place when exclusively owned (all reductions happen
-///   first, so metrics see the pre-step values either way).
-/// * `init` takes a scalar seed and returns one deterministic
-///   seed-dependent f32 array per `dims` entry (the state factory
-///   behind `DeviceState::init` on the fixture).
-/// * `evalchunks` is the multi-batch eval program: argument `x` (f32,
-///   leading dim `n`) and the following argument `y` are split into
-///   `n / batch` chunks, every other argument is broadcast, and each
-///   metric comes back as an `[n_chunks]` vector whose element `c` is
-///   exactly what `affine` would have produced for chunk `c` alone —
-///   per-chunk reductions stay on device, bitwise identical to the
-///   per-batch dispatch loop.
-#[derive(Debug, Clone, PartialEq)]
-pub enum StubProgram {
-    Affine {
-        scale: f32,
-        bias: f32,
-        n_state: usize,
-        n_metrics: usize,
-    },
-    Init {
-        dims: Vec<Vec<i64>>,
-    },
-    EvalChunks {
-        batch: usize,
-        x_arg: usize,
-        n_metrics: usize,
-    },
-}
-
-/// Weighted-mean mix of all (virtual) arguments, in argument order —
-/// the shared metric formula of `affine` and `evalchunks`. Addition
-/// order is part of the contract: `evalchunks` must reproduce it
-/// bitwise per chunk.
-fn metric_mix(means: impl Iterator<Item = f64>) -> f64 {
-    means
-        .enumerate()
-        .map(|(i, m)| (i + 1) as f64 * m)
-        .sum()
-}
-
-fn mean_f32(v: &[f32]) -> f64 {
-    if v.is_empty() {
-        return 0.0;
-    }
-    v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64
-}
-
-fn mean_i32(v: &[i32]) -> f64 {
-    if v.is_empty() {
-        return 0.0;
-    }
-    v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64
-}
-
-/// Deterministic seed-dependent fill for the `init` program.
-fn init_value(seed: i64, leaf: i64, k: i64) -> f32 {
-    let h = (seed
-        .wrapping_mul(1_000_003)
-        .wrapping_add(leaf.wrapping_mul(7_919))
-        .wrapping_add(k.wrapping_mul(104_729)))
-    .rem_euclid(997);
-    h as f32 / 997.0 - 0.5
-}
-
-/// Pool-first f32 output allocation: recycle a same-class retired
-/// buffer when one exists, else allocate fresh. Either way the result
-/// is empty with capacity `n`.
-fn take_f32(pool: &BufferPool, stats: &mut ExecStats, n: usize) -> Vec<f32> {
-    match pool.acquire(ElementType::F32, n) {
-        Some(Data::F32(v)) => {
-            stats.pooled += 1;
-            v
-        }
-        _ => {
-            stats.allocated += 1;
-            Vec::with_capacity(n)
-        }
-    }
-}
-
-/// Pool-first i32 output allocation (see [`take_f32`]).
-fn take_i32(pool: &BufferPool, stats: &mut ExecStats, n: usize) -> Vec<i32> {
-    match pool.acquire(ElementType::S32, n) {
-        Some(Data::I32(v)) => {
-            stats.pooled += 1;
-            v
-        }
-        _ => {
-            stats.allocated += 1;
-            Vec::with_capacity(n)
-        }
-    }
-}
-
-/// The copying affine step for one leaf (borrowed input, or donation
-/// defeated by sharing): pool-first output, same arithmetic as the
-/// in-place path.
-fn affine_copy(
-    p: &Payload,
-    scale: f32,
-    bias: f32,
-    pool: &BufferPool,
-    stats: &mut ExecStats,
-) -> PjRtBuffer {
-    let Literal::Array { dims, data } = &p.lit else {
-        unreachable!("affine args validated as arrays before dispatch");
-    };
-    let data = match data {
-        Data::F32(v) => {
-            let mut o = take_f32(pool, stats, v.len());
-            o.extend(v.iter().map(|&x| x * scale + bias));
-            Data::F32(o)
-        }
-        Data::I32(v) => {
-            let mut o = take_i32(pool, stats, v.len());
-            o.extend_from_slice(v);
-            Data::I32(o)
-        }
-    };
-    PjRtBuffer::from_literal(Literal::Array {
-        dims: dims.clone(),
-        data,
-    })
-}
-
-/// Pool-first scalar f32 output.
-fn scalar_out(pool: &BufferPool, stats: &mut ExecStats, v: f32) -> PjRtBuffer {
-    let mut o = take_f32(pool, stats, 1);
-    o.push(v);
-    PjRtBuffer::from_literal(Literal::Array {
-        dims: Vec::new(),
-        data: Data::F32(o),
-    })
-}
-
-impl StubProgram {
-    fn parse(line: &str) -> Option<StubProgram> {
-        let rest = line.trim().strip_prefix("//")?.trim().strip_prefix("STUB:")?;
-        let mut words = rest.split_whitespace();
-        match words.next()? {
-            "affine" => {
-                let (mut scale, mut bias, mut n_state, mut n_metrics) = (1.0, 0.0, 0, 0);
-                for w in words {
-                    let (key, val) = w.split_once('=')?;
-                    match key {
-                        "scale" => scale = val.parse().ok()?,
-                        "bias" => bias = val.parse().ok()?,
-                        "state" => n_state = val.parse().ok()?,
-                        "metrics" => n_metrics = val.parse().ok()?,
-                        _ => return None,
-                    }
-                }
-                Some(StubProgram::Affine {
-                    scale,
-                    bias,
-                    n_state,
-                    n_metrics,
-                })
-            }
-            "init" => {
-                let mut dims = Vec::new();
-                for w in words {
-                    let (key, val) = w.split_once('=')?;
-                    if key != "dims" {
-                        return None;
-                    }
-                    for entry in val.split(',') {
-                        if entry.is_empty() {
-                            dims.push(Vec::new()); // scalar leaf
-                            continue;
-                        }
-                        let mut shape = Vec::new();
-                        for d in entry.split('x') {
-                            shape.push(d.parse().ok()?);
-                        }
-                        dims.push(shape);
-                    }
-                }
-                Some(StubProgram::Init { dims })
-            }
-            "evalchunks" => {
-                let (mut batch, mut x_arg, mut n_metrics) = (1, 0, 0);
-                for w in words {
-                    let (key, val) = w.split_once('=')?;
-                    match key {
-                        "batch" => batch = val.parse().ok()?,
-                        "x" => x_arg = val.parse().ok()?,
-                        "metrics" => n_metrics = val.parse().ok()?,
-                        _ => return None,
-                    }
-                }
-                Some(StubProgram::EvalChunks {
-                    batch,
-                    x_arg,
-                    n_metrics,
-                })
-            }
-            _ => None,
-        }
-    }
-
-    fn run(
-        &self,
-        args: Vec<ExecInput>,
-        pool: &BufferPool,
-        stats: &mut ExecStats,
-    ) -> Result<Vec<PjRtBuffer>> {
-        match self {
-            StubProgram::Affine {
-                scale,
-                bias,
-                n_state,
-                n_metrics,
-            } => Self::run_affine(args, *scale, *bias, *n_state, *n_metrics, pool, stats),
-            StubProgram::Init { dims } => Self::run_init(&args, dims, pool, stats),
-            StubProgram::EvalChunks {
-                batch,
-                x_arg,
-                n_metrics,
-            } => Self::run_evalchunks(&args, *batch, *x_arg, *n_metrics, pool, stats),
-        }
-    }
-
-    fn run_affine(
-        args: Vec<ExecInput>,
-        scale: f32,
-        bias: f32,
-        n_state: usize,
-        n_metrics: usize,
-        pool: &BufferPool,
-        stats: &mut ExecStats,
-    ) -> Result<Vec<PjRtBuffer>> {
-        if args.len() < n_state {
-            return Err(err(format!(
-                "stub program wants >= {n_state} args, got {}",
-                args.len()
-            )));
-        }
-        // Validate every argument and compute every reduction *before*
-        // any in-place mutation: a donated leaf's payload is an input
-        // to the metric mix, and a bad argument must fail the whole
-        // call without having touched any donated payload.
-        let mut means = Vec::with_capacity(args.len());
-        for a in &args {
-            means.push(a.array_payload()?.mean());
-        }
-        let s = metric_mix(means.into_iter());
-        let mut outs = Vec::with_capacity(n_state + n_metrics);
-        for a in args.into_iter().take(n_state) {
-            outs.push(match a {
-                ExecInput::Donate(buf) => match buf.repr {
-                    BufRepr::Arr(mut arc) => match Arc::get_mut(&mut arc) {
-                        Some(p) => {
-                            // sole owner: the output *is* the input
-                            // allocation, updated in place
-                            p.affine_in_place(scale, bias);
-                            stats.donated += 1;
-                            PjRtBuffer {
-                                repr: BufRepr::Arr(arc),
-                            }
-                        }
-                        None => {
-                            // payload shared at the buffer level:
-                            // silently fall back to a copy
-                            stats.fallback_copied += 1;
-                            affine_copy(&arc, scale, bias, pool, stats)
-                        }
-                    },
-                    BufRepr::Tup(_) => unreachable!("validated as array above"),
-                },
-                ExecInput::Borrow(p) => affine_copy(&p, scale, bias, pool, stats),
-            });
-        }
-        for j in 0..n_metrics {
-            let v = ((j + 1) as f64 * s) as f32;
-            outs.push(scalar_out(pool, stats, v));
-        }
-        Ok(outs)
-    }
-
-    fn run_init(
-        args: &[ExecInput],
-        dims: &[Vec<i64>],
-        pool: &BufferPool,
-        stats: &mut ExecStats,
-    ) -> Result<Vec<PjRtBuffer>> {
-        let seed = match args.first() {
-            Some(a) => match &a.array_payload()?.lit {
-                Literal::Array {
-                    data: Data::I32(v), ..
-                } if !v.is_empty() => v[0] as i64,
-                Literal::Array {
-                    data: Data::F32(v), ..
-                } if !v.is_empty() => v[0] as i64,
-                _ => return Err(err("init stub wants a scalar seed argument")),
-            },
-            None => return Err(err("init stub wants a scalar seed argument")),
-        };
-        let mut outs = Vec::with_capacity(dims.len());
-        for (leaf, shape) in dims.iter().enumerate() {
-            let n: i64 = shape.iter().product::<i64>().max(1);
-            let mut data = take_f32(pool, stats, n as usize);
-            data.extend((0..n).map(|k| init_value(seed, leaf as i64, k)));
-            outs.push(PjRtBuffer::from_literal(Literal::Array {
-                dims: shape.clone(),
-                data: Data::F32(data),
-            }));
-        }
-        Ok(outs)
-    }
-
-    fn run_evalchunks(
-        args: &[ExecInput],
-        batch: usize,
-        x_arg: usize,
-        n_metrics: usize,
-        pool: &BufferPool,
-        stats: &mut ExecStats,
-    ) -> Result<Vec<PjRtBuffer>> {
-        let y_arg = x_arg + 1;
-        if args.len() <= y_arg {
-            return Err(err(format!(
-                "evalchunks stub wants > {y_arg} args, got {}",
-                args.len()
-            )));
-        }
-        let (x_dims, x_data) = match &args[x_arg].array_payload()?.lit {
-            Literal::Array {
-                dims,
-                data: Data::F32(v),
-            } => (dims, v),
-            _ => return Err(err("evalchunks stub: x must be an f32 array")),
-        };
-        let y_data = match &args[y_arg].array_payload()?.lit {
-            Literal::Array {
-                data: Data::I32(v), ..
-            } => v,
-            _ => return Err(err("evalchunks stub: y must be an i32 array")),
-        };
-        let rows = *x_dims.first().unwrap_or(&0) as usize;
-        if batch == 0 || rows == 0 || rows % batch != 0 {
-            return Err(err(format!(
-                "evalchunks stub: {rows} rows not a multiple of batch {batch}"
-            )));
-        }
-        if y_data.len() != rows {
-            return Err(err("evalchunks stub: y rows != x rows"));
-        }
-        let feat = x_data.len() / rows;
-        let n_chunks = rows / batch;
-        // Broadcast-arg means are chunk-invariant *and* call-invariant
-        // for resident buffers: `Payload::mean` memoizes them per
-        // allocation, so repeated evals over the same split/masks skip
-        // the whole-tensor reductions entirely.
-        let mut bc_means = Vec::with_capacity(args.len());
-        for a in args {
-            bc_means.push(a.array_payload()?.mean());
-        }
-        // Build each per-metric vector individually: `vec![..; n]`
-        // clones its template and `Vec::clone` drops the capacity
-        // hint, which made every vector reallocate while growing.
-        let mut per_chunk: Vec<Vec<f32>> = (0..n_metrics)
-            .map(|_| take_f32(pool, stats, n_chunks))
-            .collect();
-        for c in 0..n_chunks {
-            let mx = mean_f32(&x_data[c * batch * feat..(c + 1) * batch * feat]);
-            let my = mean_i32(&y_data[c * batch..(c + 1) * batch]);
-            // same argument order (and therefore f64 addition order) as
-            // the per-batch affine program sees for this chunk
-            let s = metric_mix(args.iter().enumerate().map(|(i, _)| {
-                if i == x_arg {
-                    mx
-                } else if i == y_arg {
-                    my
-                } else {
-                    bc_means[i]
-                }
-            }));
-            for (j, v) in per_chunk.iter_mut().enumerate() {
-                v.push(((j + 1) as f64 * s) as f32);
-            }
-        }
-        Ok(per_chunk
-            .into_iter()
-            .map(|v| {
-                PjRtBuffer::from_literal(Literal::Array {
-                    dims: vec![n_chunks as i64],
-                    data: Data::F32(v),
-                })
-            })
-            .collect())
     }
 }
 
@@ -1094,6 +436,47 @@ impl PjRtClient {
     pub fn buffer_from_host_literal(&self, lit: &Literal) -> Result<PjRtBuffer> {
         Ok(PjRtBuffer::from_literal(lit.clone()))
     }
+
+    /// Copy a host literal into a "device" buffer whose backing
+    /// allocation is drawn from `pool` when a same-class retiree
+    /// exists — the upload mirror of the executable's pool-first
+    /// outputs. Per-step host arguments (batch slices, scalar knobs)
+    /// go through here so a steady-state step makes **zero** fresh
+    /// upload allocations: the runtime retires each consumed upload
+    /// buffer after the step and the next step re-acquires it.
+    /// Tuples (no single size class) fall back to a plain copy.
+    /// Accounted in [`PoolStats`] hits/misses, never in [`ExecStats`]
+    /// (whose output counters are regression-gated).
+    pub fn buffer_from_host_literal_pooled(
+        &self,
+        lit: &Literal,
+        pool: &BufferPool,
+    ) -> Result<PjRtBuffer> {
+        let Literal::Array { dims, data } = lit else {
+            return self.buffer_from_host_literal(lit);
+        };
+        let recycled = match (pool.acquire(data.ty(), data.len()), data) {
+            (Some(Data::F32(mut o)), Data::F32(v)) => {
+                o.extend_from_slice(v);
+                Some(Data::F32(o))
+            }
+            (Some(Data::I32(mut o)), Data::I32(v)) => {
+                o.extend_from_slice(v);
+                Some(Data::I32(o))
+            }
+            _ => None,
+        };
+        let data = match recycled {
+            Some(d) => d,
+            None => data.clone(),
+        };
+        Ok(PjRtBuffer {
+            repr: BufRepr::Arr(Arc::new(Payload::new(Literal::Array {
+                dims: dims.clone(),
+                data,
+            }))),
+        })
+    }
 }
 
 /// Total payload bytes `untuple` would have deep-copied before it went
@@ -1111,11 +494,11 @@ pub fn untuple_saved_bytes() -> u64 {
 /// splits without copying any payload.
 #[derive(Debug, Clone)]
 pub struct PjRtBuffer {
-    repr: BufRepr,
+    pub(crate) repr: BufRepr,
 }
 
 #[derive(Debug, Clone)]
-enum BufRepr {
+pub(crate) enum BufRepr {
     /// Dense array payload — the unit of donation / pooling / sharing.
     Arr(Arc<Payload>),
     /// Tuple of already-shared element buffers.
@@ -1123,7 +506,7 @@ enum BufRepr {
 }
 
 impl PjRtBuffer {
-    fn from_literal(lit: Literal) -> Self {
+    pub(crate) fn from_literal(lit: Literal) -> Self {
         match lit {
             Literal::Tuple(elems) => PjRtBuffer {
                 repr: BufRepr::Tup(elems.into_iter().map(PjRtBuffer::from_literal).collect()),
@@ -1229,7 +612,7 @@ impl ExecInput {
 
     /// The argument's array payload; errors on tuple inputs (stub
     /// programs take array args only) — checked before any mutation.
-    fn array_payload(&self) -> Result<&Payload> {
+    pub(crate) fn array_payload(&self) -> Result<&Payload> {
         let p = match self {
             ExecInput::Borrow(p) => p.as_ref(),
             ExecInput::Donate(b) => match &b.repr {
@@ -1254,11 +637,12 @@ impl PjRtLoadedExecutable {
         &self,
         args: Vec<ExecInput>,
         pool: &BufferPool,
+        opts: &ExecOptions,
     ) -> Result<(Vec<Vec<PjRtBuffer>>, ExecStats)> {
         match &self.stub {
             Some(prog) => {
                 let mut stats = ExecStats::default();
-                let outs = prog.run(args, pool, &mut stats)?;
+                let outs = prog.run(args, pool, &mut stats, opts)?;
                 Ok((vec![outs], stats))
             }
             None => Err(Error::Unsupported(format!(
@@ -1274,7 +658,11 @@ impl PjRtLoadedExecutable {
     pub fn execute<L: BufferArgument>(&self, args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
         let pool = BufferPool::new();
         Ok(self
-            .run_d(args.iter().map(ExecInput::borrow).collect(), &pool)?
+            .run_d(
+                args.iter().map(ExecInput::borrow).collect(),
+                &pool,
+                &ExecOptions::default(),
+            )?
             .0)
     }
 
@@ -1283,7 +671,11 @@ impl PjRtLoadedExecutable {
     pub fn execute_b<L: BufferArgument>(&self, args: &[&L]) -> Result<Vec<Vec<PjRtBuffer>>> {
         let pool = BufferPool::new();
         Ok(self
-            .run_d(args.iter().map(|a| ExecInput::borrow(*a)).collect(), &pool)?
+            .run_d(
+                args.iter().map(|a| ExecInput::borrow(*a)).collect(),
+                &pool,
+                &ExecOptions::default(),
+            )?
             .0)
     }
 
@@ -1292,25 +684,34 @@ impl PjRtLoadedExecutable {
     /// accounting returned alongside the outputs. Under native PJRT
     /// this maps to compile-time input/output aliasing plus a device
     /// allocator arena; the per-argument API is the seam that wiring
-    /// will reuse.
+    /// will reuse. Runs with default [`ExecOptions`] (configured
+    /// thread count, chunked kernels).
     pub fn execute_d(
         &self,
         args: Vec<ExecInput>,
         pool: &BufferPool,
     ) -> Result<(Vec<Vec<PjRtBuffer>>, ExecStats)> {
-        self.run_d(args, pool)
+        self.run_d(args, pool, &ExecOptions::default())
+    }
+
+    /// [`execute_d`](Self::execute_d) with explicit per-call
+    /// [`ExecOptions`]: thread-count overrides, the scalar reference
+    /// path, and forced parallelism for sub-threshold programs. The
+    /// equivalence tests sweep these; results are bitwise identical
+    /// across every option combination by construction.
+    pub fn execute_d_opts(
+        &self,
+        args: Vec<ExecInput>,
+        pool: &BufferPool,
+        opts: &ExecOptions,
+    ) -> Result<(Vec<Vec<PjRtBuffer>>, ExecStats)> {
+        self.run_d(args, pool, opts)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    fn run_prog(prog: &StubProgram, lits: &[Literal]) -> Result<Vec<PjRtBuffer>> {
-        let pool = BufferPool::new();
-        let mut stats = ExecStats::default();
-        prog.run(lits.iter().map(ExecInput::borrow).collect(), &pool, &mut stats)
-    }
 
     #[test]
     fn literal_roundtrip() {
@@ -1332,306 +733,6 @@ mod tests {
         assert_eq!(parts.len(), 2);
         // non-tuple decomposes into itself
         assert_eq!(s.clone().to_tuple().unwrap(), vec![s]);
-    }
-
-    #[test]
-    fn stub_directive_parses() {
-        let p = StubProgram::parse("// STUB: affine scale=0.5 bias=0.25 state=2 metrics=1")
-            .unwrap();
-        assert_eq!(
-            p,
-            StubProgram::Affine {
-                scale: 0.5,
-                bias: 0.25,
-                n_state: 2,
-                n_metrics: 1
-            }
-        );
-        let p = StubProgram::parse("// STUB: init dims=3x3x1x16,16,16x4").unwrap();
-        assert_eq!(
-            p,
-            StubProgram::Init {
-                dims: vec![vec![3, 3, 1, 16], vec![16], vec![16, 4]]
-            }
-        );
-        let p = StubProgram::parse("// STUB: evalchunks batch=8 x=5 metrics=2").unwrap();
-        assert_eq!(
-            p,
-            StubProgram::EvalChunks {
-                batch: 8,
-                x_arg: 5,
-                n_metrics: 2
-            }
-        );
-        assert!(StubProgram::parse("HloModule jit_step").is_none());
-    }
-
-    #[test]
-    fn stub_program_executes() {
-        let prog = StubProgram::Affine {
-            scale: 2.0,
-            bias: 1.0,
-            n_state: 1,
-            n_metrics: 2,
-        };
-        let args = vec![Literal::vec1(&[1f32, 3.0]), Literal::scalar(10f32)];
-        let outs = run_prog(&prog, &args).unwrap();
-        assert_eq!(outs.len(), 3);
-        let st = outs[0].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
-        assert_eq!(st, vec![3.0, 7.0]);
-        // S = 1*mean([1,3]) + 2*mean([10]) = 2 + 20 = 22
-        let m1 = outs[1].to_literal_sync().unwrap().to_vec::<f32>().unwrap()[0];
-        let m2 = outs[2].to_literal_sync().unwrap().to_vec::<f32>().unwrap()[0];
-        assert_eq!(m1, 22.0);
-        assert_eq!(m2, 44.0);
-    }
-
-    /// Donating a sole-owner buffer updates the payload in place (same
-    /// allocation in the output, `donated` counted, memoized mean
-    /// refreshed so the next step's metrics see the new values).
-    #[test]
-    fn donation_mutates_in_place_when_sole_owner() {
-        let prog = StubProgram::Affine {
-            scale: 2.0,
-            bias: 0.0,
-            n_state: 1,
-            n_metrics: 1,
-        };
-        let pool = BufferPool::new();
-        let client = PjRtClient::cpu().unwrap();
-        let state = client
-            .buffer_from_host_literal(&Literal::vec1(&[1f32, 3.0]))
-            .unwrap();
-        let knob = client.buffer_from_host_literal(&Literal::scalar(10f32)).unwrap();
-        // remember the allocation by address only — holding an Arc
-        // clone here would pin the payload and defeat the donation
-        let BufRepr::Arr(p) = &state.repr else { panic!() };
-        let p_in: *const Payload = Arc::as_ptr(p);
-        let mut stats = ExecStats::default();
-        let mut outs = prog
-            .run(
-                vec![ExecInput::donate(state), ExecInput::borrow(&knob)],
-                &pool,
-                &mut stats,
-            )
-            .unwrap();
-        assert_eq!((stats.donated, stats.fallback_copied), (1, 0));
-        let BufRepr::Arr(p_out) = &outs[0].repr else { panic!() };
-        assert_eq!(Arc::as_ptr(p_out), p_in, "donation must reuse the allocation");
-        assert_eq!(
-            outs[0].to_literal_sync().unwrap().to_vec::<f32>().unwrap(),
-            vec![2.0, 6.0]
-        );
-        // S = 1*mean([1,3]) + 2*mean([10]) = 22, computed pre-mutation
-        assert_eq!(
-            outs[1].to_literal_sync().unwrap().to_vec::<f32>().unwrap()[0],
-            22.0
-        );
-        // second step donating the output: mean memo must have been
-        // reset by the in-place update — S = 1*mean([2,6]) + 2*10 = 24
-        let state2 = outs.remove(0);
-        let mut stats2 = ExecStats::default();
-        let outs2 = prog
-            .run(
-                vec![ExecInput::donate(state2), ExecInput::borrow(&knob)],
-                &pool,
-                &mut stats2,
-            )
-            .unwrap();
-        assert_eq!(stats2.donated, 1);
-        assert_eq!(
-            outs2[1].to_literal_sync().unwrap().to_vec::<f32>().unwrap()[0],
-            24.0
-        );
-    }
-
-    /// A donated buffer whose payload is still shared (a clone exists)
-    /// must fall back to a copy: the clone's contents survive bitwise.
-    #[test]
-    fn donation_falls_back_when_payload_shared() {
-        let prog = StubProgram::Affine {
-            scale: 2.0,
-            bias: 0.0,
-            n_state: 1,
-            n_metrics: 0,
-        };
-        let pool = BufferPool::new();
-        let client = PjRtClient::cpu().unwrap();
-        let state = client
-            .buffer_from_host_literal(&Literal::vec1(&[1f32, 3.0]))
-            .unwrap();
-        let pinned = state.clone(); // buffer-level alias
-        let mut stats = ExecStats::default();
-        let outs = prog
-            .run(vec![ExecInput::donate(state)], &pool, &mut stats)
-            .unwrap();
-        assert_eq!((stats.donated, stats.fallback_copied), (0, 1));
-        assert_eq!(stats.allocated, 1);
-        assert_eq!(
-            outs[0].to_literal_sync().unwrap().to_vec::<f32>().unwrap(),
-            vec![2.0, 6.0]
-        );
-        assert_eq!(
-            pinned.to_literal_sync().unwrap().to_vec::<f32>().unwrap(),
-            vec![1.0, 3.0],
-            "pinned payload mutated by a fallback copy"
-        );
-    }
-
-    /// Retire/acquire round trip, refcount refusal, and the class cap.
-    #[test]
-    fn pool_recycles_retires_and_refuses() {
-        let pool = BufferPool::new();
-        let client = PjRtClient::cpu().unwrap();
-        let buf = client
-            .buffer_from_host_literal(&Literal::vec1(&[1f32, 2.0, 3.0]))
-            .unwrap();
-        let alias = buf.clone();
-        assert!(!pool.retire(alias), "pool accepted a live-aliased payload");
-        assert_eq!(pool.stats().refused, 1);
-        assert!(pool.retire(buf), "sole-owner retire refused");
-        assert_eq!(pool.pooled(), 1);
-        let got = pool.acquire(ElementType::F32, 3).expect("class hit");
-        assert_eq!(got.len(), 0, "acquired buffer must come back cleared");
-        assert!(pool.acquire(ElementType::F32, 3).is_none(), "pool emptied");
-        assert!(pool.acquire(ElementType::S32, 3).is_none(), "type is part of the class");
-        // cap: the class never grows past POOL_CLASS_CAP
-        for _ in 0..POOL_CLASS_CAP + 5 {
-            let b = client
-                .buffer_from_host_literal(&Literal::vec1(&[0f32, 0.0, 0.0]))
-                .unwrap();
-            pool.retire(b);
-        }
-        assert_eq!(pool.pooled(), POOL_CLASS_CAP);
-        assert_eq!(pool.stats().discarded, 5);
-    }
-
-    /// Byte budget: the pool evicts largest-class retirees first to
-    /// admit newcomers, keeps `held_bytes` exact, and drops a retiree
-    /// that alone exceeds the budget.
-    #[test]
-    fn pool_byte_budget_evicts_largest_first() {
-        let pool = BufferPool::with_budget(100); // 25 f32 elements
-        let client = PjRtClient::cpu().unwrap();
-        let big = client
-            .buffer_from_host_literal(&Literal::vec1(&[1f32; 20]))
-            .unwrap();
-        assert!(pool.retire(big)); // 80 bytes held
-        assert_eq!(pool.stats().held_bytes, 80);
-        let small = client
-            .buffer_from_host_literal(&Literal::vec1(&[1f32, 2.0, 3.0]))
-            .unwrap();
-        // 80 + 12 > 100: the 20-element class is evicted to admit it
-        assert!(pool.retire(small));
-        let st = pool.stats();
-        assert_eq!(st.evicted, 1);
-        assert_eq!(st.held_bytes, 12);
-        assert!(pool.acquire(ElementType::F32, 20).is_none(), "evicted");
-        assert!(pool.acquire(ElementType::F32, 3).is_some(), "small kept");
-        assert_eq!(pool.stats().held_bytes, 0);
-        // a retiree bigger than the whole budget is discarded outright
-        let huge = client
-            .buffer_from_host_literal(&Literal::vec1(&[0f32; 64]))
-            .unwrap();
-        assert!(!pool.retire(huge));
-        assert_eq!(pool.stats().discarded, 1);
-        assert_eq!(pool.stats().held_bytes, 0);
-    }
-
-    /// Multiple evictions run until the newcomer fits.
-    #[test]
-    fn pool_byte_budget_multi_eviction() {
-        let pool = BufferPool::with_budget(64); // 16 f32 elements
-        let client = PjRtClient::cpu().unwrap();
-        for _ in 0..2 {
-            let b = client
-                .buffer_from_host_literal(&Literal::vec1(&[0f32; 6]))
-                .unwrap();
-            assert!(pool.retire(b)); // 2 x 24 bytes
-        }
-        assert_eq!(pool.stats().held_bytes, 48);
-        let big = client
-            .buffer_from_host_literal(&Literal::vec1(&[0f32; 16]))
-            .unwrap();
-        // 48 + 64 > 64 twice over: both 6-element retirees must go
-        assert!(pool.retire(big));
-        let st = pool.stats();
-        assert_eq!(st.evicted, 2);
-        assert_eq!(st.held_bytes, 64);
-        assert_eq!(pool.pooled(), 1);
-        assert!(pool.acquire(ElementType::F32, 16).is_some());
-    }
-
-    #[test]
-    fn init_stub_is_seed_deterministic() {
-        let prog = StubProgram::Init {
-            dims: vec![vec![2, 3], vec![4]],
-        };
-        let a = run_prog(&prog, &[Literal::scalar(7i32)]).unwrap();
-        let b = run_prog(&prog, &[Literal::scalar(7i32)]).unwrap();
-        let c = run_prog(&prog, &[Literal::scalar(8i32)]).unwrap();
-        assert_eq!(a.len(), 2);
-        assert_eq!(a[0].array_shape().unwrap().dims(), &[2, 3]);
-        let va = a[0].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
-        let vb = b[0].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
-        let vc = c[0].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
-        assert_eq!(va, vb);
-        assert_ne!(va, vc);
-        assert!(va.iter().all(|v| (-0.5..=0.5).contains(v)));
-    }
-
-    /// The whole point of `evalchunks`: chunk `c` of one batched call
-    /// equals what the per-batch `affine` program returns for that
-    /// chunk's slice, bitwise.
-    #[test]
-    fn evalchunks_matches_per_batch_affine_bitwise() {
-        let state = Literal::vec1(&[0.25f32, -0.75, 0.5]);
-        let xs: Vec<f32> = (0..12).map(|i| i as f32 * 0.37 - 2.0).collect();
-        let ys: Vec<i32> = (0..6).map(|i| i % 4).collect();
-        let tau = Literal::scalar(0.66f32);
-        let batch = 2;
-        let chunked = StubProgram::EvalChunks {
-            batch,
-            x_arg: 1,
-            n_metrics: 2,
-        };
-        let x_all = Literal::vec1(&xs).reshape(&[6, 2]).unwrap();
-        let y_all = Literal::vec1(&ys);
-        let outs =
-            run_prog(&chunked, &[state.clone(), x_all, y_all, tau.clone()]).unwrap();
-        assert_eq!(outs.len(), 2);
-        let loss_v = outs[0].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
-        let acc_v = outs[1].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
-        assert_eq!(loss_v.len(), 3);
-        let per_batch = StubProgram::Affine {
-            scale: 1.0,
-            bias: 0.0,
-            n_state: 0,
-            n_metrics: 2,
-        };
-        for c in 0..3 {
-            let xc = Literal::vec1(&xs[c * batch * 2..(c + 1) * batch * 2])
-                .reshape(&[2, 2])
-                .unwrap();
-            let yc = Literal::vec1(&ys[c * batch..(c + 1) * batch]);
-            let m = run_prog(&per_batch, &[state.clone(), xc, yc, tau.clone()]).unwrap();
-            let l = m[0].to_literal_sync().unwrap().to_vec::<f32>().unwrap()[0];
-            let a = m[1].to_literal_sync().unwrap().to_vec::<f32>().unwrap()[0];
-            assert_eq!(loss_v[c].to_bits(), l.to_bits(), "chunk {c} loss");
-            assert_eq!(acc_v[c].to_bits(), a.to_bits(), "chunk {c} acc");
-        }
-    }
-
-    #[test]
-    fn evalchunks_rejects_ragged_rows() {
-        let prog = StubProgram::EvalChunks {
-            batch: 4,
-            x_arg: 0,
-            n_metrics: 1,
-        };
-        let x = Literal::vec1(&[0f32; 6]).reshape(&[6, 1]).unwrap();
-        let y = Literal::vec1(&[0i32; 6]);
-        assert!(run_prog(&prog, &[x, y]).is_err());
     }
 
     #[test]
@@ -1658,6 +759,38 @@ mod tests {
         assert!(untuple_saved_bytes() >= saved0 + 12);
         let arr = client.buffer_from_host_literal(&Literal::scalar(1f32)).unwrap();
         assert!(arr.untuple().is_none());
+    }
+
+    /// Pooled uploads recycle a retired same-class allocation and copy
+    /// the host data into it; contents and shape match a plain upload.
+    #[test]
+    fn pooled_upload_recycles_and_matches_plain() {
+        let client = PjRtClient::cpu().unwrap();
+        let pool = BufferPool::new();
+        let dead = client
+            .buffer_from_host_literal(&Literal::vec1(&[0f32, 0.0, 0.0]))
+            .unwrap();
+        assert!(pool.retire(dead));
+        let lit = Literal::vec1(&[1f32, 2.0, 3.0]);
+        let hits0 = pool.stats().hits;
+        let up = client.buffer_from_host_literal_pooled(&lit, &pool).unwrap();
+        assert_eq!(pool.stats().hits, hits0 + 1, "upload skipped the pool");
+        assert_eq!(pool.pooled(), 0);
+        assert_eq!(
+            up.to_literal_sync().unwrap().to_vec::<f32>().unwrap(),
+            vec![1.0, 2.0, 3.0]
+        );
+        // class miss (different length) falls back to a fresh copy
+        let up2 = client
+            .buffer_from_host_literal_pooled(&Literal::vec1(&[5f32, 6.0]), &pool)
+            .unwrap();
+        assert_eq!(
+            up2.to_literal_sync().unwrap().to_vec::<f32>().unwrap(),
+            vec![5.0, 6.0]
+        );
+        // tuples fall back to the plain path
+        let t = Literal::tuple(vec![Literal::scalar(1f32)]);
+        assert!(client.buffer_from_host_literal_pooled(&t, &pool).is_ok());
     }
 
     #[test]

@@ -1,0 +1,729 @@
+//! Resource pools: the size-classed [`BufferPool`] of retired device
+//! allocations, and the deterministic [`ThreadPool`] behind the
+//! parallel execution paths.
+//!
+//! The thread pool is deliberately work-stealing-free: every dispatch
+//! assigns task `i` to worker `i % threads` (static strided
+//! partitioning), each task writes its result into its own
+//! preallocated slot, and the submitter blocks until every worker
+//! finished the epoch. Output order — and therefore every downstream
+//! f64 addition order — is a pure function of the task index, never of
+//! thread scheduling, which is what keeps threaded execution bitwise
+//! identical to the sequential path at any thread count.
+
+use std::cell::UnsafeCell;
+use std::collections::HashMap;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, PoisonError};
+use std::thread;
+
+use crate::{BufRepr, Data, ElementType, Literal, PjRtBuffer};
+
+pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+// ---------------------------------------------------------------------------
+// buffer pool
+// ---------------------------------------------------------------------------
+
+/// Retired allocations kept per size class; beyond this the retiree is
+/// dropped (counted in [`PoolStats::discarded`]) so a long host-
+/// resident run cannot grow the pool without bound.
+pub(crate) const POOL_CLASS_CAP: usize = 32;
+
+/// Default global byte budget of retained allocations (all size
+/// classes together). The per-class entry cap alone lets retained
+/// memory scale with leaf size (32 entries of an MB-scale leaf is tens
+/// of MB per class), so the pool also enforces this byte ceiling —
+/// generous for the stub fixture's KB-scale leaves, bounded for a
+/// native backend. Override with `MIXPREC_POOL_BUDGET_BYTES`.
+const POOL_DEFAULT_BUDGET_BYTES: u64 = 16 * 1024 * 1024;
+
+fn pool_budget_from_env() -> u64 {
+    std::env::var("MIXPREC_POOL_BUDGET_BYTES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(POOL_DEFAULT_BUDGET_BYTES)
+}
+
+struct PoolInner {
+    classes: HashMap<(ElementType, usize), Vec<Data>>,
+    /// Payload bytes currently retained across every class (kept in
+    /// lockstep with `classes` under the one mutex).
+    held_bytes: u64,
+}
+
+/// Size-classed pool of dead device allocations. Outputs that cannot
+/// be donated draw from here before allocating fresh; the runtime
+/// retires displaced section buffers, downloaded metric buffers and
+/// consumed per-step upload buffers back into it.
+///
+/// Safety invariant: only payloads with **no** live handle ever enter
+/// the pool — [`BufferPool::retire`] refuses any buffer whose payload
+/// `Arc` is still shared (and the runtime's retire helper applies the
+/// same refcount-1 rule to its outer `Arc` first), so a recycled
+/// buffer can never alias a snapshot, cache entry, or in-flight
+/// argument.
+///
+/// Retention is bounded two ways: per class by entry count
+/// ([`POOL_CLASS_CAP`]) and globally by a byte budget (default
+/// [`POOL_DEFAULT_BUDGET_BYTES`], env-tunable via
+/// `MIXPREC_POOL_BUDGET_BYTES`). When admitting a retiree would exceed
+/// the budget, the pool evicts retirees from its **largest** size
+/// classes first (counted in [`PoolStats::evicted`]) — small hot
+/// classes stay populated while the big, rarely-reacquired retirees
+/// that dominate retained memory go first.
+pub struct BufferPool {
+    inner: Mutex<PoolInner>,
+    budget_bytes: u64,
+    retired: AtomicU64,
+    refused: AtomicU64,
+    discarded: AtomicU64,
+    evicted: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for BufferPool {
+    fn default() -> Self {
+        BufferPool::with_budget(pool_budget_from_env())
+    }
+}
+
+/// Cumulative pool counters (monotonic).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Dead allocations accepted into the pool.
+    pub retired: u64,
+    /// Retire attempts refused because the payload `Arc` was still
+    /// shared — the pool's own (inner-level) refcount-1 check. The
+    /// runtime's outer-`Arc` check (`retire_arc`) refuses *before*
+    /// reaching the pool and is not counted here.
+    pub refused: u64,
+    /// Dead allocations dropped because their size class was full, or
+    /// because they alone would not fit the byte budget.
+    pub discarded: u64,
+    /// Previously-retained allocations dropped (largest classes first)
+    /// to admit a new retiree under the byte budget.
+    pub evicted: u64,
+    /// Output allocations served from the pool.
+    pub hits: u64,
+    /// Acquire attempts that found the class empty.
+    pub misses: u64,
+    /// Payload bytes currently retained (gauge, not monotonic).
+    pub held_bytes: u64,
+}
+
+impl BufferPool {
+    pub fn new() -> Self {
+        BufferPool::default()
+    }
+
+    /// A pool with an explicit global byte budget (tests, or embedders
+    /// that size retention to their own working set).
+    pub fn with_budget(budget_bytes: u64) -> Self {
+        BufferPool {
+            inner: Mutex::new(PoolInner {
+                classes: HashMap::new(),
+                held_bytes: 0,
+            }),
+            budget_bytes,
+            retired: AtomicU64::new(0),
+            refused: AtomicU64::new(0),
+            discarded: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// The configured global byte budget.
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_bytes
+    }
+
+    /// Retire a dead buffer's allocation for reuse. Accepts only
+    /// exclusively-owned array payloads (refcount 1); shared payloads
+    /// are refused — the caller keeps nothing either way, but a
+    /// refused payload stays alive through its other handles. Tuple
+    /// buffers retire element-wise; returns whether anything entered
+    /// the pool.
+    pub fn retire(&self, buf: PjRtBuffer) -> bool {
+        match buf.repr {
+            BufRepr::Arr(arc) => match Arc::try_unwrap(arc) {
+                Ok(payload) => match payload.lit {
+                    Literal::Array { data, .. } => self.retire_data(data),
+                    Literal::Tuple(_) => false,
+                },
+                Err(_) => {
+                    self.refused.fetch_add(1, Ordering::Relaxed);
+                    false
+                }
+            },
+            BufRepr::Tup(elems) => {
+                let mut any = false;
+                for e in elems {
+                    any |= self.retire(e);
+                }
+                any
+            }
+        }
+    }
+
+    fn retire_data(&self, data: Data) -> bool {
+        let key = (data.ty(), data.len());
+        let bytes = (key.1 * 4) as u64;
+        if key.1 == 0 {
+            return false;
+        }
+        // an allocation larger than the whole budget can never be
+        // retained — drop it outright instead of emptying the pool
+        if bytes > self.budget_bytes {
+            self.discarded.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        let mut inner = lock(&self.inner);
+        if inner
+            .classes
+            .get(&key)
+            .is_some_and(|b| b.len() >= POOL_CLASS_CAP)
+        {
+            self.discarded.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        // byte budget: evict retirees from the largest classes first
+        // until the newcomer fits (terminates: held <= budget and
+        // bytes <= budget, and every eviction strictly shrinks held)
+        while inner.held_bytes + bytes > self.budget_bytes {
+            let largest = inner
+                .classes
+                .iter()
+                .filter(|(_, b)| !b.is_empty())
+                .map(|(&k, _)| k)
+                .max_by_key(|&(_, n)| n)
+                .expect("held_bytes > 0 implies a non-empty class");
+            let victim = inner
+                .classes
+                .get_mut(&largest)
+                .and_then(Vec::pop)
+                .expect("class chosen non-empty");
+            inner.held_bytes -= (victim.len() * 4) as u64;
+            self.evicted.fetch_add(1, Ordering::Relaxed);
+        }
+        inner.classes.entry(key).or_default().push(data);
+        inner.held_bytes += bytes;
+        self.retired.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Pop a retired allocation of exactly this class, cleared (len 0,
+    /// capacity `n`), ready to be refilled.
+    pub(crate) fn acquire(&self, ty: ElementType, n: usize) -> Option<Data> {
+        let mut inner = lock(&self.inner);
+        let popped = inner.classes.get_mut(&(ty, n)).and_then(Vec::pop);
+        match popped {
+            Some(mut d) => {
+                inner.held_bytes -= (d.len() * 4) as u64;
+                drop(inner);
+                d.clear();
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(d)
+            }
+            None => {
+                drop(inner);
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Number of allocations currently pooled (tests/diagnostics).
+    pub fn pooled(&self) -> usize {
+        lock(&self.inner).classes.values().map(Vec::len).sum()
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            retired: self.retired.load(Ordering::Relaxed),
+            refused: self.refused.load(Ordering::Relaxed),
+            discarded: self.discarded.load(Ordering::Relaxed),
+            evicted: self.evicted.load(Ordering::Relaxed),
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            held_bytes: lock(&self.inner).held_bytes,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// thread pool
+// ---------------------------------------------------------------------------
+
+/// Backend worker-thread count: `MIXPREC_XLA_THREADS` when set
+/// (>= 1), else the machine's available parallelism. Read once per
+/// process; per-call overrides go through `ExecOptions::threads`.
+pub fn configured_threads() -> usize {
+    static THREADS: OnceLock<usize> = OnceLock::new();
+    *THREADS.get_or_init(|| {
+        std::env::var("MIXPREC_XLA_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or_else(|| thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+    })
+}
+
+/// The process-wide pool behind the default execution path (`None`
+/// when the configured count is 1: sequential, the pre-pool behavior).
+pub(crate) fn global_pool() -> Option<&'static ThreadPool> {
+    static POOL: OnceLock<Option<ThreadPool>> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let t = configured_threads();
+        (t > 1).then(|| ThreadPool::new(t))
+    })
+    .as_ref()
+}
+
+/// The published job of one dispatch epoch: a lifetime-erased pointer
+/// to the submitter's closure. Sound to send across threads because
+/// [`ThreadPool::run`] blocks until `remaining == 0` — no worker can
+/// hold this pointer after the borrow it erases ends.
+#[derive(Clone, Copy)]
+struct Job(*const (dyn Fn(usize) + Sync + 'static));
+
+unsafe impl Send for Job {}
+
+fn erase<'a>(job: &'a (dyn Fn(usize) + Sync + 'a)) -> Job {
+    let p: *const (dyn Fn(usize) + Sync + 'a) = job;
+    Job(p as *const (dyn Fn(usize) + Sync + 'static))
+}
+
+struct PoolState {
+    epoch: u64,
+    job: Option<Job>,
+    n_tasks: usize,
+    remaining: usize,
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    work: Condvar,
+    done: Condvar,
+}
+
+/// A persistent, work-stealing-free thread pool. One dispatch at a
+/// time (epoch-based); task `i` of a dispatch always runs on worker
+/// `i % threads`, with the submitting thread acting as worker 0. A
+/// contended pool (two executables dispatching concurrently) degrades
+/// to inline sequential execution on the second submitter — bitwise
+/// identical by construction, never blocked.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    submit: Mutex<()>,
+    threads: usize,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn a pool of `threads` workers total (the submitter counts
+    /// as one; `threads - 1` OS threads are spawned).
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                epoch: 0,
+                job: None,
+                n_tasks: 0,
+                remaining: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let workers = (1..threads)
+            .map(|w| {
+                let shared = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("mixprec-xla-{w}"))
+                    .spawn(move || worker_loop(&shared, w, threads))
+                    .expect("spawn xla pool worker")
+            })
+            .collect();
+        ThreadPool {
+            shared,
+            submit: Mutex::new(()),
+            threads,
+            workers,
+        }
+    }
+
+    /// Total worker count (submitter included).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `job(i)` exactly once for every `i < n_tasks`, strided
+    /// across the pool, and return when all of them finished. A panic
+    /// inside any task resurfaces here (the pool itself survives).
+    pub(crate) fn run(&self, n_tasks: usize, job: &(dyn Fn(usize) + Sync)) {
+        if self.workers.is_empty() || n_tasks <= 1 {
+            for i in 0..n_tasks {
+                job(i);
+            }
+            return;
+        }
+        // one submitter at a time; a contended pool degrades to
+        // inline sequential execution (bitwise identical results)
+        let Ok(_guard) = self.submit.try_lock() else {
+            for i in 0..n_tasks {
+                job(i);
+            }
+            return;
+        };
+        {
+            let mut st = lock(&self.shared.state);
+            st.job = Some(erase(job));
+            st.n_tasks = n_tasks;
+            st.remaining = self.workers.len();
+            st.panicked = false;
+            st.epoch += 1;
+            self.shared.work.notify_all();
+        }
+        // the submitter is worker 0 of its own dispatch
+        let own = catch_unwind(AssertUnwindSafe(|| {
+            for i in (0..n_tasks).step_by(self.threads) {
+                job(i);
+            }
+        }));
+        let mut st = lock(&self.shared.state);
+        while st.remaining > 0 {
+            st = self
+                .shared
+                .done
+                .wait(st)
+                .unwrap_or_else(PoisonError::into_inner);
+        }
+        st.job = None;
+        let worker_panicked = st.panicked;
+        drop(st);
+        if let Err(p) = own {
+            resume_unwind(p);
+        }
+        assert!(!worker_panicked, "xla thread-pool worker panicked");
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = lock(&self.shared.state);
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, index: usize, stride: usize) {
+    let mut seen = 0u64;
+    loop {
+        let (job, n) = {
+            let mut st = lock(&shared.state);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen && st.job.is_some() {
+                    break;
+                }
+                st = shared
+                    .work
+                    .wait(st)
+                    .unwrap_or_else(PoisonError::into_inner);
+            }
+            seen = st.epoch;
+            (st.job.expect("checked above"), st.n_tasks)
+        };
+        let run = catch_unwind(AssertUnwindSafe(|| {
+            // SAFETY: the submitter keeps the closure alive until
+            // `remaining` hits zero, which happens below only after
+            // this dereference is done.
+            let f = unsafe { &*job.0 };
+            for i in (index..n).step_by(stride) {
+                f(i);
+            }
+        }));
+        let mut st = lock(&shared.state);
+        if run.is_err() {
+            st.panicked = true;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// indexed parallel runner
+// ---------------------------------------------------------------------------
+
+/// How one dispatch distributes its independent tasks.
+pub(crate) enum ParRunner<'p> {
+    /// Inline on the calling thread: thread count 1, sub-threshold
+    /// dispatches, and the scalar reference path.
+    Seq,
+    /// The persistent process-wide [`ThreadPool`].
+    Pool(&'p ThreadPool),
+    /// A one-shot scoped team of exactly `n` threads — per-call thread
+    /// overrides that differ from the configured pool width (tests
+    /// sweeping `threads` within one process).
+    Scoped(usize),
+}
+
+impl ParRunner<'_> {
+    /// Evaluate `f(i)` for `i in 0..n` and return the results in index
+    /// order. Each index is computed exactly once by exactly one
+    /// thread; partitioning is static (strided), so there is no work
+    /// stealing. Results land in per-index slots, making output order
+    /// — and every downstream f64 addition order — independent of
+    /// thread scheduling.
+    pub(crate) fn run<U, F>(&self, n: usize, f: F) -> Vec<U>
+    where
+        U: Send,
+        F: Fn(usize) -> U + Sync,
+    {
+        match *self {
+            ParRunner::Seq => (0..n).map(f).collect(),
+            ParRunner::Pool(pool) => {
+                let slots = Slots::new(n);
+                pool.run(n, &|i| slots.put(i, f(i)));
+                slots.into_vec()
+            }
+            ParRunner::Scoped(t) => {
+                let t = t.max(1);
+                let slots = Slots::new(n);
+                thread::scope(|s| {
+                    for w in 1..t {
+                        let slots = &slots;
+                        let f = &f;
+                        s.spawn(move || {
+                            for i in (w..n).step_by(t) {
+                                slots.put(i, f(i));
+                            }
+                        });
+                    }
+                    for i in (0..n).step_by(t) {
+                        slots.put(i, f(i));
+                    }
+                });
+                slots.into_vec()
+            }
+        }
+    }
+}
+
+/// Write-once result slots: each index is written by exactly one
+/// thread (the strided partition) and read only after every writer
+/// finished (the pool barrier / scope join) — that protocol is what
+/// makes the `UnsafeCell` sound.
+struct Slots<T> {
+    cells: Vec<UnsafeCell<Option<T>>>,
+}
+
+unsafe impl<T: Send> Sync for Slots<T> {}
+
+impl<T> Slots<T> {
+    fn new(n: usize) -> Self {
+        Slots {
+            cells: (0..n).map(|_| UnsafeCell::new(None)).collect(),
+        }
+    }
+
+    fn put(&self, i: usize, v: T) {
+        // SAFETY: slot `i` has exactly one writer and no concurrent
+        // reader (see type docs).
+        unsafe { *self.cells[i].get() = Some(v) }
+    }
+
+    fn into_vec(self) -> Vec<T> {
+        self.cells
+            .into_iter()
+            .map(|c| c.into_inner().expect("every slot written"))
+            .collect()
+    }
+}
+
+/// Take-once input slots — the owned-input mirror of [`Slots`]. Built
+/// from a `Vec`, each element is moved out by exactly one thread (the
+/// same strided partition), letting a parallel dispatch consume owned
+/// arguments without cloning them.
+pub(crate) struct TakeSlots<T> {
+    cells: Vec<UnsafeCell<Option<T>>>,
+}
+
+unsafe impl<T: Send> Sync for TakeSlots<T> {}
+
+impl<T> TakeSlots<T> {
+    pub(crate) fn new(items: Vec<T>) -> Self {
+        TakeSlots {
+            cells: items.into_iter().map(|v| UnsafeCell::new(Some(v))).collect(),
+        }
+    }
+
+    pub(crate) fn take(&self, i: usize) -> T {
+        // SAFETY: each slot is taken exactly once, by the one thread
+        // that owns index `i` in the strided partition.
+        unsafe { (*self.cells[i].get()).take().expect("slot taken once") }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::PjRtClient;
+
+    /// Retire/acquire round trip, refcount refusal, and the class cap.
+    #[test]
+    fn pool_recycles_retires_and_refuses() {
+        let pool = BufferPool::new();
+        let client = PjRtClient::cpu().unwrap();
+        let buf = client
+            .buffer_from_host_literal(&Literal::vec1(&[1f32, 2.0, 3.0]))
+            .unwrap();
+        let alias = buf.clone();
+        assert!(!pool.retire(alias), "pool accepted a live-aliased payload");
+        assert_eq!(pool.stats().refused, 1);
+        assert!(pool.retire(buf), "sole-owner retire refused");
+        assert_eq!(pool.pooled(), 1);
+        let got = pool.acquire(ElementType::F32, 3).expect("class hit");
+        assert_eq!(got.len(), 0, "acquired buffer must come back cleared");
+        assert!(pool.acquire(ElementType::F32, 3).is_none(), "pool emptied");
+        assert!(pool.acquire(ElementType::S32, 3).is_none(), "type is part of the class");
+        // cap: the class never grows past POOL_CLASS_CAP
+        for _ in 0..POOL_CLASS_CAP + 5 {
+            let b = client
+                .buffer_from_host_literal(&Literal::vec1(&[0f32, 0.0, 0.0]))
+                .unwrap();
+            pool.retire(b);
+        }
+        assert_eq!(pool.pooled(), POOL_CLASS_CAP);
+        assert_eq!(pool.stats().discarded, 5);
+    }
+
+    /// Byte budget: the pool evicts largest-class retirees first to
+    /// admit newcomers, keeps `held_bytes` exact, and drops a retiree
+    /// that alone exceeds the budget.
+    #[test]
+    fn pool_byte_budget_evicts_largest_first() {
+        let pool = BufferPool::with_budget(100); // 25 f32 elements
+        let client = PjRtClient::cpu().unwrap();
+        let big = client
+            .buffer_from_host_literal(&Literal::vec1(&[1f32; 20]))
+            .unwrap();
+        assert!(pool.retire(big)); // 80 bytes held
+        assert_eq!(pool.stats().held_bytes, 80);
+        let small = client
+            .buffer_from_host_literal(&Literal::vec1(&[1f32, 2.0, 3.0]))
+            .unwrap();
+        // 80 + 12 > 100: the 20-element class is evicted to admit it
+        assert!(pool.retire(small));
+        let st = pool.stats();
+        assert_eq!(st.evicted, 1);
+        assert_eq!(st.held_bytes, 12);
+        assert!(pool.acquire(ElementType::F32, 20).is_none(), "evicted");
+        assert!(pool.acquire(ElementType::F32, 3).is_some(), "small kept");
+        assert_eq!(pool.stats().held_bytes, 0);
+        // a retiree bigger than the whole budget is discarded outright
+        let huge = client
+            .buffer_from_host_literal(&Literal::vec1(&[0f32; 64]))
+            .unwrap();
+        assert!(!pool.retire(huge));
+        assert_eq!(pool.stats().discarded, 1);
+        assert_eq!(pool.stats().held_bytes, 0);
+    }
+
+    /// Multiple evictions run until the newcomer fits.
+    #[test]
+    fn pool_byte_budget_multi_eviction() {
+        let pool = BufferPool::with_budget(64); // 16 f32 elements
+        let client = PjRtClient::cpu().unwrap();
+        for _ in 0..2 {
+            let b = client
+                .buffer_from_host_literal(&Literal::vec1(&[0f32; 6]))
+                .unwrap();
+            assert!(pool.retire(b)); // 2 x 24 bytes
+        }
+        assert_eq!(pool.stats().held_bytes, 48);
+        let big = client
+            .buffer_from_host_literal(&Literal::vec1(&[0f32; 16]))
+            .unwrap();
+        // 48 + 64 > 64 twice over: both 6-element retirees must go
+        assert!(pool.retire(big));
+        let st = pool.stats();
+        assert_eq!(st.evicted, 2);
+        assert_eq!(st.held_bytes, 64);
+        assert_eq!(pool.pooled(), 1);
+        assert!(pool.acquire(ElementType::F32, 16).is_some());
+    }
+
+    /// Every index runs exactly once, whatever the runner variant.
+    #[test]
+    fn runners_cover_every_index_once() {
+        let n = 103;
+        let seq: Vec<usize> = (0..n).collect();
+        for runner in [ParRunner::Seq, ParRunner::Scoped(3), ParRunner::Scoped(8)] {
+            let counts: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            let got = runner.run(n, |i| {
+                counts[i].fetch_add(1, Ordering::Relaxed);
+                i
+            });
+            assert_eq!(got, seq);
+            assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+        }
+        let pool = ThreadPool::new(4);
+        let counts: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        let got = ParRunner::Pool(&pool).run(n, |i| {
+            counts[i].fetch_add(1, Ordering::Relaxed);
+            i * 2
+        });
+        assert_eq!(got, (0..n).map(|i| i * 2).collect::<Vec<_>>());
+        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    /// A panicking task resurfaces on the submitter; the pool stays
+    /// usable for the next dispatch.
+    #[test]
+    fn pool_propagates_task_panics_and_survives() {
+        let pool = ThreadPool::new(4);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(16, &|i| {
+                if i == 7 {
+                    panic!("task 7 exploded");
+                }
+            });
+        }));
+        assert!(r.is_err(), "task panic must propagate to the submitter");
+        let hits = AtomicU64::new(0);
+        pool.run(16, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 16, "pool unusable after panic");
+    }
+
+    /// TakeSlots moves each element out exactly once across threads.
+    #[test]
+    fn take_slots_distributes_owned_items() {
+        let items: Vec<String> = (0..37).map(|i| format!("item-{i}")).collect();
+        let slots = TakeSlots::new(items);
+        let got = ParRunner::Scoped(4).run(37, |i| slots.take(i));
+        assert_eq!(got, (0..37).map(|i| format!("item-{i}")).collect::<Vec<_>>());
+    }
+}
