@@ -9,9 +9,11 @@
 //! the "compute" is near-free, isolating exactly the costs this
 //! rework removes. Asserts the acceptance contract: warmup runs once,
 //! the forked front is identical to the independent one, batched
-//! eval moves strictly fewer host<->device bytes, and a second
+//! eval moves strictly fewer host<->device bytes, a second
 //! "process" resuming from a shared `--warm-cache-dir` runs zero
-//! warmup steps with a bitwise-identical front.
+//! warmup steps with a bitwise-identical front, and a compare under a
+//! deliberately tiny cache byte budget evicts + rebuilds entries while
+//! keeping the front bitwise identical and the retained gauge capped.
 
 use std::time::Instant;
 
@@ -41,6 +43,10 @@ fn sweep_json(sw: &SweepResult, seconds: f64) -> Json {
     o.insert("shared_warmup_s", Json::Num(sw.shared_warmup_s));
     o.insert("split_uploads", Json::Num(sw.split_uploads as f64));
     o.insert("split_reuses", Json::Num(sw.split_reuses as f64));
+    o.insert("evictions", Json::Num(sw.evictions as f64));
+    o.insert("evict_skipped_pinned", Json::Num(sw.evict_skipped_pinned as f64));
+    o.insert("rebuilds_after_evict", Json::Num(sw.rebuilds_after_evict as f64));
+    o.insert("cache_held_bytes", Json::Num(sw.cache_held_bytes as f64));
     o.insert("total_transfer_bytes", Json::Num(traffic as f64));
     let al = sw.alloc();
     o.insert("buffers_donated", Json::Num(al.donated as f64));
@@ -184,6 +190,10 @@ fn run() -> mixprec::Result<()> {
         share_warmup: true,
     };
     let ctx_a = Context::load(&dir, scale.data_frac)?;
+    // this leg and the compare leg assert exact legacy counters, so
+    // disable the byte budget regardless of MIXPREC_CACHE_BUDGET_BYTES;
+    // the dedicated eviction leg below exercises the budgeted path
+    ctx_a.shared_cache().set_budget_bytes(0);
     ctx_a.shared_cache().set_warm_dir(Some(warm_dir.clone()));
     let runner_a = ctx_a.runner_shared(fixture::STUB_MODEL)?;
     let t0 = Instant::now();
@@ -192,6 +202,7 @@ fn run() -> mixprec::Result<()> {
     assert_eq!(sw_a.warmup_steps_run, cfg.warmup_steps);
     assert_eq!(sw_a.warmups_persisted, 1, "warmup was not persisted");
     let ctx_b = Context::load(&dir, scale.data_frac)?;
+    ctx_b.shared_cache().set_budget_bytes(0);
     ctx_b.shared_cache().set_warm_dir(Some(warm_dir.clone()));
     let runner_b = ctx_b.runner_shared(fixture::STUB_MODEL)?;
     let t0 = Instant::now();
@@ -214,6 +225,7 @@ fn run() -> mixprec::Result<()> {
     // fresh context => fresh SharedRunCache, so the earlier legs don't
     // pre-warm what this section is measuring
     let cmp_ctx = Context::load(&dir, scale.data_frac)?;
+    cmp_ctx.shared_cache().set_budget_bytes(0); // exact counters below
     let cmp_lambdas = default_lambdas(2);
     let cmp_opts = |share_warmup| SweepOptions {
         workers: scale.workers,
@@ -252,6 +264,43 @@ fn run() -> mixprec::Result<()> {
          | unshared {cmp_un_s:6.2}s ({} warmup runs)",
         cmp_sh.warmups_run, cmp_sh.warmups_reused, cmp_sh.split_uploads, cmp_un.warmups_run
     );
+    // the unbudgeted compare must never evict
+    assert_eq!(cmp_sh.evictions, 0, "unbudgeted compare evicted entries");
+
+    // ---- eviction under a tiny byte budget --------------------------
+    // a budget smaller than the compare working set forces per-run
+    // evict + rebuild churn; the acceptance contract is that the front
+    // stays bitwise identical to the unbudgeted compare, the retained
+    // gauge never exceeds the cap, and the pinned warm start survives
+    let ev_ctx = Context::load(&dir, scale.data_frac)?;
+    let ev_budget: u64 = 1;
+    let ev_cache = ev_ctx.shared_cache();
+    ev_cache.set_budget_bytes(ev_budget);
+    let runner_ev = ev_ctx.runner_shared(fixture::STUB_MODEL)?;
+    let t0 = Instant::now();
+    let cmp_ev = compare_methods(&runner_ev, &cfg, &cmp_lambdas, "size", &sh_opts, &[])?;
+    let cmp_ev_s = t0.elapsed().as_secs_f64();
+    assert!(cmp_ev.evictions > 0, "tiny budget evicted nothing");
+    assert!(
+        cmp_ev.rebuilds_after_evict > 0,
+        "no evicted entry was rebuilt through the miss path"
+    );
+    let within_budget =
+        cmp_ev.held_bytes <= ev_budget && ev_cache.held_peak_bytes() <= ev_budget;
+    assert!(within_budget, "retained bytes exceeded the budget");
+    // a live sweep pins its warm start, so churn must not re-warm
+    assert_eq!(cmp_ev.warmups_run, 1, "budget evicted a pinned warm start");
+    let ev_fronts_equal = cmp_ev
+        .sweeps
+        .iter()
+        .zip(&cmp_sh.sweeps)
+        .all(|((_, a), (_, b))| key(&a.front()) == key(&b.front()));
+    assert!(ev_fronts_equal, "budgeted compare front diverged");
+    println!(
+        "eviction: budget {ev_budget} B -> {} evictions ({} pinned skips, {} rebuilds) \
+         in {cmp_ev_s:6.2}s, front identical",
+        cmp_ev.evictions, cmp_ev.evict_skipped_pinned, cmp_ev.rebuilds_after_evict
+    );
 
     let mut o = JsonObj::new();
     o.insert("bench", Json::Str("sweep_fork".into()));
@@ -284,8 +333,26 @@ fn run() -> mixprec::Result<()> {
         "speedup_vs_unshared",
         Json::Num(cmp_un_s / cmp_sh_s.max(1e-12)),
     );
+    cm.insert("evictions", Json::Num(cmp_sh.evictions as f64));
     cm.insert("fronts_equal_unshared", Json::Bool(cmp_fronts_equal));
     o.insert("compare", Json::Obj(cm));
+    let mut evb = JsonObj::new();
+    evb.insert("budget_bytes", Json::Num(ev_budget as f64));
+    evb.insert("evictions", Json::Num(cmp_ev.evictions as f64));
+    evb.insert(
+        "evict_skipped_pinned",
+        Json::Num(cmp_ev.evict_skipped_pinned as f64),
+    );
+    evb.insert(
+        "rebuilds_after_evict",
+        Json::Num(cmp_ev.rebuilds_after_evict as f64),
+    );
+    evb.insert("held_bytes", Json::Num(cmp_ev.held_bytes as f64));
+    evb.insert("held_peak_bytes", Json::Num(ev_cache.held_peak_bytes() as f64));
+    evb.insert("within_budget", Json::Bool(within_budget));
+    evb.insert("fronts_equal_unbudgeted", Json::Bool(ev_fronts_equal));
+    evb.insert("seconds", Json::Num(cmp_ev_s));
+    o.insert("eviction", Json::Obj(evb));
     let mut wp = JsonObj::new();
     wp.insert("warmups_persisted", Json::Num(sw_a.warmups_persisted as f64));
     wp.insert("warmups_loaded", Json::Num(sw_b.warmups_loaded as f64));

@@ -108,6 +108,19 @@ pub struct CompareResult {
     pub split_uploads: u64,
     /// Eval-split requests served from the shared cache.
     pub split_reuses: u64,
+    /// Cache entries evicted under the byte budget across the whole
+    /// comparison, fixed baselines included (sweep-level counters only
+    /// see their own bracket).
+    pub evictions: u64,
+    /// Eviction-walk visits that skipped an entry a live run held.
+    pub evict_skipped_pinned: u64,
+    /// Cache builds that re-filled a previously evicted slot.
+    pub rebuilds_after_evict: u64,
+    /// Bytes the cache alone retained after the comparison reconciled
+    /// ([`SharedRunCache::reclaim`]) — bounded by any nonzero budget.
+    ///
+    /// [`SharedRunCache::reclaim`]: crate::runtime::SharedRunCache::reclaim
+    pub held_bytes: u64,
     /// Donation / buffer-pool accounting aggregated over every method
     /// sweep and fixed baseline of the comparison (the CI e2e leg
     /// asserts a nonzero donation rate and zero aliased fallbacks).
@@ -131,6 +144,9 @@ pub fn compare_methods(
     fixed_bits: &[u32],
 ) -> Result<CompareResult> {
     let t0 = Instant::now();
+    // eviction activity is bracketed around the WHOLE comparison (the
+    // fixed baselines churn the cache too, outside any sweep bracket)
+    let cache_before = runner.cache.as_ref().map(|c| c.stats());
     let mut sweeps = Vec::with_capacity(COMPARE_METHODS.len());
     let (mut warmups_run, mut warmups_reused) = (0usize, 0usize);
     let (mut warmups_loaded, mut warmups_persisted) = (0u64, 0u64);
@@ -157,6 +173,24 @@ pub fn compare_methods(
     for r in &fixed {
         alloc.merge(&r.alloc);
     }
+    let (evictions, evict_skipped_pinned, rebuilds_after_evict, held_bytes) =
+        match (&runner.cache, cache_before) {
+            (Some(cache), Some(before)) => {
+                // a finished comparison is a job boundary: reconcile so
+                // the reported gauge respects the budget (entries the
+                // runs just released are reclaimed here, not at some
+                // future access)
+                cache.reclaim();
+                let d = cache.stats().since(&before);
+                (
+                    d.evictions,
+                    d.evict_skipped_pinned,
+                    d.rebuilds_after_evict,
+                    d.held_bytes,
+                )
+            }
+            _ => (0, 0, 0, 0),
+        };
     Ok(CompareResult {
         sweeps,
         fixed,
@@ -167,6 +201,10 @@ pub fn compare_methods(
         warmup_steps_run,
         split_uploads,
         split_reuses,
+        evictions,
+        evict_skipped_pinned,
+        rebuilds_after_evict,
+        held_bytes,
         alloc,
         total_time_s: t0.elapsed().as_secs_f64(),
     })

@@ -417,6 +417,14 @@ fn phase_from_tag(tag: u8) -> Option<&'static str> {
 }
 
 impl WarmStart {
+    /// What this warm start costs the shared cache's byte budget: the
+    /// snapshot's device buffers dominate; the host-side history is
+    /// charged at its in-memory size, the (tiny, fixed-size) RNG and
+    /// iterator state are noise and left out.
+    pub fn cache_bytes(&self) -> u64 {
+        self.snap.device_bytes() + (self.history.len() * std::mem::size_of::<Record>()) as u64
+    }
+
     /// Serialize this warm start into the v2 checkpoint container:
     /// the post-warmup state tensors as regular sections, plus extras
     /// carrying the RNG words, the exact `BatchIter` position, the

@@ -133,6 +133,15 @@ pub struct SweepResult {
     pub split_uploads: u64,
     /// Eval-split requests this sweep served from the shared cache.
     pub split_reuses: u64,
+    /// Cache entries evicted under the byte budget during this sweep
+    /// (0 without a cache or under budget 0 = unlimited).
+    pub evictions: u64,
+    /// Eviction-walk visits that skipped an entry a live run held.
+    pub evict_skipped_pinned: u64,
+    /// Cache builds that re-filled a previously evicted slot.
+    pub rebuilds_after_evict: u64,
+    /// Bytes the cache alone retained when the sweep finished (gauge).
+    pub cache_held_bytes: u64,
 }
 
 impl SweepResult {
@@ -221,6 +230,10 @@ pub fn sweep_lambdas(
         shared_warmup_alloc: AllocStats::default(),
         split_uploads: 0,
         split_reuses: 0,
+        evictions: 0,
+        evict_skipped_pinned: 0,
+        rebuilds_after_evict: 0,
+        cache_held_bytes: 0,
     };
     if lambdas.is_empty() {
         return Ok(result);
@@ -255,6 +268,7 @@ pub fn sweep_lambdas(
                     |path| runner.try_load_warm(path, base),
                     || runner.warmup(base),
                     |path, ws| runner.persist_warm(ws, path),
+                    |ws| ws.cache_bytes(),
                 )?,
                 _ => (Arc::new(runner.warmup(base)?), WarmSource::Built),
             };
@@ -289,6 +303,10 @@ pub fn sweep_lambdas(
         result.split_reuses = d.split_reuses;
         result.warmups_loaded = d.warmups_loaded;
         result.warmups_persisted = d.warmups_persisted;
+        result.evictions = d.evictions;
+        result.evict_skipped_pinned = d.evict_skipped_pinned;
+        result.rebuilds_after_evict = d.rebuilds_after_evict;
+        result.cache_held_bytes = d.held_bytes;
     }
     Ok(result)
 }
@@ -349,6 +367,10 @@ mod tests {
             shared_warmup_alloc: AllocStats::default(),
             split_uploads: 0,
             split_reuses: 0,
+            evictions: 0,
+            evict_skipped_pinned: 0,
+            rebuilds_after_evict: 0,
+            cache_held_bytes: 0,
         };
         let sw = mk_sweep(vec![mk(0.1, 8, 0.9), mk(1.0, 4, 0.8)], "size");
         let front = sw.front_normalized(&g).unwrap();

@@ -54,6 +54,13 @@ fn usage() -> ! {
                           parallelism; 1 = sequential scalar-era
                           behavior, bitwise identical either way)
                           (env: MIXPREC_XLA_THREADS)
+    --cache-budget-bytes <n>  byte budget of the in-process shared
+                          cache (eval splits + warm starts): LRU
+                          entries no live run holds are evicted and
+                          rebuilt on demand, bitwise identically.
+                          0 = unlimited
+                          (env: MIXPREC_CACHE_BUDGET_BYTES;
+                          default 256 MiB)
     --seed <n>            RNG seed
     --act-search          open activation precisions {{2,4,8}}
     --verbose"
@@ -107,6 +114,12 @@ fn build_runner<'a>(ctx: &'a Context, a: &Args, model: &str) -> mixprec::Result<
         .or_else(|| std::env::var("MIXPREC_WARM_DIR").ok());
     ctx.shared_cache()
         .set_warm_dir(warm_dir.map(std::path::PathBuf::from));
+    // the env default was read when the context built the cache; the
+    // flag overrides it for this process
+    if a.has("cache-budget-bytes") {
+        let cache = ctx.shared_cache();
+        cache.set_budget_bytes(a.u64_or("cache-budget-bytes", cache.budget_bytes()));
+    }
     ctx.runner_with_sharing(
         model,
         a.bool_or("share-eval-bufs", true),

@@ -23,6 +23,10 @@
 //! * `MIXPREC_WARM_DIR` — attach the cross-process warm-start disk
 //!   tier: warmups persist here and later processes resume from them
 //!   with zero warmup steps (unset: in-memory sharing only)
+//! * `MIXPREC_CACHE_BUDGET_BYTES` — byte budget of the in-process
+//!   shared cache (eval splits + warm starts, default 256 MiB, 0 =
+//!   unlimited): LRU entries no live run holds are evicted and rebuilt
+//!   on demand, bitwise identically
 //! * `MIXPREC_HOST_RESIDENT=1` — force the seed's per-step full
 //!   host<->device marshal (baseline for the step-marshalling bench)
 //! * `MIXPREC_XLA_THREADS` — backend execution threads (default:
@@ -39,17 +43,11 @@ use crate::error::Result;
 use crate::util::json::Json;
 
 fn env_usize(key: &str, default: usize) -> usize {
-    std::env::var(key)
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(default)
+    crate::util::env_parsed(key).unwrap_or(default)
 }
 
 fn env_f64(key: &str, default: f64) -> f64 {
-    std::env::var(key)
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(default)
+    crate::util::env_parsed(key).unwrap_or(default)
 }
 
 #[derive(Debug, Clone)]

@@ -22,18 +22,24 @@ pub fn alloc_line(a: &AllocStats) -> String {
 /// One-line shared-cache summary for a `compare`. The CI e2e leg
 /// greps exact tokens out of this line — "warmups run N (reused M)",
 /// "warmups_loaded N", "warmups_persisted N", "warmup_steps_run N",
-/// "split uploads N " — so keep the format stable.
+/// "split uploads N ", "held_bytes N", "evictions N (", "rebuilds N)"
+/// — so keep the format stable.
 pub fn cache_line(cr: &CompareResult) -> String {
     format!(
         "shared cache: warmups run {} (reused {}), warmups_loaded {}, \
-         warmups_persisted {}, warmup_steps_run {}, split uploads {} (reused {})",
+         warmups_persisted {}, warmup_steps_run {}, split uploads {} (reused {}), \
+         held_bytes {}, evictions {} (pinned-skips {}, rebuilds {})",
         cr.warmups_run,
         cr.warmups_reused,
         cr.warmups_loaded,
         cr.warmups_persisted,
         cr.warmup_steps_run,
         cr.split_uploads,
-        cr.split_reuses
+        cr.split_reuses,
+        cr.held_bytes,
+        cr.evictions,
+        cr.evict_skipped_pinned,
+        cr.rebuilds_after_evict
     )
 }
 

@@ -157,6 +157,18 @@ pub struct StateSnapshot {
     dev: BTreeMap<String, Vec<Arc<xla::PjRtBuffer>>>,
 }
 
+impl StateSnapshot {
+    /// Total on-device bytes this snapshot keeps alive — what a cached
+    /// warm start costs, priced for the shared cache's byte budget.
+    pub fn device_bytes(&self) -> u64 {
+        self.dev
+            .values()
+            .flatten()
+            .map(|b| b.on_device_size_bytes() as u64)
+            .sum()
+    }
+}
+
 /// Manifest-ordered train state held in device buffers, with a
 /// lazily-synced host mirror.
 pub struct DeviceState {

@@ -72,17 +72,45 @@
 //! constructed runners, `--share-eval-bufs off`, or
 //! `MIXPREC_SHARE_EVAL=0` / `MIXPREC_SHARE_WARMUP=0` in the bench
 //! harnesses.
+//!
+//! # Eviction & the byte budget
+//!
+//! A resident search service sweeps many `(dataset, lambda)` configs
+//! through one process; without reclamation the two pools would pin
+//! device buffers forever. Both pools therefore carry a byte cost per
+//! entry (`EvalSplit::h2d_bytes` for splits, a caller-supplied size
+//! hook for warm entries) and a last-touch stamp, and enforce a shared
+//! budget (`MIXPREC_CACHE_BUDGET_BYTES` / `--cache-budget-bytes`,
+//! default 256 MiB, 0 = unlimited).
+//!
+//! The budget governs **retained** bytes: entries whose only strong
+//! reference is the cache's own. An entry a live fork still holds is
+//! *pinned* — its memory is attributable to that run, not to the
+//! cache, and evicting it could not free anything anyway — so it is
+//! never evicted, only counted (`evict_skipped_pinned`). Enforcement
+//! runs at every cache access (hit or build) and on
+//! [`SharedRunCache::reclaim`]: while retained bytes exceed the
+//! budget, the least-recently-touched unpinned entry is dropped back
+//! to an idle slot. A later request for an evicted key simply rebuilds
+//! through the ordinary miss path (`rebuilds_after_evict`) — bitwise
+//! identical by the same determinism argument the cache already relies
+//! on for sharing. [`CacheStats::held_bytes`] is the retained-bytes
+//! gauge; it is reconciled at accesses, so between accesses it can
+//! transiently exceed the budget as runs drop their pins — call
+//! [`SharedRunCache::reclaim`] before reading it as a bound.
+//! Entries inserted without a size ([`SharedRunCache::get_or_warm`])
+//! cost zero bytes and are budget-exempt: evicting them frees nothing.
 
 use std::any::Any;
 use std::collections::HashMap;
 use std::hash::Hash;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::time::{Duration, SystemTime};
 
 use crate::error::{Error, Result};
-use crate::util::fnv1a;
+use crate::util::{env_parsed, fnv1a};
 
 /// One eval split resident on device: the padded x/y buffers (padded
 /// exactly like the per-batch iterator pads — tail chunk repeats
@@ -131,10 +159,23 @@ pub struct CacheStats {
     pub warmups_loaded: u64,
     /// Fresh warm entries written back to the disk tier.
     pub warmups_persisted: u64,
+    /// Bytes of entries only the cache still references (a **gauge**,
+    /// not a counter: pinned entries charge their holders, not the
+    /// budget — see the eviction section of the module docs).
+    pub held_bytes: u64,
+    /// Entries evicted under the byte budget.
+    pub evictions: u64,
+    /// Eviction-walk visits that skipped a pinned (still-held) entry.
+    pub evict_skipped_pinned: u64,
+    /// Builds that re-filled a previously evicted slot.
+    pub rebuilds_after_evict: u64,
 }
 
 impl CacheStats {
     /// Counter deltas accumulated after `before` was snapshotted.
+    /// `held_bytes` is a gauge, not a counter: the *current* value
+    /// passes through unchanged (a monotonic diff would underflow
+    /// whenever eviction shrank the pool).
     pub fn since(&self, before: &CacheStats) -> CacheStats {
         CacheStats {
             split_uploads: self.split_uploads - before.split_uploads,
@@ -143,6 +184,10 @@ impl CacheStats {
             warmups_reused: self.warmups_reused - before.warmups_reused,
             warmups_loaded: self.warmups_loaded - before.warmups_loaded,
             warmups_persisted: self.warmups_persisted - before.warmups_persisted,
+            held_bytes: self.held_bytes,
+            evictions: self.evictions - before.evictions,
+            evict_skipped_pinned: self.evict_skipped_pinned - before.evict_skipped_pinned,
+            rebuilds_after_evict: self.rebuilds_after_evict - before.rebuilds_after_evict,
         }
     }
 }
@@ -171,6 +216,11 @@ fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
 struct Slot<V> {
     state: Mutex<SlotState<V>>,
     cv: Condvar,
+    /// The budget enforcer dropped this slot's value. Sticky across a
+    /// failed rebuild (deliberately outside [`BuildReset`]'s reach):
+    /// the next *successful* build consumes it and counts as
+    /// `rebuilds_after_evict`.
+    evicted: AtomicBool,
 }
 
 enum SlotState<V> {
@@ -178,7 +228,19 @@ enum SlotState<V> {
     Idle,
     /// A builder is inside the miss closure; waiters sleep on `cv`.
     Building,
-    Ready(V),
+    Ready(ReadyEntry<V>),
+}
+
+/// A published value plus what the budget enforcer needs to rank it:
+/// its byte cost and when it was last handed out.
+struct ReadyEntry<V> {
+    value: V,
+    /// Byte cost charged against the budget while the cache is the
+    /// value's only holder (0 = budget-exempt).
+    bytes: u64,
+    /// Last-touch stamp from the cache-wide clock (unique per touch,
+    /// so LRU order is total and deterministic).
+    touch: u64,
 }
 
 impl<V> Slot<V> {
@@ -186,6 +248,7 @@ impl<V> Slot<V> {
         Slot {
             state: Mutex::new(SlotState::Idle),
             cv: Condvar::new(),
+            evicted: AtomicBool::new(false),
         }
     }
 }
@@ -219,17 +282,20 @@ type SlotMap<K, V> = Mutex<HashMap<K, Arc<Slot<V>>>>;
 type WarmValue = Arc<dyn Any + Send + Sync>;
 
 /// The shared get-or-build protocol: find-or-insert the key's slot
-/// (brief map lock), then resolve against the slot alone. Returns the
-/// value and `Some(kind)` iff this call ran the build.
+/// (brief map lock), then resolve against the slot alone. The build
+/// closure returns the value, its provenance, and its byte cost.
+/// Returns the value, `Some(kind)` iff this call ran the build, and
+/// whether that build re-filled a previously evicted slot.
 fn slot_get_or_build<K, V, F>(
     map: &SlotMap<K, V>,
     key: K,
+    clock: &AtomicU64,
     build: F,
-) -> Result<(V, Option<BuildKind>)>
+) -> Result<(V, Option<BuildKind>, bool)>
 where
     K: Eq + Hash,
     V: Clone,
-    F: FnOnce() -> Result<(V, BuildKind)>,
+    F: FnOnce() -> Result<(V, BuildKind, u64)>,
 {
     let slot = {
         let mut m = lock(map);
@@ -237,8 +303,15 @@ where
     };
     let mut st = lock(&slot.state);
     loop {
-        match &*st {
-            SlotState::Ready(v) => return Ok((v.clone(), None)),
+        match &mut *st {
+            SlotState::Ready(e) => {
+                // every hand-out refreshes the LRU stamp *under the
+                // slot lock* — the budget enforcer re-checks the stamp
+                // under the same lock, so a touched entry can never be
+                // evicted by a stale-ranked walk
+                e.touch = clock.fetch_add(1, Ordering::Relaxed);
+                return Ok((e.value.clone(), None, false));
+            }
             SlotState::Building => {
                 st = slot.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
             }
@@ -251,15 +324,93 @@ where
     // concurrently; same-key callers wait on this slot's condvar
     let guard = BuildReset { slot: &slot };
     match build() {
-        Ok((v, kind)) => {
+        Ok((v, kind, bytes)) => {
             std::mem::forget(guard);
-            *lock(&slot.state) = SlotState::Ready(v.clone());
+            let rebuilt = slot.evicted.swap(false, Ordering::Relaxed);
+            *lock(&slot.state) = SlotState::Ready(ReadyEntry {
+                value: v.clone(),
+                bytes,
+                touch: clock.fetch_add(1, Ordering::Relaxed),
+            });
             slot.cv.notify_all();
-            Ok((v, Some(kind)))
+            Ok((v, Some(kind), rebuilt))
         }
         // `guard` drops here: Idle + notify, so a waiter can retry
         Err(e) => Err(e),
     }
+}
+
+/// One eviction candidate, type-erased so splits and warm entries rank
+/// in a single LRU walk. `evict` re-verifies under the slot lock (still
+/// the same publication, still cache-owned) before dropping the value.
+struct Candidate {
+    touch: u64,
+    bytes: u64,
+    pinned: bool,
+    evict: Box<dyn FnOnce() -> bool>,
+}
+
+/// Snapshot one pool's Ready entries as eviction candidates. The map
+/// lock is held only to clone the slot handles; each slot is then
+/// inspected under its own lock (builds in flight are simply not
+/// candidates). Zero-byte entries are budget-exempt and skipped.
+fn collect_candidates<K, T>(map: &SlotMap<K, Arc<T>>, out: &mut Vec<Candidate>)
+where
+    K: Eq + Hash,
+    T: ?Sized + Send + Sync + 'static,
+{
+    let slots: Vec<Arc<Slot<Arc<T>>>> = lock(map).values().cloned().collect();
+    for slot in slots {
+        let snap = match &*lock(&slot.state) {
+            SlotState::Ready(e) if e.bytes > 0 => {
+                Some((e.touch, e.bytes, Arc::strong_count(&e.value)))
+            }
+            _ => None,
+        };
+        let Some((touch, bytes, strong)) = snap else {
+            continue;
+        };
+        out.push(Candidate {
+            touch,
+            bytes,
+            // the slot's own reference is one; anything above it is a
+            // live holder outside the cache
+            pinned: strong > 1,
+            evict: Box::new(move || {
+                let mut st = lock(&slot.state);
+                match &*st {
+                    // clones only ever escape under this lock
+                    // (`slot_get_or_build`'s hit path), so an
+                    // unchanged stamp + strong count of one here
+                    // proves the cache is still the only holder
+                    SlotState::Ready(e)
+                        if e.touch == touch && Arc::strong_count(&e.value) == 1 =>
+                    {
+                        *st = SlotState::Idle;
+                        slot.evicted.store(true, Ordering::Relaxed);
+                        true
+                    }
+                    _ => false,
+                }
+            }),
+        });
+    }
+}
+
+/// Sum one pool's retained bytes: Ready entries the cache alone holds.
+fn retained_in<K, T>(map: &SlotMap<K, Arc<T>>) -> u64
+where
+    K: Eq + Hash,
+    T: ?Sized + Send + Sync + 'static,
+{
+    let slots: Vec<Arc<Slot<Arc<T>>>> = lock(map).values().cloned().collect();
+    slots
+        .iter()
+        .map(|slot| match &*lock(&slot.state) {
+            SlotState::Ready(e) if Arc::strong_count(&e.value) == 1 => e.bytes,
+            _ => 0,
+        })
+        .sum()
 }
 
 /// Disk-tier file name for a warm-pool key (hash, not the raw key —
@@ -274,17 +425,21 @@ fn warm_file_name(key: &str) -> String {
 const WARM_DIR_DEFAULT_MAX: usize = 256;
 
 fn warm_dir_max_from_env() -> usize {
-    std::env::var("MIXPREC_WARM_DIR_MAX")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(WARM_DIR_DEFAULT_MAX)
+    env_parsed("MIXPREC_WARM_DIR_MAX").unwrap_or(WARM_DIR_DEFAULT_MAX)
 }
 
 fn warm_dir_ttl_from_env() -> Option<Duration> {
-    std::env::var("MIXPREC_WARM_DIR_TTL_SECS")
-        .ok()
-        .and_then(|v| v.parse::<u64>().ok())
-        .map(Duration::from_secs)
+    env_parsed::<u64>("MIXPREC_WARM_DIR_TTL_SECS").map(Duration::from_secs)
+}
+
+/// Default byte budget of the in-process cache: generous enough that
+/// every single-process CLI/bench flow fits without a single eviction,
+/// small enough that a resident multi-tenant server cannot grow device
+/// memory without bound.
+pub const CACHE_DEFAULT_BUDGET_BYTES: u64 = 256 * 1024 * 1024;
+
+fn cache_budget_from_env() -> u64 {
+    env_parsed("MIXPREC_CACHE_BUDGET_BYTES").unwrap_or(CACHE_DEFAULT_BUDGET_BYTES)
 }
 
 /// Prune the warm disk tier: drop `warm-*.ckpt` entries whose mtime is
@@ -340,23 +495,118 @@ pub(crate) fn gc_warm_dir(dir: &Path, max_entries: usize, ttl: Option<Duration>)
 /// `coordinator::Context` (and therefore one per CLI/bench process);
 /// see the module docs for what it pools, the per-entry locking, and
 /// the optional cross-process disk tier.
-#[derive(Default)]
 pub struct SharedRunCache {
     eval: SlotMap<EvalKey, Arc<EvalSplit>>,
     warm: SlotMap<String, WarmValue>,
     /// Disk tier root for warm entries (`None` = in-memory only).
     warm_dir: Mutex<Option<PathBuf>>,
+    /// Byte budget over *retained* entries (only-the-cache-holds-it);
+    /// 0 = unlimited. See the eviction section of the module docs.
+    budget_bytes: AtomicU64,
+    /// Cache-wide last-touch clock shared by both pools, so the LRU
+    /// walk ranks splits and warm entries on one axis.
+    clock: AtomicU64,
+    /// High-water mark of retained bytes at reconciliation points.
+    held_peak: AtomicU64,
     split_uploads: AtomicU64,
     split_reuses: AtomicU64,
     warmups_run: AtomicU64,
     warmups_reused: AtomicU64,
     warmups_loaded: AtomicU64,
     warmups_persisted: AtomicU64,
+    evictions: AtomicU64,
+    evict_skipped_pinned: AtomicU64,
+    rebuilds_after_evict: AtomicU64,
+}
+
+impl Default for SharedRunCache {
+    fn default() -> Self {
+        SharedRunCache::new()
+    }
 }
 
 impl SharedRunCache {
     pub fn new() -> Self {
-        SharedRunCache::default()
+        SharedRunCache {
+            eval: Mutex::new(HashMap::new()),
+            warm: Mutex::new(HashMap::new()),
+            warm_dir: Mutex::new(None),
+            budget_bytes: AtomicU64::new(cache_budget_from_env()),
+            clock: AtomicU64::new(0),
+            held_peak: AtomicU64::new(0),
+            split_uploads: AtomicU64::new(0),
+            split_reuses: AtomicU64::new(0),
+            warmups_run: AtomicU64::new(0),
+            warmups_reused: AtomicU64::new(0),
+            warmups_loaded: AtomicU64::new(0),
+            warmups_persisted: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            evict_skipped_pinned: AtomicU64::new(0),
+            rebuilds_after_evict: AtomicU64::new(0),
+        }
+    }
+
+    /// Replace the byte budget (0 = unlimited) and reconcile on the
+    /// spot: lowering the budget evicts LRU unpinned entries now, not
+    /// at the next access. `--cache-budget-bytes` routes here;
+    /// `MIXPREC_CACHE_BUDGET_BYTES` seeds the value at construction.
+    pub fn set_budget_bytes(&self, bytes: u64) {
+        self.budget_bytes.store(bytes, Ordering::Relaxed);
+        self.enforce_budget();
+    }
+
+    /// The active byte budget (0 = unlimited).
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_bytes.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of bytes the cache alone retained, sampled at
+    /// reconciliation points (every access and [`reclaim`] under a
+    /// nonzero budget). Never exceeds a nonzero budget.
+    ///
+    /// [`reclaim`]: SharedRunCache::reclaim
+    pub fn held_peak_bytes(&self) -> u64 {
+        self.held_peak.load(Ordering::Relaxed)
+    }
+
+    /// Reconcile retained bytes against the budget immediately —
+    /// entries released by finished runs are only reclaimed at cache
+    /// accesses, so a job boundary calls this before reading
+    /// [`CacheStats::held_bytes`] as a budget bound.
+    pub fn reclaim(&self) {
+        self.enforce_budget();
+    }
+
+    /// While retained (cache-owned) bytes exceed the budget, evict the
+    /// least-recently-touched unpinned entry across both pools. Runs
+    /// after every access; deliberately **not** from `stats()`, which
+    /// stays a passive observer.
+    fn enforce_budget(&self) {
+        let budget = self.budget_bytes.load(Ordering::Relaxed);
+        if budget == 0 {
+            return;
+        }
+        let mut cands = Vec::new();
+        collect_candidates(&self.eval, &mut cands);
+        collect_candidates(&self.warm, &mut cands);
+        let mut held: u64 = cands.iter().filter(|c| !c.pinned).map(|c| c.bytes).sum();
+        if held > budget {
+            // oldest stamp first; the clock is unique per touch, so
+            // the walk order is total and deterministic
+            cands.sort_by_key(|c| c.touch);
+            for c in cands {
+                if held <= budget {
+                    break;
+                }
+                if c.pinned {
+                    self.evict_skipped_pinned.fetch_add(1, Ordering::Relaxed);
+                } else if (c.evict)() {
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                    held -= c.bytes;
+                }
+            }
+        }
+        self.held_peak.fetch_max(held, Ordering::Relaxed);
     }
 
     /// Attach (or detach) the warm-start disk tier.
@@ -397,21 +647,26 @@ impl SharedRunCache {
         upload: impl FnOnce() -> Result<EvalSplit>,
     ) -> Result<(Arc<EvalSplit>, bool)> {
         let vkey = key.clone();
-        let (entry, built) = slot_get_or_build(&self.eval, key, || {
+        let (entry, built, rebuilt) = slot_get_or_build(&self.eval, key, &self.clock, || {
             let entry = Arc::new(upload()?);
             // a fresh upload must satisfy its own key too — catches a
             // caller keying one split's upload under another's identity
             verify_split(&vkey, &entry)?;
-            Ok((entry, BuildKind::Built))
+            let bytes = entry.h2d_bytes;
+            Ok((entry, BuildKind::Built, bytes))
         })?;
-        if built.is_some() {
+        let fresh = built.is_some();
+        if fresh {
             self.split_uploads.fetch_add(1, Ordering::Relaxed);
-            Ok((entry, true))
         } else {
             verify_split(&vkey, &entry)?;
             self.split_reuses.fetch_add(1, Ordering::Relaxed);
-            Ok((entry, false))
         }
+        if rebuilt {
+            self.rebuilds_after_evict.fetch_add(1, Ordering::Relaxed);
+        }
+        self.enforce_budget();
+        Ok((entry, fresh))
     }
 
     /// Fetch the warm entry for `key`, running `make` on first use —
@@ -420,16 +675,33 @@ impl SharedRunCache {
     /// serializer). Returns the entry and whether this call built it.
     /// The pool is type-erased; a key resolving to a different
     /// concrete type is an error (false sharing), never a silent
-    /// reinterpretation.
+    /// reinterpretation. Entries inserted this way carry no byte cost
+    /// and are budget-exempt — use
+    /// [`SharedRunCache::get_or_warm_sized`] for anything that pins
+    /// device memory.
     pub fn get_or_warm<T, F>(&self, key: &str, make: F) -> Result<(Arc<T>, bool)>
     where
         T: Send + Sync + 'static,
         F: FnOnce() -> Result<T>,
     {
+        self.get_or_warm_sized(key, make, |_| 0)
+    }
+
+    /// [`SharedRunCache::get_or_warm`] with a byte cost: `size` runs
+    /// once on the entry this call resolves (fresh or loaded) and the
+    /// result is charged against the cache budget while the cache is
+    /// the entry's only holder.
+    pub fn get_or_warm_sized<T, F, S>(&self, key: &str, make: F, size: S) -> Result<(Arc<T>, bool)>
+    where
+        T: Send + Sync + 'static,
+        F: FnOnce() -> Result<T>,
+        S: FnOnce(&T) -> u64,
+    {
         let (v, src) = self.warm_entry(
             key,
             None::<(PathBuf, fn(&Path) -> Option<T>, fn(&Path, &T) -> Result<()>)>,
             make,
+            size,
         )?;
         Ok((v, src == WarmSource::Built))
     }
@@ -441,63 +713,72 @@ impl SharedRunCache {
     /// error), and a fresh build is handed to `persist`, which must
     /// write atomically (the coordinator routes this to the v2
     /// checkpoint's temp-file + rename writer). A persist failure is
-    /// reported on stderr but never fails the compute path.
-    pub fn get_or_warm_persistent<T, L, F, P>(
+    /// reported on stderr but never fails the compute path. `size`
+    /// prices the resolved entry (fresh *or* loaded) for the cache
+    /// budget, computed on the typed value before erasure.
+    pub fn get_or_warm_persistent<T, L, F, P, S>(
         &self,
         key: &str,
         load: L,
         make: F,
         persist: P,
+        size: S,
     ) -> Result<(Arc<T>, WarmSource)>
     where
         T: Send + Sync + 'static,
         L: FnOnce(&Path) -> Option<T>,
         F: FnOnce() -> Result<T>,
         P: FnOnce(&Path, &T) -> Result<()>,
+        S: FnOnce(&T) -> u64,
     {
         let disk = self
             .warm_dir()
             .map(|d| (d.join(warm_file_name(key)), load, persist));
-        self.warm_entry(key, disk, make)
+        self.warm_entry(key, disk, make, size)
     }
 
-    /// Shared implementation of the two warm accessors.
-    fn warm_entry<T, L, F, P>(
+    /// Shared implementation of the warm accessors.
+    fn warm_entry<T, L, F, P, S>(
         &self,
         key: &str,
         disk: Option<(PathBuf, L, P)>,
         make: F,
+        size: S,
     ) -> Result<(Arc<T>, WarmSource)>
     where
         T: Send + Sync + 'static,
         L: FnOnce(&Path) -> Option<T>,
         F: FnOnce() -> Result<T>,
         P: FnOnce(&Path, &T) -> Result<()>,
+        S: FnOnce(&T) -> u64,
     {
-        let (erased, built) = slot_get_or_build(&self.warm, key.to_string(), || {
-            let mut persist_to = None;
-            if let Some((path, load, persist)) = disk {
-                if let Some(v) = load(&path) {
-                    let v: WarmValue = Arc::new(v);
-                    return Ok((v, BuildKind::Loaded));
-                }
-                persist_to = Some((path, persist));
-            }
-            let typed = Arc::new(make()?);
-            if let Some((path, persist)) = persist_to {
-                match persist(&path, typed.as_ref()) {
-                    Ok(()) => {
-                        self.warmups_persisted.fetch_add(1, Ordering::Relaxed);
+        let (erased, built, rebuilt) =
+            slot_get_or_build(&self.warm, key.to_string(), &self.clock, || {
+                let mut persist_to = None;
+                if let Some((path, load, persist)) = disk {
+                    if let Some(v) = load(&path) {
+                        let bytes = size(&v);
+                        let v: WarmValue = Arc::new(v);
+                        return Ok((v, BuildKind::Loaded, bytes));
                     }
-                    Err(e) => eprintln!(
-                        "warm cache: failed to persist '{}': {e} (continuing \
-                         without the disk entry)",
-                        path.display()
-                    ),
+                    persist_to = Some((path, persist));
                 }
-            }
-            Ok((typed as WarmValue, BuildKind::Built))
-        })?;
+                let typed = Arc::new(make()?);
+                if let Some((path, persist)) = persist_to {
+                    match persist(&path, typed.as_ref()) {
+                        Ok(()) => {
+                            self.warmups_persisted.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(e) => eprintln!(
+                            "warm cache: failed to persist '{}': {e} (continuing \
+                             without the disk entry)",
+                            path.display()
+                        ),
+                    }
+                }
+                let bytes = size(typed.as_ref());
+                Ok((typed as WarmValue, BuildKind::Built, bytes))
+            })?;
         let typed = erased.downcast::<T>().map_err(|_| {
             Error::msg(format!(
                 "shared cache: warm entry '{key}' holds a foreign type \
@@ -518,10 +799,17 @@ impl SharedRunCache {
                 WarmSource::Reused
             }
         };
+        if rebuilt {
+            self.rebuilds_after_evict.fetch_add(1, Ordering::Relaxed);
+        }
+        self.enforce_budget();
         Ok((typed, src))
     }
 
-    /// Snapshot of the cumulative counters.
+    /// Snapshot of the cumulative counters plus the retained-bytes
+    /// gauge. A passive observer: never triggers eviction, so sweeps
+    /// can bracket themselves with snapshots without perturbing the
+    /// counter trace they are measuring.
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             split_uploads: self.split_uploads.load(Ordering::Relaxed),
@@ -530,6 +818,10 @@ impl SharedRunCache {
             warmups_reused: self.warmups_reused.load(Ordering::Relaxed),
             warmups_loaded: self.warmups_loaded.load(Ordering::Relaxed),
             warmups_persisted: self.warmups_persisted.load(Ordering::Relaxed),
+            held_bytes: retained_in(&self.eval) + retained_in(&self.warm),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            evict_skipped_pinned: self.evict_skipped_pinned.load(Ordering::Relaxed),
+            rebuilds_after_evict: self.rebuilds_after_evict.load(Ordering::Relaxed),
         }
     }
 }
@@ -545,8 +837,12 @@ fn verify_split(key: &EvalKey, s: &EvalSplit) -> Result<()> {
     let total: f64 = s.real.iter().sum();
     let x_rows = s.x.array_shape()?.dims().first().map(|&d| d as usize);
     let y_rows = s.y.array_shape()?.dims().first().map(|&d| d as usize);
+    // exact f64 comparison on purpose: real counts are small integers
+    // stored exactly, and the old `total as usize` cast let any
+    // fractional corruption within (n, n+1) truncate its way past the
+    // check
     if s.real.len() != chunks
-        || total as usize != key.n
+        || total != key.n as f64
         || x_rows != Some(n_pad)
         || y_rows != Some(n_pad)
     {
@@ -591,6 +887,17 @@ mod tests {
             batch,
             n,
             data_fp: 7,
+        }
+    }
+
+    /// `key` with a caller-chosen dataset fingerprint — the eviction
+    /// tests need several distinct entries of one geometry.
+    fn fkey(n: usize, batch: usize, fp: u64) -> EvalKey {
+        EvalKey {
+            split: "val",
+            batch,
+            n,
+            data_fp: fp,
         }
     }
 
@@ -777,7 +1084,7 @@ mod tests {
         let cache = SharedRunCache::new();
         cache.set_warm_dir(Some(dir.clone()));
         let (v, src) = cache
-            .get_or_warm_persistent("k", load_u64, || Ok(41u64), persist_u64)
+            .get_or_warm_persistent("k", load_u64, || Ok(41u64), persist_u64, |_| 8)
             .unwrap();
         assert_eq!((*v, src), (41, WarmSource::Built));
         assert_eq!(cache.stats().warmups_persisted, 1);
@@ -792,6 +1099,7 @@ mod tests {
                 load_u64,
                 || Err(Error::msg("must load, not build")),
                 persist_u64,
+                |_| 8,
             )
             .unwrap();
         assert_eq!((*v2, src2), (41, WarmSource::Loaded));
@@ -805,6 +1113,7 @@ mod tests {
                 |_| panic!("must not reload"),
                 || Err(Error::msg("must not rebuild")),
                 persist_u64,
+                |_| 8,
             )
             .unwrap();
         assert_eq!(src3, WarmSource::Reused);
@@ -822,7 +1131,7 @@ mod tests {
         let path = cache.warm_file_path("k").unwrap();
         std::fs::write(&path, b"not eight bytes!!").unwrap();
         let (v, src) = cache
-            .get_or_warm_persistent("k", load_u64, || Ok(5u64), persist_u64)
+            .get_or_warm_persistent("k", load_u64, || Ok(5u64), persist_u64, |_| 8)
             .unwrap();
         assert_eq!((*v, src), (5, WarmSource::Built));
         let st = cache.stats();
@@ -889,10 +1198,177 @@ mod tests {
                 |_| panic!("no dir, no load"),
                 || Ok(3u64),
                 |_, _| panic!("no dir, no persist"),
+                |_| 8,
             )
             .unwrap();
         assert_eq!((*v, src), (3, WarmSource::Built));
         assert_eq!(cache.stats().warmups_persisted, 0);
         assert!(cache.warm_file_path("k").is_none());
+    }
+
+    /// Deterministic LRU: with two 96-byte entries retained and room
+    /// for only one, the over-budget insert evicts exactly the
+    /// least-recently-touched one, and the evicted key rebuilds
+    /// through the ordinary miss path.
+    #[test]
+    fn lru_eviction_prefers_the_oldest_unpinned_entry() {
+        let eng = Engine::cpu().unwrap();
+        let cache = SharedRunCache::new();
+        // each split(8, 4) entry costs 96 bytes; one fits, two do not
+        cache.set_budget_bytes(150);
+        cache
+            .get_or_upload_split(fkey(8, 4, 1), || Ok(split(&eng, 8, 4)))
+            .unwrap();
+        cache
+            .get_or_upload_split(fkey(8, 4, 2), || Ok(split(&eng, 8, 4)))
+            .unwrap();
+        // touch A: B becomes the least-recently-used entry
+        cache
+            .get_or_upload_split(fkey(8, 4, 1), || panic!("A is resident"))
+            .unwrap();
+        // C's insert finds 192 retained bytes: exactly the LRU entry
+        // (B) goes, then A's 96 fit and the walk stops
+        let (_c, _) = cache
+            .get_or_upload_split(fkey(8, 4, 3), || Ok(split(&eng, 8, 4)))
+            .unwrap();
+        let st = cache.stats();
+        assert_eq!((st.evictions, st.evict_skipped_pinned), (1, 0));
+        cache
+            .get_or_upload_split(fkey(8, 4, 1), || panic!("LRU order broken: A evicted"))
+            .unwrap();
+        let (_b, fresh) = cache
+            .get_or_upload_split(fkey(8, 4, 2), || Ok(split(&eng, 8, 4)))
+            .unwrap();
+        assert!(fresh, "evicted entry must rebuild");
+        assert_eq!(cache.stats().rebuilds_after_evict, 1);
+    }
+
+    /// The refcount-pinning rule: an entry a concurrent holder (a live
+    /// fork, in production) still references survives any number of
+    /// over-budget inserts — the walk skips it (counted) and takes the
+    /// unpinned entry behind it instead.
+    #[test]
+    fn pinned_entries_survive_over_budget_inserts() {
+        let eng = Engine::cpu().unwrap();
+        let cache = SharedRunCache::new();
+        cache.set_budget_bytes(1);
+        let (a, _) = cache
+            .get_or_upload_split(fkey(8, 4, 1), || Ok(split(&eng, 8, 4)))
+            .unwrap();
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let held = Arc::clone(&a);
+        let holder = std::thread::spawn(move || {
+            rx.recv().ok();
+            drop(held);
+        });
+        cache
+            .get_or_upload_split(fkey(8, 4, 2), || Ok(split(&eng, 8, 4)))
+            .unwrap();
+        cache
+            .get_or_upload_split(fkey(8, 4, 3), || Ok(split(&eng, 8, 4)))
+            .unwrap();
+        // the third insert walked A (oldest, pinned) before X (second,
+        // released): A skipped, X evicted — exact counters
+        let st = cache.stats();
+        assert_eq!((st.evictions, st.evict_skipped_pinned), (1, 1));
+        // A never left the pool: the next request is a plain hit on
+        // the very same allocation
+        let (a2, fresh) = cache
+            .get_or_upload_split(fkey(8, 4, 1), || panic!("pinned entry was evicted"))
+            .unwrap();
+        assert!(!fresh);
+        assert!(Arc::ptr_eq(&a, &a2));
+        tx.send(()).ok();
+        holder.join().unwrap();
+        assert_eq!(cache.stats().rebuilds_after_evict, 0);
+    }
+
+    /// Budget 0 is the pre-budget unlimited behavior: no
+    /// reconciliation, no eviction, everything stays resident.
+    #[test]
+    fn budget_zero_disables_eviction_entirely() {
+        let eng = Engine::cpu().unwrap();
+        let cache = SharedRunCache::new();
+        cache.set_budget_bytes(0);
+        for fp in 0..8 {
+            cache
+                .get_or_upload_split(fkey(8, 4, 10 + fp), || Ok(split(&eng, 8, 4)))
+                .unwrap();
+        }
+        let st = cache.stats();
+        assert_eq!(st.split_uploads, 8);
+        assert_eq!(
+            (st.evictions, st.evict_skipped_pinned, st.rebuilds_after_evict),
+            (0, 0, 0)
+        );
+        assert_eq!(st.held_bytes, 8 * 96);
+        assert_eq!(cache.held_peak_bytes(), 0, "no reconciliation ran");
+        for fp in 0..8 {
+            cache
+                .get_or_upload_split(fkey(8, 4, 10 + fp), || panic!("evicted under budget 0"))
+                .unwrap();
+        }
+    }
+
+    /// Warm entries price via the size hook, rank on the same LRU axis
+    /// as splits, and rebuild after eviction; unsized entries are
+    /// budget-exempt.
+    #[test]
+    fn warm_entries_are_priced_and_evicted_by_the_shared_budget() {
+        let cache = SharedRunCache::new();
+        cache.set_budget_bytes(100);
+        cache.get_or_warm_sized("fp-a", || Ok(1u64), |_| 80).unwrap();
+        cache.get_or_warm_sized("fp-b", || Ok(2u64), |_| 80).unwrap();
+        cache.get_or_warm("fp-plain", || Ok(7u64)).unwrap();
+        // a's and b's own inserts each saw at most 80 unpinned bytes
+        // (the entry being resolved is pinned by its own call); the
+        // third access found a + b = 160 retained and evicted the LRU
+        // entry (a)
+        assert_eq!(cache.stats().evictions, 1);
+        cache.reclaim();
+        assert!(cache.stats().held_bytes <= 100);
+        let (b, fresh) = cache
+            .get_or_warm_sized::<u64, _, _>("fp-b", || panic!("b survived the walk"), |_| 80)
+            .unwrap();
+        assert!(!fresh && *b == 2);
+        let (a, fresh) = cache.get_or_warm_sized("fp-a", || Ok(9u64), |_| 80).unwrap();
+        assert!(fresh && *a == 9, "evicted warm key rebuilds via the miss path");
+        assert_eq!(cache.stats().rebuilds_after_evict, 1);
+        // the unsized entry was never a candidate: still resident
+        let (p, fresh) = cache
+            .get_or_warm::<u64, _>("fp-plain", || panic!("budget-exempt entry evicted"))
+            .unwrap();
+        assert!(!fresh && *p == 7);
+    }
+
+    /// `held_bytes` is the retained-only gauge: bytes a live holder
+    /// pins are charged to the holder, not the cache.
+    #[test]
+    fn held_bytes_charges_only_cache_owned_entries() {
+        let eng = Engine::cpu().unwrap();
+        let cache = SharedRunCache::new();
+        let (a, _) = cache
+            .get_or_upload_split(fkey(8, 4, 1), || Ok(split(&eng, 8, 4)))
+            .unwrap();
+        assert_eq!(cache.stats().held_bytes, 0, "a live holder pins the bytes");
+        drop(a);
+        assert_eq!(cache.stats().held_bytes, 96, "released entries charge the cache");
+    }
+
+    /// The fingerprint check must compare real totals exactly: the old
+    /// `total as usize` cast truncated fractional corruption within
+    /// `(n, n+1)` straight past the check.
+    #[test]
+    fn fractional_real_total_fails_fingerprint_check() {
+        let eng = Engine::cpu().unwrap();
+        let cache = SharedRunCache::new();
+        // sums to 10.7 for a key promising n = 10
+        let make = || {
+            let mut s = split(&eng, 10, 4);
+            s.real = vec![4.0, 4.0, 2.7];
+            Ok(s)
+        };
+        assert!(cache.get_or_upload_split(key(10, 4), make).is_err());
+        assert_eq!(cache.stats().split_uploads, 0, "nothing was cached");
     }
 }

@@ -56,10 +56,28 @@ impl Args {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// Shared core of the typed getters: a flag that is *present* but
+    /// malformed is rejected with a one-line stderr warning naming the
+    /// flag and the offending value — `--steps fuor` must never
+    /// silently become the default and change what actually ran.
+    fn parsed_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.get(key) {
+            None => default,
+            Some(raw) => match raw.parse() {
+                Ok(v) => v,
+                Err(_) => {
+                    eprintln!(
+                        "warning: ignoring --{key}='{raw}': not a valid {}",
+                        std::any::type_name::<T>()
+                    );
+                    default
+                }
+            },
+        }
+    }
+
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
-        self.get(key)
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(default)
+        self.parsed_or(key, default)
     }
 
     pub fn f32_or(&self, key: &str, default: f32) -> f32 {
@@ -67,33 +85,46 @@ impl Args {
     }
 
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
-        self.get(key)
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(default)
+        self.parsed_or(key, default)
     }
 
     pub fn u64_or(&self, key: &str, default: u64) -> u64 {
-        self.get(key)
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(default)
+        self.parsed_or(key, default)
     }
 
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
         match self.get(key) {
             Some("true") | Some("1") | Some("yes") | Some("on") => true,
             Some("false") | Some("0") | Some("no") | Some("off") => false,
-            Some(_) => default,
+            Some(raw) => {
+                eprintln!(
+                    "warning: ignoring --{key}='{raw}': expected one of \
+                     true/false/1/0/yes/no/on/off"
+                );
+                default
+            }
             None => default,
         }
     }
 
-    /// Comma-separated list of f64 (for lambda sweeps etc.).
+    /// Comma-separated list of f64 (for lambda sweeps etc.). Malformed
+    /// elements are dropped with a warning, same policy as the scalar
+    /// getters.
     pub fn f64_list(&self, key: &str, default: &[f64]) -> Vec<f64> {
         match self.get(key) {
             Some(v) => v
                 .split(',')
                 .filter(|s| !s.is_empty())
-                .filter_map(|s| s.trim().parse().ok())
+                .filter_map(|s| match s.trim().parse().ok() {
+                    Some(x) => Some(x),
+                    None => {
+                        eprintln!(
+                            "warning: ignoring '{}' in --{key}: not a valid f64",
+                            s.trim()
+                        );
+                        None
+                    }
+                })
                 .collect(),
             None => default.to_vec(),
         }
@@ -157,5 +188,17 @@ mod tests {
     fn negative_number_as_value() {
         let a = parse(&["--bias", "-3.5"]);
         assert_eq!(a.f64_or("bias", 0.0), -3.5);
+    }
+
+    /// Malformed values fall back to the default (the warning itself
+    /// goes to stderr; the contract asserted here is the value).
+    #[test]
+    fn malformed_values_fall_back_to_defaults() {
+        let a = parse(&["--steps", "fuor", "--lr", "fast", "--flag", "maybe"]);
+        assert_eq!(a.usize_or("steps", 7), 7);
+        assert_eq!(a.f64_or("lr", 0.5), 0.5);
+        assert!(a.bool_or("flag", true));
+        let b = parse(&["--lams", "0.1,zz,1.0"]);
+        assert_eq!(b.f64_list("lams", &[]), vec![0.1, 1.0]);
     }
 }

@@ -348,6 +348,24 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Four hex digits of a `\u` escape. On entry `self.pos` sits on
+    /// the `u`; on success it has advanced past the last digit. Each
+    /// byte is checked to be an ASCII hex digit — `from_str_radix`
+    /// alone would accept forms like `+fff`.
+    fn hex4(&mut self) -> Result<u32, JsonError> {
+        if self.pos + 4 >= self.bytes.len() {
+            return Err(self.err("bad \\u escape"));
+        }
+        let digits = &self.bytes[self.pos + 1..self.pos + 5];
+        if !digits.iter().all(|b| b.is_ascii_hexdigit()) {
+            return Err(self.err("bad \\u escape"));
+        }
+        let hex = std::str::from_utf8(digits).map_err(|_| self.err("bad \\u escape"))?;
+        let cp = u32::from_str_radix(hex, 16).map_err(|_| self.err("bad \\u escape"))?;
+        self.pos += 5;
+        Ok(cp)
+    }
+
     fn string(&mut self) -> Result<String, JsonError> {
         self.expect(b'"')?;
         let mut s = String::new();
@@ -370,18 +388,33 @@ impl<'a> Parser<'a> {
                         Some(b'b') => s.push('\u{8}'),
                         Some(b'f') => s.push('\u{c}'),
                         Some(b'u') => {
-                            if self.pos + 4 >= self.bytes.len() {
-                                return Err(self.err("bad \\u escape"));
-                            }
-                            let hex =
-                                std::str::from_utf8(&self.bytes[self.pos + 1..self.pos + 5])
-                                    .map_err(|_| self.err("bad \\u escape"))?;
-                            let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            // Surrogate pairs are rare in our data; map
-                            // lone surrogates to U+FFFD.
-                            s.push(char::from_u32(cp).unwrap_or('\u{FFFD}'));
-                            self.pos += 4;
+                            let hi = self.hex4()?;
+                            let cp = if (0xd800..=0xdbff).contains(&hi) {
+                                // High surrogate: JSON encodes non-BMP
+                                // characters as a \uD8xx\uDCxx pair, so
+                                // the next escape must be the low half.
+                                if self.peek() != Some(b'\\')
+                                    || self.bytes.get(self.pos + 1) != Some(&b'u')
+                                {
+                                    return Err(self.err("unpaired high surrogate"));
+                                }
+                                self.pos += 1; // onto the 'u'
+                                let lo = self.hex4()?;
+                                if !(0xdc00..=0xdfff).contains(&lo) {
+                                    return Err(self.err("unpaired high surrogate"));
+                                }
+                                0x10000 + ((hi - 0xd800) << 10) + (lo - 0xdc00)
+                            } else if (0xdc00..=0xdfff).contains(&hi) {
+                                return Err(self.err("unpaired low surrogate"));
+                            } else {
+                                hi
+                            };
+                            // cp is a non-surrogate <= 0x10FFFF by
+                            // construction, so this cannot fail.
+                            s.push(char::from_u32(cp).expect("surrogates excluded"));
+                            // hex4 already advanced past the escape;
+                            // skip the shared `self.pos += 1` below.
+                            continue;
                         }
                         _ => return Err(self.err("bad escape")),
                     }
@@ -525,5 +558,53 @@ mod tests {
     fn unicode_passthrough() {
         let v = Json::parse("\"héllo ≤ wörld\"").unwrap();
         assert_eq!(v.as_str(), Some("héllo ≤ wörld"));
+    }
+
+    /// Escaped surrogate pairs decode to the real non-BMP scalar, not
+    /// two U+FFFD.
+    #[test]
+    fn surrogate_pairs_combine() {
+        let v = Json::parse("\"\\ud83d\\ude00\"").unwrap();
+        assert_eq!(v.as_str(), Some("😀"));
+        // Uppercase hex, and a pair embedded mid-string.
+        let v = Json::parse("\"a\\uD83D\\uDE00b\"").unwrap();
+        assert_eq!(v.as_str(), Some("a😀b"));
+        // Boundary pair: U+10FFFF.
+        let v = Json::parse("\"\\udbff\\udfff\"").unwrap();
+        assert_eq!(v.as_str(), Some("\u{10FFFF}"));
+    }
+
+    /// Non-BMP text survives a write/parse round trip, both when it
+    /// enters raw and when it enters escaped.
+    #[test]
+    fn non_bmp_roundtrip() {
+        let v = Json::Str("emoji 😀 and math 𝔽".into());
+        assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+        let escaped = Json::parse("\"emoji \\ud83d\\ude00\"").unwrap();
+        assert_eq!(Json::parse(&escaped.to_string()).unwrap(), escaped);
+        // Raw UTF-8 in the source parses to the same value as escapes.
+        assert_eq!(Json::parse("\"😀\"").unwrap(), Json::parse("\"\\ud83d\\ude00\"").unwrap());
+    }
+
+    /// Lone or malformed surrogates are parse errors now, not silent
+    /// U+FFFD substitutions.
+    #[test]
+    fn lone_surrogates_rejected() {
+        // High surrogate at end of string.
+        assert!(Json::parse("\"\\ud83d\"").is_err());
+        // High surrogate followed by a non-escape.
+        assert!(Json::parse("\"\\ud83dxx\"").is_err());
+        // High surrogate followed by a non-surrogate escape.
+        assert!(Json::parse("\"\\ud83d\\u0041\"").is_err());
+        // Two high surrogates in a row.
+        assert!(Json::parse("\"\\ud83d\\ud83d\"").is_err());
+        // Lone low surrogate.
+        assert!(Json::parse("\"\\ude00\"").is_err());
+        // Malformed hex: sign characters must not sneak past the
+        // digit check.
+        assert!(Json::parse("\"\\u+fff\"").is_err());
+        assert!(Json::parse("\"\\u00g0\"").is_err());
+        // Truncated escape.
+        assert!(Json::parse("\"\\u00\"").is_err());
     }
 }

@@ -10,6 +10,25 @@ pub mod rng;
 pub mod table;
 pub mod tensor;
 
+/// Read and parse an environment knob. A set-but-malformed value is
+/// rejected with a one-line stderr warning naming the variable and the
+/// offending value — `MIXPREC_XLA_THREADS=fuor` must never *silently*
+/// fall back to the default and change which configuration actually
+/// ran. Unset stays silent (`None`); the caller supplies its default.
+pub fn env_parsed<T: std::str::FromStr>(key: &str) -> Option<T> {
+    let raw = std::env::var(key).ok()?;
+    match raw.parse() {
+        Ok(v) => Some(v),
+        Err(_) => {
+            eprintln!(
+                "warning: ignoring {key}='{raw}': not a valid {}",
+                std::any::type_name::<T>()
+            );
+            None
+        }
+    }
+}
+
 /// FNV-1a over a byte run — the repo-wide fingerprint hash (the same
 /// scheme `DataConfig::fingerprint` applies field-wise). Used to key
 /// the warm-start pool and name its on-disk entries.

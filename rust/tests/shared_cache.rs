@@ -9,7 +9,16 @@
 //! (c) a sweep whose warmup fingerprint differs runs its own warmup —
 //!     the pool never false-shares;
 //! (d) the split-upload counters attribute the one upload to the run
-//!     that performed it and nothing to the reusers.
+//!     that performed it and nothing to the reusers;
+//! (e) under a byte budget smaller than the working set the compare is
+//!     *still* bitwise identical — evicted entries rebuild through the
+//!     miss path deterministically and pinned entries survive — while
+//!     budget 0 disables eviction entirely.
+//!
+//! The counter-exact tests pin `set_budget_bytes(0)` so their expected
+//! values hold even when CI re-runs this suite with a tiny
+//! `MIXPREC_CACHE_BUDGET_BYTES`; the equivalence tests deliberately
+//! inherit the env budget — bitwise identity must hold at any budget.
 
 use std::path::PathBuf;
 
@@ -85,15 +94,9 @@ fn assert_history_eq(a: &[mixprec::coordinator::Record], b: &[mixprec::coordinat
     }
 }
 
-/// (a) Shared and unshared `compare` are bitwise identical — fronts,
-/// histories, assignments, fixed baselines included.
-#[test]
-fn shared_compare_matches_unshared_bitwise() {
-    let fx = Fx::new("equiv");
-    // unshared first so the shared run can't "help" it through the
-    // (unused) context cache, then shared
-    let un = run_compare(&fx, false, &[2]);
-    let sh = run_compare(&fx, true, &[2]);
+/// Full bitwise comparison of two `CompareResult`s: per-run
+/// assignments, accuracies, histories, fronts, fixed baselines.
+fn assert_compare_bitwise_eq(sh: &CompareResult, un: &CompareResult) {
     assert_eq!(sh.sweeps.len(), un.sweeps.len());
     for ((ma, a), (mb, b)) in sh.sweeps.iter().zip(&un.sweeps) {
         assert_eq!(ma.label(), mb.label());
@@ -119,11 +122,68 @@ fn shared_compare_matches_unshared_bitwise() {
     }
 }
 
+/// (a) Shared and unshared `compare` are bitwise identical — fronts,
+/// histories, assignments, fixed baselines included. Runs under the
+/// inherited env budget on purpose (see module docs).
+#[test]
+fn shared_compare_matches_unshared_bitwise() {
+    let fx = Fx::new("equiv");
+    // unshared first so the shared run can't "help" it through the
+    // (unused) context cache, then shared
+    let un = run_compare(&fx, false, &[2]);
+    let sh = run_compare(&fx, true, &[2]);
+    assert_compare_bitwise_eq(&sh, &un);
+}
+
+/// (e) A budget far below the working set forces evict + rebuild churn
+/// between runs, yet the compare stays bitwise identical to the
+/// unshared flow and never evicts the pinned warm start.
+#[test]
+fn tiny_budget_compare_is_still_bitwise_identical() {
+    let fx = Fx::new("evict");
+    let un = run_compare(&fx, false, &[2]);
+    fx.ctx.shared_cache().set_budget_bytes(1);
+    let sh = run_compare(&fx, true, &[2]);
+    assert_compare_bitwise_eq(&sh, &un);
+    assert!(sh.evictions > 0, "a 1-byte budget must evict");
+    assert!(
+        sh.rebuilds_after_evict > 0,
+        "evicted entries must rebuild through the miss path"
+    );
+    // the live sweep pins its warm start, so churn never re-warms
+    assert_eq!(sh.warmups_run, 1, "pinned warm start was evicted");
+    assert_eq!(sh.warmups_reused, 3);
+    // compare reclaims at its job boundary, so the reported gauge
+    // respects the budget
+    assert!(sh.held_bytes <= 1, "retained gauge exceeded the budget");
+}
+
+/// (e) Budget 0 disables eviction entirely: the legacy counters stay
+/// exact and the gauge reports the resident working set.
+#[test]
+fn zero_budget_disables_eviction() {
+    let fx = Fx::new("zerobudget");
+    fx.ctx.shared_cache().set_budget_bytes(0);
+    let cr = run_compare(&fx, true, &[]);
+    assert_eq!(cr.warmups_run, 1);
+    assert_eq!(cr.warmups_reused, 3);
+    assert_eq!(cr.split_uploads, 2);
+    assert_eq!(cr.split_reuses, (4 * LAMBDAS.len() * 2 - 2) as u64);
+    assert_eq!(cr.evictions, 0);
+    assert_eq!(cr.evict_skipped_pinned, 0);
+    assert_eq!(cr.rebuilds_after_evict, 0);
+    // nothing was evicted, so the end-of-compare gauge sees the
+    // resident splits + warm start
+    assert!(cr.held_bytes > 0, "gauge must report resident bytes");
+}
+
 /// (b) One warmup across the four method sweeps; one upload per eval
 /// split per process.
 #[test]
 fn compare_shares_one_warmup_and_one_upload_per_split() {
     let fx = Fx::new("counters");
+    // exact counters below: disable the byte budget regardless of env
+    fx.ctx.shared_cache().set_budget_bytes(0);
     let cr = run_compare(&fx, true, &[]);
     assert_eq!(cr.warmups_run, 1, "expected exactly one warmup phase");
     assert_eq!(cr.warmups_reused, 3, "three sweeps must reuse it");
@@ -156,6 +216,8 @@ fn compare_shares_one_warmup_and_one_upload_per_split() {
 #[test]
 fn mismatched_fingerprint_triggers_own_warmup() {
     let fx = Fx::new("fingerprint");
+    // exact counters below: disable the byte budget regardless of env
+    fx.ctx.shared_cache().set_budget_bytes(0);
     let runner = fx.ctx.runner_shared(fixture::STUB_MODEL).unwrap();
     let cfg = quick_cfg();
     sweep_lambdas(&runner, &cfg, &LAMBDAS, "size", &opts(true)).unwrap();
@@ -196,6 +258,8 @@ fn mismatched_fingerprint_triggers_own_warmup() {
 #[test]
 fn split_uploads_once_per_process_not_per_fork() {
     let fx = Fx::new("uploads");
+    // exact counters below: disable the byte budget regardless of env
+    fx.ctx.shared_cache().set_budget_bytes(0);
     let runner = fx.ctx.runner_shared(fixture::STUB_MODEL).unwrap();
     let cfg = quick_cfg();
     let lambdas = [0.05, 0.5, 5.0];

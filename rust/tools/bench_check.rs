@@ -242,6 +242,46 @@ const RULES: &[Rule] = &[
         tol: 0.0,
         env: None,
     },
+    // the unbudgeted compare must never evict cache entries
+    Rule {
+        bench: "sweep_fork",
+        path: &["compare", "evictions"],
+        dir: Dir::LowerIsBetter,
+        tol: 0.0,
+        env: None,
+    },
+    // tiny-budget eviction leg: churn must actually happen (counts are
+    // conservative lower bounds — the exact number tracks the working
+    // set and is brittle), stay inside the byte cap, and reproduce the
+    // unbudgeted front bitwise
+    Rule {
+        bench: "sweep_fork",
+        path: &["eviction", "evictions"],
+        dir: Dir::HigherIsBetter,
+        tol: 0.0,
+        env: None,
+    },
+    Rule {
+        bench: "sweep_fork",
+        path: &["eviction", "rebuilds_after_evict"],
+        dir: Dir::HigherIsBetter,
+        tol: 0.0,
+        env: None,
+    },
+    Rule {
+        bench: "sweep_fork",
+        path: &["eviction", "within_budget"],
+        dir: Dir::Exact,
+        tol: 0.0,
+        env: None,
+    },
+    Rule {
+        bench: "sweep_fork",
+        path: &["eviction", "fronts_equal_unbudgeted"],
+        dir: Dir::Exact,
+        tol: 0.0,
+        env: None,
+    },
     // cross-process warm starts: the persisting run writes exactly one
     // disk entry, the resuming run loads it, runs ZERO warmup steps,
     // and reproduces the front bitwise
