@@ -302,6 +302,73 @@ fn run() -> mixprec::Result<()> {
         cmp_ev.evictions, cmp_ev.evict_skipped_pinned, cmp_ev.rebuilds_after_evict
     );
 
+    // ---- multi-target Pareto atlas ----------------------------------
+    // one compare, re-scored across the whole cost-model zoo: the
+    // acceptance contract is that the atlas is a pure post-pass — the
+    // compare's cache counters and fronts are identical to the
+    // single-model run above (cmp_sh), and the scoring itself moves no
+    // cache counter at all
+    let at_ctx = Context::load(&dir, scale.data_frac)?;
+    at_ctx.shared_cache().set_budget_bytes(0); // exact counters, as above
+    let runner_at = at_ctx.runner_shared(fixture::STUB_MODEL)?;
+    let cmp_at = compare_methods(&runner_at, &cfg, &cmp_lambdas, "size", &sh_opts, &[])?;
+    let steps = |cr: &mixprec::baselines::CompareResult| -> usize {
+        cr.sweeps
+            .iter()
+            .map(|(_, sw)| sw.runs.iter().map(|r| r.history.len()).sum::<usize>())
+            .sum()
+    };
+    let warmups_identical = cmp_at.warmups_run == cmp_sh.warmups_run
+        && cmp_at.warmups_reused == cmp_sh.warmups_reused;
+    let split_uploads_identical = cmp_at.split_uploads == cmp_sh.split_uploads
+        && cmp_at.split_reuses == cmp_sh.split_reuses;
+    let steps_identical = cmp_at.warmup_steps_run == cmp_sh.warmup_steps_run
+        && steps(&cmp_at) == steps(&cmp_sh);
+    assert!(warmups_identical, "atlas compare changed warmup counters");
+    assert!(split_uploads_identical, "atlas compare changed upload counters");
+    assert!(steps_identical, "atlas compare changed step counts");
+    let at_cache = at_ctx.shared_cache();
+    let before_score = at_cache.stats();
+    let t0 = Instant::now();
+    let reg = mixprec::cost::CostRegistry::zoo();
+    let atlas = cmp_at.atlas(at_ctx.graph(fixture::STUB_MODEL), &reg, &[])?;
+    let atlas_s = t0.elapsed().as_secs_f64();
+    let d = at_cache.stats().since(&before_score);
+    let cache_untouched = d.split_uploads == 0
+        && d.split_reuses == 0
+        && d.warmups_run == 0
+        && d.warmups_reused == 0
+        && d.warmups_loaded == 0
+        && d.warmups_persisted == 0
+        && d.evictions == 0
+        && d.rebuilds_after_evict == 0;
+    assert!(cache_untouched, "atlas scoring touched the shared cache");
+    assert_eq!(atlas.len(), reg.len(), "expected one front per zoo target");
+    let includes_lut = atlas.target("edge-dsp").is_some();
+    assert!(includes_lut, "LUT target missing from the atlas");
+    let points_per_target = 4 * cmp_lambdas.len();
+    for t in &atlas.targets {
+        assert_eq!(t.points, points_per_target, "{}", t.model);
+        assert!(t.max_cost > 0.0, "{}", t.model);
+        for p in t.front.points() {
+            assert!(p.cost <= 1.0 + 1e-9, "{}: cost {} > w8a8", t.model, p.cost);
+        }
+    }
+    // the searched fronts themselves are bitwise identical to the
+    // single-model compare's (the atlas changed reporting, not search)
+    let atlas_fronts_equal = cmp_at
+        .sweeps
+        .iter()
+        .zip(&cmp_sh.sweeps)
+        .all(|((_, a), (_, b))| key(&a.front()) == key(&b.front()));
+    assert!(atlas_fronts_equal, "atlas compare front diverged");
+    println!(
+        "atlas: {} targets x {} points scored in {atlas_s:6.3}s (cache untouched, \
+         counters identical to single-model compare)",
+        atlas.len(),
+        points_per_target
+    );
+
     let mut o = JsonObj::new();
     o.insert("bench", Json::Str("sweep_fork".into()));
     o.insert("mode", Json::Str("stub".into()));
@@ -353,6 +420,17 @@ fn run() -> mixprec::Result<()> {
     evb.insert("fronts_equal_unbudgeted", Json::Bool(ev_fronts_equal));
     evb.insert("seconds", Json::Num(cmp_ev_s));
     o.insert("eviction", Json::Obj(evb));
+    let mut at = JsonObj::new();
+    at.insert("targets", Json::Num(atlas.len() as f64));
+    at.insert("points_per_target", Json::Num(points_per_target as f64));
+    at.insert("includes_lut", Json::Bool(includes_lut));
+    at.insert("cache_untouched", Json::Bool(cache_untouched));
+    at.insert("warmups_identical", Json::Bool(warmups_identical));
+    at.insert("split_uploads_identical", Json::Bool(split_uploads_identical));
+    at.insert("steps_identical", Json::Bool(steps_identical));
+    at.insert("fronts_equal_single_model", Json::Bool(atlas_fronts_equal));
+    at.insert("seconds", Json::Num(atlas_s));
+    o.insert("atlas", Json::Obj(at));
     let mut wp = JsonObj::new();
     wp.insert("warmups_persisted", Json::Num(sw_a.warmups_persisted as f64));
     wp.insert("warmups_loaded", Json::Num(sw_b.warmups_loaded as f64));

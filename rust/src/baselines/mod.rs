@@ -13,7 +13,9 @@ use std::time::Instant;
 use crate::assignment::PrecisionMasks;
 use crate::coordinator::phases::{PipelineConfig, RunResult, Runner};
 use crate::coordinator::sweep::{sweep_lambdas, SweepOptions, SweepResult};
+use crate::cost::{score_atlas, Atlas, AtlasPoint, CostRegistry};
 use crate::error::Result;
+use crate::graph::ModelGraph;
 use crate::runtime::AllocStats;
 
 /// Named baseline method.
@@ -127,6 +129,50 @@ pub struct CompareResult {
     pub alloc: AllocStats,
     /// Wall-clock of the whole comparison.
     pub total_time_s: f64,
+}
+
+impl CompareResult {
+    /// Re-score every searched point of the comparison — all method
+    /// sweep runs plus the fixed wNa8 references — across `models`
+    /// (every model in `reg` when empty): one Pareto front per
+    /// hardware target, each normalized by that target's memoized w8a8
+    /// reference. Pure host-side post-pass at the job boundary: no
+    /// training, no warmups, no uploads (`benches/sweep_fork.rs` and
+    /// `tests/atlas.rs` assert the cache counters don't move).
+    pub fn atlas(
+        &self,
+        graph: &ModelGraph,
+        reg: &CostRegistry,
+        models: &[String],
+    ) -> Result<Atlas> {
+        let mut points: Vec<AtlasPoint<'_>> = Vec::new();
+        for (m, sw) in &self.sweeps {
+            let label = m.label();
+            points.extend(sw.runs.iter().map(|r| AtlasPoint {
+                tag: format!("{label} lam={}", r.lambda),
+                acc: r.val_acc,
+                assignment: &r.assignment,
+            }));
+        }
+        points.extend(self.fixed.iter().map(|r| {
+            // fixed runs are uniform-precision by construction;
+            // recover the width from the assignment itself
+            let bits = r
+                .assignment
+                .gamma_bits
+                .iter()
+                .flatten()
+                .copied()
+                .max()
+                .unwrap_or(8);
+            AtlasPoint {
+                tag: format!("w{bits}a8"),
+                acc: r.val_acc,
+                assignment: &r.assignment,
+            }
+        }));
+        score_atlas(reg, models, graph, &points)
+    }
 }
 
 /// Run the full method comparison (fig. 5 style): one lambda sweep per

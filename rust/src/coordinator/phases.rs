@@ -773,7 +773,7 @@ impl<'a> Runner<'a> {
     }
 
     /// Warm-pool key for `cfg`: the FNV hash of the canonical binary
-    /// [`WarmupFingerprint`] encoding plus the dataset fingerprint —
+    /// `WarmupFingerprint` encoding plus the dataset fingerprint —
     /// the same `WarmupFingerprint` that `run_from` re-validates
     /// structurally on every fork, so two configs share a key iff
     /// every knob the warmup phase reads matches. (The previous
@@ -803,7 +803,7 @@ impl<'a> Runner<'a> {
     }
 
     /// Persist `ws` for cross-process reuse (atomic temp + rename;
-    /// see [`WarmStart::persist`]).
+    /// see `WarmStart::persist`).
     pub fn persist_warm(&self, ws: &WarmStart, path: &Path) -> Result<()> {
         ws.persist(self.data.cfg.fingerprint(), path)
     }

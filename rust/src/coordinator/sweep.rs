@@ -17,7 +17,7 @@ use std::sync::Arc;
 
 use crate::coordinator::pareto::{ParetoFront, Point};
 use crate::coordinator::phases::{PipelineConfig, RunResult, Runner, WarmStart};
-use crate::cost::Normalizer;
+use crate::cost::{score_atlas, Atlas, AtlasPoint, CostRegistry, Normalizer};
 use crate::error::Result;
 use crate::graph::ModelGraph;
 use crate::runtime::{AllocStats, TransferStats, WarmSource};
@@ -197,6 +197,30 @@ impl SweepResult {
                 format!("lam={}", r.lambda),
             )
         })))
+    }
+
+    /// Re-score the sweep's discretized assignments across `models`
+    /// (every model in `reg` when empty): one Pareto front per
+    /// hardware target, each normalized by that target's memoized
+    /// w8a8 reference. Pure host-side post-pass — no training, no
+    /// device traffic (`benches/sweep_fork.rs` asserts the shared
+    /// cache counters don't move across this call).
+    pub fn atlas(
+        &self,
+        graph: &ModelGraph,
+        reg: &CostRegistry,
+        models: &[String],
+    ) -> Result<Atlas> {
+        let points: Vec<AtlasPoint<'_>> = self
+            .runs
+            .iter()
+            .map(|r| AtlasPoint {
+                tag: format!("lam={}", r.lambda),
+                acc: r.val_acc,
+                assignment: &r.assignment,
+            })
+            .collect();
+        score_atlas(reg, models, graph, &points)
     }
 }
 

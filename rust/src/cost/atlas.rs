@@ -1,0 +1,199 @@
+//! Pareto atlas: one sweep, one front per deployment target.
+//!
+//! The paper's closing claim is that *tailored cost models change the
+//! front*. The search itself is cost-model-independent once the
+//! assignments are discretized, so a finished sweep (or a whole
+//! `compare`) can be re-scored across every registered hardware
+//! scenario as a pure host-side post-pass: no extra training, no
+//! warmups, no eval uploads — the bench/test harnesses assert the
+//! shared-cache counters are identical to a single-model run.
+//!
+//! Costs are reported normalized (`cost / w8a8 reference`, via one
+//! memoized [`Normalizer`](super::Normalizer) per target from
+//! [`CostRegistry::normalizers`](super::CostRegistry::normalizers)),
+//! so fronts are comparable across targets whose raw units differ
+//! (bits, cycles, seconds).
+
+use super::CostRegistry;
+use crate::assignment::Assignment;
+use crate::coordinator::pareto::{ParetoFront, Point};
+use crate::error::Result;
+use crate::graph::ModelGraph;
+
+/// One searched assignment to score: a display tag (method/lambda), the
+/// selection accuracy, and the discretized assignment itself.
+pub struct AtlasPoint<'a> {
+    pub tag: String,
+    pub acc: f64,
+    pub assignment: &'a Assignment,
+}
+
+/// The atlas slice for one hardware target.
+#[derive(Debug, Clone)]
+pub struct AtlasTarget {
+    /// Registered cost-model name.
+    pub model: String,
+    /// The memoized w8a8 reference cost (raw units of the model).
+    pub max_cost: f64,
+    /// Points scored into this target (front size is `front.len()`).
+    pub points: usize,
+    /// Pareto front in (normalized cost, val accuracy) space.
+    pub front: ParetoFront,
+}
+
+/// Per-target Pareto fronts over one set of searched assignments.
+#[derive(Debug, Clone, Default)]
+pub struct Atlas {
+    /// One entry per scored target, in registry/request order.
+    pub targets: Vec<AtlasTarget>,
+}
+
+impl Atlas {
+    pub fn target(&self, model: &str) -> Option<&AtlasTarget> {
+        self.targets.iter().find(|t| t.model == model)
+    }
+
+    pub fn len(&self) -> usize {
+        self.targets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.targets.is_empty()
+    }
+}
+
+/// Score `points` across cost models: every name in `models` (all
+/// registered models when empty), each with its normalizer memoized
+/// once for `graph`. An unknown name fails with the registry's
+/// listing error before anything is scored.
+pub fn score_atlas(
+    reg: &CostRegistry,
+    models: &[String],
+    graph: &ModelGraph,
+    points: &[AtlasPoint<'_>],
+) -> Result<Atlas> {
+    let norms = if models.is_empty() {
+        reg.normalizers(graph)
+    } else {
+        models
+            .iter()
+            .map(|name| reg.resolve(name).map(|m| super::Normalizer::new(m, graph)))
+            .collect::<Result<Vec<_>>>()?
+    };
+    let targets = norms
+        .into_iter()
+        .map(|norm| {
+            let front = ParetoFront::from_points(points.iter().map(|p| {
+                Point::new(
+                    norm.normalized(graph, p.assignment),
+                    p.acc,
+                    p.tag.clone(),
+                )
+            }));
+            AtlasTarget {
+                model: norm.name().to_string(),
+                max_cost: norm.max_cost(),
+                points: points.len(),
+                front,
+            }
+        })
+        .collect();
+    Ok(Atlas { targets })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::testutil::tiny_graph;
+
+    fn pts(assignments: &[(Assignment, f64, &str)]) -> Vec<AtlasPoint<'_>> {
+        assignments
+            .iter()
+            .map(|(a, acc, tag)| AtlasPoint {
+                tag: (*tag).into(),
+                acc: *acc,
+                assignment: a,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn one_front_per_target_in_registry_order() {
+        let g = tiny_graph();
+        let runs = [
+            (Assignment::uniform(&g, 8), 0.9, "lam=0.1"),
+            (Assignment::uniform(&g, 4), 0.8, "lam=1"),
+            (Assignment::uniform(&g, 2), 0.6, "lam=10"),
+        ];
+        let atlas = score_atlas(&CostRegistry::zoo(), &[], &g, &pts(&runs)).unwrap();
+        assert_eq!(atlas.len(), 6);
+        let names: Vec<&str> = atlas.targets.iter().map(|t| t.model.as_str()).collect();
+        assert_eq!(names, ["size", "bitops", "mpic", "ne16", "edge-dsp", "roofline"]);
+        for t in &atlas.targets {
+            assert_eq!(t.points, 3, "{}", t.model);
+            assert!(!t.front.points().is_empty(), "{}", t.model);
+            assert!(t.max_cost > 0.0, "{}", t.model);
+            for p in t.front.points() {
+                assert!(p.cost <= 1.0 + 1e-9, "{}: {}", t.model, p.cost);
+            }
+        }
+        // under the size model the three uniform points are all
+        // Pareto-optimal at exactly bits/8
+        let size = atlas.target("size").unwrap();
+        let costs: Vec<f64> = size.front.points().iter().map(|p| p.cost).collect();
+        assert_eq!(costs.len(), 3);
+        assert!((costs[0] - 0.25).abs() < 1e-12 && (costs[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn explicit_selection_keeps_request_order() {
+        let g = tiny_graph();
+        let runs = [(Assignment::uniform(&g, 8), 0.9, "lam=0.1")];
+        let models = ["ne16".to_string(), "size".to_string()];
+        let atlas = score_atlas(&CostRegistry::zoo(), &models, &g, &pts(&runs)).unwrap();
+        let names: Vec<&str> = atlas.targets.iter().map(|t| t.model.as_str()).collect();
+        assert_eq!(names, ["ne16", "size"]);
+        assert!(atlas.target("bitops").is_none());
+    }
+
+    #[test]
+    fn unknown_target_surfaces_listing_error() {
+        let g = tiny_graph();
+        let runs = [(Assignment::uniform(&g, 8), 0.9, "lam=0.1")];
+        let err = score_atlas(
+            &CostRegistry::zoo(),
+            &["warp9".to_string()],
+            &g,
+            &pts(&runs),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("warp9") && err.contains("edge-dsp"), "{err:?}");
+    }
+
+    #[test]
+    fn targets_rank_points_differently() {
+        // The reason the atlas exists: a point that wins under one
+        // model can lose under another. A half-pruned 8-bit network
+        // vs an unpruned 2-bit one: size says 2-bit is smaller, the
+        // NE16's bit-serial PE disagrees less starkly — the
+        // *orderings* of normalized costs must be allowed to differ,
+        // and do on this pair.
+        let g = tiny_graph();
+        let mut half = Assignment::uniform(&g, 8);
+        for c in 0..4 {
+            half.gamma_bits[0][c] = 0;
+        }
+        let w2 = Assignment::uniform(&g, 2);
+        let reg = CostRegistry::zoo();
+        let norms = reg.normalizers(&g);
+        let rank: Vec<bool> = norms
+            .iter()
+            .map(|n| n.normalized(&g, &half) < n.normalized(&g, &w2))
+            .collect();
+        assert!(
+            rank.iter().any(|&b| b) && rank.iter().any(|&b| !b),
+            "all targets agreed ({rank:?}) — the atlas would be redundant"
+        );
+    }
+}

@@ -9,7 +9,7 @@ use crate::graph::{LayerKind, ModelGraph};
 pub struct BitOps;
 
 impl CostModel for BitOps {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "bitops"
     }
 

@@ -1,0 +1,332 @@
+//! LUT-driven latency model loaded from a JSON hardware descriptor,
+//! in the spirit of the Free Bits per-target lookup tables (arxiv
+//! 2307.02894): cycles are `MACs / macs_per_cycle(bucket)` where the
+//! bucket is the layer shape (kind, optionally kernel size) crossed
+//! with the (activation, weight) bit-width pair, plus a fixed launch
+//! overhead per deployed layer.
+//!
+//! The descriptor schema is documented in `rust/src/cost/README.md`;
+//! the committed `descriptors/edge_dsp.json` example doubles as the
+//! reference instance ([`LutModel::edge_dsp`], registered in
+//! [`CostRegistry::zoo`](super::CostRegistry::zoo)). Unlike the
+//! built-in unit-struct models, a `LutModel` carries its descriptor —
+//! its [`CostModel::name`] is data, which is why the trait returns
+//! `&str` rather than `&'static str`.
+
+use std::path::Path;
+
+use super::CostModel;
+use crate::assignment::Assignment;
+use crate::error::{Error, Result};
+use crate::graph::{LayerKind, ModelGraph};
+use crate::util::json::Json;
+
+/// The committed example descriptor (see `descriptors/edge_dsp.json`).
+pub const EDGE_DSP_DESCRIPTOR: &str = include_str!("descriptors/edge_dsp.json");
+
+/// One throughput bucket: layer kind (+ optional kernel size) crossed
+/// with an (activation, weight) precision pair.
+#[derive(Debug, Clone)]
+struct LutEntry {
+    kind: LayerKind,
+    /// `Some(k)` pins the bucket to one kernel size; `None` matches
+    /// any. An exact-`k` entry wins over a kind-wide one.
+    k: Option<usize>,
+    px: u32,
+    pw: u32,
+    macs_per_cycle: f64,
+}
+
+/// LUT latency model: cycles per layer-shape/bit-width bucket.
+#[derive(Debug, Clone)]
+pub struct LutModel {
+    name: String,
+    freq_hz: f64,
+    /// Fixed launch cost charged once per layer with kept channels
+    /// (a fully pruned layer is dropped at deployment and costs 0).
+    overhead_cycles: f64,
+    /// Throughput for buckets the table does not cover.
+    default_macs_per_cycle: f64,
+    entries: Vec<LutEntry>,
+}
+
+fn parse_bits(v: &Json, field: &str) -> Result<u32> {
+    match v.as_i64() {
+        Some(b @ (2 | 4 | 8)) => Ok(b as u32),
+        _ => Err(Error::Config(format!(
+            "hardware descriptor: entry field '{field}' must be 2, 4 or 8, got {v}"
+        ))),
+    }
+}
+
+impl LutModel {
+    /// Parse a `"type": "lut"` hardware descriptor. Required fields:
+    /// `name` (non-empty) and a non-empty `entries` array; optional:
+    /// `frequency_hz` (default 1 GHz), `overhead_cycles_per_layer`
+    /// (default 0), `default_macs_per_cycle` (default 1.0). Every
+    /// entry needs `kind` (conv|dw|linear), `px`/`pw` in {2,4,8} and a
+    /// positive `macs_per_cycle`; `k` is optional. Duplicate buckets
+    /// are rejected — a silently shadowed row would make the
+    /// descriptor lie about the model it builds.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        if let Some(t) = v.get("type").as_str() {
+            if t != "lut" {
+                return Err(Error::Config(format!(
+                    "hardware descriptor: expected type 'lut', got '{t}'"
+                )));
+            }
+        }
+        let name = v
+            .get("name")
+            .as_str()
+            .filter(|s| !s.is_empty())
+            .ok_or_else(|| {
+                Error::Config("hardware descriptor: missing non-empty \"name\"".into())
+            })?
+            .to_string();
+        let freq_hz = v.get("frequency_hz").as_f64().unwrap_or(1.0e9);
+        if freq_hz.is_nan() || freq_hz <= 0.0 {
+            return Err(Error::Config(format!(
+                "hardware descriptor '{name}': frequency_hz must be > 0"
+            )));
+        }
+        let overhead_cycles = v.get("overhead_cycles_per_layer").as_f64().unwrap_or(0.0);
+        if overhead_cycles < 0.0 {
+            return Err(Error::Config(format!(
+                "hardware descriptor '{name}': overhead_cycles_per_layer must be >= 0"
+            )));
+        }
+        let default_macs_per_cycle = v.get("default_macs_per_cycle").as_f64().unwrap_or(1.0);
+        if default_macs_per_cycle.is_nan() || default_macs_per_cycle <= 0.0 {
+            return Err(Error::Config(format!(
+                "hardware descriptor '{name}': default_macs_per_cycle must be > 0"
+            )));
+        }
+        let rows = v.get("entries").as_arr().unwrap_or(&[]);
+        if rows.is_empty() {
+            return Err(Error::Config(format!(
+                "hardware descriptor '{name}': missing non-empty \"entries\""
+            )));
+        }
+        let mut entries: Vec<LutEntry> = Vec::with_capacity(rows.len());
+        for row in rows {
+            let kind = match row.get("kind").as_str() {
+                Some("conv") => LayerKind::Conv,
+                Some("dw") => LayerKind::Depthwise,
+                Some("linear") => LayerKind::Linear,
+                other => {
+                    return Err(Error::Config(format!(
+                        "hardware descriptor '{name}': entry kind must be \
+                         conv|dw|linear, got {other:?}"
+                    )))
+                }
+            };
+            let k = match row.get("k") {
+                Json::Null => None,
+                j => match j.as_usize() {
+                    Some(k) if k >= 1 => Some(k),
+                    _ => {
+                        return Err(Error::Config(format!(
+                            "hardware descriptor '{name}': entry field 'k' must be >= 1"
+                        )))
+                    }
+                },
+            };
+            let px = parse_bits(row.get("px"), "px")?;
+            let pw = parse_bits(row.get("pw"), "pw")?;
+            let macs_per_cycle = row.get("macs_per_cycle").as_f64().unwrap_or(0.0);
+            if macs_per_cycle.is_nan() || macs_per_cycle <= 0.0 {
+                return Err(Error::Config(format!(
+                    "hardware descriptor '{name}': entry macs_per_cycle must be > 0"
+                )));
+            }
+            if entries
+                .iter()
+                .any(|e| e.kind == kind && e.k == k && e.px == px && e.pw == pw)
+            {
+                return Err(Error::Config(format!(
+                    "hardware descriptor '{name}': duplicate entry for \
+                     kind={kind:?} k={k:?} px={px} pw={pw}"
+                )));
+            }
+            entries.push(LutEntry {
+                kind,
+                k,
+                px,
+                pw,
+                macs_per_cycle,
+            });
+        }
+        Ok(LutModel {
+            name,
+            freq_hz,
+            overhead_cycles,
+            default_macs_per_cycle,
+            entries,
+        })
+    }
+
+    /// Load a descriptor file from disk (errors name the path).
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("{}: {e}", path.display())))?;
+        let v = Json::parse(&text)
+            .map_err(|e| Error::Config(format!("{}: {e}", path.display())))?;
+        Self::from_json(&v)
+    }
+
+    /// The committed example target (`descriptors/edge_dsp.json`).
+    pub fn edge_dsp() -> Self {
+        Self::from_json(&Json::parse(EDGE_DSP_DESCRIPTOR).expect("committed descriptor"))
+            .expect("committed descriptor")
+    }
+
+    /// Bucket lookup: an exact-`k` entry wins over a kind-wide one;
+    /// an uncovered bucket falls back to `default_macs_per_cycle`.
+    fn macs_per_cycle(&self, kind: LayerKind, k: usize, px: u32, pw: u32) -> f64 {
+        let mut wide = None;
+        for e in &self.entries {
+            if e.kind != kind || e.px != px || e.pw != pw {
+                continue;
+            }
+            match e.k {
+                Some(ek) if ek == k => return e.macs_per_cycle,
+                None => wide = Some(e.macs_per_cycle),
+                _ => {}
+            }
+        }
+        wide.unwrap_or(self.default_macs_per_cycle)
+    }
+
+    pub fn latency_ms(&self, graph: &ModelGraph, asg: &Assignment) -> f64 {
+        self.cost(graph, asg) / self.freq_hz * 1e3
+    }
+}
+
+impl CostModel for LutModel {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execution cycles: per layer, MACs at each (px, pw) bucket over
+    /// that bucket's throughput, with pruning credited exactly as in
+    /// the built-in models (`C_in,eff` shrinks the MACs; a fully
+    /// pruned layer is skipped, launch overhead included).
+    fn cost(&self, graph: &ModelGraph, asg: &Assignment) -> f64 {
+        let mut cycles = 0f64;
+        for l in &graph.layers {
+            let px = asg.in_bits(l);
+            let spatial = (l.k * l.k * l.out_h * l.out_w) as f64;
+            let macs_per_ch = match l.kind {
+                LayerKind::Depthwise => spatial,
+                _ => spatial * asg.cin_eff(graph, l) as f64,
+            };
+            let mut kept = 0usize;
+            for pw in [2u32, 4, 8] {
+                let n = asg.channels_at(l.gamma_group, pw);
+                if n == 0 {
+                    continue;
+                }
+                kept += n;
+                cycles += macs_per_ch * n as f64 / self.macs_per_cycle(l.kind, l.k, px, pw);
+            }
+            if kept > 0 {
+                cycles += self.overhead_cycles;
+            }
+        }
+        cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::testutil::tiny_graph;
+
+    #[test]
+    fn w8a8_reference_cycles_pinned() {
+        // Hand-computed against descriptors/edge_dsp.json on the tiny
+        // graph: c0 13824 MACs / 2 + dw0 4608 / 1 + fc 32 / 2, plus
+        // 64 launch cycles per layer.
+        let g = tiny_graph();
+        let m = LutModel::edge_dsp();
+        let a = Assignment::uniform(&g, 8);
+        let expect = 13824.0 / 2.0 + 4608.0 / 1.0 + 32.0 / 2.0 + 3.0 * 64.0;
+        assert_eq!(m.cost(&g, &a), expect);
+        assert_eq!(expect, 11728.0);
+        let ms = m.latency_ms(&g, &a);
+        assert!((ms - expect / 400.0e6 * 1e3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exact_k_bucket_wins_over_kind_wide() {
+        let g = tiny_graph();
+        let text = r#"{
+          "type": "lut", "name": "kbuckets",
+          "entries": [
+            {"kind": "conv", "px": 8, "pw": 8, "macs_per_cycle": 2.0},
+            {"kind": "conv", "k": 3, "px": 8, "pw": 8, "macs_per_cycle": 4.0},
+            {"kind": "dw", "px": 8, "pw": 8, "macs_per_cycle": 1.0},
+            {"kind": "linear", "px": 8, "pw": 8, "macs_per_cycle": 1.0}
+          ]
+        }"#;
+        let m = LutModel::from_json(&Json::parse(text).unwrap()).unwrap();
+        // c0 is a k=3 conv -> the k-pinned 4.0 row, not the 2.0 one
+        let a = Assignment::uniform(&g, 8);
+        assert_eq!(m.cost(&g, &a), 13824.0 / 4.0 + 4608.0 / 1.0 + 32.0 / 1.0);
+    }
+
+    #[test]
+    fn uncovered_bucket_uses_default_throughput() {
+        let g = tiny_graph();
+        let text = r#"{
+          "type": "lut", "name": "sparse", "default_macs_per_cycle": 8.0,
+          "entries": [{"kind": "dw", "px": 8, "pw": 8, "macs_per_cycle": 1.0}]
+        }"#;
+        let m = LutModel::from_json(&Json::parse(text).unwrap()).unwrap();
+        let a = Assignment::uniform(&g, 8);
+        assert_eq!(m.cost(&g, &a), 13824.0 / 8.0 + 4608.0 / 1.0 + 32.0 / 8.0);
+    }
+
+    #[test]
+    fn pruned_layers_cost_nothing_including_overhead() {
+        let g = tiny_graph();
+        let m = LutModel::edge_dsp();
+        let mut a = Assignment::uniform(&g, 8);
+        for c in 0..8 {
+            a.gamma_bits[0][c] = 0;
+        }
+        // c0/dw0 fully pruned: no cycles, no launch overhead; fc keeps
+        // its 4 channels but cin_eff == 0 -> only the launch cost
+        assert_eq!(m.cost(&g, &a), 64.0);
+    }
+
+    #[test]
+    fn descriptor_validation() {
+        let bad = |text: &str, needle: &str| {
+            let err = LutModel::from_json(&Json::parse(text).unwrap())
+                .expect_err("descriptor must be rejected")
+                .to_string();
+            assert!(err.contains(needle), "{err:?} missing {needle:?}");
+        };
+        bad(r#"{"type": "lut", "entries": [{"kind":"conv","px":8,"pw":8,"macs_per_cycle":1}]}"#,
+            "name");
+        bad(r#"{"type": "lut", "name": "x", "entries": []}"#, "entries");
+        bad(r#"{"type": "lut", "name": "x",
+              "entries": [{"kind":"fc","px":8,"pw":8,"macs_per_cycle":1}]}"#,
+            "conv|dw|linear");
+        bad(r#"{"type": "lut", "name": "x",
+              "entries": [{"kind":"conv","px":3,"pw":8,"macs_per_cycle":1}]}"#,
+            "px");
+        bad(r#"{"type": "lut", "name": "x",
+              "entries": [{"kind":"conv","px":8,"pw":8,"macs_per_cycle":0}]}"#,
+            "macs_per_cycle");
+        bad(r#"{"type": "lut", "name": "x", "entries": [
+              {"kind":"conv","px":8,"pw":8,"macs_per_cycle":1},
+              {"kind":"conv","px":8,"pw":8,"macs_per_cycle":2}]}"#,
+            "duplicate");
+        bad(r#"{"type": "roofline", "name": "x",
+              "entries": [{"kind":"conv","px":8,"pw":8,"macs_per_cycle":1}]}"#,
+            "expected type 'lut'");
+    }
+}

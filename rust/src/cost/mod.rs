@@ -5,20 +5,36 @@
 //! Shared constants (MPIC LUT, NE16 bandwidths/frequencies) must stay
 //! in lock-step with the Python module; `rust/tests/` pins reference
 //! values that both sides assert against.
+//!
+//! Beyond the four paper models, the module is an open *hardware-
+//! scenario zoo*: [`CostRegistry`] registers models by name (including
+//! JSON hardware descriptors for the [`LutModel`] and [`Roofline`]
+//! families) and [`atlas::score_atlas`] re-scores one finished sweep
+//! into a Pareto front per registered target. See
+//! `rust/src/cost/README.md` for the trait contract and the descriptor
+//! schema.
 
+pub mod atlas;
 pub mod bitops;
+pub mod lut;
 pub mod mpic;
 pub mod ne16;
+pub mod registry;
+pub mod roofline;
 pub mod size;
 
+use std::sync::Arc;
+
 use crate::assignment::Assignment;
+use crate::error::Result;
 use crate::graph::ModelGraph;
 
 /// A cost model evaluated on a discrete assignment.
 pub trait CostModel {
-    fn name(&self) -> &'static str;
+    /// Stable lookup name (registry key, CLI `--metric` value).
+    fn name(&self) -> &str;
     /// Cost of the given assignment (bits for size, cycles for the HW
-    /// models, bit-ops for bitops).
+    /// models, bit-ops for bitops, seconds for roofline).
     fn cost(&self, graph: &ModelGraph, asg: &Assignment) -> f64;
     /// Cost of the all-8-bit w8a8 reference (normalization constant,
     /// == the Python regularizer's `*_max`).
@@ -32,35 +48,44 @@ pub trait CostModel {
     }
 }
 
+/// Shared handle to a registered cost model.
+pub type SharedModel = Arc<dyn CostModel + Send + Sync>;
+
+pub use atlas::{score_atlas, Atlas, AtlasPoint, AtlasTarget};
 pub use bitops::BitOps;
+pub use lut::{LutModel, EDGE_DSP_DESCRIPTOR};
 pub use mpic::Mpic;
 pub use ne16::Ne16;
+pub use registry::CostRegistry;
+pub use roofline::Roofline;
 pub use size::Size;
 
-/// Look up a cost model by regularizer name.
-pub fn by_name(name: &str) -> Option<Box<dyn CostModel + Send + Sync>> {
-    match name {
-        "size" => Some(Box::new(Size)),
-        "bitops" => Some(Box::new(BitOps)),
-        "mpic" => Some(Box::new(Mpic)),
-        "ne16" => Some(Box::new(Ne16)),
-        _ => None,
-    }
+/// Look up one of the four paper models by regularizer name (the
+/// pre-registry closed set; sweep metrics still come through here).
+pub fn by_name(name: &str) -> Option<SharedModel> {
+    CostRegistry::builtin().get(name)
+}
+
+/// Look up any model in the full zoo, with an error that lists the
+/// registered names on a miss.
+pub fn resolve(name: &str) -> Result<SharedModel> {
+    CostRegistry::zoo().resolve(name)
 }
 
 /// A cost model with its w8a8 normalization constant precomputed.
 ///
 /// `CostModel::normalized` rebuilds `Assignment::uniform(graph, 8)`
-/// and re-walks every layer on each call; sweep and Pareto reporting
-/// evaluate many assignments against the same graph, so the max is
-/// memoized here once.
+/// and re-walks every layer on each call; sweep, Pareto reporting and
+/// the atlas evaluate many assignments against the same graph, so the
+/// max is memoized here once at construction and never recomputed
+/// (asserted by `registry::tests::normalizer_never_recomputes_max_cost`).
 pub struct Normalizer {
-    model: Box<dyn CostModel + Send + Sync>,
+    model: SharedModel,
     max: f64,
 }
 
 impl Normalizer {
-    pub fn new(model: Box<dyn CostModel + Send + Sync>, graph: &ModelGraph) -> Self {
+    pub fn new(model: SharedModel, graph: &ModelGraph) -> Self {
         let max = model.max_cost(graph);
         Normalizer { model, max }
     }
@@ -69,7 +94,7 @@ impl Normalizer {
         by_name(name).map(|m| Self::new(m, graph))
     }
 
-    pub fn name(&self) -> &'static str {
+    pub fn name(&self) -> &str {
         self.model.name()
     }
 
@@ -121,18 +146,19 @@ mod tests {
     use testutil::tiny_graph;
 
     /// Pruning or lowering precision must never increase any cost model
-    /// (monotonicity — the property the search relies on).
+    /// (monotonicity — the property the search relies on), for every
+    /// model in the zoo, descriptor-loaded ones included.
     #[test]
     fn monotone_under_bit_reduction() {
         let g = tiny_graph();
-        for model in ["size", "bitops", "mpic", "ne16"] {
-            let m = by_name(model).unwrap();
+        for m in CostRegistry::zoo().iter() {
             let mut prev = f64::MAX;
             for bits in [8u32, 4, 2] {
                 let c = m.cost(&g, &Assignment::uniform(&g, bits));
                 assert!(
                     c <= prev + 1e-9,
-                    "{model}: cost at {bits} bits ({c}) > previous ({prev})"
+                    "{}: cost at {bits} bits ({c}) > previous ({prev})",
+                    m.name()
                 );
                 prev = c;
             }
@@ -142,8 +168,7 @@ mod tests {
     #[test]
     fn pruning_reduces_cost() {
         let g = tiny_graph();
-        for model in ["size", "bitops", "mpic", "ne16"] {
-            let m = by_name(model).unwrap();
+        for m in CostRegistry::zoo().iter() {
             let full = Assignment::uniform(&g, 8);
             let mut pruned = full.clone();
             for c in 0..4 {
@@ -151,7 +176,8 @@ mod tests {
             }
             assert!(
                 m.cost(&g, &pruned) < m.cost(&g, &full),
-                "{model}: pruning did not reduce cost"
+                "{}: pruning did not reduce cost",
+                m.name()
             );
         }
     }
@@ -159,10 +185,9 @@ mod tests {
     #[test]
     fn normalized_at_one_for_w8a8() {
         let g = tiny_graph();
-        for model in ["size", "bitops", "mpic", "ne16"] {
-            let m = by_name(model).unwrap();
+        for m in CostRegistry::zoo().iter() {
             let n = m.normalized(&g, &Assignment::uniform(&g, 8));
-            assert!((n - 1.0).abs() < 1e-9, "{model}: {n}");
+            assert!((n - 1.0).abs() < 1e-9, "{}: {n}", m.name());
         }
     }
 
@@ -182,5 +207,16 @@ mod tests {
             }
         }
         assert!(Normalizer::by_name("nope", &g).is_none());
+    }
+
+    /// `by_name` stays the closed paper set; `resolve` spans the zoo.
+    #[test]
+    fn by_name_closed_resolve_open() {
+        assert!(by_name("size").is_some());
+        assert!(by_name("edge-dsp").is_none());
+        assert!(resolve("edge-dsp").is_ok());
+        assert!(resolve("roofline").is_ok());
+        let err = resolve("nope").unwrap_err().to_string();
+        assert!(err.contains("roofline"), "{err:?}");
     }
 }

@@ -40,7 +40,7 @@ pub fn macs_per_cycle(px: u32, pw: u32) -> f64 {
 pub struct Mpic;
 
 impl CostModel for Mpic {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "mpic"
     }
 

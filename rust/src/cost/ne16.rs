@@ -55,7 +55,7 @@ pub fn layer_cycles(
 }
 
 impl CostModel for Ne16 {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "ne16"
     }
 

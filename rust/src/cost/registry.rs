@@ -1,0 +1,265 @@
+//! Open cost-model registry: the hardware-scenario zoo.
+//!
+//! `cost::by_name` used to be a closed 4-way match; the registry keeps
+//! that set as [`CostRegistry::builtin`] and opens it up — register
+//! any [`CostModel`] under its name, load extra targets from JSON
+//! hardware descriptors (`type: lut|roofline`, see
+//! `rust/src/cost/README.md`), iterate them all, and resolve names
+//! with an error that lists what is registered instead of a bare
+//! `None`. [`CostRegistry::normalizers`] builds the per-model
+//! [`Normalizer`] set for one graph — each model's w8a8 reference is
+//! computed exactly once there, which is what makes re-scoring a whole
+//! sweep across every target (the Pareto atlas, `cost::atlas`) a pure
+//! host-side post-pass.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use super::{BitOps, LutModel, Mpic, Ne16, Normalizer, Roofline, SharedModel, Size};
+use crate::error::{Error, Result};
+use crate::graph::ModelGraph;
+use crate::util::json::Json;
+
+/// Registration-ordered, name-keyed set of cost models.
+#[derive(Clone, Default)]
+pub struct CostRegistry {
+    models: Vec<SharedModel>,
+}
+
+impl CostRegistry {
+    pub fn new() -> Self {
+        CostRegistry { models: Vec::new() }
+    }
+
+    /// The four paper models (`size`, `bitops`, `mpic`, `ne16`) — the
+    /// closed set the old `by_name` matched.
+    pub fn builtin() -> Self {
+        let mut r = Self::new();
+        r.register(Arc::new(Size)).expect("builtin");
+        r.register(Arc::new(BitOps)).expect("builtin");
+        r.register(Arc::new(Mpic)).expect("builtin");
+        r.register(Arc::new(Ne16)).expect("builtin");
+        r
+    }
+
+    /// The full hardware-scenario zoo: the builtins plus the committed
+    /// example targets of the two descriptor families — the `edge-dsp`
+    /// latency LUT and the `roofline` edge SoC.
+    pub fn zoo() -> Self {
+        let mut r = Self::builtin();
+        r.register(Arc::new(LutModel::edge_dsp())).expect("zoo");
+        r.register(Arc::new(Roofline::edge_default())).expect("zoo");
+        r
+    }
+
+    /// Register a model under its [`CostModel::name`]. Duplicate names
+    /// are an error — a silently shadowed target would corrupt every
+    /// atlas that iterates the registry.
+    ///
+    /// [`CostModel::name`]: super::CostModel::name
+    pub fn register(&mut self, model: SharedModel) -> Result<()> {
+        let name = model.name();
+        if name.is_empty() {
+            return Err(Error::Config("cost model has an empty name".into()));
+        }
+        if self.get(name).is_some() {
+            return Err(Error::Config(format!(
+                "cost model '{name}' is already registered"
+            )));
+        }
+        self.models.push(model);
+        Ok(())
+    }
+
+    /// Parse and register one hardware descriptor, dispatching on its
+    /// `"type"` field; returns the registered model name.
+    pub fn register_descriptor(&mut self, v: &Json) -> Result<String> {
+        let model: SharedModel = match v.get("type").as_str() {
+            Some("lut") => Arc::new(LutModel::from_json(v)?),
+            Some("roofline") => Arc::new(Roofline::from_json(v)?),
+            Some(other) => {
+                return Err(Error::Config(format!(
+                    "unknown hardware descriptor type '{other}' (expected lut|roofline)"
+                )))
+            }
+            None => {
+                return Err(Error::Config(
+                    "hardware descriptor is missing \"type\" (lut|roofline)".into(),
+                ))
+            }
+        };
+        let name = model.name().to_string();
+        self.register(model)?;
+        Ok(name)
+    }
+
+    /// [`Self::register_descriptor`] from a file (errors name the path).
+    pub fn register_descriptor_file(&mut self, path: &Path) -> Result<String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("{}: {e}", path.display())))?;
+        let v = Json::parse(&text)
+            .map_err(|e| Error::Config(format!("{}: {e}", path.display())))?;
+        self.register_descriptor(&v)
+    }
+
+    pub fn get(&self, name: &str) -> Option<SharedModel> {
+        self.models.iter().find(|m| m.name() == name).cloned()
+    }
+
+    /// Like [`Self::get`], but an unknown name is an error listing the
+    /// registered models.
+    pub fn resolve(&self, name: &str) -> Result<SharedModel> {
+        self.get(name).ok_or_else(|| {
+            Error::Config(format!(
+                "unknown cost model '{name}' (registered: {})",
+                self.names().join(", ")
+            ))
+        })
+    }
+
+    /// Registered names, in registration order.
+    pub fn names(&self) -> Vec<String> {
+        self.models.iter().map(|m| m.name().to_string()).collect()
+    }
+
+    /// Iterate the models in registration order.
+    pub fn iter(&self) -> impl Iterator<Item = &SharedModel> {
+        self.models.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    /// One memoized [`Normalizer`] per registered model for `graph`,
+    /// in registration order: every model's w8a8 reference cost is
+    /// computed here once, then shared by all subsequent scoring.
+    pub fn normalizers(&self, graph: &ModelGraph) -> Vec<Normalizer> {
+        self.models
+            .iter()
+            .map(|m| Normalizer::new(m.clone(), graph))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    use super::*;
+    use crate::assignment::Assignment;
+    use crate::cost::testutil::tiny_graph;
+    use crate::cost::CostModel;
+
+    #[test]
+    fn zoo_contents_and_order() {
+        let r = CostRegistry::zoo();
+        assert_eq!(
+            r.names(),
+            ["size", "bitops", "mpic", "ne16", "edge-dsp", "roofline"]
+        );
+        assert_eq!(r.len(), 6);
+        assert!(!r.is_empty());
+        assert!(r.get("edge-dsp").is_some());
+    }
+
+    #[test]
+    fn resolve_unknown_lists_registered_models() {
+        let r = CostRegistry::builtin();
+        let err = r.resolve("tpu-v9").unwrap_err().to_string();
+        for needle in ["tpu-v9", "size", "bitops", "mpic", "ne16"] {
+            assert!(err.contains(needle), "{err:?} missing {needle:?}");
+        }
+        assert!(r.resolve("size").is_ok());
+    }
+
+    #[test]
+    fn duplicate_and_empty_names_rejected() {
+        let mut r = CostRegistry::builtin();
+        let err = r.register(Arc::new(Size)).unwrap_err().to_string();
+        assert!(err.contains("already registered"), "{err:?}");
+        let dup = Json::parse(
+            r#"{"type":"roofline","name":"size","peak_macs_per_s":1,
+                "dram_bytes_per_s":1}"#,
+        )
+        .unwrap();
+        assert!(r.register_descriptor(&dup).is_err());
+    }
+
+    #[test]
+    fn descriptor_dispatch() {
+        let mut r = CostRegistry::new();
+        let lut = Json::parse(
+            r#"{"type":"lut","name":"npu",
+                "entries":[{"kind":"conv","px":8,"pw":8,"macs_per_cycle":4}]}"#,
+        )
+        .unwrap();
+        assert_eq!(r.register_descriptor(&lut).unwrap(), "npu");
+        let roof = Json::parse(
+            r#"{"type":"roofline","name":"soc","peak_macs_per_s":1000,
+                "dram_bytes_per_s":100}"#,
+        )
+        .unwrap();
+        assert_eq!(r.register_descriptor(&roof).unwrap(), "soc");
+        assert_eq!(r.names(), ["npu", "soc"]);
+        let bad = Json::parse(r#"{"type":"fpga","name":"x"}"#).unwrap();
+        let err = r.register_descriptor(&bad).unwrap_err().to_string();
+        assert!(err.contains("lut|roofline"), "{err:?}");
+        assert!(r
+            .register_descriptor(&Json::parse(r#"{"name":"x"}"#).unwrap())
+            .is_err());
+    }
+
+    /// A cost model that counts its `max_cost` evaluations, proving
+    /// the normalizer set never recomputes the w8a8 reference.
+    struct Counting(AtomicUsize);
+
+    impl CostModel for Counting {
+        fn name(&self) -> &str {
+            "counting"
+        }
+        fn cost(&self, _g: &ModelGraph, asg: &Assignment) -> f64 {
+            asg.gamma_bits.iter().flatten().map(|&b| b as f64).sum()
+        }
+        fn max_cost(&self, graph: &ModelGraph) -> f64 {
+            self.0.fetch_add(1, Ordering::SeqCst);
+            self.cost(graph, &Assignment::uniform(graph, 8))
+        }
+    }
+
+    #[test]
+    fn normalizer_never_recomputes_max_cost() {
+        let g = tiny_graph();
+        let model = Arc::new(Counting(AtomicUsize::new(0)));
+        let mut r = CostRegistry::new();
+        r.register(model.clone()).unwrap();
+        let norms = r.normalizers(&g);
+        assert_eq!(norms.len(), 1);
+        assert_eq!(model.0.load(Ordering::SeqCst), 1, "memoized at build");
+        for bits in [2u32, 4, 8] {
+            let a = Assignment::uniform(&g, bits);
+            let n = norms[0].normalized(&g, &a);
+            assert!((n - bits as f64 / 8.0).abs() < 1e-12, "{n}");
+        }
+        let _ = norms[0].max_cost();
+        assert_eq!(
+            model.0.load(Ordering::SeqCst),
+            1,
+            "scoring recomputed the w8a8 reference"
+        );
+    }
+
+    #[test]
+    fn uniform8_normalizes_to_one_for_every_registered_model() {
+        let g = tiny_graph();
+        let w8 = Assignment::uniform(&g, 8);
+        for norm in CostRegistry::zoo().normalizers(&g) {
+            let n = norm.normalized(&g, &w8);
+            assert!((n - 1.0).abs() < 1e-9, "{}: {n}", norm.name());
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! Roofline latency model: per layer, the larger of compute time
+//! (MACs over a peak throughput that scales with `8/max(px, pw)`) and
+//! memory time (weight + activation traffic over DRAM bandwidth).
+//! Two numbers — peak MACs/s at 8x8 and DRAM bytes/s — place the
+//! compute/memory-bound crossover, the coarse twin of the per-target
+//! LUTs for hardware nobody has characterized yet (the constrained
+//! edge-node setting of arxiv 2206.08852).
+//!
+//! Traffic assumptions (documented, deliberately simple): weights move
+//! once at their assigned width, input activations move once at the
+//! layer's input width over `C_in,eff x` the input spatial extent
+//! (`out_h*stride x out_w*stride`), outputs store once at 8 bits —
+//! the same store convention as the NE16 model.
+
+use super::CostModel;
+use crate::assignment::Assignment;
+use crate::error::{Error, Result};
+use crate::graph::{LayerKind, ModelGraph};
+use crate::util::json::Json;
+
+/// Roofline model; cost is end-to-end seconds.
+#[derive(Debug, Clone)]
+pub struct Roofline {
+    name: String,
+    /// Peak MAC throughput at 8-bit x 8-bit operands; narrower
+    /// operands speed up by `8 / max(px, pw)` (SIMD lane doubling).
+    peak_macs_per_s: f64,
+    dram_bytes_per_s: f64,
+}
+
+impl Roofline {
+    pub fn new(name: impl Into<String>, peak_macs_per_s: f64, dram_bytes_per_s: f64) -> Self {
+        Roofline {
+            name: name.into(),
+            peak_macs_per_s,
+            dram_bytes_per_s,
+        }
+    }
+
+    /// The default target registered by the zoo: a 200 GMAC/s, 8 GB/s
+    /// edge SoC (crossover at 25 MACs/byte of operational intensity).
+    pub fn edge_default() -> Self {
+        Roofline::new("roofline", 2.0e11, 8.0e9)
+    }
+
+    /// Parse a `"type": "roofline"` hardware descriptor. Required:
+    /// non-empty `name`, positive `peak_macs_per_s` and
+    /// `dram_bytes_per_s`.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        if let Some(t) = v.get("type").as_str() {
+            if t != "roofline" {
+                return Err(Error::Config(format!(
+                    "hardware descriptor: expected type 'roofline', got '{t}'"
+                )));
+            }
+        }
+        let name = v
+            .get("name")
+            .as_str()
+            .filter(|s| !s.is_empty())
+            .ok_or_else(|| {
+                Error::Config("hardware descriptor: missing non-empty \"name\"".into())
+            })?
+            .to_string();
+        let peak = v.get("peak_macs_per_s").as_f64().unwrap_or(0.0);
+        let bw = v.get("dram_bytes_per_s").as_f64().unwrap_or(0.0);
+        for (field, val) in [("peak_macs_per_s", peak), ("dram_bytes_per_s", bw)] {
+            if val.is_nan() || val <= 0.0 {
+                return Err(Error::Config(format!(
+                    "hardware descriptor '{name}': {field} must be > 0"
+                )));
+            }
+        }
+        Ok(Roofline::new(name, peak, bw))
+    }
+
+    pub fn latency_ms(&self, graph: &ModelGraph, asg: &Assignment) -> f64 {
+        self.cost(graph, asg) * 1e3
+    }
+}
+
+impl CostModel for Roofline {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// End-to-end seconds: sum over layers of
+    /// `max(compute_s, memory_s)` — each layer sits on its side of the
+    /// roofline's compute/memory-bound crossover.
+    fn cost(&self, graph: &ModelGraph, asg: &Assignment) -> f64 {
+        let mut total_s = 0f64;
+        for l in &graph.layers {
+            let px = asg.in_bits(l);
+            let cin_eff = asg.cin_eff(graph, l);
+            let spatial = (l.k * l.k * l.out_h * l.out_w) as f64;
+            let macs_per_ch = match l.kind {
+                LayerKind::Depthwise => spatial,
+                _ => spatial * cin_eff as f64,
+            };
+            let wpc = l.weights_per_channel_eff(cin_eff) as f64;
+            let mut compute_s = 0f64;
+            let mut weight_bytes = 0f64;
+            let mut kept = 0usize;
+            for pw in [2u32, 4, 8] {
+                let n = asg.channels_at(l.gamma_group, pw);
+                if n == 0 {
+                    continue;
+                }
+                kept += n;
+                let slowdown = px.max(pw) as f64 / 8.0;
+                compute_s += macs_per_ch * n as f64 * slowdown / self.peak_macs_per_s;
+                weight_bytes += wpc * n as f64 * pw as f64 / 8.0;
+            }
+            if kept == 0 {
+                continue;
+            }
+            let in_spatial = (l.out_h * l.stride * l.out_w * l.stride) as f64;
+            let in_bytes = cin_eff as f64 * in_spatial * px as f64 / 8.0;
+            let out_bytes = (l.out_h * l.out_w * kept) as f64;
+            let mem_s = (weight_bytes + in_bytes + out_bytes) / self.dram_bytes_per_s;
+            total_s += compute_s.max(mem_s);
+        }
+        total_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::testutil::tiny_graph;
+
+    #[test]
+    fn w8a8_reference_seconds_pinned() {
+        // Hand-computed on the tiny graph at the edge_default target:
+        // every layer is memory-bound (intensity < 25 MACs/byte), so
+        // the cost is exactly total bytes / bandwidth:
+        //   c0: 27*8 weights + 3*64 input + 8*64 output =  920 B
+        //   dw0:  9*8         + 8*64       + 8*64       = 1096 B
+        //   fc:   8*4         + 8*1        + 4*1        =   44 B
+        let g = tiny_graph();
+        let m = Roofline::edge_default();
+        let a = Assignment::uniform(&g, 8);
+        let expect = (920.0 + 1096.0 + 44.0) / 8.0e9;
+        assert!((m.cost(&g, &a) - expect).abs() < 1e-18, "{}", m.cost(&g, &a));
+        assert!((m.latency_ms(&g, &a) - expect * 1e3).abs() < 1e-15);
+    }
+
+    #[test]
+    fn compute_bound_side_of_the_crossover() {
+        // A tiny peak with huge bandwidth pins every layer compute-
+        // bound: cost == total MACs / peak, exactly.
+        let g = tiny_graph();
+        let m = Roofline::new("slowalu", 1.0e6, 1.0e12);
+        let a = Assignment::uniform(&g, 8);
+        let expect = (13824.0 + 4608.0 + 32.0) / 1.0e6;
+        assert!((m.cost(&g, &a) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn narrower_weights_cut_memory_time() {
+        let g = tiny_graph();
+        let m = Roofline::edge_default();
+        let c8 = m.cost(&g, &Assignment::uniform(&g, 8));
+        let c2 = m.cost(&g, &Assignment::uniform(&g, 2));
+        // weights shrink 4x but activation traffic stays -> strictly
+        // cheaper, far from a full 4x
+        assert!(c2 < c8 && c2 > c8 / 4.0, "c2={c2} c8={c8}");
+    }
+
+    #[test]
+    fn descriptor_roundtrip_and_validation() {
+        let v = Json::parse(
+            r#"{"type":"roofline","name":"soc","peak_macs_per_s":1000,
+                "dram_bytes_per_s":100}"#,
+        )
+        .unwrap();
+        let m = Roofline::from_json(&v).unwrap();
+        assert_eq!(m.name(), "soc");
+        for text in [
+            r#"{"type":"roofline","peak_macs_per_s":1,"dram_bytes_per_s":1}"#,
+            r#"{"type":"roofline","name":"x","dram_bytes_per_s":1}"#,
+            r#"{"type":"roofline","name":"x","peak_macs_per_s":-1,"dram_bytes_per_s":1}"#,
+            r#"{"type":"lut","name":"x","peak_macs_per_s":1,"dram_bytes_per_s":1}"#,
+        ] {
+            assert!(Roofline::from_json(&Json::parse(text).unwrap()).is_err());
+        }
+    }
+}

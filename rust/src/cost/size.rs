@@ -8,7 +8,7 @@ use crate::graph::{LayerKind, ModelGraph};
 pub struct Size;
 
 impl CostModel for Size {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "size"
     }
 

@@ -58,6 +58,16 @@ impl Layer {
         }
     }
 
+    /// Weight-element count per output channel at an effective input
+    /// width — the pruning-credited twin of
+    /// [`Self::weights_per_channel`] (paper's `C_in,eff`).
+    pub fn weights_per_channel_eff(&self, cin_eff: usize) -> usize {
+        match self.kind {
+            LayerKind::Depthwise => self.k * self.k,
+            _ => cin_eff * self.k * self.k,
+        }
+    }
+
     /// MACs contributed by one output channel at full input width.
     pub fn macs_per_channel(&self) -> u64 {
         (self.macs / self.cout as u64).max(1)

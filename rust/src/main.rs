@@ -15,7 +15,7 @@ use mixprec::coordinator::{
     default_lambdas, sweep_lambdas, Context, PipelineConfig, Runner, Sampling,
     SweepMode, SweepOptions,
 };
-use mixprec::cost::{Mpic, Ne16, Size};
+use mixprec::cost::{CostRegistry, Mpic, Ne16, Size};
 use mixprec::deploy::{refine_for_ne16, reorder_assignment, split_layers};
 use mixprec::report;
 use mixprec::util::cli::Args;
@@ -61,6 +61,15 @@ fn usage() -> ! {
                           0 = unlimited
                           (env: MIXPREC_CACHE_BUDGET_BYTES;
                           default 256 MiB)
+    --atlas               sweep/compare: re-score every searched point
+                          across the cost-model zoo and print one
+                          Pareto front per hardware target (pure
+                          post-pass: no extra training or uploads)
+    --cost-models a,b,c   atlas target subset, in order (default: all
+                          registered models; implies --atlas)
+    --hw-descriptor f,g   register extra JSON hardware descriptors
+                          (\"type\": \"lut\"|\"roofline\", see
+                          rust/src/cost/README.md) as atlas targets
     --seed <n>            RNG seed
     --act-search          open activation precisions {{2,4,8}}
     --verbose"
@@ -85,6 +94,22 @@ fn build_cfg(a: &Args) -> PipelineConfig {
         cfg.masks = PrecisionMasks::joint_act();
     }
     cfg
+}
+
+/// Did the invocation ask for the multi-target atlas? (`--cost-models`
+/// names targets, so it implies `--atlas`.)
+fn wants_atlas(a: &Args) -> bool {
+    a.has("atlas") || a.has("cost-models")
+}
+
+/// The cost-model zoo plus any `--hw-descriptor` JSON files — the
+/// registry atlas scoring resolves targets against.
+fn build_cost_registry(a: &Args) -> mixprec::Result<CostRegistry> {
+    let mut reg = CostRegistry::zoo();
+    for path in a.str_list("hw-descriptor", &[]) {
+        reg.register_descriptor_file(std::path::Path::new(&path))?;
+    }
+    Ok(reg)
 }
 
 fn build_sweep_opts(a: &Args) -> mixprec::Result<SweepOptions> {
@@ -251,6 +276,15 @@ fn run(cmd: &str, a: &Args) -> mixprec::Result<()> {
                     .to_markdown()
                 );
             }
+            if wants_atlas(a) {
+                let reg = build_cost_registry(a)?;
+                let atlas =
+                    sw.atlas(ctx.graph(&cfg.model), &reg, &a.str_list("cost-models", &[]))?;
+                for t in report::atlas_tables(&atlas) {
+                    println!("{}", t.to_markdown());
+                }
+                println!("{}", report::atlas_line(&atlas));
+            }
         }
         "compare" => {
             let cfg = build_cfg(a);
@@ -276,6 +310,18 @@ fn run(cmd: &str, a: &Args) -> mixprec::Result<()> {
                 rows.push((format!("w{b}a8"), r));
             }
             println!("{}", report::runs_table("method comparison", &rows).to_markdown());
+            if wants_atlas(a) {
+                // pure post-pass over the finished comparison: the
+                // cache_line below reports the same counters an
+                // atlas-free run would
+                let reg = build_cost_registry(a)?;
+                let atlas =
+                    cr.atlas(ctx.graph(&cfg.model), &reg, &a.str_list("cost-models", &[]))?;
+                for t in report::atlas_tables(&atlas) {
+                    println!("{}", t.to_markdown());
+                }
+                println!("{}", report::atlas_line(&atlas));
+            }
             println!("{}", report::cache_line(&cr));
             println!("{}", report::alloc_line(&cr.alloc));
             println!("backend threads: {}", ctx.eng.threads());

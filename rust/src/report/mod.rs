@@ -5,6 +5,7 @@ pub mod benchkit;
 
 use crate::baselines::CompareResult;
 use crate::coordinator::pareto::ParetoFront;
+use crate::cost::Atlas;
 use crate::coordinator::phases::RunResult;
 use crate::runtime::AllocStats;
 use crate::util::table::{f2, f4, Table};
@@ -99,6 +100,39 @@ pub fn front_table(title: &str, front: &ParetoFront, cost_name: &str) -> Table {
         t.row(vec![f2(p.cost), f4(p.acc), p.tag.clone()]);
     }
     t
+}
+
+/// One Pareto-front table per atlas target (normalized cost, so the
+/// columns line up across targets whose raw units differ). The CI e2e
+/// leg greps "atlas front: edge-dsp" out of the rendered titles.
+pub fn atlas_tables(atlas: &Atlas) -> Vec<Table> {
+    atlas
+        .targets
+        .iter()
+        .map(|t| {
+            let mut tab = Table::new(
+                &format!("atlas front: {}", t.model),
+                &["cost/w8a8", "val acc", "tag"],
+            );
+            for p in t.front.points() {
+                tab.row(vec![f4(p.cost), f4(p.acc), p.tag.clone()]);
+            }
+            tab
+        })
+        .collect()
+}
+
+/// One-line atlas summary. The CI e2e leg greps the exact
+/// "atlas: N targets over P points" prefix, so keep the format stable.
+pub fn atlas_line(atlas: &Atlas) -> String {
+    let points = atlas.targets.first().map_or(0, |t| t.points);
+    let names: Vec<String> = atlas.targets.iter().map(|t| t.model.clone()).collect();
+    format!(
+        "atlas: {} targets over {} points ({})",
+        atlas.len(),
+        points,
+        names.join(", ")
+    )
 }
 
 /// Training history CSV (loss curves for the e2e example).

@@ -615,7 +615,7 @@ impl SharedRunCache {
     /// back; `None` keeps the pool in-memory only. Attaching also
     /// garbage-collects the directory against the count/age budgets
     /// (`MIXPREC_WARM_DIR_MAX` / `MIXPREC_WARM_DIR_TTL_SECS`; see
-    /// [`gc_warm_dir`]).
+    /// `gc_warm_dir`).
     pub fn set_warm_dir(&self, dir: Option<PathBuf>) {
         if let Some(d) = &dir {
             gc_warm_dir(d, warm_dir_max_from_env(), warm_dir_ttl_from_env());

@@ -1,0 +1,197 @@
+//! Multi-target Pareto atlas end-to-end contract, on the stub
+//! fixture:
+//!
+//! (a) an atlas `compare` is the *same job* as a single-model one —
+//!     warmup phases, split uploads, and per-run step counts are
+//!     counter-identical, and every per-method front is bitwise
+//!     identical (the atlas changes reporting, never search);
+//! (b) the atlas scoring itself is a pure host-side post-pass: no
+//!     shared-cache counter moves across the `atlas()` call;
+//! (c) one front per requested target, in request order, zoo order
+//!     when no subset is named, fixed wNa8 baselines tagged into every
+//!     target;
+//! (d) an unknown target name fails with the registry's listing error
+//!     before anything is scored.
+
+use std::path::PathBuf;
+
+use mixprec::baselines::{compare_methods, CompareResult};
+use mixprec::coordinator::{sweep_lambdas, Context, PipelineConfig, SweepMode, SweepOptions};
+use mixprec::cost::CostRegistry;
+use mixprec::runtime::fixture;
+
+struct Fx {
+    dir: PathBuf,
+    ctx: Context,
+}
+
+impl Fx {
+    /// Same ragged-split geometry as `tests/shared_cache.rs`.
+    fn new(tag: &str) -> Fx {
+        let dir =
+            std::env::temp_dir().join(format!("mixprec_atlas_{tag}_{}", std::process::id()));
+        fixture::write_stub_fixture(&dir).expect("fixture");
+        let ctx = Context::load(&dir, 0.07).expect("context");
+        Fx { dir, ctx }
+    }
+}
+
+impl Drop for Fx {
+    fn drop(&mut self) {
+        std::fs::remove_dir_all(&self.dir).ok();
+    }
+}
+
+fn quick_cfg() -> PipelineConfig {
+    let mut cfg = PipelineConfig::quick(fixture::STUB_MODEL);
+    cfg.warmup_steps = 12;
+    cfg.search_steps = 24;
+    cfg.finetune_steps = 6;
+    cfg.eval_every = 8;
+    cfg.steps_per_epoch = 8;
+    cfg
+}
+
+fn opts() -> SweepOptions {
+    SweepOptions {
+        workers: 1,
+        mode: SweepMode::ForkedWarmup,
+        vary_seeds: false,
+        share_warmup: true,
+    }
+}
+
+const LAMBDAS: [f64; 2] = [0.05, 5.0];
+
+fn run_compare(fx: &Fx, fixed_bits: &[u32]) -> CompareResult {
+    // budget 0: the counter-exact assertions below must hold even when
+    // CI re-runs this suite with a tiny MIXPREC_CACHE_BUDGET_BYTES
+    fx.ctx.shared_cache().set_budget_bytes(0);
+    let runner = fx.ctx.runner_shared(fixture::STUB_MODEL).unwrap();
+    compare_methods(&runner, &quick_cfg(), &LAMBDAS, "size", &opts(), fixed_bits).unwrap()
+}
+
+fn front_key(f: &mixprec::coordinator::ParetoFront) -> Vec<(u64, u64)> {
+    f.points()
+        .iter()
+        .map(|p| (p.cost.to_bits(), p.acc.to_bits()))
+        .collect()
+}
+
+/// (a): the atlas adds zero work to the compare — every counter the
+/// cache tracks and every per-run history is identical to a compare
+/// that never hears about the atlas.
+#[test]
+fn atlas_compare_is_counter_identical_to_single_model() {
+    let single = run_compare(&Fx::new("single"), &[2, 4, 8]);
+    let fx = Fx::new("atlas");
+    let multi = run_compare(&fx, &[2, 4, 8]);
+
+    assert_eq!(multi.warmups_run, single.warmups_run);
+    assert_eq!(multi.warmups_reused, single.warmups_reused);
+    assert_eq!(multi.warmup_steps_run, single.warmup_steps_run);
+    assert_eq!(multi.split_uploads, single.split_uploads);
+    assert_eq!(multi.split_reuses, single.split_reuses);
+    for ((ma, a), (mb, b)) in multi.sweeps.iter().zip(&single.sweeps) {
+        assert_eq!(ma.label(), mb.label());
+        for (x, y) in a.runs.iter().zip(&b.runs) {
+            assert_eq!(x.history.len(), y.history.len(), "{} step count", ma.label());
+        }
+        assert_eq!(front_key(&a.front()), front_key(&b.front()), "{}", ma.label());
+    }
+
+    // (b): scoring the atlas moves no cache counter
+    let cache = fx.ctx.shared_cache();
+    let before = cache.stats();
+    let reg = CostRegistry::zoo();
+    let atlas = multi
+        .atlas(fx.ctx.graph(fixture::STUB_MODEL), &reg, &[])
+        .unwrap();
+    let d = cache.stats().since(&before);
+    assert_eq!(
+        (d.split_uploads, d.split_reuses, d.warmups_run, d.warmups_reused),
+        (0, 0, 0, 0),
+        "atlas scoring touched the shared cache"
+    );
+    assert_eq!((d.evictions, d.rebuilds_after_evict), (0, 0));
+
+    // one front per zoo target over all 4*2 sweep runs + 3 fixed
+    assert_eq!(atlas.len(), 6);
+    for t in &atlas.targets {
+        assert_eq!(t.points, 4 * LAMBDAS.len() + 3, "{}", t.model);
+        assert!(!t.front.is_empty(), "{}", t.model);
+        for p in t.front.points() {
+            assert!(p.cost <= 1.0 + 1e-9, "{}: {}", t.model, p.cost);
+        }
+    }
+    // fixed baselines are tagged into the atlas point set
+    let tags: Vec<&str> = atlas.targets[0]
+        .front
+        .points()
+        .iter()
+        .map(|p| p.tag.as_str())
+        .collect();
+    assert!(
+        tags.iter().any(|t| t.starts_with("w2a8") || t.contains("lam=")),
+        "{tags:?}"
+    );
+}
+
+/// (c): target selection honors the requested subset and order; the
+/// default spans the zoo in registration order.
+#[test]
+fn atlas_target_selection_and_order() {
+    let fx = Fx::new("select");
+    let cr = run_compare(&fx, &[]);
+    let g = fx.ctx.graph(fixture::STUB_MODEL);
+    let reg = CostRegistry::zoo();
+
+    let all = cr.atlas(g, &reg, &[]).unwrap();
+    let names: Vec<&str> = all.targets.iter().map(|t| t.model.as_str()).collect();
+    assert_eq!(names, ["size", "bitops", "mpic", "ne16", "edge-dsp", "roofline"]);
+
+    let subset = cr
+        .atlas(g, &reg, &["roofline".into(), "size".into()])
+        .unwrap();
+    let names: Vec<&str> = subset.targets.iter().map(|t| t.model.as_str()).collect();
+    assert_eq!(names, ["roofline", "size"]);
+    assert!(subset.target("ne16").is_none());
+
+    // the subset's per-target fronts are bitwise the same as the full
+    // atlas's slices for those targets
+    for t in &subset.targets {
+        let full = all.target(&t.model).unwrap();
+        assert_eq!(front_key(&t.front), front_key(&full.front), "{}", t.model);
+        assert_eq!(t.max_cost.to_bits(), full.max_cost.to_bits(), "{}", t.model);
+    }
+}
+
+/// (d): unknown names fail fast with the registry listing, both
+/// through `CompareResult::atlas` and `SweepResult::atlas`.
+#[test]
+fn atlas_unknown_target_fails_with_listing() {
+    let fx = Fx::new("unknown");
+    fx.ctx.shared_cache().set_budget_bytes(0);
+    let runner = fx.ctx.runner_shared(fixture::STUB_MODEL).unwrap();
+    let sw = sweep_lambdas(&runner, &quick_cfg(), &LAMBDAS, "size", &opts()).unwrap();
+    let g = fx.ctx.graph(fixture::STUB_MODEL);
+    let reg = CostRegistry::zoo();
+
+    let err = sw
+        .atlas(g, &reg, &["gpu-z".into()])
+        .unwrap_err()
+        .to_string();
+    for needle in ["gpu-z", "size", "edge-dsp", "roofline"] {
+        assert!(err.contains(needle), "{err:?} missing {needle:?}");
+    }
+
+    // the sweep-level atlas works and tags by lambda
+    let atlas = sw.atlas(g, &reg, &["edge-dsp".into()]).unwrap();
+    assert_eq!(atlas.len(), 1);
+    assert_eq!(atlas.targets[0].points, LAMBDAS.len());
+    assert!(atlas.targets[0]
+        .front
+        .points()
+        .iter()
+        .all(|p| p.tag.starts_with("lam=")));
+}

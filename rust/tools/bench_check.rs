@@ -313,6 +313,65 @@ const RULES: &[Rule] = &[
         tol: 0.0,
         env: None,
     },
+    // multi-target Pareto atlas: every registered target gets a front
+    // and the scoring stays a pure post-pass (cache untouched, compare
+    // counters and fronts identical to the single-model run)
+    Rule {
+        bench: "sweep_fork",
+        path: &["atlas", "targets"],
+        dir: Dir::HigherIsBetter,
+        tol: 0.0,
+        env: None,
+    },
+    Rule {
+        bench: "sweep_fork",
+        path: &["atlas", "points_per_target"],
+        dir: Dir::HigherIsBetter,
+        tol: 0.0,
+        env: None,
+    },
+    Rule {
+        bench: "sweep_fork",
+        path: &["atlas", "includes_lut"],
+        dir: Dir::Exact,
+        tol: 0.0,
+        env: None,
+    },
+    Rule {
+        bench: "sweep_fork",
+        path: &["atlas", "cache_untouched"],
+        dir: Dir::Exact,
+        tol: 0.0,
+        env: None,
+    },
+    Rule {
+        bench: "sweep_fork",
+        path: &["atlas", "warmups_identical"],
+        dir: Dir::Exact,
+        tol: 0.0,
+        env: None,
+    },
+    Rule {
+        bench: "sweep_fork",
+        path: &["atlas", "split_uploads_identical"],
+        dir: Dir::Exact,
+        tol: 0.0,
+        env: None,
+    },
+    Rule {
+        bench: "sweep_fork",
+        path: &["atlas", "steps_identical"],
+        dir: Dir::Exact,
+        tol: 0.0,
+        env: None,
+    },
+    Rule {
+        bench: "sweep_fork",
+        path: &["atlas", "fronts_equal_single_model"],
+        dir: Dir::Exact,
+        tol: 0.0,
+        env: None,
+    },
 ];
 
 const DEFAULT_BENCHES: [&str; 2] = ["step_marshal", "sweep_fork"];

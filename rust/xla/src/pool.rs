@@ -68,8 +68,8 @@ struct PoolInner {
 /// argument.
 ///
 /// Retention is bounded two ways: per class by entry count
-/// ([`POOL_CLASS_CAP`]) and globally by a byte budget (default
-/// [`POOL_DEFAULT_BUDGET_BYTES`], env-tunable via
+/// (`POOL_CLASS_CAP`) and globally by a byte budget (default
+/// `POOL_DEFAULT_BUDGET_BYTES`, env-tunable via
 /// `MIXPREC_POOL_BUDGET_BYTES`). When admitting a retiree would exceed
 /// the budget, the pool evicts retirees from its **largest** size
 /// classes first (counted in [`PoolStats::evicted`]) — small hot
