@@ -11,16 +11,20 @@
 //! the forked front is identical to the independent one, batched
 //! eval moves strictly fewer host<->device bytes, a second
 //! "process" resuming from a shared `--warm-cache-dir` runs zero
-//! warmup steps with a bitwise-identical front, and a compare under a
+//! warmup steps with a bitwise-identical front, a compare under a
 //! deliberately tiny cache byte budget evicts + rebuilds entries while
-//! keeping the front bitwise identical and the retained gauge capped.
+//! keeping the front bitwise identical and the retained gauge capped,
+//! and a lease-based fleet (coordinator + one external worker over a
+//! shared job directory) completes every unit exactly once with a
+//! bitwise-identical front.
 
-use std::time::Instant;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use mixprec::baselines::compare_methods;
 use mixprec::coordinator::{
-    default_lambdas, sweep_lambdas, Context, EvalBufs, MaskBufs, SweepMode,
-    SweepOptions, SweepResult,
+    default_lambdas, run_worker, sweep_lambdas, sweep_lambdas_fleet, Context, EvalBufs,
+    FaultPlan, FleetOptions, FleetStats, MaskBufs, SweepMode, SweepOptions, SweepResult,
 };
 use mixprec::data::Split;
 use mixprec::report::benchkit::{self, BenchScale};
@@ -69,6 +73,24 @@ fn delta(after: TransferStats, before: TransferStats) -> (u64, u64) {
         after.h2d_bytes - before.h2d_bytes,
         after.d2h_bytes - before.d2h_bytes,
     )
+}
+
+/// Tight fleet knobs for the bench: the 30 s TTL keeps healthy leases
+/// from expiring on a loaded runner while the small poll keeps the
+/// claim/merge loop responsive on the near-free stub units.
+fn fleet_opts(dir: &std::path::Path, owner: &str, workers_external: usize) -> FleetOptions {
+    FleetOptions {
+        dir: dir.to_path_buf(),
+        owner: owner.to_string(),
+        ttl: Duration::from_secs(30),
+        max_attempts: 3,
+        backoff_base: Duration::from_millis(1),
+        backoff_cap: Duration::from_millis(8),
+        poll: Duration::from_millis(5),
+        ready_wait: Duration::from_secs(120),
+        workers_external,
+        faults: Arc::new(FaultPlan::none()),
+    }
 }
 
 fn run() -> mixprec::Result<()> {
@@ -219,6 +241,60 @@ fn run() -> mixprec::Result<()> {
         "warm persist: A {persist_s:6.2}s ({} warmup steps) | B {resume_s:6.2}s (0 \
          warmup steps, loaded from disk)",
         sw_a.warmup_steps_run
+    );
+
+    // ---- fleet: lease-based distributed sweep -----------------------
+    // the same 5-lambda sweep driven through a shared job directory by
+    // an in-process coordinator plus one external worker "process"
+    // (its own context = its own engine and cache); acceptance is a
+    // bitwise-identical front, every unit claimed exactly once across
+    // both participants, and zero retries/quarantines when healthy
+    let fleet_dir = dir.join("fleetjob");
+    let fl_fixture = dir.clone();
+    let fl_dir = fleet_dir.clone();
+    let fl_cfg = cfg.clone();
+    let fl_lambdas = lambdas.clone();
+    let fl_frac = scale.data_frac;
+    let fleet_worker = std::thread::spawn(move || -> mixprec::Result<FleetStats> {
+        let ctx = Context::load(&fl_fixture, fl_frac)?;
+        ctx.shared_cache().set_budget_bytes(0);
+        let runner = ctx.runner_shared(fixture::STUB_MODEL)?;
+        run_worker(
+            &runner,
+            &fl_cfg,
+            &fl_lambdas,
+            "size",
+            false,
+            &fleet_opts(&fl_dir, "bench-worker", 0),
+        )
+    });
+    let fl_ctx = Context::load(&dir, scale.data_frac)?;
+    fl_ctx.shared_cache().set_budget_bytes(0);
+    let runner_fl = fl_ctx.runner_shared(fixture::STUB_MODEL)?;
+    let t0 = Instant::now();
+    let (sw_fl, fl_coord) = sweep_lambdas_fleet(
+        &runner_fl,
+        &cfg,
+        &lambdas,
+        "size",
+        &persist_opts,
+        &fleet_opts(&fleet_dir, "bench-coord", 1),
+    )?;
+    let fleet_s = t0.elapsed().as_secs_f64();
+    let fl_worker = fleet_worker.join().expect("fleet worker thread")?;
+    let fleet_units = lambdas.len() as u64;
+    let fleet_claims = fl_coord.leases_claimed + fl_worker.leases_claimed;
+    let fleet_retries = fl_coord.retries + fl_worker.retries;
+    assert_eq!(fl_coord.completed, fleet_units, "fleet lost units");
+    assert_eq!(fleet_claims, fleet_units, "units must be claimed exactly once");
+    assert_eq!(fleet_retries, 0, "healthy fleet retried units");
+    assert_eq!(fl_coord.quarantined, 0, "healthy fleet quarantined units");
+    let fleet_fronts_equal = key(&sw_fl.front()) == key(&sw_a.front());
+    assert!(fleet_fronts_equal, "fleet front diverged from single-process");
+    println!(
+        "fleet: {} units in {fleet_s:6.2}s (coordinator {} + worker {} claims, \
+         {fleet_retries} retries, front identical)",
+        fl_coord.units, fl_coord.leases_claimed, fl_worker.leases_claimed
     );
 
     // ---- compare-level sharing: one warmup + one upload per split ---
@@ -442,6 +518,18 @@ fn run() -> mixprec::Result<()> {
     wp.insert("seconds_resume", Json::Num(resume_s));
     wp.insert("fronts_equal", Json::Bool(persist_fronts_equal));
     o.insert("warm_persist", Json::Obj(wp));
+    let mut fl = JsonObj::new();
+    fl.insert("units", Json::Num(fl_coord.units as f64));
+    fl.insert("completed", Json::Num(fl_coord.completed as f64));
+    fl.insert("claims_coordinator", Json::Num(fl_coord.leases_claimed as f64));
+    fl.insert("claims_worker", Json::Num(fl_worker.leases_claimed as f64));
+    fl.insert("claims_total", Json::Num(fleet_claims as f64));
+    fl.insert("leases_expired", Json::Num(fl_coord.leases_expired as f64));
+    fl.insert("retries", Json::Num(fleet_retries as f64));
+    fl.insert("quarantined", Json::Num(fl_coord.quarantined as f64));
+    fl.insert("fronts_equal", Json::Bool(fleet_fronts_equal));
+    fl.insert("seconds", Json::Num(fleet_s));
+    o.insert("fleet", Json::Obj(fl));
     benchkit::write_bench_json("sweep_fork", &Json::Obj(o))?;
     std::fs::remove_dir_all(&dir).ok();
     Ok(())

@@ -319,7 +319,7 @@ pub fn sequential_pit_mixprec(
     let _seed = pit
         .runs
         .iter()
-        .max_by(|a, b| a.val_acc.partial_cmp(&b.val_acc).unwrap());
+        .max_by(|a, b| a.val_acc.total_cmp(&b.val_acc));
     // stage 2: MixPrec sweep (no pruning) from the seed
     let mix_base = Method::MixPrec.configure(base);
     let mix = sweep_lambdas(runner, &mix_base, mix_lambdas, metric, opts)?;

@@ -1,0 +1,1669 @@
+//! Fault-tolerant distributed sweeps: a file-based, lease-protocol
+//! work queue over a shared job directory.
+//!
+//! A *fleet* shards the lambda grid (and, for `compare`, the whole
+//! method matrix) across processes that share nothing but one
+//! directory. The protocol leans on three properties the tree already
+//! has:
+//!
+//! * work units are **content-addressed** — a unit id hashes the job
+//!   fingerprint (warmup cache key + every pipeline knob + the lambda
+//!   grid), the method label, the grid index and the lambda, so two
+//!   processes enumerating the same job agree on every file name
+//!   without talking to each other;
+//! * the warm start is a **shared v2 checkpoint** — workers resume
+//!   from the coordinator's persisted warmup with zero warmup steps
+//!   (`Runner::try_load_warm` revalidates the fingerprint), so a
+//!   fleet run is bitwise identical to single-process
+//!   `sweep_lambdas` / `compare_methods`;
+//! * every write is **atomic** (same-directory temp + rename) or
+//!   **exclusive** (`create_new`), so readers observe either nothing
+//!   or a complete file — and anything else is treated as torn and
+//!   requeued, exactly like `try_load_warm` degrades to a fresh
+//!   warmup.
+//!
+//! # Lease protocol
+//!
+//! A worker claims unit `u` by creating `lease-<u>.mpl` with
+//! `create_new` — the filesystem arbitrates the double-claim race:
+//! exactly one creator wins, everyone else sees `AlreadyExists`. The
+//! lease carries an owner tag, an attempt number, a wall-clock stamp
+//! and a TTL; a background thread re-stamps it every `ttl/3`. Workers
+//! never delete or steal someone else's lease: **only the
+//! coordinator** expires stale or torn leases (deleting the file and
+//! counting `leases_expired`), after which the unit is claimable
+//! again. Correctness never depends on the lease — results are
+//! content-addressed, merged at most once into a pre-sized slot, and
+//! the compute is deterministic — so the worst a lost lease costs is
+//! duplicate work, never a wrong or double-merged result.
+//!
+//! # Failure handling
+//!
+//! A failed attempt bumps `fail-<u>.mpf` (monotonic max) and the unit
+//! retries with bounded exponential backoff; after
+//! `MIXPREC_FLEET_MAX_ATTEMPTS` failures the unit is quarantined
+//! (`quar-<u>.mpq`, first writer wins) and the coordinator surfaces
+//! the loss as a hard error listing every quarantined unit — counted,
+//! never silently dropped. Torn or foreign lease/result/checkpoint
+//! files are deleted and requeued (counted in `retries`).
+//!
+//! # Deterministic fault injection
+//!
+//! `MIXPREC_FAULTS=point:nth[:mode],...` arms seeded trigger points
+//! (`claim`, `renew`, `ckpt-write`, `result-write`, `mid-run`) with a
+//! failure mode (`abort`, `torn`, `fail`, `skip`); the `nth` firing
+//! of a point (or every firing, `*`) injects the fault. `tests/fleet.rs`
+//! drives the crash matrix through [`FaultPlan`] directly; the CI
+//! chaos leg drives it through the environment across real processes.
+
+use std::collections::{HashMap, HashSet};
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+use crate::assignment::Assignment;
+use crate::baselines::{fixed_baselines, CompareResult, COMPARE_METHODS};
+use crate::coordinator::checkpoint::{self, wire};
+use crate::coordinator::phases::{
+    phase_from_tag, phase_tag, PipelineConfig, Record, RunResult, Runner, Sampling, Timing,
+    WarmStart,
+};
+use crate::coordinator::sweep::{SweepMode, SweepOptions, SweepResult};
+use crate::error::{Error, Result};
+use crate::runtime::{AllocStats, TrainState, TransferStats, WarmSource};
+use crate::util::pool::parallel_map;
+use crate::util::{env_parsed, fnv1a};
+
+const LEASE_MAGIC: &[u8; 8] = b"MPLEASE1";
+const RESULT_MAGIC: &[u8; 8] = b"MPRESLT1";
+const FAIL_MAGIC: &[u8; 8] = b"MPFAIL01";
+const QUAR_MAGIC: &[u8; 8] = b"MPQUAR01";
+const READY_MAGIC: &[u8; 8] = b"MPREADY1";
+const JOB_MAGIC: &[u8; 8] = b"MPJOB001";
+
+/// Pre-allocation ceiling while decoding counts read from disk (see
+/// `checkpoint::DECODE_PREALLOC_CAP` for the rationale: corrupt
+/// counts must run out of bytes, not drive an aborting allocation).
+const DECODE_PREALLOC_CAP: usize = 1 << 20;
+
+// ---------------------------------------------------------------------------
+// options / stats
+
+/// Knobs of a fleet participant (coordinator or worker). Environment
+/// twins: `MIXPREC_FLEET_TTL_SECS`, `MIXPREC_FLEET_MAX_ATTEMPTS`,
+/// `MIXPREC_FLEET_BACKOFF_MS`, `MIXPREC_FLEET_BACKOFF_CAP_MS`,
+/// `MIXPREC_FLEET_POLL_MS`, `MIXPREC_FLEET_WAIT_SECS`,
+/// `MIXPREC_FAULTS`.
+#[derive(Debug, Clone)]
+pub struct FleetOptions {
+    /// The shared job directory (leases, results, quarantine markers
+    /// and the warm checkpoint all live here; `warm-*.ckpt` GC only
+    /// ever touches its own prefix, so the families coexist).
+    pub dir: PathBuf,
+    /// Owner tag stamped into leases and results (default `pid-<n>`).
+    pub owner: String,
+    /// Lease time-to-live; a lease not renewed within this window is
+    /// expired (and its unit requeued) by the coordinator.
+    pub ttl: Duration,
+    /// Failed attempts before a unit is quarantined.
+    pub max_attempts: u32,
+    /// Base of the per-attempt exponential backoff.
+    pub backoff_base: Duration,
+    /// Ceiling of the backoff.
+    pub backoff_cap: Duration,
+    /// Idle poll interval of the coordinator/worker loops.
+    pub poll: Duration,
+    /// How long a worker waits for the coordinator's ready marker.
+    pub ready_wait: Duration,
+    /// External worker processes the coordinator expects. When > 0 it
+    /// grants them one TTL of grace before claiming untouched units
+    /// itself (it always picks up expired or failed units at once).
+    pub workers_external: usize,
+    /// Armed fault-injection plan (empty outside tests/chaos runs).
+    pub faults: Arc<FaultPlan>,
+}
+
+impl FleetOptions {
+    /// Options for `dir` with every knob read from the environment
+    /// (malformed values warn and fall back, like every other knob).
+    pub fn from_env(dir: PathBuf) -> Self {
+        FleetOptions {
+            dir,
+            owner: format!("pid-{}", std::process::id()),
+            ttl: Duration::from_secs(env_parsed("MIXPREC_FLEET_TTL_SECS").unwrap_or(30)),
+            max_attempts: env_parsed("MIXPREC_FLEET_MAX_ATTEMPTS").unwrap_or(3),
+            backoff_base: Duration::from_millis(
+                env_parsed("MIXPREC_FLEET_BACKOFF_MS").unwrap_or(50),
+            ),
+            backoff_cap: Duration::from_millis(
+                env_parsed("MIXPREC_FLEET_BACKOFF_CAP_MS").unwrap_or(2000),
+            ),
+            poll: Duration::from_millis(env_parsed("MIXPREC_FLEET_POLL_MS").unwrap_or(100)),
+            ready_wait: Duration::from_secs(env_parsed("MIXPREC_FLEET_WAIT_SECS").unwrap_or(120)),
+            workers_external: 0,
+            faults: Arc::new(FaultPlan::from_env()),
+        }
+    }
+}
+
+/// Counters of one fleet participant's view of a job (the report
+/// layer prints them as the `fleet:` line; the bench sums coordinator
+/// and worker views via [`FleetStats::absorb`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FleetStats {
+    /// Work units the job enumerates.
+    pub units: u64,
+    /// Units this participant saw complete (coordinator: merged;
+    /// worker: finished locally).
+    pub completed: u64,
+    /// Leases this participant claimed (`create_new` wins).
+    pub leases_claimed: u64,
+    /// Stale or torn leases the coordinator expired and requeued.
+    pub leases_expired: u64,
+    /// Expired units later completed by a *different* owner.
+    pub leases_stolen: u64,
+    /// Re-executions: retry attempts run here plus corrupt/foreign
+    /// result files the coordinator dropped and requeued.
+    pub retries: u64,
+    /// Units abandoned after exhausting the attempt budget (a nonzero
+    /// count is always also a hard error listing the units).
+    pub quarantined: u64,
+}
+
+impl FleetStats {
+    /// Sum another participant's counters into this one.
+    pub fn absorb(&mut self, o: &FleetStats) {
+        self.units += o.units;
+        self.completed += o.completed;
+        self.leases_claimed += o.leases_claimed;
+        self.leases_expired += o.leases_expired;
+        self.leases_stolen += o.leases_stolen;
+        self.retries += o.retries;
+        self.quarantined += o.quarantined;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fault injection
+
+/// Where a fault can trigger.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultPoint {
+    /// Right before claiming a lease.
+    Claim,
+    /// At a lease renewal tick.
+    Renew,
+    /// At the shared warm-checkpoint persist.
+    CkptWrite,
+    /// At a unit's result write.
+    ResultWrite,
+    /// Between claim and compute (the "worker dies mid-run" point).
+    MidRun,
+}
+
+impl FaultPoint {
+    fn parse(s: &str) -> Option<Self> {
+        match s {
+            "claim" => Some(FaultPoint::Claim),
+            "renew" => Some(FaultPoint::Renew),
+            "ckpt-write" => Some(FaultPoint::CkptWrite),
+            "result-write" => Some(FaultPoint::ResultWrite),
+            "mid-run" => Some(FaultPoint::MidRun),
+            _ => None,
+        }
+    }
+}
+
+/// What an armed trigger does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultMode {
+    /// `std::process::abort()` — the worker-kill scenario.
+    Abort,
+    /// Leave a torn (half-length) file behind where a complete one
+    /// was due.
+    Torn,
+    /// Make the operation return an injected error.
+    Fail,
+    /// Silently skip the operation (a lost write).
+    Skip,
+}
+
+impl FaultMode {
+    fn parse(s: &str) -> Option<Self> {
+        match s {
+            "abort" => Some(FaultMode::Abort),
+            "torn" => Some(FaultMode::Torn),
+            "fail" => Some(FaultMode::Fail),
+            "skip" => Some(FaultMode::Skip),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Trigger {
+    point: FaultPoint,
+    /// 1-based firing that injects; 0 = every firing (`*`).
+    nth: u64,
+    mode: FaultMode,
+    count: AtomicU64,
+}
+
+/// A deterministic fault-injection plan: each armed trigger counts
+/// the firings of its point and injects its mode on the `nth` one.
+/// Determinism comes from the counts, not wall-clock — the same plan
+/// over the same serial operation sequence injects identically.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    triggers: Vec<Trigger>,
+}
+
+impl FaultPlan {
+    /// A plan with nothing armed (every `fire` returns `None`).
+    pub fn none() -> Self {
+        FaultPlan::default()
+    }
+
+    /// Parse a `point:nth[:mode]` comma list (`nth` a 1-based count
+    /// or `*` for every firing; `mode` defaults to `abort`). `None`
+    /// on any malformed part.
+    pub fn parse(spec: &str) -> Option<Self> {
+        let mut triggers = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let mut f = part.split(':');
+            let point = FaultPoint::parse(f.next()?)?;
+            let nth_s = f.next()?;
+            let nth = if nth_s == "*" {
+                0
+            } else {
+                nth_s.parse::<u64>().ok()?
+            };
+            let mode = match f.next() {
+                Some(m) => FaultMode::parse(m)?,
+                None => FaultMode::Abort,
+            };
+            if f.next().is_some() {
+                return None;
+            }
+            triggers.push(Trigger { point, nth, mode, count: AtomicU64::new(0) });
+        }
+        Some(FaultPlan { triggers })
+    }
+
+    /// The plan `MIXPREC_FAULTS` names, or an empty one. A malformed
+    /// spec warns and arms nothing (consistent with every other knob).
+    pub fn from_env() -> Self {
+        match std::env::var("MIXPREC_FAULTS") {
+            Ok(s) if !s.trim().is_empty() => FaultPlan::parse(&s).unwrap_or_else(|| {
+                eprintln!("warning: ignoring malformed MIXPREC_FAULTS value '{s}'");
+                FaultPlan::none()
+            }),
+            _ => FaultPlan::none(),
+        }
+    }
+
+    /// Record one firing of `point`; returns the injected mode when a
+    /// trigger hits. Call exactly once per guarded operation and
+    /// branch on the result — calling twice would double-count.
+    pub fn fire(&self, point: FaultPoint) -> Option<FaultMode> {
+        let mut hit = None;
+        for t in &self.triggers {
+            if t.point != point {
+                continue;
+            }
+            let n = t.count.fetch_add(1, Ordering::Relaxed) + 1;
+            if (t.nth == 0 || n == t.nth) && hit.is_none() {
+                hit = Some(t.mode);
+            }
+        }
+        hit
+    }
+}
+
+// ---------------------------------------------------------------------------
+// job enumeration
+
+/// One content-addressed work unit: a single `run_from` fork.
+#[derive(Debug, Clone)]
+pub struct WorkUnit {
+    /// `fnv1a(job fp, label, index, lambda bits)` — the file-name key.
+    pub id: u64,
+    /// Method label (`compare`) or `"sweep"`.
+    pub label: String,
+    /// Position in the job's global unit order (merge slot).
+    pub index: usize,
+    /// The grid strength this unit runs.
+    pub lambda: f64,
+    /// The fully configured pipeline of this unit.
+    pub cfg: PipelineConfig,
+}
+
+/// A fleet job: the fingerprint every participant re-derives plus the
+/// enumerated units in merge order.
+#[derive(Debug, Clone)]
+pub struct FleetJob {
+    /// Job fingerprint (hashes the warmup cache key, metric, job
+    /// kind, every pipeline knob and the lambda grid).
+    pub fp: u64,
+    /// Units in merge order (`compare`: methods × lambdas).
+    pub units: Vec<WorkUnit>,
+}
+
+/// Digest of every `PipelineConfig` field that shapes results
+/// (`verbose` excluded — float fields as bit patterns).
+fn cfg_digest(cfg: &PipelineConfig) -> u64 {
+    let mut b = Vec::with_capacity(192);
+    wire::put_bytes(&mut b, cfg.model.as_bytes());
+    wire::put_bytes(&mut b, cfg.reg.as_bytes());
+    wire::put_u8(&mut b, sampling_tag(cfg.sampling));
+    for v in cfg.masks.pw {
+        wire::put_u32(&mut b, v.to_bits());
+    }
+    for v in cfg.masks.px {
+        wire::put_u32(&mut b, v.to_bits());
+    }
+    wire::put_u32(&mut b, cfg.lambda.to_bits());
+    for v in [
+        cfg.warmup_steps,
+        cfg.search_steps,
+        cfg.finetune_steps,
+        cfg.steps_per_epoch,
+        cfg.eval_every,
+        cfg.patience,
+    ] {
+        wire::put_u64(&mut b, v as u64);
+    }
+    for v in [cfg.lr_w, cfg.lr_th, cfg.lr_decay, cfg.temp.tau0, cfg.temp.rate, cfg.temp.floor] {
+        wire::put_u32(&mut b, v.to_bits());
+    }
+    wire::put_u64(&mut b, cfg.seed);
+    wire::put_u8(&mut b, cfg.layerwise as u8);
+    wire::put_u64(&mut b, cfg.data_frac.to_bits());
+    wire::put_u8(&mut b, cfg.host_resident as u8);
+    wire::put_u8(&mut b, cfg.batched_eval as u8);
+    fnv1a(&b)
+}
+
+fn unit_id(job_fp: u64, label: &str, index: usize, lambda: f64) -> u64 {
+    let mut b = Vec::with_capacity(48);
+    wire::put_u64(&mut b, job_fp);
+    wire::put_bytes(&mut b, label.as_bytes());
+    wire::put_u64(&mut b, index as u64);
+    wire::put_u64(&mut b, lambda.to_bits());
+    fnv1a(&b)
+}
+
+/// Enumerate the job every participant agrees on: for a sweep one
+/// unit per lambda; for a compare the four searched methods × the
+/// grid, in `COMPARE_METHODS` order. Pure — any process with the same
+/// flags derives the same fingerprint and unit ids.
+pub fn enumerate_job(
+    runner: &Runner<'_>,
+    base: &PipelineConfig,
+    lambdas: &[f64],
+    metric: &str,
+    compare: bool,
+) -> FleetJob {
+    let warm_key = runner.warmup_cache_key(base);
+    let mut b = Vec::with_capacity(64 + lambdas.len() * 8);
+    b.extend_from_slice(JOB_MAGIC);
+    wire::put_bytes(&mut b, warm_key.as_bytes());
+    wire::put_bytes(&mut b, metric.as_bytes());
+    wire::put_u8(&mut b, compare as u8);
+    wire::put_u64(&mut b, cfg_digest(base));
+    wire::put_u64(&mut b, lambdas.len() as u64);
+    for &l in lambdas {
+        wire::put_u64(&mut b, l.to_bits());
+    }
+    let fp = fnv1a(&b);
+
+    let mut units = Vec::new();
+    if compare {
+        for m in COMPARE_METHODS {
+            let mcfg = m.configure(base);
+            for &lam in lambdas {
+                let mut cfg = mcfg.clone();
+                cfg.lambda = lam as f32;
+                let index = units.len();
+                let label = m.label();
+                let id = unit_id(fp, &label, index, lam);
+                units.push(WorkUnit { id, label, index, lambda: lam, cfg });
+            }
+        }
+    } else {
+        for &lam in lambdas {
+            let mut cfg = base.clone();
+            cfg.lambda = lam as f32;
+            let index = units.len();
+            let label = "sweep".to_string();
+            let id = unit_id(fp, &label, index, lam);
+            units.push(WorkUnit { id, label, index, lambda: lam, cfg });
+        }
+    }
+    FleetJob { fp, units }
+}
+
+// ---------------------------------------------------------------------------
+// file names + small atomic helpers
+
+/// `lease-<unit>.mpl` in `dir`.
+pub fn lease_path(dir: &Path, unit_id: u64) -> PathBuf {
+    dir.join(format!("lease-{unit_id:016x}.mpl"))
+}
+
+/// `result-<unit>.ckpt` in `dir` (a v2 checkpoint container; the
+/// `result-` prefix keeps it invisible to the `warm-*` GC).
+pub fn result_path(dir: &Path, unit_id: u64) -> PathBuf {
+    dir.join(format!("result-{unit_id:016x}.ckpt"))
+}
+
+/// `fail-<unit>.mpf` in `dir` (attempt counter).
+pub fn fail_path(dir: &Path, unit_id: u64) -> PathBuf {
+    dir.join(format!("fail-{unit_id:016x}.mpf"))
+}
+
+/// `quar-<unit>.mpq` in `dir` (quarantine marker).
+pub fn quar_path(dir: &Path, unit_id: u64) -> PathBuf {
+    dir.join(format!("quar-{unit_id:016x}.mpq"))
+}
+
+/// `ready-<job>.mpj` in `dir` (the coordinator's "warm checkpoint is
+/// on disk, start claiming" marker).
+pub fn ready_path(dir: &Path, job_fp: u64) -> PathBuf {
+    dir.join(format!("ready-{job_fp:016x}.mpj"))
+}
+
+fn now_unix() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .unwrap_or(Duration::ZERO)
+        .as_secs()
+}
+
+/// Atomic small-file write: same-directory temp + rename (the
+/// checkpoint layer's idiom, for the protocol's non-checkpoint files).
+fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    let dir = path.parent().unwrap_or_else(|| Path::new("."));
+    let base = path
+        .file_name()
+        .ok_or_else(|| Error::msg("fleet atomic write: path has no file name"))?
+        .to_string_lossy()
+        .to_string();
+    static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+    let tmp = dir.join(format!(
+        ".{base}.tmp.{}.{}",
+        std::process::id(),
+        TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    if let Err(e) = fs::write(&tmp, bytes) {
+        let _ = fs::remove_file(&tmp);
+        return Err(e.into());
+    }
+    fs::rename(&tmp, path).map_err(|e| {
+        let _ = fs::remove_file(&tmp);
+        Error::from(e)
+    })
+}
+
+/// Truncate `path` to half its length in place — the fault injector's
+/// "torn file" and the crash-matrix tests' corruption helper.
+pub fn tear_file(path: &Path) -> Result<()> {
+    let bytes = fs::read(path)?;
+    fs::write(path, &bytes[..bytes.len() / 2])?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// lease protocol
+
+/// One decoded lease file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Lease {
+    pub unit_id: u64,
+    pub owner: String,
+    /// Failed attempts *before* this execution (0 = first try).
+    pub attempt: u32,
+    /// Unix stamp of the claim or latest renewal.
+    pub stamp_unix: u64,
+    pub ttl_secs: u64,
+}
+
+impl Lease {
+    fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(64);
+        b.extend_from_slice(LEASE_MAGIC);
+        wire::put_u64(&mut b, self.unit_id);
+        wire::put_bytes(&mut b, self.owner.as_bytes());
+        wire::put_u32(&mut b, self.attempt);
+        wire::put_u64(&mut b, self.stamp_unix);
+        wire::put_u64(&mut b, self.ttl_secs);
+        b
+    }
+
+    fn decode(buf: &[u8], expect_unit: u64) -> Option<Lease> {
+        if buf.len() < 8 || &buf[..8] != LEASE_MAGIC {
+            return None;
+        }
+        let mut rd = wire::Rd::new(&buf[8..]);
+        let unit_id = rd.u64()?;
+        let owner = String::from_utf8(rd.bytes()?.to_vec()).ok()?;
+        let attempt = rd.u32()?;
+        let stamp_unix = rd.u64()?;
+        let ttl_secs = rd.u64()?;
+        if !rd.done() || unit_id != expect_unit {
+            return None;
+        }
+        Some(Lease { unit_id, owner, attempt, stamp_unix, ttl_secs })
+    }
+
+    /// Expired at `now` (`ttl_secs == 0` expires instantly — the
+    /// tests' ghost-owner leases use that).
+    pub fn expired(&self, now_unix: u64) -> bool {
+        now_unix >= self.stamp_unix.saturating_add(self.ttl_secs)
+    }
+}
+
+/// What a lease file held when read.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LeaseRead {
+    /// No lease file.
+    Absent,
+    /// A file exists but does not decode (torn / foreign) — only the
+    /// coordinator may delete it.
+    Torn,
+    /// A complete lease (check [`Lease::expired`] yourself).
+    Held(Lease),
+}
+
+/// Read `unit_id`'s lease file without touching it.
+pub fn read_lease(dir: &Path, unit_id: u64) -> LeaseRead {
+    match fs::read(lease_path(dir, unit_id)) {
+        Ok(buf) => match Lease::decode(&buf, unit_id) {
+            Some(l) => LeaseRead::Held(l),
+            None => LeaseRead::Torn,
+        },
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => LeaseRead::Absent,
+        Err(_) => LeaseRead::Torn,
+    }
+}
+
+/// Write `lease` for a *test-planted* scenario (ghost owners, expired
+/// stamps). Real claims go through the exclusive `create_new` path in
+/// `execute_unit`; this plain atomic write is for the crash matrix.
+pub fn write_lease(dir: &Path, lease: &Lease) -> Result<()> {
+    atomic_write(&lease_path(dir, lease.unit_id), &lease.encode())
+}
+
+/// Claim by exclusive creation: exactly one concurrent claimer wins.
+fn try_claim(dir: &Path, lease: &Lease) -> bool {
+    let path = lease_path(dir, lease.unit_id);
+    match fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+        Ok(mut f) => {
+            if f.write_all(&lease.encode()).is_err() {
+                let _ = fs::remove_file(&path);
+                return false;
+            }
+            true
+        }
+        Err(_) => false,
+    }
+}
+
+/// Remove our own lease (never someone else's — the file is re-read
+/// and the owner compared first; a requeued-and-reclaimed unit's new
+/// lease is left alone).
+fn release_own_lease(dir: &Path, unit_id: u64, owner: &str) {
+    if let LeaseRead::Held(l) = read_lease(dir, unit_id) {
+        if l.owner == owner {
+            let _ = fs::remove_file(lease_path(dir, unit_id));
+        }
+    }
+}
+
+/// Background renewal: re-stamp the lease every `ttl/3` (minimum 1 s)
+/// until stopped, aborting early if the lease stops being ours (the
+/// coordinator expired it and someone else claimed).
+fn renew_loop(dir: &Path, mut lease: Lease, faults: &FaultPlan, done: &AtomicBool) {
+    let interval = Duration::from_secs((lease.ttl_secs / 3).max(1));
+    let mut last = Instant::now();
+    while !done.load(Ordering::Relaxed) {
+        std::thread::sleep(Duration::from_millis(25));
+        if done.load(Ordering::Relaxed) {
+            return;
+        }
+        if last.elapsed() < interval {
+            continue;
+        }
+        last = Instant::now();
+        match read_lease(dir, lease.unit_id) {
+            LeaseRead::Held(l) if l.owner == lease.owner => {}
+            _ => return, // lost the lease: stop renewing, let the run race benignly
+        }
+        match faults.fire(FaultPoint::Renew) {
+            Some(FaultMode::Abort) => std::process::abort(),
+            Some(FaultMode::Fail) => return, // renewal "breaks": the lease will expire
+            Some(FaultMode::Skip) => continue, // one missed renewal
+            Some(FaultMode::Torn) => {
+                let _ = tear_file(&lease_path(dir, lease.unit_id));
+                return;
+            }
+            None => {}
+        }
+        lease.stamp_unix = now_unix();
+        let _ = atomic_write(&lease_path(dir, lease.unit_id), &lease.encode());
+    }
+}
+
+struct RenewalGuard {
+    done: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl RenewalGuard {
+    fn spawn(dir: PathBuf, lease: Lease, faults: Arc<FaultPlan>) -> Self {
+        let done = Arc::new(AtomicBool::new(false));
+        let d = Arc::clone(&done);
+        let handle = std::thread::spawn(move || renew_loop(&dir, lease, &faults, &d));
+        RenewalGuard { done, handle: Some(handle) }
+    }
+}
+
+impl Drop for RenewalGuard {
+    fn drop(&mut self) {
+        self.done.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fail / quarantine / ready markers
+
+/// Failed attempts recorded for a unit (0 on absent or torn counter —
+/// under-counting only costs an extra retry, never a lost unit).
+pub fn fail_attempts(dir: &Path, unit_id: u64) -> u32 {
+    let Ok(buf) = fs::read(fail_path(dir, unit_id)) else {
+        return 0;
+    };
+    if buf.len() < 8 || &buf[..8] != FAIL_MAGIC {
+        return 0;
+    }
+    let mut rd = wire::Rd::new(&buf[8..]);
+    match (rd.u32(), rd.done()) {
+        (Some(n), true) => n,
+        _ => 0,
+    }
+}
+
+/// Raise the attempt counter to at least `at_least` (monotonic max —
+/// concurrent bumpers can't lower it; atomic write, so readers never
+/// see a torn counter from us).
+pub fn bump_fail(dir: &Path, unit_id: u64, at_least: u32) {
+    let next = fail_attempts(dir, unit_id).max(at_least);
+    let mut b = Vec::with_capacity(12);
+    b.extend_from_slice(FAIL_MAGIC);
+    wire::put_u32(&mut b, next);
+    if let Err(e) = atomic_write(&fail_path(dir, unit_id), &b) {
+        eprintln!("fleet: failed to record attempt count for unit {unit_id:016x}: {e}");
+    }
+}
+
+fn write_quarantine(dir: &Path, unit_id: u64, attempts: u32, err: &str) {
+    let mut b = Vec::with_capacity(64 + err.len());
+    b.extend_from_slice(QUAR_MAGIC);
+    wire::put_u64(&mut b, unit_id);
+    wire::put_u32(&mut b, attempts);
+    wire::put_bytes(&mut b, err.as_bytes());
+    // exclusive create: the first quarantiner's reason sticks
+    if let Ok(mut f) =
+        fs::OpenOptions::new().write(true).create_new(true).open(quar_path(dir, unit_id))
+    {
+        let _ = f.write_all(&b);
+    }
+}
+
+/// Decode a quarantine marker: `(unit id, attempts, error)`.
+pub fn read_quarantine(path: &Path) -> Option<(u64, u32, String)> {
+    let buf = fs::read(path).ok()?;
+    if buf.len() < 8 || &buf[..8] != QUAR_MAGIC {
+        return None;
+    }
+    let mut rd = wire::Rd::new(&buf[8..]);
+    let id = rd.u64()?;
+    let attempts = rd.u32()?;
+    let err = String::from_utf8(rd.bytes()?.to_vec()).ok()?;
+    if !rd.done() {
+        return None;
+    }
+    Some((id, attempts, err))
+}
+
+/// Publish the coordinator's ready marker — written *after* the warm
+/// checkpoint persisted, so a worker that sees it resumes with zero
+/// warmup steps.
+pub fn write_ready(dir: &Path, job_fp: u64, units: usize) -> Result<()> {
+    let mut b = Vec::with_capacity(24);
+    b.extend_from_slice(READY_MAGIC);
+    wire::put_u64(&mut b, job_fp);
+    wire::put_u64(&mut b, units as u64);
+    atomic_write(&ready_path(dir, job_fp), &b)
+}
+
+fn decode_ready(buf: &[u8]) -> Option<u64> {
+    if buf.len() < 8 || &buf[..8] != READY_MAGIC {
+        return None;
+    }
+    let mut rd = wire::Rd::new(&buf[8..]);
+    let fp = rd.u64()?;
+    let _units = rd.u64()?;
+    if !rd.done() {
+        return None;
+    }
+    Some(fp)
+}
+
+/// Block until the coordinator's ready marker for `job_fp` appears.
+/// On timeout the error lists whatever ready markers *are* present —
+/// the usual cause is a worker launched with different flags deriving
+/// a different job fingerprint.
+pub fn wait_for_ready(dir: &Path, job_fp: u64, timeout: Duration) -> Result<()> {
+    let path = ready_path(dir, job_fp);
+    let start = Instant::now();
+    loop {
+        if let Ok(buf) = fs::read(&path) {
+            if decode_ready(&buf) == Some(job_fp) {
+                return Ok(());
+            }
+            // torn/foreign marker: the coordinator's write is atomic,
+            // so keep waiting for a complete one
+        }
+        if start.elapsed() >= timeout {
+            let mut others: Vec<String> = fs::read_dir(dir)
+                .ok()
+                .into_iter()
+                .flatten()
+                .flatten()
+                .filter_map(|e| e.file_name().into_string().ok())
+                .filter(|n| n.starts_with("ready-") && n.ends_with(".mpj"))
+                .collect();
+            others.sort();
+            return Err(Error::msg(format!(
+                "fleet worker: no ready marker for job {job_fp:016x} after {timeout:?} \
+                 (coordinator not running, or its flags derive a different job; \
+                 markers present: [{}])",
+                others.join(", ")
+            )));
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// result files (v2 checkpoint container, extras only)
+
+fn sampling_tag(s: Sampling) -> u8 {
+    match s {
+        Sampling::Softmax => 0,
+        Sampling::Argmax => 1,
+        Sampling::Gumbel => 2,
+    }
+}
+
+fn sampling_from_tag(tag: u8) -> Option<Sampling> {
+    match tag {
+        0 => Some(Sampling::Softmax),
+        1 => Some(Sampling::Argmax),
+        2 => Some(Sampling::Gumbel),
+        _ => None,
+    }
+}
+
+/// Identity block of a result file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct UnitMeta {
+    pub unit_id: u64,
+    pub job_fp: u64,
+    /// Owner tag of the worker that produced the result.
+    pub owner: String,
+    pub label: String,
+    pub index: usize,
+    pub lambda_bits: u64,
+}
+
+/// Serialize one completed unit into the v2 checkpoint container:
+/// empty state, every `RunResult` field as named extras with float
+/// fields stored as bit patterns — the merged result is bitwise
+/// identical to the in-process one.
+pub fn write_result_file(
+    path: &Path,
+    job_fp: u64,
+    unit: &WorkUnit,
+    owner: &str,
+    res: &RunResult,
+) -> Result<()> {
+    let mut unit_b = Vec::with_capacity(64);
+    unit_b.extend_from_slice(RESULT_MAGIC);
+    wire::put_u64(&mut unit_b, unit.id);
+    wire::put_u64(&mut unit_b, job_fp);
+    wire::put_bytes(&mut unit_b, owner.as_bytes());
+    wire::put_bytes(&mut unit_b, unit.label.as_bytes());
+    wire::put_u64(&mut unit_b, unit.index as u64);
+    wire::put_u64(&mut unit_b, unit.lambda.to_bits());
+
+    let mut run_b = Vec::with_capacity(128);
+    wire::put_bytes(&mut run_b, res.model.as_bytes());
+    wire::put_bytes(&mut run_b, res.reg.as_bytes());
+    wire::put_u32(&mut run_b, res.lambda.to_bits());
+    wire::put_u8(&mut run_b, sampling_tag(res.sampling));
+    for v in
+        [res.val_acc, res.test_acc, res.size_kb, res.mpic_cycles, res.ne16_cycles, res.bitops]
+    {
+        wire::put_u64(&mut run_b, v.to_bits());
+    }
+    wire::put_u64(&mut run_b, res.steps_run as u64);
+
+    let mut asg_b = Vec::with_capacity(64);
+    wire::put_u64(&mut asg_b, res.assignment.gamma_bits.len() as u64);
+    for g in &res.assignment.gamma_bits {
+        wire::put_u64(&mut asg_b, g.len() as u64);
+        for &c in g {
+            wire::put_u32(&mut asg_b, c);
+        }
+    }
+    wire::put_u64(&mut asg_b, res.assignment.delta_bits.len() as u64);
+    for &d in &res.assignment.delta_bits {
+        wire::put_u32(&mut asg_b, d);
+    }
+
+    let mut hist_b = Vec::with_capacity(8 + res.history.len() * 21);
+    wire::put_u64(&mut hist_b, res.history.len() as u64);
+    for r in &res.history {
+        let tag = phase_tag(r.phase)
+            .ok_or_else(|| Error::msg(format!("unknown history phase '{}'", r.phase)))?;
+        wire::put_u8(&mut hist_b, tag);
+        wire::put_u64(&mut hist_b, r.step as u64);
+        wire::put_u32(&mut hist_b, r.loss.to_bits());
+        wire::put_u32(&mut hist_b, r.acc.to_bits());
+        wire::put_u32(&mut hist_b, r.cost.to_bits());
+    }
+
+    let mut tim_b = Vec::with_capacity(24);
+    for v in [res.timing.warmup_s, res.timing.search_s, res.timing.finetune_s] {
+        wire::put_u64(&mut tim_b, v.to_bits());
+    }
+
+    let mut tr_b = Vec::with_capacity(32);
+    for v in [
+        res.transfer.h2d_bytes,
+        res.transfer.d2h_bytes,
+        res.transfer.h2d_tensors,
+        res.transfer.d2h_tensors,
+    ] {
+        wire::put_u64(&mut tr_b, v);
+    }
+
+    let mut al_b = Vec::with_capacity(40);
+    for v in [
+        res.alloc.allocated,
+        res.alloc.donated,
+        res.alloc.pooled,
+        res.alloc.fallback_pinned,
+        res.alloc.fallback_aliased,
+    ] {
+        wire::put_u64(&mut al_b, v);
+    }
+
+    let extras: Vec<(&str, Vec<u8>)> = vec![
+        ("unit", unit_b),
+        ("run", run_b),
+        ("assignment", asg_b),
+        ("history", hist_b),
+        ("timing", tim_b),
+        ("transfer", tr_b),
+        ("alloc", al_b),
+    ];
+    checkpoint::save_with_extras_atomic(&TrainState::default(), &extras, path)
+}
+
+/// Decode a result file. `None` — never a panic, never partial state —
+/// on any truncation, bad magic, trailing garbage, unknown tag or
+/// missing extra, so a torn result degrades to a requeue exactly like
+/// a torn warm checkpoint degrades to a fresh warmup
+/// (`tests/truncation.rs` feeds every prefix through here).
+pub fn read_result_file(path: &Path) -> Option<(UnitMeta, RunResult)> {
+    let (_, extras) = checkpoint::load_with_extras(path).ok()?;
+    let get = |name: &str| -> Option<&[u8]> {
+        extras.iter().find(|(n, _)| n == name).map(|(_, b)| b.as_slice())
+    };
+
+    let b = get("unit")?;
+    if b.len() < 8 || &b[..8] != RESULT_MAGIC {
+        return None;
+    }
+    let mut rd = wire::Rd::new(&b[8..]);
+    let meta = UnitMeta {
+        unit_id: rd.u64()?,
+        job_fp: rd.u64()?,
+        owner: String::from_utf8(rd.bytes()?.to_vec()).ok()?,
+        label: String::from_utf8(rd.bytes()?.to_vec()).ok()?,
+        index: usize::try_from(rd.u64()?).ok()?,
+        lambda_bits: rd.u64()?,
+    };
+    if !rd.done() {
+        return None;
+    }
+
+    let mut rd = wire::Rd::new(get("run")?);
+    let model = String::from_utf8(rd.bytes()?.to_vec()).ok()?;
+    let reg = String::from_utf8(rd.bytes()?.to_vec()).ok()?;
+    let lambda = f32::from_bits(rd.u32()?);
+    let sampling = sampling_from_tag(rd.u8()?)?;
+    let val_acc = f64::from_bits(rd.u64()?);
+    let test_acc = f64::from_bits(rd.u64()?);
+    let size_kb = f64::from_bits(rd.u64()?);
+    let mpic_cycles = f64::from_bits(rd.u64()?);
+    let ne16_cycles = f64::from_bits(rd.u64()?);
+    let bitops = f64::from_bits(rd.u64()?);
+    let steps_run = usize::try_from(rd.u64()?).ok()?;
+    if !rd.done() {
+        return None;
+    }
+
+    let mut rd = wire::Rd::new(get("assignment")?);
+    let ng = rd.len_of()?;
+    let mut gamma_bits = Vec::with_capacity(ng.min(DECODE_PREALLOC_CAP));
+    for _ in 0..ng {
+        let nc = rd.len_of()?;
+        let mut ch = Vec::with_capacity(nc.min(DECODE_PREALLOC_CAP));
+        for _ in 0..nc {
+            ch.push(rd.u32()?);
+        }
+        gamma_bits.push(ch);
+    }
+    let nd = rd.len_of()?;
+    let mut delta_bits = Vec::with_capacity(nd.min(DECODE_PREALLOC_CAP));
+    for _ in 0..nd {
+        delta_bits.push(rd.u32()?);
+    }
+    if !rd.done() {
+        return None;
+    }
+
+    let mut rd = wire::Rd::new(get("history")?);
+    let nh = rd.len_of()?;
+    let mut history = Vec::with_capacity(nh.min(DECODE_PREALLOC_CAP));
+    for _ in 0..nh {
+        let phase = phase_from_tag(rd.u8()?)?;
+        let step = usize::try_from(rd.u64()?).ok()?;
+        let loss = f32::from_bits(rd.u32()?);
+        let acc = f32::from_bits(rd.u32()?);
+        let cost = f32::from_bits(rd.u32()?);
+        history.push(Record { phase, step, loss, acc, cost });
+    }
+    if !rd.done() {
+        return None;
+    }
+
+    let mut rd = wire::Rd::new(get("timing")?);
+    let timing = Timing {
+        warmup_s: f64::from_bits(rd.u64()?),
+        search_s: f64::from_bits(rd.u64()?),
+        finetune_s: f64::from_bits(rd.u64()?),
+    };
+    if !rd.done() {
+        return None;
+    }
+
+    let mut rd = wire::Rd::new(get("transfer")?);
+    let transfer = TransferStats {
+        h2d_bytes: rd.u64()?,
+        d2h_bytes: rd.u64()?,
+        h2d_tensors: rd.u64()?,
+        d2h_tensors: rd.u64()?,
+    };
+    if !rd.done() {
+        return None;
+    }
+
+    let mut rd = wire::Rd::new(get("alloc")?);
+    let alloc = AllocStats {
+        allocated: rd.u64()?,
+        donated: rd.u64()?,
+        pooled: rd.u64()?,
+        fallback_pinned: rd.u64()?,
+        fallback_aliased: rd.u64()?,
+    };
+    if !rd.done() {
+        return None;
+    }
+
+    Some((
+        meta,
+        RunResult {
+            model,
+            reg,
+            lambda,
+            sampling,
+            val_acc,
+            test_acc,
+            assignment: Assignment { gamma_bits, delta_bits },
+            size_kb,
+            mpic_cycles,
+            ne16_cycles,
+            bitops,
+            history,
+            timing,
+            steps_run,
+            transfer,
+            alloc,
+        },
+    ))
+}
+
+fn write_result_with_faults(
+    dir: &Path,
+    job_fp: u64,
+    unit: &WorkUnit,
+    owner: &str,
+    res: &RunResult,
+    faults: &FaultPlan,
+) -> Result<()> {
+    let path = result_path(dir, unit.id);
+    match faults.fire(FaultPoint::ResultWrite) {
+        Some(FaultMode::Abort) => std::process::abort(),
+        Some(FaultMode::Fail) => Err(Error::msg("injected result-write failure")),
+        // lost write: the worker believes it succeeded; the unit
+        // re-leases after the TTL
+        Some(FaultMode::Skip) => Ok(()),
+        Some(FaultMode::Torn) => {
+            // torn *at birth*: write the complete container to a side
+            // path, then place only its first half under the final
+            // name — the coordinator can never race ahead of the tear
+            // and observe a complete file first
+            let tmp = dir.join(format!(".result-{:016x}.{owner}.torn", unit.id));
+            write_result_file(&tmp, job_fp, unit, owner, res)?;
+            let bytes = fs::read(&tmp)?;
+            let _ = fs::remove_file(&tmp);
+            fs::write(&path, &bytes[..bytes.len() / 2])?;
+            Ok(())
+        }
+        None => write_result_file(&path, job_fp, unit, owner, res),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// unit execution (shared by coordinator and workers)
+
+/// What one `execute_unit` call did (folded into [`FleetStats`]).
+#[derive(Debug, Clone, Copy, Default)]
+struct UnitOutcome {
+    claimed: bool,
+    retried: bool,
+    completed: bool,
+    quarantined: bool,
+}
+
+fn backoff_delay(fleet: &FleetOptions, attempt: u32) -> Duration {
+    let mult = 1u32.checked_shl(attempt.saturating_sub(1)).unwrap_or(u32::MAX);
+    fleet
+        .backoff_base
+        .checked_mul(mult)
+        .unwrap_or(fleet.backoff_cap)
+        .min(fleet.backoff_cap)
+}
+
+/// Claim, run and publish one unit. Infallible by design: every
+/// failure is converted into bookkeeping (fail bump, quarantine
+/// marker) so a fleet participant never dies of one bad unit.
+fn execute_unit(
+    runner: &Runner<'_>,
+    ws: &WarmStart,
+    job_fp: u64,
+    unit: &WorkUnit,
+    fleet: &FleetOptions,
+) -> UnitOutcome {
+    let mut out = UnitOutcome::default();
+    let attempt = fail_attempts(&fleet.dir, unit.id);
+    if attempt >= fleet.max_attempts {
+        write_quarantine(&fleet.dir, unit.id, attempt, "attempt budget exhausted");
+        out.quarantined = true;
+        return out;
+    }
+    if attempt > 0 {
+        out.retried = true;
+        std::thread::sleep(backoff_delay(fleet, attempt));
+    }
+
+    let claim_fault = fleet.faults.fire(FaultPoint::Claim);
+    match claim_fault {
+        Some(FaultMode::Abort) => std::process::abort(),
+        Some(FaultMode::Fail) => return out, // claim "failed": someone else will
+        _ => {}
+    }
+    let lease = Lease {
+        unit_id: unit.id,
+        owner: fleet.owner.clone(),
+        attempt,
+        stamp_unix: now_unix(),
+        ttl_secs: fleet.ttl.as_secs(),
+    };
+    if !try_claim(&fleet.dir, &lease) {
+        return out; // lost the race or the unit is already leased
+    }
+    // a finished unit publishes its result *before* releasing its
+    // lease, so a claim that lands after someone else completed the
+    // unit always finds the result already on disk: back off without
+    // counting the claim and let the merge loop pick the result up
+    if result_path(&fleet.dir, unit.id).exists() {
+        release_own_lease(&fleet.dir, unit.id, &fleet.owner);
+        return out;
+    }
+    out.claimed = true;
+    if claim_fault == Some(FaultMode::Torn) {
+        // our own lease torn right after the claim: the coordinator
+        // will expire it and may hand the unit out again — a benign
+        // duplicate-execution race the merge-once slot absorbs
+        let _ = tear_file(&lease_path(&fleet.dir, unit.id));
+    }
+
+    let renewal = RenewalGuard::spawn(fleet.dir.clone(), lease, Arc::clone(&fleet.faults));
+
+    let run = match fleet.faults.fire(FaultPoint::MidRun) {
+        Some(FaultMode::Abort) => std::process::abort(),
+        Some(FaultMode::Fail) => Err(Error::msg("injected mid-run failure")),
+        _ => runner.run_from(ws, &unit.cfg),
+    };
+    let finished = run.and_then(|res| {
+        write_result_with_faults(&fleet.dir, job_fp, unit, &fleet.owner, &res, &fleet.faults)
+    });
+    // the renewal thread must be gone *before* the lease is released,
+    // or a late re-stamp could resurrect the file we just removed
+    drop(renewal);
+
+    match finished {
+        Ok(()) => out.completed = true,
+        Err(e) => {
+            let next = attempt + 1;
+            bump_fail(&fleet.dir, unit.id, next);
+            if next >= fleet.max_attempts {
+                write_quarantine(&fleet.dir, unit.id, next, &e.to_string());
+                out.quarantined = true;
+                eprintln!(
+                    "fleet: unit {:016x} ({} lam={}) quarantined after {next} attempts: {e}",
+                    unit.id, unit.label, unit.lambda
+                );
+            } else {
+                eprintln!(
+                    "fleet: unit {:016x} ({} lam={}) attempt {next} failed: {e} (will retry)",
+                    unit.id, unit.label, unit.lambda
+                );
+            }
+        }
+    }
+    release_own_lease(&fleet.dir, unit.id, &fleet.owner);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// warm-start resolution (shared disk tier)
+
+/// Resolve the shared warm start through the runner's cache with the
+/// fleet dir attached as the disk tier: the coordinator builds and
+/// persists the warmup once; every worker loads it and runs zero
+/// warmup steps. The `ckpt-write` fault point wraps the persist.
+fn resolve_warm(
+    runner: &Runner<'_>,
+    base: &PipelineConfig,
+    fleet: &FleetOptions,
+) -> Result<(Arc<WarmStart>, WarmSource)> {
+    let cache = runner.cache.as_ref().ok_or_else(|| {
+        Error::msg("fleet mode needs the shared run cache (sharing was disabled)")
+    })?;
+    if cache.warm_dir().is_none() {
+        cache.set_warm_dir(Some(fleet.dir.clone()));
+    }
+    let faults = &fleet.faults;
+    cache.get_or_warm_persistent(
+        &runner.warmup_cache_key(base),
+        |path| runner.try_load_warm(path, base),
+        || runner.warmup(base),
+        |path, ws| match faults.fire(FaultPoint::CkptWrite) {
+            Some(FaultMode::Abort) => std::process::abort(),
+            Some(FaultMode::Fail) => Err(Error::msg("injected checkpoint-write failure")),
+            Some(FaultMode::Skip) => Ok(()), // lost persist: next process warms up fresh
+            Some(FaultMode::Torn) => {
+                runner.persist_warm(ws, path)?;
+                tear_file(path)
+            }
+            None => runner.persist_warm(ws, path),
+        },
+        |ws| ws.cache_bytes(),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// coordinator merge loop
+
+/// Drive `job` to completion: merge result files into pre-sized
+/// slots (at most once per unit), expire stale/torn leases, requeue
+/// corrupt results, quarantine-check, and claim whatever is left for
+/// local execution. Returns the runs in enumeration order — the same
+/// order `sweep_lambdas`/`compare_methods` produce.
+fn run_units(
+    runner: &Runner<'_>,
+    ws: &WarmStart,
+    job: &FleetJob,
+    fleet: &FleetOptions,
+    workers: usize,
+) -> Result<(Vec<RunResult>, FleetStats)> {
+    let n = job.units.len();
+    let mut slots: Vec<Option<RunResult>> = vec![None; n];
+    let mut stats = FleetStats { units: n as u64, ..FleetStats::default() };
+    // owner (or "" for torn) of each expired lease: a later result by
+    // anyone else is a steal
+    let mut expired_owner: HashMap<u64, String> = HashMap::new();
+    // units some participant has touched (lease or result observed) —
+    // the external-worker grace window only defers *untouched* units
+    let mut seen_activity: HashSet<u64> = HashSet::new();
+    let started = Instant::now();
+
+    loop {
+        let mut progress = false;
+
+        // 1. merge completed results (each slot fills at most once)
+        for (i, unit) in job.units.iter().enumerate() {
+            if slots[i].is_some() {
+                continue;
+            }
+            let path = result_path(&fleet.dir, unit.id);
+            if !path.exists() {
+                continue;
+            }
+            seen_activity.insert(unit.id);
+            match read_result_file(&path) {
+                Some((meta, run)) if meta.unit_id == unit.id && meta.job_fp == job.fp => {
+                    if let Some(old) = expired_owner.get(&unit.id) {
+                        if *old != meta.owner {
+                            stats.leases_stolen += 1;
+                        }
+                    }
+                    slots[i] = Some(run);
+                    stats.completed += 1;
+                    progress = true;
+                }
+                _ => {
+                    // torn or foreign: drop and requeue, like
+                    // `try_load_warm` dropping to a fresh warmup
+                    let _ = fs::remove_file(&path);
+                    bump_fail(&fleet.dir, unit.id, fail_attempts(&fleet.dir, unit.id) + 1);
+                    stats.retries += 1;
+                    progress = true;
+                    eprintln!(
+                        "fleet: dropped corrupt result for unit {:016x} (requeued)",
+                        unit.id
+                    );
+                }
+            }
+        }
+        if slots.iter().all(|s| s.is_some()) {
+            break;
+        }
+
+        // 2. quarantine check — lost units are a hard, listed error
+        let mut lost: Vec<String> = Vec::new();
+        for (i, unit) in job.units.iter().enumerate() {
+            if slots[i].is_some() {
+                continue;
+            }
+            let qp = quar_path(&fleet.dir, unit.id);
+            if !qp.exists() {
+                continue;
+            }
+            let why = match read_quarantine(&qp) {
+                Some((_, attempts, err)) => format!("after {attempts} attempts: {err}"),
+                None => "quarantine marker unreadable".to_string(),
+            };
+            lost.push(format!(
+                "unit {:016x} ({} lam={}) {why}",
+                unit.id, unit.label, unit.lambda
+            ));
+        }
+        if !lost.is_empty() {
+            stats.quarantined = lost.len() as u64;
+            return Err(Error::msg(format!(
+                "fleet: {} unit(s) quarantined after exhausting retries:\n  {}",
+                lost.len(),
+                lost.join("\n  ")
+            )));
+        }
+
+        // 3. expire stale/torn leases (coordinator-exclusive, so the
+        //    expiry counters are deterministic on this side)
+        let now = now_unix();
+        for (i, unit) in job.units.iter().enumerate() {
+            if slots[i].is_some() {
+                continue;
+            }
+            match read_lease(&fleet.dir, unit.id) {
+                LeaseRead::Absent => {}
+                LeaseRead::Torn => {
+                    let _ = fs::remove_file(lease_path(&fleet.dir, unit.id));
+                    expired_owner.insert(unit.id, String::new());
+                    seen_activity.insert(unit.id);
+                    stats.leases_expired += 1;
+                    progress = true;
+                }
+                LeaseRead::Held(l) => {
+                    seen_activity.insert(unit.id);
+                    if l.expired(now) {
+                        let _ = fs::remove_file(lease_path(&fleet.dir, unit.id));
+                        expired_owner.insert(unit.id, l.owner);
+                        stats.leases_expired += 1;
+                        progress = true;
+                    }
+                }
+            }
+        }
+
+        // 4. claim and execute locally whatever is open and unleased
+        //    (during the grace window, only units workers touched)
+        let grace_active = fleet.workers_external > 0 && started.elapsed() < fleet.ttl;
+        let claimable: Vec<usize> = (0..n)
+            .filter(|&i| slots[i].is_none())
+            .filter(|&i| {
+                let u = &job.units[i];
+                matches!(read_lease(&fleet.dir, u.id), LeaseRead::Absent)
+                    && (!grace_active || seen_activity.contains(&u.id))
+                    && !quar_path(&fleet.dir, u.id).exists()
+            })
+            .collect();
+        if !claimable.is_empty() {
+            let outcomes = parallel_map(&claimable, workers.max(1), |_, &i| {
+                execute_unit(runner, ws, job.fp, &job.units[i], fleet)
+            });
+            for o in &outcomes {
+                stats.leases_claimed += u64::from(o.claimed);
+                stats.retries += u64::from(o.retried);
+                progress |= o.claimed || o.completed || o.quarantined;
+            }
+        }
+
+        if !progress {
+            std::thread::sleep(fleet.poll);
+        }
+    }
+
+    let runs: Vec<RunResult> = slots
+        .into_iter()
+        .map(|s| s.expect("loop exits only with every slot merged"))
+        .collect();
+    Ok((runs, stats))
+}
+
+// ---------------------------------------------------------------------------
+// entry points
+
+fn empty_sweep_result(metric: &str, mode: SweepMode) -> SweepResult {
+    SweepResult {
+        runs: Vec::new(),
+        metric: metric.to_string(),
+        mode,
+        warmup_steps_run: 0,
+        warmup_steps_saved: 0,
+        warmup_phases_run: 0,
+        warmup_reused: false,
+        warmup_loaded: false,
+        warmups_loaded: 0,
+        warmups_persisted: 0,
+        shared_warmup_s: 0.0,
+        shared_warmup: TransferStats::default(),
+        shared_warmup_alloc: AllocStats::default(),
+        split_uploads: 0,
+        split_reuses: 0,
+        evictions: 0,
+        evict_skipped_pinned: 0,
+        rebuilds_after_evict: 0,
+        cache_held_bytes: 0,
+    }
+}
+
+fn require_forked(opts: &SweepOptions) -> Result<()> {
+    if opts.mode != SweepMode::ForkedWarmup {
+        return Err(Error::msg(
+            "fleet runs require --sweep-mode forked (the shared warm checkpoint anchors \
+             every work unit)",
+        ));
+    }
+    Ok(())
+}
+
+/// Fleet-sharded [`sweep_lambdas`](crate::coordinator::sweep::sweep_lambdas):
+/// same inputs, same `SweepResult` (runs bitwise identical, counters
+/// reflecting this process's share of the work), plus the fleet
+/// counters. The coordinator resolves the warm start, publishes the
+/// ready marker, then drives [the merge loop](self#lease-protocol)
+/// alongside any external workers.
+pub fn sweep_lambdas_fleet(
+    runner: &Runner<'_>,
+    base: &PipelineConfig,
+    lambdas: &[f64],
+    metric: &str,
+    opts: &SweepOptions,
+    fleet: &FleetOptions,
+) -> Result<(SweepResult, FleetStats)> {
+    require_forked(opts)?;
+    let mut result = empty_sweep_result(metric, opts.mode);
+    if lambdas.is_empty() {
+        return Ok((result, FleetStats::default()));
+    }
+    fs::create_dir_all(&fleet.dir)?;
+    let cache = Arc::clone(runner.cache.as_ref().ok_or_else(|| {
+        Error::msg("fleet mode needs the shared run cache (sharing was disabled)")
+    })?);
+    let before = cache.stats();
+
+    let (ws, src) = resolve_warm(runner, base, fleet)?;
+    match src {
+        WarmSource::Built => {
+            result.warmup_steps_run = ws.steps_run;
+            result.warmup_phases_run = 1;
+            result.shared_warmup_s = ws.warmup_s;
+            result.shared_warmup = ws.transfer;
+            result.shared_warmup_alloc = ws.alloc;
+        }
+        WarmSource::Reused => result.warmup_reused = true,
+        WarmSource::Loaded => result.warmup_loaded = true,
+    }
+    result.warmup_steps_saved =
+        (base.warmup_steps * lambdas.len()).saturating_sub(result.warmup_steps_run);
+
+    let job = enumerate_job(runner, base, lambdas, metric, false);
+    write_ready(&fleet.dir, job.fp, job.units.len())?;
+    let (runs, stats) = run_units(runner, &ws, &job, fleet, opts.workers)?;
+    result.runs = runs;
+
+    let d = cache.stats().since(&before);
+    result.split_uploads = d.split_uploads;
+    result.split_reuses = d.split_reuses;
+    result.warmups_loaded = d.warmups_loaded;
+    result.warmups_persisted = d.warmups_persisted;
+    result.evictions = d.evictions;
+    result.evict_skipped_pinned = d.evict_skipped_pinned;
+    result.rebuilds_after_evict = d.rebuilds_after_evict;
+    result.cache_held_bytes = d.held_bytes;
+    Ok((result, stats))
+}
+
+/// Fleet-sharded [`compare_methods`](crate::baselines::compare_methods):
+/// enumerates all four method sweeps as one job, merges them back into
+/// per-method `SweepResult`s (tables and fronts bitwise identical to
+/// the single-process comparison), and runs the fixed baselines
+/// locally — they are deterministic references, not shard work. The
+/// per-method split counters stay zero in fleet mode; the
+/// comparison-level counters carry the totals, bracketed exactly like
+/// `compare_methods` (sweeps first, fixed baselines outside).
+pub fn compare_methods_fleet(
+    runner: &Runner<'_>,
+    base: &PipelineConfig,
+    lambdas: &[f64],
+    metric: &str,
+    opts: &SweepOptions,
+    fixed_bits: &[u32],
+    fleet: &FleetOptions,
+) -> Result<(CompareResult, FleetStats)> {
+    let t0 = Instant::now();
+    require_forked(opts)?;
+    fs::create_dir_all(&fleet.dir)?;
+    let cache = Arc::clone(runner.cache.as_ref().ok_or_else(|| {
+        Error::msg("fleet mode needs the shared run cache (sharing was disabled)")
+    })?);
+    let before = cache.stats();
+
+    // one warm resolve per method — their warmup fingerprints match by
+    // construction, so this reproduces compare_methods' "one Built,
+    // three Reused" accounting while yielding a single shared snapshot
+    let (mut warmups_run, mut warmups_reused) = (0usize, 0usize);
+    let mut warmup_steps_run = 0usize;
+    let mut srcs = Vec::with_capacity(COMPARE_METHODS.len());
+    let mut ws_opt: Option<Arc<WarmStart>> = None;
+    for m in COMPARE_METHODS {
+        let mcfg = m.configure(base);
+        let (ws, src) = resolve_warm(runner, &mcfg, fleet)?;
+        match src {
+            WarmSource::Built => {
+                warmups_run += 1;
+                warmup_steps_run += ws.steps_run;
+            }
+            WarmSource::Reused => warmups_reused += 1,
+            WarmSource::Loaded => {}
+        }
+        srcs.push(src);
+        ws_opt = Some(ws);
+    }
+    let ws = ws_opt.expect("COMPARE_METHODS is non-empty");
+
+    let job = enumerate_job(runner, base, lambdas, metric, true);
+    write_ready(&fleet.dir, job.fp, job.units.len())?;
+    let (runs, stats) = run_units(runner, &ws, &job, fleet, opts.workers)?;
+
+    // sweep-bracket counters: snapshot *before* the fixed baselines
+    // churn the cache, mirroring compare_methods' per-sweep brackets
+    let mid = cache.stats().since(&before);
+
+    let nl = lambdas.len();
+    let mut sweeps = Vec::with_capacity(COMPARE_METHODS.len());
+    let mut runs_iter = runs.into_iter();
+    for (mi, m) in COMPARE_METHODS.into_iter().enumerate() {
+        let mut sw = empty_sweep_result(metric, opts.mode);
+        sw.runs = runs_iter.by_ref().take(nl).collect();
+        match srcs[mi] {
+            WarmSource::Built => {
+                sw.warmup_steps_run = ws.steps_run;
+                sw.warmup_phases_run = 1;
+                sw.shared_warmup_s = ws.warmup_s;
+                sw.shared_warmup = ws.transfer;
+                sw.shared_warmup_alloc = ws.alloc;
+            }
+            WarmSource::Reused => sw.warmup_reused = true,
+            WarmSource::Loaded => sw.warmup_loaded = true,
+        }
+        sw.warmup_steps_saved = (base.warmup_steps * nl).saturating_sub(sw.warmup_steps_run);
+        sweeps.push((m, sw));
+    }
+
+    let fixed = if fixed_bits.is_empty() {
+        Vec::new()
+    } else {
+        fixed_baselines(runner, base, fixed_bits)?
+    };
+    let mut alloc = AllocStats::default();
+    for (_, sw) in &sweeps {
+        alloc.merge(&sw.alloc());
+    }
+    for r in &fixed {
+        alloc.merge(&r.alloc);
+    }
+
+    // job boundary: reconcile, then read the full-comparison bracket
+    cache.reclaim();
+    let d = cache.stats().since(&before);
+    let result = CompareResult {
+        sweeps,
+        fixed,
+        warmups_run,
+        warmups_reused,
+        warmups_loaded: mid.warmups_loaded,
+        warmups_persisted: mid.warmups_persisted,
+        warmup_steps_run,
+        split_uploads: mid.split_uploads,
+        split_reuses: mid.split_reuses,
+        evictions: d.evictions,
+        evict_skipped_pinned: d.evict_skipped_pinned,
+        rebuilds_after_evict: d.rebuilds_after_evict,
+        held_bytes: d.held_bytes,
+        alloc,
+        total_time_s: t0.elapsed().as_secs_f64(),
+    };
+    Ok((result, stats))
+}
+
+// ---------------------------------------------------------------------------
+// worker loop
+
+/// The `mixprec worker` main loop: derive the same job the
+/// coordinator enumerates, wait for its ready marker, load the shared
+/// warm checkpoint (zero warmup steps), then claim and run open units
+/// until every unit has a result or quarantine marker on disk.
+pub fn run_worker(
+    runner: &Runner<'_>,
+    base: &PipelineConfig,
+    lambdas: &[f64],
+    metric: &str,
+    compare: bool,
+    fleet: &FleetOptions,
+) -> Result<FleetStats> {
+    fs::create_dir_all(&fleet.dir)?;
+    let job = enumerate_job(runner, base, lambdas, metric, compare);
+    wait_for_ready(&fleet.dir, job.fp, fleet.ready_wait)?;
+    let (ws, _src) = resolve_warm(runner, base, fleet)?;
+
+    let mut stats = FleetStats { units: job.units.len() as u64, ..FleetStats::default() };
+    loop {
+        let mut progress = false;
+        let mut open = 0usize;
+        for unit in &job.units {
+            if result_path(&fleet.dir, unit.id).exists()
+                || quar_path(&fleet.dir, unit.id).exists()
+            {
+                continue;
+            }
+            open += 1;
+            // workers never touch foreign leases — even expired or
+            // torn ones wait for the coordinator to requeue
+            if !matches!(read_lease(&fleet.dir, unit.id), LeaseRead::Absent) {
+                continue;
+            }
+            let o = execute_unit(runner, &ws, job.fp, unit, fleet);
+            stats.leases_claimed += u64::from(o.claimed);
+            stats.retries += u64::from(o.retried);
+            stats.completed += u64::from(o.completed);
+            stats.quarantined += u64::from(o.quarantined);
+            progress |= o.claimed || o.completed || o.quarantined;
+        }
+        if open == 0 {
+            break;
+        }
+        if !progress {
+            std::thread::sleep(fleet.poll);
+        }
+    }
+    Ok(stats)
+}

@@ -4,12 +4,17 @@
 
 pub mod checkpoint;
 pub mod context;
+pub mod fleet;
 pub mod pareto;
 pub mod phases;
 pub mod schedule;
 pub mod sweep;
 
 pub use context::Context;
+pub use fleet::{
+    compare_methods_fleet, run_worker, sweep_lambdas_fleet, FaultMode, FaultPlan, FaultPoint,
+    FleetOptions, FleetStats,
+};
 pub use pareto::{ParetoFront, Point};
 pub use phases::{
     EvalBufs, MaskBufs, PipelineConfig, Record, RunResult, Runner, Sampling, Timing,

@@ -7,10 +7,11 @@
 //! NaN coordinates are rejected at [`ParetoFront::insert`]: every
 //! comparison against NaN is false, so a NaN point would be dominated
 //! by nothing, dominate nothing, evict nothing and never be evicted —
-//! silently breaking the sorted-by-cost invariant and making the
-//! `partial_cmp().unwrap()` in the iso-queries panic. Because `insert`
-//! errors instead, a front can never contain a non-finite-ordered
-//! point and those unwraps are safe.
+//! silently breaking the sorted-by-cost invariant. The iso-queries
+//! order with [`f64::total_cmp`] as a second line of defense: even if
+//! a NaN ever slipped past the insert-path guard (a deserialization
+//! bug, a future code path), they would return a deterministic answer
+//! instead of panicking.
 
 use crate::error::{Error, Result};
 
@@ -113,7 +114,7 @@ impl ParetoFront {
         self.points
             .iter()
             .filter(|p| p.acc >= target)
-            .min_by(|a, b| a.cost.partial_cmp(&b.cost).unwrap())
+            .min_by(|a, b| a.cost.total_cmp(&b.cost))
     }
 
     /// Highest-accuracy point with cost <= `budget` ("iso-size").
@@ -121,13 +122,11 @@ impl ParetoFront {
         self.points
             .iter()
             .filter(|p| p.cost <= budget)
-            .max_by(|a, b| a.acc.partial_cmp(&b.acc).unwrap())
+            .max_by(|a, b| a.acc.total_cmp(&b.acc))
     }
 
     pub fn best_acc(&self) -> Option<&Point> {
-        self.points
-            .iter()
-            .max_by(|a, b| a.acc.partial_cmp(&b.acc).unwrap())
+        self.points.iter().max_by(|a, b| a.acc.total_cmp(&b.acc))
     }
 }
 
@@ -163,8 +162,7 @@ mod tests {
         assert!(f.insert(Point::new(1.0, 0.5, "ok")).unwrap());
         assert!(f.insert(Point::new(f64::NAN, 0.9, "bad cost")).is_err());
         assert!(f.insert(Point::new(2.0, f64::NAN, "bad acc")).is_err());
-        // the front is untouched and the iso queries (which unwrap
-        // partial_cmp) stay safe
+        // the front is untouched and the iso queries stay safe
         assert_eq!(f.len(), 1);
         assert_eq!(f.iso_accuracy(0.4).unwrap().tag, "ok");
         assert_eq!(f.best_acc().unwrap().tag, "ok");

@@ -397,8 +397,9 @@ pub struct WarmStart {
 }
 
 /// History-record phase names <-> the byte tags the warm file stores
-/// (bit-pattern-stable, unlike persisting the strings ad hoc).
-fn phase_tag(phase: &str) -> Option<u8> {
+/// (bit-pattern-stable, unlike persisting the strings ad hoc). The
+/// fleet result files reuse the same tags for their history extras.
+pub(crate) fn phase_tag(phase: &str) -> Option<u8> {
     match phase {
         "warmup" => Some(0),
         "search" => Some(1),
@@ -407,7 +408,7 @@ fn phase_tag(phase: &str) -> Option<u8> {
     }
 }
 
-fn phase_from_tag(tag: u8) -> Option<&'static str> {
+pub(crate) fn phase_from_tag(tag: u8) -> Option<&'static str> {
     match tag {
         0 => Some("warmup"),
         1 => Some("search"),

@@ -4,6 +4,7 @@
 //!   search   — one joint-search pipeline (model, reg, lambda, sampling)
 //!   sweep    — lambda sweep + Pareto front for one method
 //!   compare  — joint vs baselines (fig. 5 style) at bench scale
+//!   worker   — fleet worker: claim and run units from a shared job dir
 //!   deploy   — discretize + NE16 refine + reorder/split report
 //!   qdemo    — run the integer-conv Pallas artifact end to end
 //!   fixture  — write the offline stub fixture (CI / smoke testing)
@@ -12,8 +13,8 @@
 use mixprec::assignment::PrecisionMasks;
 use mixprec::baselines::Method;
 use mixprec::coordinator::{
-    default_lambdas, sweep_lambdas, Context, PipelineConfig, Runner, Sampling,
-    SweepMode, SweepOptions,
+    compare_methods_fleet, default_lambdas, run_worker, sweep_lambdas, sweep_lambdas_fleet,
+    Context, FleetOptions, PipelineConfig, Runner, Sampling, SweepMode, SweepOptions,
 };
 use mixprec::cost::{CostRegistry, Mpic, Ne16, Size};
 use mixprec::deploy::{refine_for_ne16, reorder_assignment, split_layers};
@@ -23,7 +24,7 @@ use mixprec::util::table::{f2, f4, Table};
 
 fn usage() -> ! {
     eprintln!(
-        "usage: mixprec <search|sweep|compare|deploy|qdemo|fixture|info> [options]
+        "usage: mixprec <search|sweep|compare|worker|deploy|qdemo|fixture|info> [options]
   common options:
     --model resnet8|dscnn|resnet10   (default resnet8)
     --reg size|mpic|ne16|bitops      (default size)
@@ -50,6 +51,21 @@ fn usage() -> ! {
                           entries fall back to a fresh warmup.
                           (env: MIXPREC_WARM_DIR; pruned at attach
                           time per MIXPREC_WARM_DIR_MAX / _TTL_SECS)
+    --fleet-dir <d>       sweep/compare: distribute the units over a
+                          shared job directory (lease-protocol work
+                          queue; env: MIXPREC_FLEET_DIR). The result
+                          is bitwise identical to the single-process
+                          run. Knobs: MIXPREC_FLEET_TTL_SECS,
+                          _MAX_ATTEMPTS, _BACKOFF_MS, _BACKOFF_CAP_MS,
+                          _POLL_MS, _WAIT_SECS
+    --workers-external <n>  fleet workers launched separately
+                          (`mixprec worker --fleet-dir <d>`, same
+                          model/lambda flags, plus --compare when the
+                          coordinator runs compare); they get one
+                          lease TTL of grace before the coordinator
+                          claims untouched units itself
+    --compare             worker: join a compare job (method matrix)
+                          instead of a single-method sweep
     --xla-threads <n>     backend execution threads (default: available
                           parallelism; 1 = sequential scalar-era
                           behavior, bitwise identical either way)
@@ -94,6 +110,18 @@ fn build_cfg(a: &Args) -> PipelineConfig {
         cfg.masks = PrecisionMasks::joint_act();
     }
     cfg
+}
+
+/// Fleet options when the invocation asked for a distributed run
+/// (`--fleet-dir` or `MIXPREC_FLEET_DIR`); `None` = single-process.
+fn fleet_options(a: &Args) -> Option<FleetOptions> {
+    let dir = a
+        .get("fleet-dir")
+        .map(|d| d.to_string())
+        .or_else(|| std::env::var("MIXPREC_FLEET_DIR").ok())?;
+    let mut fleet = FleetOptions::from_env(std::path::PathBuf::from(dir));
+    fleet.workers_external = a.usize_or("workers-external", 0);
+    Some(fleet)
 }
 
 /// Did the invocation ask for the multi-target atlas? (`--cost-models`
@@ -237,7 +265,21 @@ fn run(cmd: &str, a: &Args) -> mixprec::Result<()> {
             let opts = build_sweep_opts(a)?;
             let ctx = Context::load_default(cfg.data_frac)?;
             let runner = build_runner(&ctx, a, &cfg.model)?;
-            let sw = sweep_lambdas(&runner, &cfg, &lambdas, &cfg.reg.clone(), &opts)?;
+            let sw = match fleet_options(a) {
+                Some(fleet) => {
+                    let (sw, fs) = sweep_lambdas_fleet(
+                        &runner,
+                        &cfg,
+                        &lambdas,
+                        &cfg.reg.clone(),
+                        &opts,
+                        &fleet,
+                    )?;
+                    println!("{}", report::fleet_line(&fs));
+                    sw
+                }
+                None => sweep_lambdas(&runner, &cfg, &lambdas, &cfg.reg.clone(), &opts)?,
+            };
             if sw.warmup_steps_saved > 0 {
                 println!(
                     "shared warmup: {} steps run once, {} steps saved vs independent \
@@ -292,14 +334,29 @@ fn run(cmd: &str, a: &Args) -> mixprec::Result<()> {
             let opts = build_sweep_opts(a)?;
             let ctx = Context::load_default(cfg.data_frac)?;
             let runner = build_runner(&ctx, a, &cfg.model)?;
-            let cr = mixprec::baselines::compare_methods(
-                &runner,
-                &cfg,
-                &lambdas,
-                &cfg.reg.clone(),
-                &opts,
-                &[2, 4, 8],
-            )?;
+            let cr = match fleet_options(a) {
+                Some(fleet) => {
+                    let (cr, fs) = compare_methods_fleet(
+                        &runner,
+                        &cfg,
+                        &lambdas,
+                        &cfg.reg.clone(),
+                        &opts,
+                        &[2, 4, 8],
+                        &fleet,
+                    )?;
+                    println!("{}", report::fleet_line(&fs));
+                    cr
+                }
+                None => mixprec::baselines::compare_methods(
+                    &runner,
+                    &cfg,
+                    &lambdas,
+                    &cfg.reg.clone(),
+                    &opts,
+                    &[2, 4, 8],
+                )?,
+            };
             let mut rows: Vec<(String, &mixprec::coordinator::RunResult)> = Vec::new();
             for (m, sw) in &cr.sweeps {
                 for r in &sw.runs {
@@ -326,6 +383,25 @@ fn run(cmd: &str, a: &Args) -> mixprec::Result<()> {
             println!("{}", report::alloc_line(&cr.alloc));
             println!("backend threads: {}", ctx.eng.threads());
             println!("compare total: {:.2}s", cr.total_time_s);
+        }
+        "worker" => {
+            // same cfg/lambda flags as the coordinator: enumeration is
+            // content-addressed, so identical flags mean identical
+            // work-unit ids (a mismatch times out on the ready marker
+            // with a diagnostic listing the jobs actually present)
+            let cfg = build_cfg(a);
+            let compare = a.has("compare");
+            let points = a.usize_or("points", if compare { 3 } else { 5 });
+            let lambdas = a.f64_list("lambdas", &default_lambdas(points));
+            let Some(fleet) = fleet_options(a) else {
+                return Err(mixprec::Error::Config(
+                    "worker needs --fleet-dir (or MIXPREC_FLEET_DIR)".into(),
+                ));
+            };
+            let ctx = Context::load_default(cfg.data_frac)?;
+            let runner = build_runner(&ctx, a, &cfg.model)?;
+            let fs = run_worker(&runner, &cfg, &lambdas, &cfg.reg.clone(), compare, &fleet)?;
+            println!("{}", report::fleet_line(&fs));
         }
         "deploy" => {
             let cfg = build_cfg(a);

@@ -4,6 +4,7 @@
 pub mod benchkit;
 
 use crate::baselines::CompareResult;
+use crate::coordinator::fleet::FleetStats;
 use crate::coordinator::pareto::ParetoFront;
 use crate::cost::Atlas;
 use crate::coordinator::phases::RunResult;
@@ -41,6 +42,23 @@ pub fn cache_line(cr: &CompareResult) -> String {
         cr.evictions,
         cr.evict_skipped_pinned,
         cr.rebuilds_after_evict
+    )
+}
+
+/// One-line fleet summary for a distributed sweep/compare. The CI
+/// chaos leg greps exact tokens out of this line — "expired N",
+/// "retries N", "quarantined N" — so keep the format stable.
+pub fn fleet_line(fs: &FleetStats) -> String {
+    format!(
+        "fleet: units {}, completed {}, leases claimed {} (expired {}, stolen {}), \
+         retries {}, quarantined {}",
+        fs.units,
+        fs.completed,
+        fs.leases_claimed,
+        fs.leases_expired,
+        fs.leases_stolen,
+        fs.retries,
+        fs.quarantined
     )
 }
 
@@ -175,5 +193,25 @@ mod tests {
         assert_eq!(acc, 0.6);
         assert!((gain - 0.1).abs() < 1e-12);
         assert!(iso_accuracy_reduction(&f, 0.9, 40.0).is_none());
+    }
+
+    /// The chaos CI leg greps "expired N", "retries N" and
+    /// "quarantined N" out of this exact rendering.
+    #[test]
+    fn fleet_line_format() {
+        let fs = FleetStats {
+            units: 12,
+            completed: 12,
+            leases_claimed: 14,
+            leases_expired: 2,
+            leases_stolen: 1,
+            retries: 3,
+            quarantined: 0,
+        };
+        assert_eq!(
+            fleet_line(&fs),
+            "fleet: units 12, completed 12, leases claimed 14 (expired 2, stolen 1), \
+             retries 3, quarantined 0"
+        );
     }
 }

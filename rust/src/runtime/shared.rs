@@ -159,6 +159,9 @@ pub struct CacheStats {
     pub warmups_loaded: u64,
     /// Fresh warm entries written back to the disk tier.
     pub warmups_persisted: u64,
+    /// Transient-I/O retries absorbed by the disk tier (persist calls
+    /// and GC unlinks that needed a backoff before settling).
+    pub persist_retries: u64,
     /// Bytes of entries only the cache still references (a **gauge**,
     /// not a counter: pinned entries charge their holders, not the
     /// budget — see the eviction section of the module docs).
@@ -184,6 +187,7 @@ impl CacheStats {
             warmups_reused: self.warmups_reused - before.warmups_reused,
             warmups_loaded: self.warmups_loaded - before.warmups_loaded,
             warmups_persisted: self.warmups_persisted - before.warmups_persisted,
+            persist_retries: self.persist_retries - before.persist_retries,
             held_bytes: self.held_bytes,
             evictions: self.evictions - before.evictions,
             evict_skipped_pinned: self.evict_skipped_pinned - before.evict_skipped_pinned,
@@ -442,6 +446,52 @@ fn cache_budget_from_env() -> u64 {
     env_parsed("MIXPREC_CACHE_BUDGET_BYTES").unwrap_or(CACHE_DEFAULT_BUDGET_BYTES)
 }
 
+/// Transient-I/O retry budget: total attempts per operation. With the
+/// doubling base below, a failing call waits 1 ms then 2 ms before the
+/// final verdict — enough to ride out EINTR/EBUSY-class blips without
+/// stalling a worker behind genuinely broken storage.
+const TRANSIENT_IO_ATTEMPTS: u64 = 3;
+const TRANSIENT_IO_BACKOFF_MS: u64 = 1;
+
+/// Whether an I/O error is worth retrying: interruption/busy-class
+/// conditions that clear on their own. `ErrorKind::ResourceBusy` is
+/// unstable on the MSRV, so EBUSY is matched by its raw OS code.
+fn transient_io(e: &std::io::Error) -> bool {
+    use std::io::ErrorKind;
+    matches!(
+        e.kind(),
+        ErrorKind::Interrupted | ErrorKind::WouldBlock | ErrorKind::TimedOut
+    ) || e.raw_os_error() == Some(16)
+}
+
+/// Run `op`, retrying transient I/O failures with bounded exponential
+/// backoff. Returns the final outcome plus the retries spent (0 on
+/// first-try success) so callers can feed [`CacheStats::persist_retries`].
+fn with_transient_retry(op: impl Fn() -> Result<()>) -> (Result<()>, u64) {
+    let mut retries = 0u64;
+    loop {
+        match op() {
+            Err(Error::Io(e)) if transient_io(&e) && retries + 1 < TRANSIENT_IO_ATTEMPTS => {
+                std::thread::sleep(Duration::from_millis(TRANSIENT_IO_BACKOFF_MS << retries));
+                retries += 1;
+            }
+            out => return (out, retries),
+        }
+    }
+}
+
+/// Best-effort unlink with the transient-retry budget. Returns the
+/// retries spent; the outcome itself stays best-effort (a file another
+/// worker already removed is gone either way, and a hard error leaves
+/// the entry for the next GC pass).
+fn remove_with_retry(path: &Path) -> u64 {
+    let (_, retries) = with_transient_retry(|| match std::fs::remove_file(path) {
+        Err(e) if e.kind() != std::io::ErrorKind::NotFound => Err(Error::Io(e)),
+        _ => Ok(()),
+    });
+    retries
+}
+
 /// Prune the warm disk tier: drop `warm-*.ckpt` entries whose mtime is
 /// at least `ttl` old, then the oldest entries beyond `max_entries`
 /// (0 = unlimited). Runs at attach time ([`SharedRunCache::set_warm_dir`])
@@ -449,10 +499,13 @@ fn cache_budget_from_env() -> u64 {
 /// coordination. Everything here is best-effort and concurrent-safe:
 /// non-matching files are never touched, unlink races with other
 /// workers are ignored (the entry is gone either way), and an
-/// unreadable directory is simply left alone.
-pub(crate) fn gc_warm_dir(dir: &Path, max_entries: usize, ttl: Option<Duration>) {
+/// unreadable directory is simply left alone. Unlinks retry transient
+/// I/O errors; the returned count is the retries spent, which
+/// [`SharedRunCache::set_warm_dir`] folds into
+/// [`CacheStats::persist_retries`].
+pub(crate) fn gc_warm_dir(dir: &Path, max_entries: usize, ttl: Option<Duration>) -> u64 {
     let Ok(entries) = std::fs::read_dir(dir) else {
-        return;
+        return 0;
     };
     let mut files: Vec<(SystemTime, PathBuf)> = Vec::new();
     for entry in entries.flatten() {
@@ -469,11 +522,12 @@ pub(crate) fn gc_warm_dir(dir: &Path, max_entries: usize, ttl: Option<Duration>)
         let mtime = meta.modified().unwrap_or(SystemTime::UNIX_EPOCH);
         files.push((mtime, entry.path()));
     }
+    let mut retries = 0u64;
     if let Some(ttl) = ttl {
         files.retain(|(mtime, path)| {
             let age = SystemTime::now().duration_since(*mtime).unwrap_or_default();
             if age >= ttl {
-                let _ = std::fs::remove_file(path);
+                retries += remove_with_retry(path);
                 false
             } else {
                 true
@@ -481,14 +535,15 @@ pub(crate) fn gc_warm_dir(dir: &Path, max_entries: usize, ttl: Option<Duration>)
         });
     }
     if max_entries == 0 || files.len() <= max_entries {
-        return;
+        return retries;
     }
     // oldest first, ties broken by name: deterministic prune order
     files.sort();
     let excess = files.len() - max_entries;
     for (_, path) in &files[..excess] {
-        let _ = std::fs::remove_file(path);
+        retries += remove_with_retry(path);
     }
+    retries
 }
 
 /// Shared device-buffer cache across methods and runs. One per
@@ -514,6 +569,7 @@ pub struct SharedRunCache {
     warmups_reused: AtomicU64,
     warmups_loaded: AtomicU64,
     warmups_persisted: AtomicU64,
+    persist_retries: AtomicU64,
     evictions: AtomicU64,
     evict_skipped_pinned: AtomicU64,
     rebuilds_after_evict: AtomicU64,
@@ -540,6 +596,7 @@ impl SharedRunCache {
             warmups_reused: AtomicU64::new(0),
             warmups_loaded: AtomicU64::new(0),
             warmups_persisted: AtomicU64::new(0),
+            persist_retries: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             evict_skipped_pinned: AtomicU64::new(0),
             rebuilds_after_evict: AtomicU64::new(0),
@@ -618,7 +675,8 @@ impl SharedRunCache {
     /// `gc_warm_dir`).
     pub fn set_warm_dir(&self, dir: Option<PathBuf>) {
         if let Some(d) = &dir {
-            gc_warm_dir(d, warm_dir_max_from_env(), warm_dir_ttl_from_env());
+            let retries = gc_warm_dir(d, warm_dir_max_from_env(), warm_dir_ttl_from_env());
+            self.persist_retries.fetch_add(retries, Ordering::Relaxed);
         }
         *lock(&self.warm_dir) = dir;
     }
@@ -712,8 +770,11 @@ impl SharedRunCache {
     /// or mismatched files must fall back to a fresh build, never
     /// error), and a fresh build is handed to `persist`, which must
     /// write atomically (the coordinator routes this to the v2
-    /// checkpoint's temp-file + rename writer). A persist failure is
-    /// reported on stderr but never fails the compute path. `size`
+    /// checkpoint's temp-file + rename writer). Transient persist
+    /// failures (EINTR/EBUSY-class) retry with bounded backoff —
+    /// counted in [`CacheStats::persist_retries`] — and a final
+    /// failure is reported on stderr but never fails the compute
+    /// path. `size`
     /// prices the resolved entry (fresh *or* loaded) for the cache
     /// budget, computed on the typed value before erasure.
     pub fn get_or_warm_persistent<T, L, F, P, S>(
@@ -728,7 +789,7 @@ impl SharedRunCache {
         T: Send + Sync + 'static,
         L: FnOnce(&Path) -> Option<T>,
         F: FnOnce() -> Result<T>,
-        P: FnOnce(&Path, &T) -> Result<()>,
+        P: Fn(&Path, &T) -> Result<()>,
         S: FnOnce(&T) -> u64,
     {
         let disk = self
@@ -749,7 +810,7 @@ impl SharedRunCache {
         T: Send + Sync + 'static,
         L: FnOnce(&Path) -> Option<T>,
         F: FnOnce() -> Result<T>,
-        P: FnOnce(&Path, &T) -> Result<()>,
+        P: Fn(&Path, &T) -> Result<()>,
         S: FnOnce(&T) -> u64,
     {
         let (erased, built, rebuilt) =
@@ -765,7 +826,9 @@ impl SharedRunCache {
                 }
                 let typed = Arc::new(make()?);
                 if let Some((path, persist)) = persist_to {
-                    match persist(&path, typed.as_ref()) {
+                    let (out, retries) = with_transient_retry(|| persist(&path, typed.as_ref()));
+                    self.persist_retries.fetch_add(retries, Ordering::Relaxed);
+                    match out {
                         Ok(()) => {
                             self.warmups_persisted.fetch_add(1, Ordering::Relaxed);
                         }
@@ -818,6 +881,7 @@ impl SharedRunCache {
             warmups_reused: self.warmups_reused.load(Ordering::Relaxed),
             warmups_loaded: self.warmups_loaded.load(Ordering::Relaxed),
             warmups_persisted: self.warmups_persisted.load(Ordering::Relaxed),
+            persist_retries: self.persist_retries.load(Ordering::Relaxed),
             held_bytes: retained_in(&self.eval) + retained_in(&self.warm),
             evictions: self.evictions.load(Ordering::Relaxed),
             evict_skipped_pinned: self.evict_skipped_pinned.load(Ordering::Relaxed),

@@ -1,0 +1,460 @@
+//! Fleet crash matrix (ISSUE 9 acceptance): under every injected
+//! failure — worker kill (stale lease), torn lease, torn result, torn
+//! warm checkpoint, double-claim race, persistent mid-run faults —
+//! the merged front and histories stay bitwise identical to the
+//! single-process run, no unit is lost, and no result merges twice.
+//!
+//! "Workers" are emulated the `warm_persist.rs` way: each participant
+//! is its own `Context` (own engine, `SharedRunCache`, buffers), so
+//! only the shared job directory carries state between them.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use mixprec::baselines::{compare_methods, COMPARE_METHODS};
+use mixprec::coordinator::fleet::{
+    enumerate_job, lease_path, quar_path, read_quarantine, ready_path, result_path, write_lease,
+    Lease,
+};
+use mixprec::coordinator::{
+    compare_methods_fleet, run_worker, sweep_lambdas, sweep_lambdas_fleet, Context, FaultPlan,
+    FleetOptions, PipelineConfig, RunResult, SweepMode, SweepOptions, SweepResult,
+};
+use mixprec::runtime::fixture;
+
+struct Fx {
+    dir: PathBuf,
+}
+
+impl Fx {
+    /// data_frac 0.07 -> ragged val/test splits, so the shared warm
+    /// checkpoint + iterator cover the padded-tail geometry too.
+    fn new(tag: &str) -> Fx {
+        let dir = std::env::temp_dir().join(format!(
+            "mixprec_fleet_{tag}_{}",
+            std::process::id()
+        ));
+        fixture::write_stub_fixture(&dir).expect("fixture");
+        Fx { dir }
+    }
+
+    /// A fresh "process": own engine, cache and buffers. No warm dir
+    /// is attached here — the fleet entry points attach the job
+    /// directory themselves.
+    fn process(&self) -> Context {
+        Context::load(&self.dir, 0.07).expect("context")
+    }
+
+    /// A fresh shared job directory under the fixture root.
+    fn fleet_dir(&self, tag: &str) -> PathBuf {
+        let d = self.dir.join(format!("fleet_{tag}"));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+}
+
+impl Drop for Fx {
+    fn drop(&mut self) {
+        std::fs::remove_dir_all(&self.dir).ok();
+    }
+}
+
+fn quick_cfg() -> PipelineConfig {
+    let mut cfg = PipelineConfig::quick(fixture::STUB_MODEL);
+    cfg.warmup_steps = 12;
+    cfg.search_steps = 24;
+    cfg.finetune_steps = 6;
+    cfg.eval_every = 8;
+    cfg.steps_per_epoch = 8;
+    cfg
+}
+
+fn opts() -> SweepOptions {
+    SweepOptions {
+        workers: 1,
+        mode: SweepMode::ForkedWarmup,
+        vary_seeds: false,
+        share_warmup: true,
+    }
+}
+
+/// Tight knobs so the crash matrix turns over in milliseconds; the
+/// 30 s TTL keeps live leases from expiring under a slow test host
+/// (the stale-lease tests plant `ttl_secs: 0` leases instead).
+fn fleet_opts(dir: &Path, owner: &str) -> FleetOptions {
+    FleetOptions {
+        dir: dir.to_path_buf(),
+        owner: owner.to_string(),
+        ttl: Duration::from_secs(30),
+        max_attempts: 3,
+        backoff_base: Duration::from_millis(1),
+        backoff_cap: Duration::from_millis(8),
+        poll: Duration::from_millis(10),
+        ready_wait: Duration::from_secs(60),
+        workers_external: 0,
+        faults: Arc::new(FaultPlan::none()),
+    }
+}
+
+const LAMBDAS: [f64; 2] = [0.05, 5.0];
+const LAMBDAS4: [f64; 4] = [0.05, 0.5, 1.5, 5.0];
+
+fn front_bits(sw: &SweepResult) -> Vec<(u64, u64)> {
+    sw.front()
+        .points()
+        .iter()
+        .map(|p| (p.cost.to_bits(), p.acc.to_bits()))
+        .collect()
+}
+
+/// Bitwise equality of the deterministic run payload: lambda,
+/// assignment, accuracies and the full per-step history (timing and
+/// transfer counters are wall-clock/process-local and excluded).
+fn assert_same_runs(a: &[RunResult], b: &[RunResult]) {
+    assert_eq!(a.len(), b.len(), "run count diverged");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.lambda.to_bits(), y.lambda.to_bits());
+        assert_eq!(x.assignment, y.assignment, "lam={}", x.lambda);
+        assert_eq!(x.val_acc.to_bits(), y.val_acc.to_bits(), "lam={}", x.lambda);
+        assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits(), "lam={}", x.lambda);
+        assert_eq!(x.history.len(), y.history.len(), "history length diverged");
+        for (p, q) in x.history.iter().zip(&y.history) {
+            assert_eq!((p.phase, p.step), (q.phase, q.step));
+            assert_eq!(p.loss.to_bits(), q.loss.to_bits(), "{}[{}]", p.phase, p.step);
+            assert_eq!(p.acc.to_bits(), q.acc.to_bits(), "{}[{}]", p.phase, p.step);
+            assert_eq!(p.cost.to_bits(), q.cost.to_bits(), "{}[{}]", p.phase, p.step);
+        }
+    }
+}
+
+/// Failure-free fleet sweep: bitwise identity plus exact protocol
+/// accounting (every unit claimed once, no lease files left behind).
+#[test]
+fn fleet_sweep_is_bitwise_identical_to_single_process() {
+    let fx = Fx::new("ident");
+    let cfg = quick_cfg();
+
+    let ctx_ref = fx.process();
+    let runner_ref = ctx_ref.runner_shared(fixture::STUB_MODEL).unwrap();
+    let sw_ref = sweep_lambdas(&runner_ref, &cfg, &LAMBDAS, "size", &opts()).unwrap();
+
+    let dir = fx.fleet_dir("ident");
+    let ctx = fx.process();
+    let runner = ctx.runner_shared(fixture::STUB_MODEL).unwrap();
+    let (sw, fs) = sweep_lambdas_fleet(
+        &runner,
+        &cfg,
+        &LAMBDAS,
+        "size",
+        &opts(),
+        &fleet_opts(&dir, "coord"),
+    )
+    .unwrap();
+
+    assert_eq!(front_bits(&sw_ref), front_bits(&sw), "front diverged");
+    assert_same_runs(&sw_ref.runs, &sw.runs);
+    assert_eq!(sw.warmup_steps_run, cfg.warmup_steps, "coordinator warms up once");
+    assert_eq!(sw.warmups_persisted, 1, "warm checkpoint published for workers");
+    let n = LAMBDAS.len() as u64;
+    assert_eq!((fs.units, fs.completed, fs.leases_claimed), (n, n, n));
+    assert_eq!(
+        (fs.leases_expired, fs.leases_stolen, fs.retries, fs.quarantined),
+        (0, 0, 0, 0)
+    );
+
+    // protocol hygiene: ready marker + results persist, leases do not
+    let job = enumerate_job(&runner, &cfg, &LAMBDAS, "size", false);
+    assert!(ready_path(&dir, job.fp).exists(), "ready marker missing");
+    for u in &job.units {
+        assert!(result_path(&dir, u.id).exists(), "result file missing");
+        assert!(!lease_path(&dir, u.id).exists(), "lease left behind");
+    }
+}
+
+/// Failure-free fleet compare: per-method fronts, histories and the
+/// fixed baselines all bitwise identical; warm accounting matches the
+/// single-process "1 built, 3 reused" trace.
+#[test]
+fn fleet_compare_is_bitwise_identical_to_single_process() {
+    let fx = Fx::new("compare");
+    let cfg = quick_cfg();
+
+    let ctx_ref = fx.process();
+    let runner_ref = ctx_ref.runner_shared(fixture::STUB_MODEL).unwrap();
+    let cr_ref = compare_methods(&runner_ref, &cfg, &LAMBDAS, "size", &opts(), &[2, 8]).unwrap();
+
+    let dir = fx.fleet_dir("compare");
+    let ctx = fx.process();
+    let runner = ctx.runner_shared(fixture::STUB_MODEL).unwrap();
+    let (cr, fs) = compare_methods_fleet(
+        &runner,
+        &cfg,
+        &LAMBDAS,
+        "size",
+        &opts(),
+        &[2, 8],
+        &fleet_opts(&dir, "coord"),
+    )
+    .unwrap();
+
+    let units = (COMPARE_METHODS.len() * LAMBDAS.len()) as u64;
+    assert_eq!((fs.units, fs.completed, fs.leases_claimed), (units, units, units));
+    assert_eq!((fs.retries, fs.quarantined), (0, 0));
+
+    assert_eq!(cr_ref.sweeps.len(), cr.sweeps.len());
+    for ((ma, sa), (mb, sb)) in cr_ref.sweeps.iter().zip(&cr.sweeps) {
+        assert_eq!(ma.label(), mb.label(), "method order diverged");
+        assert_eq!(front_bits(sa), front_bits(sb), "{} front diverged", ma.label());
+        assert_same_runs(&sa.runs, &sb.runs);
+    }
+    assert_eq!(cr_ref.fixed.len(), cr.fixed.len());
+    for (a, b) in cr_ref.fixed.iter().zip(&cr.fixed) {
+        assert_eq!(a.val_acc.to_bits(), b.val_acc.to_bits());
+        assert_eq!(a.test_acc.to_bits(), b.test_acc.to_bits());
+        assert_eq!(a.assignment, b.assignment);
+    }
+    assert_eq!(
+        (cr.warmups_run, cr.warmups_reused),
+        (cr_ref.warmups_run, cr_ref.warmups_reused),
+        "fleet warm accounting diverged from compare_methods"
+    );
+}
+
+/// Worker kill + torn lease: a stale lease (dead owner, never
+/// renewed) and an undecodable lease file are both expired by the
+/// coordinator, requeued, and completed by a different owner — with
+/// results identical to a run where nothing ever failed.
+#[test]
+fn expired_and_torn_leases_are_requeued_and_stolen() {
+    let fx = Fx::new("leases");
+    let cfg = quick_cfg();
+
+    let ctx_ref = fx.process();
+    let runner_ref = ctx_ref.runner_shared(fixture::STUB_MODEL).unwrap();
+    let sw_ref = sweep_lambdas(&runner_ref, &cfg, &LAMBDAS, "size", &opts()).unwrap();
+
+    let dir = fx.fleet_dir("leases");
+    let ctx = fx.process();
+    let runner = ctx.runner_shared(fixture::STUB_MODEL).unwrap();
+    let job = enumerate_job(&runner, &cfg, &LAMBDAS, "size", false);
+
+    // a worker that died mid-run: claimed, then never renewed
+    // (ttl 0 = stale the instant the coordinator looks)
+    write_lease(
+        &dir,
+        &Lease {
+            unit_id: job.units[0].id,
+            owner: "ghost-worker".into(),
+            attempt: 0,
+            stamp_unix: 0,
+            ttl_secs: 0,
+        },
+    )
+    .unwrap();
+    // a torn lease: right magic, undecodable payload
+    std::fs::write(lease_path(&dir, job.units[1].id), b"MPLEASE1 torn").unwrap();
+
+    let (sw, fs) = sweep_lambdas_fleet(
+        &runner,
+        &cfg,
+        &LAMBDAS,
+        "size",
+        &opts(),
+        &fleet_opts(&dir, "coord"),
+    )
+    .unwrap();
+
+    assert_eq!(front_bits(&sw_ref), front_bits(&sw), "front diverged after recovery");
+    assert_same_runs(&sw_ref.runs, &sw.runs);
+    assert_eq!(fs.leases_expired, 2, "one stale + one torn lease expired");
+    assert_eq!(fs.leases_stolen, 2, "both units completed by a different owner");
+    assert_eq!((fs.completed, fs.retries, fs.quarantined), (2, 0, 0));
+}
+
+/// A torn result file is dropped (never merged, never panics), the
+/// unit requeues and re-runs, and the merged output is identical.
+#[test]
+fn torn_result_is_dropped_and_requeued() {
+    let fx = Fx::new("tornres");
+    let cfg = quick_cfg();
+
+    let ctx_ref = fx.process();
+    let runner_ref = ctx_ref.runner_shared(fixture::STUB_MODEL).unwrap();
+    let sw_ref = sweep_lambdas(&runner_ref, &cfg, &LAMBDAS, "size", &opts()).unwrap();
+
+    let dir = fx.fleet_dir("tornres");
+    let ctx = fx.process();
+    let runner = ctx.runner_shared(fixture::STUB_MODEL).unwrap();
+    let job = enumerate_job(&runner, &cfg, &LAMBDAS, "size", false);
+    std::fs::write(result_path(&dir, job.units[0].id), b"MIXPRECV garbage").unwrap();
+
+    let (sw, fs) = sweep_lambdas_fleet(
+        &runner,
+        &cfg,
+        &LAMBDAS,
+        "size",
+        &opts(),
+        &fleet_opts(&dir, "coord"),
+    )
+    .unwrap();
+
+    assert_eq!(front_bits(&sw_ref), front_bits(&sw), "front diverged after requeue");
+    assert_same_runs(&sw_ref.runs, &sw.runs);
+    assert_eq!(fs.retries, 2, "one merge-time drop + one retried execution");
+    assert_eq!((fs.completed, fs.leases_claimed, fs.quarantined), (2, 2, 0));
+}
+
+/// A torn warm checkpoint in the job directory degrades to a fresh
+/// warmup (never an error, never a wrong resume), is rewritten, and
+/// the sweep stays bitwise identical.
+#[test]
+fn torn_warm_checkpoint_falls_back_to_fresh_warmup() {
+    let fx = Fx::new("tornwarm");
+    let cfg = quick_cfg();
+
+    let ctx_ref = fx.process();
+    let runner_ref = ctx_ref.runner_shared(fixture::STUB_MODEL).unwrap();
+    let sw_ref = sweep_lambdas(&runner_ref, &cfg, &LAMBDAS, "size", &opts()).unwrap();
+
+    let dir = fx.fleet_dir("tornwarm");
+    let ctx = fx.process();
+    let runner = ctx.runner_shared(fixture::STUB_MODEL).unwrap();
+    ctx.shared_cache().set_warm_dir(Some(dir.clone()));
+    let warm = ctx
+        .shared_cache()
+        .warm_file_path(&runner.warmup_cache_key(&cfg))
+        .unwrap();
+    std::fs::write(&warm, b"MIXPRECVtorn").unwrap();
+
+    let (sw, fs) = sweep_lambdas_fleet(
+        &runner,
+        &cfg,
+        &LAMBDAS,
+        "size",
+        &opts(),
+        &fleet_opts(&dir, "coord"),
+    )
+    .unwrap();
+
+    assert_eq!(sw.warmup_steps_run, cfg.warmup_steps, "torn checkpoint -> fresh warmup");
+    assert!(!sw.warmup_loaded);
+    assert_eq!(sw.warmups_persisted, 1, "entry rewritten for the workers");
+    assert_eq!(front_bits(&sw_ref), front_bits(&sw), "fallback diverged");
+    assert_same_runs(&sw_ref.runs, &sw.runs);
+    assert_eq!((fs.completed, fs.retries, fs.quarantined), (2, 0, 0));
+}
+
+/// Double-claim race: a real external worker (own context, own
+/// thread) races the coordinator for every unit. `create_new` claims
+/// guarantee each unit is claimed exactly once across participants,
+/// each result merges exactly once, and the front is identical.
+#[test]
+fn coordinator_and_worker_race_each_unit_claimed_once() {
+    let fx = Fx::new("race");
+    let cfg = quick_cfg();
+
+    let ctx_ref = fx.process();
+    let runner_ref = ctx_ref.runner_shared(fixture::STUB_MODEL).unwrap();
+    let sw_ref = sweep_lambdas(&runner_ref, &cfg, &LAMBDAS4, "size", &opts()).unwrap();
+
+    let dir = fx.fleet_dir("race");
+    let worker_fixture = fx.dir.clone();
+    let worker_dir = dir.clone();
+    let worker_cfg = cfg.clone();
+    let worker = std::thread::spawn(move || {
+        let ctx = Context::load(&worker_fixture, 0.07).expect("worker context");
+        let runner = ctx.runner_shared(fixture::STUB_MODEL).unwrap();
+        run_worker(
+            &runner,
+            &worker_cfg,
+            &LAMBDAS4,
+            "size",
+            false,
+            &fleet_opts(&worker_dir, "worker-1"),
+        )
+        .unwrap()
+    });
+
+    let ctx = fx.process();
+    let runner = ctx.runner_shared(fixture::STUB_MODEL).unwrap();
+    let mut o = opts();
+    o.workers = 2;
+    let (sw, fs) = sweep_lambdas_fleet(
+        &runner,
+        &cfg,
+        &LAMBDAS4,
+        "size",
+        &o,
+        &fleet_opts(&dir, "coord"),
+    )
+    .unwrap();
+    let wfs = worker.join().expect("worker thread");
+
+    assert_eq!(front_bits(&sw_ref), front_bits(&sw), "front diverged under the race");
+    assert_same_runs(&sw_ref.runs, &sw.runs);
+    assert_eq!(fs.completed, LAMBDAS4.len() as u64, "coordinator merged every unit");
+    assert_eq!(
+        fs.leases_claimed + wfs.leases_claimed,
+        LAMBDAS4.len() as u64,
+        "exclusive claims: every unit claimed exactly once across participants"
+    );
+    assert_eq!((fs.quarantined, wfs.quarantined), (0, 0));
+}
+
+/// A transient injected mid-run failure costs one retry (bounded
+/// backoff), then the unit completes and the output is identical.
+#[test]
+fn injected_midrun_failure_retries_and_recovers() {
+    let fx = Fx::new("retry");
+    let cfg = quick_cfg();
+
+    let ctx_ref = fx.process();
+    let runner_ref = ctx_ref.runner_shared(fixture::STUB_MODEL).unwrap();
+    let sw_ref = sweep_lambdas(&runner_ref, &cfg, &LAMBDAS, "size", &opts()).unwrap();
+
+    let dir = fx.fleet_dir("retry");
+    let ctx = fx.process();
+    let runner = ctx.runner_shared(fixture::STUB_MODEL).unwrap();
+    let mut fo = fleet_opts(&dir, "coord");
+    fo.faults = Arc::new(FaultPlan::parse("mid-run:1:fail").expect("valid fault spec"));
+
+    let (sw, fs) = sweep_lambdas_fleet(&runner, &cfg, &LAMBDAS, "size", &opts(), &fo).unwrap();
+
+    assert_eq!(front_bits(&sw_ref), front_bits(&sw), "front diverged after retry");
+    assert_same_runs(&sw_ref.runs, &sw.runs);
+    assert_eq!(fs.retries, 1, "exactly one retry");
+    assert_eq!(fs.leases_claimed, 3, "failed attempt + healthy unit + reclaim");
+    assert_eq!((fs.completed, fs.quarantined), (2, 0));
+}
+
+/// Persistent failures exhaust the attempt budget and quarantine: a
+/// hard error that lists every lost unit (counted, never silently
+/// dropped), with readable markers on disk and no bogus results.
+#[test]
+fn exhausted_retries_quarantine_with_a_listed_hard_error() {
+    let fx = Fx::new("quar");
+    let cfg = quick_cfg();
+
+    let dir = fx.fleet_dir("quar");
+    let ctx = fx.process();
+    let runner = ctx.runner_shared(fixture::STUB_MODEL).unwrap();
+    let mut fo = fleet_opts(&dir, "coord");
+    fo.max_attempts = 2;
+    fo.faults = Arc::new(FaultPlan::parse("mid-run:*:fail").expect("valid fault spec"));
+
+    let err = sweep_lambdas_fleet(&runner, &cfg, &LAMBDAS, "size", &opts(), &fo).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("2 unit(s) quarantined"), "got: {msg}");
+    assert!(msg.contains("injected mid-run failure"), "got: {msg}");
+
+    let job = enumerate_job(&runner, &cfg, &LAMBDAS, "size", false);
+    for u in &job.units {
+        let (unit_id, attempts, why) =
+            read_quarantine(&quar_path(&dir, u.id)).expect("quarantine marker");
+        assert_eq!(unit_id, u.id);
+        assert_eq!(attempts, 2, "quarantined at the attempt budget");
+        assert!(why.contains("injected mid-run failure"), "got: {why}");
+        assert!(!result_path(&dir, u.id).exists(), "no result for a quarantined unit");
+    }
+}

@@ -1,0 +1,185 @@
+//! Torn-write crash matrix at the container level (ISSUE 9
+//! satellite): every strict prefix of a valid v2 checkpoint (with
+//! extras) must fail [`load_with_extras`] with a clean error — never
+//! a panic, never partial state — and every strict prefix of a fleet
+//! result file must make [`read_result_file`] return `None`. This is
+//! the property that lets a torn warm checkpoint degrade to a fresh
+//! warmup and a torn result file degrade to a requeue.
+
+use std::path::PathBuf;
+
+use mixprec::assignment::Assignment;
+use mixprec::coordinator::checkpoint::{load_with_extras, save_with_extras_atomic};
+use mixprec::coordinator::fleet::{read_result_file, write_result_file, WorkUnit};
+use mixprec::coordinator::{PipelineConfig, Record, RunResult, Sampling, Timing};
+use mixprec::runtime::{fixture, AllocStats, TrainState, TransferStats};
+use mixprec::util::tensor::Tensor;
+
+struct Tmp(PathBuf);
+
+impl Tmp {
+    fn new(tag: &str) -> Tmp {
+        let dir = std::env::temp_dir().join(format!(
+            "mixprec_trunc_{tag}_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        Tmp(dir)
+    }
+}
+
+impl Drop for Tmp {
+    fn drop(&mut self) {
+        std::fs::remove_dir_all(&self.0).ok();
+    }
+}
+
+fn sample_state() -> TrainState {
+    let mut st = TrainState::default();
+    st.sections.insert(
+        "params".into(),
+        vec![Tensor::scalar_f32(1.5), Tensor::scalar_f32(-2.0)],
+    );
+    st.sections.insert("opt".into(), vec![Tensor::scalar_f32(0.25)]);
+    st
+}
+
+/// Every strict prefix of a v2 checkpoint-with-extras fails cleanly;
+/// only the complete file decodes. Covers the shared warm checkpoint:
+/// `try_load_warm` feeds torn files through this exact decoder.
+#[test]
+fn every_checkpoint_prefix_fails_cleanly() {
+    let tmp = Tmp::new("ckpt");
+    let path = tmp.0.join("state.ckpt");
+    let extras: Vec<(&str, Vec<u8>)> = vec![
+        ("alpha", b"abc".to_vec()),
+        ("beta", vec![0u8; 33]),
+        ("empty", Vec::new()),
+    ];
+    save_with_extras_atomic(&sample_state(), &extras, &path).unwrap();
+
+    let (st, ex) = load_with_extras(&path).expect("the complete file must load");
+    assert_eq!(st.sections.len(), 2);
+    assert_eq!(ex.len(), 3);
+    let find = |name: &str| ex.iter().find(|(n, _)| n == name).map(|(_, b)| b.clone());
+    assert_eq!(find("alpha").unwrap(), b"abc".to_vec());
+    assert_eq!(find("beta").unwrap().len(), 33);
+    assert_eq!(find("empty").unwrap(), Vec::<u8>::new());
+
+    let full = std::fs::read(&path).unwrap();
+    assert!(full.len() > 64, "fixture file should be non-trivial");
+    let torn = tmp.0.join("torn.ckpt");
+    for cut in 0..full.len() {
+        std::fs::write(&torn, &full[..cut]).unwrap();
+        assert!(
+            load_with_extras(&torn).is_err(),
+            "prefix of {cut}/{} bytes decoded as a complete checkpoint",
+            full.len()
+        );
+    }
+}
+
+fn sample_run() -> RunResult {
+    RunResult {
+        model: fixture::STUB_MODEL.to_string(),
+        reg: "size".to_string(),
+        lambda: 0.5,
+        sampling: Sampling::Gumbel,
+        val_acc: 0.875,
+        test_acc: 0.8125,
+        assignment: Assignment {
+            gamma_bits: vec![vec![8, 4, 0], vec![2]],
+            delta_bits: vec![8, 4],
+        },
+        size_kb: 12.5,
+        mpic_cycles: 1.0e6,
+        ne16_cycles: 2.0e5,
+        bitops: 3.5e9,
+        // a NaN cost rides in the warmup record on purpose: the
+        // roundtrip must preserve it bitwise, not normalize it
+        history: vec![
+            Record { phase: "warmup", step: 1, loss: 2.5, acc: 0.25, cost: f32::NAN },
+            Record { phase: "search", step: 2, loss: 1.25, acc: 0.5, cost: 42.0 },
+            Record { phase: "finetune", step: 3, loss: 0.75, acc: 0.875, cost: 41.0 },
+        ],
+        timing: Timing { warmup_s: 1.0, search_s: 2.0, finetune_s: 0.5 },
+        steps_run: 30,
+        transfer: TransferStats { h2d_bytes: 1, d2h_bytes: 2, h2d_tensors: 3, d2h_tensors: 4 },
+        alloc: AllocStats {
+            donated: 5,
+            pooled: 6,
+            allocated: 7,
+            fallback_pinned: 8,
+            fallback_aliased: 9,
+        },
+    }
+}
+
+/// A fleet result file roundtrips bitwise; every strict prefix fails
+/// the container decode AND reads back as `None` (the merge loop's
+/// requeue path), and garbage bytes read as `None` too.
+#[test]
+fn every_result_file_prefix_reads_as_none() {
+    let tmp = Tmp::new("result");
+    let unit = WorkUnit {
+        id: 0xfeed_beef_dead_cafe,
+        label: "sweep".to_string(),
+        index: 0,
+        lambda: 0.5,
+        cfg: PipelineConfig::quick(fixture::STUB_MODEL),
+    };
+    let run = sample_run();
+    let path = tmp.0.join("result.ckpt");
+    write_result_file(&path, 0x1234_5678, &unit, "owner-a", &run).unwrap();
+
+    let (meta, back) = read_result_file(&path).expect("the complete file must decode");
+    assert_eq!((meta.unit_id, meta.job_fp), (unit.id, 0x1234_5678));
+    assert_eq!(meta.owner, "owner-a");
+    assert_eq!(meta.label, "sweep");
+    assert_eq!(meta.index, 0);
+    assert_eq!(meta.lambda_bits, unit.lambda.to_bits());
+    assert_eq!(back.model, run.model);
+    assert_eq!(back.reg, run.reg);
+    assert_eq!(back.lambda.to_bits(), run.lambda.to_bits());
+    assert_eq!(back.sampling, run.sampling);
+    assert_eq!(back.val_acc.to_bits(), run.val_acc.to_bits());
+    assert_eq!(back.test_acc.to_bits(), run.test_acc.to_bits());
+    assert_eq!(back.assignment, run.assignment);
+    assert_eq!(back.size_kb.to_bits(), run.size_kb.to_bits());
+    assert_eq!(back.mpic_cycles.to_bits(), run.mpic_cycles.to_bits());
+    assert_eq!(back.ne16_cycles.to_bits(), run.ne16_cycles.to_bits());
+    assert_eq!(back.bitops.to_bits(), run.bitops.to_bits());
+    assert_eq!(back.steps_run, run.steps_run);
+    assert_eq!(back.history.len(), run.history.len());
+    for (a, b) in back.history.iter().zip(&run.history) {
+        assert_eq!((a.phase, a.step), (b.phase, b.step));
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+        assert_eq!(a.acc.to_bits(), b.acc.to_bits());
+        assert_eq!(a.cost.to_bits(), b.cost.to_bits(), "NaN cost must roundtrip bitwise");
+    }
+    assert_eq!(back.timing.warmup_s.to_bits(), run.timing.warmup_s.to_bits());
+    assert_eq!(back.timing.search_s.to_bits(), run.timing.search_s.to_bits());
+    assert_eq!(back.timing.finetune_s.to_bits(), run.timing.finetune_s.to_bits());
+    assert_eq!(back.transfer, run.transfer);
+    assert_eq!(back.alloc, run.alloc);
+
+    let full = std::fs::read(&path).unwrap();
+    let torn = tmp.0.join("torn.ckpt");
+    for cut in 0..full.len() {
+        std::fs::write(&torn, &full[..cut]).unwrap();
+        assert!(
+            load_with_extras(&torn).is_err(),
+            "prefix of {cut}/{} bytes decoded as a complete container",
+            full.len()
+        );
+        assert!(
+            read_result_file(&torn).is_none(),
+            "prefix of {cut}/{} bytes produced a result",
+            full.len()
+        );
+    }
+
+    // garbage and foreign bytes degrade to None the same way
+    std::fs::write(&torn, b"complete garbage, definitely not a checkpoint").unwrap();
+    assert!(read_result_file(&torn).is_none());
+}

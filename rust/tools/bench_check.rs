@@ -372,6 +372,53 @@ const RULES: &[Rule] = &[
         tol: 0.0,
         env: None,
     },
+    // fleet leg: every unit completes, claims sum to the unit count
+    // (exactly-once across the coordinator/worker race — the split
+    // itself is nondeterministic and not gated), the healthy path
+    // never retries or quarantines, and the merged front is bitwise
+    // identical to the single-process sweep
+    Rule {
+        bench: "sweep_fork",
+        path: &["fleet", "units"],
+        dir: Dir::Exact,
+        tol: 0.0,
+        env: None,
+    },
+    Rule {
+        bench: "sweep_fork",
+        path: &["fleet", "completed"],
+        dir: Dir::Exact,
+        tol: 0.0,
+        env: None,
+    },
+    Rule {
+        bench: "sweep_fork",
+        path: &["fleet", "claims_total"],
+        dir: Dir::Exact,
+        tol: 0.0,
+        env: None,
+    },
+    Rule {
+        bench: "sweep_fork",
+        path: &["fleet", "retries"],
+        dir: Dir::Exact,
+        tol: 0.0,
+        env: None,
+    },
+    Rule {
+        bench: "sweep_fork",
+        path: &["fleet", "quarantined"],
+        dir: Dir::Exact,
+        tol: 0.0,
+        env: None,
+    },
+    Rule {
+        bench: "sweep_fork",
+        path: &["fleet", "fronts_equal"],
+        dir: Dir::Exact,
+        tol: 0.0,
+        env: None,
+    },
 ];
 
 const DEFAULT_BENCHES: [&str; 2] = ["step_marshal", "sweep_fork"];
