@@ -14,9 +14,12 @@
 //! warmup steps with a bitwise-identical front, a compare under a
 //! deliberately tiny cache byte budget evicts + rebuilds entries while
 //! keeping the front bitwise identical and the retained gauge capped,
-//! and a lease-based fleet (coordinator + one external worker over a
+//! a lease-based fleet (coordinator + one external worker over a
 //! shared job directory) completes every unit exactly once with a
-//! bitwise-identical front.
+//! bitwise-identical front, and an `edge-dsp`-driven sweep (external
+//! regularizer driver: host-side soft-cost gradients uploaded per
+//! step) matches the size-driven sweep under its own target while
+//! every soft eval pairs with exactly one gradient upload.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -24,8 +27,10 @@ use std::time::{Duration, Instant};
 use mixprec::baselines::compare_methods;
 use mixprec::coordinator::{
     default_lambdas, run_worker, sweep_lambdas, sweep_lambdas_fleet, Context, EvalBufs,
-    FaultPlan, FleetOptions, FleetStats, MaskBufs, SweepMode, SweepOptions, SweepResult,
+    FaultPlan, FleetOptions, FleetStats, MaskBufs, RegDriverKind, SweepMode, SweepOptions,
+    SweepResult,
 };
+use mixprec::cost::{CostRegistry, Normalizer};
 use mixprec::data::Split;
 use mixprec::report::benchkit::{self, BenchScale};
 use mixprec::runtime::{fixture, DeviceState, StepFn, TransferStats};
@@ -445,6 +450,62 @@ fn run() -> mixprec::Result<()> {
         points_per_target
     );
 
+    // ---- external regularizer driver: descriptor-driven search ------
+    // the same 2-lambda sweep, once under the builtin artifact driver
+    // (`size`) and once driven by the `edge-dsp` LUT through host-side
+    // soft-cost gradients. The `// STUB:` search program ignores the
+    // regularizer input entirely, so both sweeps walk identical theta
+    // trajectories — the leg isolates the driver overhead and gates the
+    // external plumbing (one upload per soft eval, live ext_cost,
+    // per-lambda front parity under the target) without depending on
+    // stub search dynamics.
+    let ex_ctx = Context::load(&dir, scale.data_frac)?;
+    ex_ctx.shared_cache().set_budget_bytes(0);
+    let models = Arc::new(CostRegistry::zoo());
+    let runner_ex = ex_ctx
+        .runner_shared(fixture::STUB_MODEL)?
+        .with_cost_models(models.clone());
+    let ex_lambdas = default_lambdas(2);
+    let t0 = Instant::now();
+    let sw_ext = sweep_lambdas(&runner_ex, &cfg, &ex_lambdas, "edge-dsp", &sh_opts)?;
+    let ext_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let sw_szd = sweep_lambdas(&runner_ex, &cfg, &ex_lambdas, "size", &sh_opts)?;
+    let szd_s = t0.elapsed().as_secs_f64();
+    assert_eq!(sw_ext.reg_driver(), RegDriverKind::External);
+    assert_eq!(sw_szd.reg_driver(), RegDriverKind::Artifact);
+    let grads_match_evals = sw_ext.grad_uploads() == sw_ext.soft_evals();
+    assert!(grads_match_evals, "every soft eval must upload exactly one gradient");
+    assert!(sw_ext.grad_uploads() > 0, "external driver uploaded no gradients");
+    let ex_steps: u64 = sw_ext.runs.iter().map(|r| r.steps_run as u64).sum();
+    assert!(sw_ext.grad_uploads() <= ex_steps, "more gradient uploads than steps");
+    let artifact_counters_zero = sw_szd.grad_uploads() == 0 && sw_szd.soft_evals() == 0;
+    assert!(artifact_counters_zero, "artifact driver moved external counters");
+    let ext_cost_live = sw_ext.runs.iter().all(|r| r.ext_cost.is_finite())
+        && sw_szd.runs.iter().all(|r| r.ext_cost.is_nan());
+    assert!(ext_cost_live, "ext_cost must be live under External, NaN under Artifact");
+    // per-lambda parity under the edge-dsp target: the tailored search
+    // must match or beat the size-driven one (on the stub: match)
+    let ex_graph = ex_ctx.graph(fixture::STUB_MODEL);
+    let target = models.get("edge-dsp").expect("edge-dsp in zoo");
+    let norm = Normalizer::new(target, ex_graph);
+    let front_matches_size = sw_ext.runs.iter().zip(&sw_szd.runs).all(|(a, b)| {
+        norm.normalized(ex_graph, &a.assignment)
+            <= norm.normalized(ex_graph, &b.assignment) + 1e-9
+            && a.val_acc >= b.val_acc - 1e-9
+    });
+    assert!(
+        front_matches_size,
+        "edge-dsp-driven front lost to the size-driven one under its own target"
+    );
+    println!(
+        "extgrad: external(edge-dsp) {ext_s:6.2}s ({} grad uploads over {} runs) | \
+         artifact(size) {szd_s:6.2}s ({:.2}x overhead)",
+        sw_ext.grad_uploads(),
+        sw_ext.runs.len(),
+        ext_s / szd_s.max(1e-12)
+    );
+
     let mut o = JsonObj::new();
     o.insert("bench", Json::Str("sweep_fork".into()));
     o.insert("mode", Json::Str("stub".into()));
@@ -530,6 +591,21 @@ fn run() -> mixprec::Result<()> {
     fl.insert("fronts_equal", Json::Bool(fleet_fronts_equal));
     fl.insert("seconds", Json::Num(fleet_s));
     o.insert("fleet", Json::Obj(fl));
+    let mut ex = JsonObj::new();
+    ex.insert("lambdas", Json::Num(ex_lambdas.len() as f64));
+    ex.insert("grad_uploads", Json::Num(sw_ext.grad_uploads() as f64));
+    ex.insert("soft_evals", Json::Num(sw_ext.soft_evals() as f64));
+    ex.insert("grads_match_evals", Json::Bool(grads_match_evals));
+    ex.insert("artifact_counters_zero", Json::Bool(artifact_counters_zero));
+    ex.insert("ext_cost_live", Json::Bool(ext_cost_live));
+    ex.insert(
+        "front_matches_size_under_target",
+        Json::Bool(front_matches_size),
+    );
+    ex.insert("seconds_external", Json::Num(ext_s));
+    ex.insert("seconds_artifact", Json::Num(szd_s));
+    ex.insert("overhead_vs_artifact", Json::Num(ext_s / szd_s.max(1e-12)));
+    o.insert("extgrad", Json::Obj(ex));
     benchkit::write_bench_json("sweep_fork", &Json::Obj(o))?;
     std::fs::remove_dir_all(&dir).ok();
     Ok(())

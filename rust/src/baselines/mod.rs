@@ -11,7 +11,7 @@
 use std::time::Instant;
 
 use crate::assignment::PrecisionMasks;
-use crate::coordinator::phases::{PipelineConfig, RunResult, Runner};
+use crate::coordinator::phases::{PipelineConfig, RegDriverKind, RunResult, Runner};
 use crate::coordinator::sweep::{sweep_lambdas, SweepOptions, SweepResult};
 use crate::cost::{score_atlas, Atlas, AtlasPoint, CostRegistry};
 use crate::error::Result;
@@ -132,6 +132,30 @@ pub struct CompareResult {
 }
 
 impl CompareResult {
+    /// Regularizer driver the comparison's method sweeps used
+    /// (uniform by construction: every method shares `base.reg`);
+    /// `Artifact` when nothing ran.
+    pub fn reg_driver(&self) -> RegDriverKind {
+        self.sweeps
+            .first()
+            .map(|(_, sw)| sw.reg_driver())
+            .unwrap_or(RegDriverKind::Artifact)
+    }
+
+    /// Host-side `soft_eval` calls across every method sweep and fixed
+    /// baseline (0 under the artifact driver).
+    pub fn soft_evals(&self) -> u64 {
+        self.sweeps.iter().map(|(_, sw)| sw.soft_evals()).sum::<u64>()
+            + self.fixed.iter().map(|r| r.soft_evals).sum::<u64>()
+    }
+
+    /// External-gradient tensors uploaded as step inputs across every
+    /// method sweep and fixed baseline (0 under the artifact driver).
+    pub fn grad_uploads(&self) -> u64 {
+        self.sweeps.iter().map(|(_, sw)| sw.grad_uploads()).sum::<u64>()
+            + self.fixed.iter().map(|r| r.grad_uploads).sum::<u64>()
+    }
+
     /// Re-score every searched point of the comparison — all method
     /// sweep runs plus the fixed wNa8 references — across `models`
     /// (every model in `reg` when empty): one Pareto front per
@@ -308,7 +332,13 @@ pub fn sequential_pit_mixprec(
     // uploads, so neither pool of a shared cache may subsidize its
     // measured wall-clock. Strip the cache entirely (the warmup
     // opt-out below is then redundant but kept explicit).
-    let runner = &Runner::new(runner.eng, runner.man, runner.mm, runner.graph, runner.data);
+    let mut fresh = Runner::new(runner.eng, runner.man, runner.mm, runner.graph, runner.data);
+    // ... but keep the cost-model registry: a descriptor-driven `--reg`
+    // must resolve identically, cache or no cache.
+    if let Some(models) = &runner.cost_models {
+        fresh = fresh.with_cost_models(models.clone());
+    }
+    let runner = &fresh;
     let mut opts = opts.clone();
     opts.share_warmup = false;
     let opts = &opts;

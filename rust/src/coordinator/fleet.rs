@@ -68,8 +68,8 @@ use crate::assignment::Assignment;
 use crate::baselines::{fixed_baselines, CompareResult, COMPARE_METHODS};
 use crate::coordinator::checkpoint::{self, wire};
 use crate::coordinator::phases::{
-    phase_from_tag, phase_tag, PipelineConfig, Record, RunResult, Runner, Sampling, Timing,
-    WarmStart,
+    phase_from_tag, phase_tag, PipelineConfig, Record, RegDriverKind, RunResult, Runner,
+    Sampling, Timing, WarmStart,
 };
 use crate::coordinator::sweep::{SweepMode, SweepOptions, SweepResult};
 use crate::error::{Error, Result};
@@ -826,6 +826,21 @@ fn sampling_from_tag(tag: u8) -> Option<Sampling> {
     }
 }
 
+fn reg_driver_tag(d: RegDriverKind) -> u8 {
+    match d {
+        RegDriverKind::Artifact => 0,
+        RegDriverKind::External => 1,
+    }
+}
+
+fn reg_driver_from_tag(tag: u8) -> Option<RegDriverKind> {
+    match tag {
+        0 => Some(RegDriverKind::Artifact),
+        1 => Some(RegDriverKind::External),
+        _ => None,
+    }
+}
+
 /// Identity block of a result file.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct UnitMeta {
@@ -863,12 +878,21 @@ pub fn write_result_file(
     wire::put_bytes(&mut run_b, res.reg.as_bytes());
     wire::put_u32(&mut run_b, res.lambda.to_bits());
     wire::put_u8(&mut run_b, sampling_tag(res.sampling));
-    for v in
-        [res.val_acc, res.test_acc, res.size_kb, res.mpic_cycles, res.ne16_cycles, res.bitops]
-    {
+    for v in [
+        res.val_acc,
+        res.test_acc,
+        res.size_kb,
+        res.mpic_cycles,
+        res.ne16_cycles,
+        res.bitops,
+        res.ext_cost,
+    ] {
         wire::put_u64(&mut run_b, v.to_bits());
     }
     wire::put_u64(&mut run_b, res.steps_run as u64);
+    wire::put_u8(&mut run_b, reg_driver_tag(res.reg_driver));
+    wire::put_u64(&mut run_b, res.soft_evals);
+    wire::put_u64(&mut run_b, res.grad_uploads);
 
     let mut asg_b = Vec::with_capacity(64);
     wire::put_u64(&mut asg_b, res.assignment.gamma_bits.len() as u64);
@@ -972,7 +996,11 @@ pub fn read_result_file(path: &Path) -> Option<(UnitMeta, RunResult)> {
     let mpic_cycles = f64::from_bits(rd.u64()?);
     let ne16_cycles = f64::from_bits(rd.u64()?);
     let bitops = f64::from_bits(rd.u64()?);
+    let ext_cost = f64::from_bits(rd.u64()?);
     let steps_run = usize::try_from(rd.u64()?).ok()?;
+    let reg_driver = reg_driver_from_tag(rd.u8()?)?;
+    let soft_evals = rd.u64()?;
+    let grad_uploads = rd.u64()?;
     if !rd.done() {
         return None;
     }
@@ -1050,6 +1078,7 @@ pub fn read_result_file(path: &Path) -> Option<(UnitMeta, RunResult)> {
         RunResult {
             model,
             reg,
+            reg_driver,
             lambda,
             sampling,
             val_acc,
@@ -1059,9 +1088,12 @@ pub fn read_result_file(path: &Path) -> Option<(UnitMeta, RunResult)> {
             mpic_cycles,
             ne16_cycles,
             bitops,
+            ext_cost,
             history,
             timing,
             steps_run,
+            soft_evals,
+            grad_uploads,
             transfer,
             alloc,
         },

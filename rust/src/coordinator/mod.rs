@@ -17,8 +17,8 @@ pub use fleet::{
 };
 pub use pareto::{ParetoFront, Point};
 pub use phases::{
-    EvalBufs, MaskBufs, PipelineConfig, Record, RunResult, Runner, Sampling, Timing,
-    WarmStart,
+    EvalBufs, MaskBufs, PipelineConfig, Record, RegDriver, RegDriverKind, RunResult, Runner,
+    Sampling, Timing, WarmStart,
 };
 pub use schedule::{EarlyStop, ExpDecay, TempSchedule};
 pub use sweep::{

@@ -37,7 +37,9 @@ use std::time::Instant;
 use crate::assignment::{self, Assignment, PrecisionMasks, ResolvedLeaves};
 use crate::coordinator::checkpoint::{self, wire};
 use crate::coordinator::schedule::{EarlyStop, ExpDecay, TempSchedule};
-use crate::cost::{BitOps, CostModel, Mpic, Ne16, Size};
+use crate::cost::{
+    BitOps, CostModel, CostRegistry, Mpic, Ne16, SharedModel, Size, SoftAssignment,
+};
 use crate::data::{BatchIter, BatchIterState, DataSet, Split};
 use crate::error::{Error, Result};
 use crate::graph::ModelGraph;
@@ -84,6 +86,52 @@ impl Sampling {
             Sampling::Softmax => "SM",
             Sampling::Argmax => "AM",
             Sampling::Gumbel => "HGSM",
+        }
+    }
+}
+
+/// How the search regularizer is driven (the seam the open cost-model
+/// zoo plugs into).
+///
+/// * [`RegDriver::Artifact`] — one of the builtin four (`size`,
+///   `bitops`, `mpic`, `ne16`): the cost and its gradient are computed
+///   *on device* by the dedicated `search_<name>` artifact. This path
+///   is bitwise identical to the pre-seam pipeline and stays gated by
+///   the existing sweep/fleet/shared-cache suites.
+/// * [`RegDriver::External`] — any other registered model (descriptor
+///   families, plugins): each search step mirrors theta host-side,
+///   evaluates [`CostModel::soft_eval`] on the softmax probabilities,
+///   chains the softmax Jacobian, and uploads the per-entry theta
+///   gradient as the extra input of the generic `search_extgrad`
+///   artifact. Sampling modes reuse the softmax probabilities for the
+///   host gradient (straight-through, like the device regularizers).
+pub enum RegDriver {
+    Artifact(String),
+    External(SharedModel),
+}
+
+impl RegDriver {
+    pub fn kind(&self) -> RegDriverKind {
+        match self {
+            RegDriver::Artifact(_) => RegDriverKind::Artifact,
+            RegDriver::External(_) => RegDriverKind::External,
+        }
+    }
+}
+
+/// The driver choice without the model handle — what results and
+/// reports carry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RegDriverKind {
+    Artifact,
+    External,
+}
+
+impl RegDriverKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RegDriverKind::Artifact => "artifact",
+            RegDriverKind::External => "external",
         }
     }
 }
@@ -221,16 +269,35 @@ pub struct RunResult {
     /// steps (state leaves donated in place, outputs pooled, fresh
     /// allocations, and both donation-fallback kinds).
     pub alloc: AllocStats,
+    /// How the search regularizer was driven (artifact vs external).
+    pub reg_driver: RegDriverKind,
+    /// External driver only: host-side `soft_eval` calls during the
+    /// search phase (0 under the artifact driver).
+    pub soft_evals: u64,
+    /// External driver only: per-step theta-gradient uploads through
+    /// the `search_extgrad` input (0 under the artifact driver; the
+    /// finetune phase's inert zero uploads are not counted).
+    pub grad_uploads: u64,
+    /// External driver only: the final assignment's *discrete* cost
+    /// under the driving model, in that model's native unit (NaN under
+    /// the artifact driver). This is what `cost_of` reports for metric
+    /// names outside the builtin four, so Pareto fronts work for
+    /// descriptor-driven sweeps.
+    pub ext_cost: f64,
 }
 
 impl RunResult {
-    /// Cost under the named metric (for Pareto fronts).
+    /// Cost under the named metric (for Pareto fronts). The builtin
+    /// four read the always-computed exact costs; any other name
+    /// reports [`RunResult::ext_cost`] — the driving external model's
+    /// cost (NaN when the run was not driven by that model).
     pub fn cost_of(&self, metric: &str) -> f64 {
         match metric {
             "size" => self.size_kb,
             "mpic" => self.mpic_cycles,
             "ne16" => self.ne16_cycles,
             "bitops" => self.bitops,
+            _ if metric == self.reg => self.ext_cost,
             _ => f64::NAN,
         }
     }
@@ -646,10 +713,16 @@ struct WarmupFingerprint {
     /// train samples, so a fork through a differently-scaled dataset
     /// (`data_frac`) must be rejected, not silently wrapped via `% n`.
     n_train: usize,
+    /// Regularizer-driver identity: 0 for every artifact-driven
+    /// (builtin) regularizer — they share warmups exactly as before —
+    /// and a content hash of the resolved external model otherwise, so
+    /// two descriptors sharing a `--reg` name never share cached
+    /// search state (warm pool, warm files, fleet work units).
+    reg_fp: u64,
 }
 
 impl WarmupFingerprint {
-    fn of(cfg: &PipelineConfig, n_train: usize) -> Self {
+    fn of(cfg: &PipelineConfig, n_train: usize, reg_fp: u64) -> Self {
         WarmupFingerprint {
             model: cfg.model.clone(),
             seed: cfg.seed,
@@ -660,6 +733,7 @@ impl WarmupFingerprint {
             lr_decay_bits: cfg.lr_decay.to_bits(),
             host_resident: cfg.host_resident,
             n_train,
+            reg_fp,
         }
     }
 
@@ -680,6 +754,7 @@ impl WarmupFingerprint {
         wire::put_u32(&mut b, self.lr_decay_bits);
         wire::put_u8(&mut b, self.host_resident as u8);
         wire::put_u64(&mut b, self.n_train as u64);
+        wire::put_u64(&mut b, self.reg_fp);
         b
     }
 
@@ -698,6 +773,7 @@ impl WarmupFingerprint {
             lr_decay_bits: rd.u32()?,
             host_resident: rd.u8()? != 0,
             n_train: usize::try_from(rd.u64()?).ok()?,
+            reg_fp: rd.u64()?,
         })
     }
 
@@ -725,6 +801,11 @@ pub struct Runner<'a> {
     /// warm pool usable while every run uploads its own splits — the
     /// two sharing knobs stay independent.
     pub share_eval: bool,
+    /// Cost-model registry the External reg driver resolves against
+    /// (includes `--hw-descriptor` plugins). `None` falls back to the
+    /// committed zoo, so library callers get `edge-dsp`/`roofline`
+    /// without wiring a registry.
+    pub cost_models: Option<Arc<CostRegistry>>,
 }
 
 impl<'a> Runner<'a> {
@@ -743,6 +824,7 @@ impl<'a> Runner<'a> {
             data,
             cache: None,
             share_eval: true,
+            cost_models: None,
         }
     }
 
@@ -761,6 +843,48 @@ impl<'a> Runner<'a> {
     pub fn with_eval_sharing(mut self, share_eval: bool) -> Self {
         self.share_eval = share_eval;
         self
+    }
+
+    /// Attach the cost-model registry the External reg driver resolves
+    /// `--reg` against (the CLI builds one per process, descriptor
+    /// plugins included).
+    pub fn with_cost_models(mut self, models: Arc<CostRegistry>) -> Self {
+        self.cost_models = Some(models);
+        self
+    }
+
+    /// Resolve `cfg.reg` to its driver: the builtin four keep their
+    /// dedicated on-device `search_<name>` artifacts (bitwise identical
+    /// to the pre-seam pipeline); every other registered name runs
+    /// through the generic `search_extgrad` artifact with host-side
+    /// gradients. Unknown names error with the registered-name list.
+    pub fn reg_driver(&self, cfg: &PipelineConfig) -> Result<RegDriver> {
+        if matches!(cfg.reg.as_str(), "size" | "bitops" | "mpic" | "ne16") {
+            return Ok(RegDriver::Artifact(cfg.reg.clone()));
+        }
+        let model = match &self.cost_models {
+            Some(reg) => reg.resolve(&cfg.reg)?,
+            None => crate::cost::resolve(&cfg.reg)?,
+        };
+        Ok(RegDriver::External(model))
+    }
+
+    /// Regularizer-driver fingerprint for warm/fleet identity: 0 for
+    /// every artifact driver (builtin warmups keep sharing exactly as
+    /// before), a hash of the reg name + the resolved model's content
+    /// fingerprint for the External driver. An unresolvable name
+    /// hashes the name alone — the real error surfaces at `warmup`.
+    fn reg_fp(&self, cfg: &PipelineConfig) -> u64 {
+        match self.reg_driver(cfg) {
+            Ok(RegDriver::Artifact(_)) => 0,
+            Ok(RegDriver::External(m)) => {
+                let mut b = b"external:".to_vec();
+                b.extend_from_slice(cfg.reg.as_bytes());
+                b.extend_from_slice(&m.fingerprint().to_le_bytes());
+                crate::util::fnv1a(&b)
+            }
+            Err(_) => crate::util::fnv1a(cfg.reg.as_bytes()),
+        }
     }
 
     /// Eval buffers for one run: shared-cache-backed when a cache is
@@ -788,7 +912,7 @@ impl<'a> Runner<'a> {
     pub fn warmup_cache_key(&self, cfg: &PipelineConfig) -> String {
         format!(
             "{:016x}-{:016x}",
-            WarmupFingerprint::of(cfg, self.data.cfg.n_train).fnv(),
+            WarmupFingerprint::of(cfg, self.data.cfg.n_train, self.reg_fp(cfg)).fnv(),
             self.data.cfg.fingerprint()
         )
     }
@@ -799,7 +923,7 @@ impl<'a> Runner<'a> {
     /// fresh warmup (the cross-process analog of `run_from`'s
     /// per-fork validation).
     pub fn try_load_warm(&self, path: &Path, cfg: &PipelineConfig) -> Option<WarmStart> {
-        let expect = WarmupFingerprint::of(cfg, self.data.cfg.n_train);
+        let expect = WarmupFingerprint::of(cfg, self.data.cfg.n_train, self.reg_fp(cfg));
         WarmStart::try_load(self.eng, path, &expect, self.data.cfg.fingerprint())
     }
 
@@ -961,9 +1085,17 @@ impl<'a> Runner<'a> {
     pub fn warmup(&self, cfg: &PipelineConfig) -> Result<WarmStart> {
         // fail fast on a bad config *before* spending the warmup
         // phase: the search/eval artifacts are only bound in
-        // `run_from`, but their absence (e.g. a --reg typo) must not
-        // surface after hundreds of device steps
-        self.mm.artifact(&format!("search_{}", cfg.reg))?;
+        // `run_from`, but their absence must not surface after
+        // hundreds of device steps (an unknown --reg name errors here
+        // too, listing the registered models)
+        match self.reg_driver(cfg)? {
+            RegDriver::Artifact(name) => {
+                self.mm.artifact(&format!("search_{name}"))?;
+            }
+            RegDriver::External(_) => {
+                self.mm.artifact("search_extgrad")?;
+            }
+        }
         self.mm.artifact("eval")?;
         let mut rng = Pcg64::new(cfg.seed);
         let mut state = DeviceState::init(self.eng, self.man, self.mm, cfg.seed as i32)?;
@@ -1024,7 +1156,7 @@ impl<'a> Runner<'a> {
             steps_run,
             transfer: state.stats,
             alloc: state.alloc,
-            fingerprint: WarmupFingerprint::of(cfg, self.data.cfg.n_train),
+            fingerprint: WarmupFingerprint::of(cfg, self.data.cfg.n_train, self.reg_fp(cfg)),
         })
     }
 
@@ -1050,7 +1182,7 @@ impl<'a> Runner<'a> {
     /// Warmup wall-clock / step / transfer accounting stays with the
     /// `WarmStart` (only its history records are carried over).
     pub fn run_from(&self, ws: &WarmStart, cfg: &PipelineConfig) -> Result<RunResult> {
-        let fp = WarmupFingerprint::of(cfg, self.data.cfg.n_train);
+        let fp = WarmupFingerprint::of(cfg, self.data.cfg.n_train, self.reg_fp(cfg));
         if fp != ws.fingerprint {
             return Err(Error::Config(format!(
                 "run_from: config warmup fingerprint {fp:?} does not match the \
@@ -1061,7 +1193,13 @@ impl<'a> Runner<'a> {
         let mut rng = ws.rng.clone();
         let mut train_iter = ws.train_iter.clone();
         let mut state = DeviceState::from_snapshot(&ws.snap);
-        let search = StepFn::bind(self.eng, self.man, self.mm, &format!("search_{}", cfg.reg))?;
+        let driver = self.reg_driver(cfg)?;
+        let search = match &driver {
+            RegDriver::Artifact(name) => {
+                StepFn::bind(self.eng, self.man, self.mm, &format!("search_{name}"))?
+            }
+            RegDriver::External(_) => StepFn::bind(self.eng, self.man, self.mm, "search_extgrad")?,
+        };
         let eval = StepFn::bind(self.eng, self.man, self.mm, "eval")?;
         // host_resident is the seed-faithful bench baseline: it must
         // keep the seed's per-batch eval traffic, not the batched path
@@ -1082,6 +1220,16 @@ impl<'a> Runner<'a> {
         let mut timing = Timing::default();
         let mut steps_run = 0usize;
         let batch = self.mm.batch;
+        // External driver: the resolved model with its w8a8 reference
+        // memoized once, plus the inert zero gradient the finetune
+        // phase feeds the fixed artifact signature.
+        let ext = match &driver {
+            RegDriver::External(model) => Some(ExternalReg::new(model.clone(), self.graph)),
+            RegDriver::Artifact(_) => None,
+        };
+        let mut soft_evals = 0u64;
+        let mut grad_uploads = 0u64;
+        let mut last_soft_cost = f32::NAN;
 
         // ---- phase 2: joint search --------------------------------------
         // Eq. 12 weight rescaling against the initial gamma
@@ -1120,24 +1268,39 @@ impl<'a> Runner<'a> {
             let tau_t = Tensor::scalar_f32(tau);
             let key_t = Tensor::scalar_i32(rng.next_u64() as i32);
             let t_t = Tensor::scalar_f32((step + 1) as f32);
-            let m = search.step_device(
-                self.eng,
-                &mut state,
-                &[
-                    StepArg::Host(&x),
-                    StepArg::Host(&y),
-                    StepArg::Host(&lr_w_t),
-                    StepArg::Host(&lr_th_t),
-                    StepArg::Host(&tau_t),
-                    StepArg::Host(&lambda_t),
-                    StepArg::Host(&hard_t),
-                    StepArg::Host(&noise_t),
-                    StepArg::Host(&key_t),
-                    StepArg::Host(&t_t),
-                    StepArg::Device(&mask_bufs.pw),
-                    StepArg::Device(&mask_bufs.px),
-                ],
-            )?;
+            // External driver: mirror theta host-side, evaluate the
+            // model's soft surface on this step's softmax
+            // probabilities, and upload the chained theta gradient as
+            // the extra artifact input (the device applies it with the
+            // same lr_th * lambda scaling as its built-in regularizers).
+            let ext_grad_t = match &ext {
+                Some(e) => {
+                    let (c, t) = e.theta_grad(self.graph, &mut state, &leaves, &cfg.masks, tau)?;
+                    soft_evals += 1;
+                    grad_uploads += 1;
+                    last_soft_cost = c;
+                    Some(t)
+                }
+                None => None,
+            };
+            let mut args = vec![
+                StepArg::Host(&x),
+                StepArg::Host(&y),
+                StepArg::Host(&lr_w_t),
+                StepArg::Host(&lr_th_t),
+                StepArg::Host(&tau_t),
+                StepArg::Host(&lambda_t),
+                StepArg::Host(&hard_t),
+                StepArg::Host(&noise_t),
+                StepArg::Host(&key_t),
+                StepArg::Host(&t_t),
+                StepArg::Device(&mask_bufs.pw),
+                StepArg::Device(&mask_bufs.px),
+            ];
+            if let Some(t) = ext_grad_t.as_ref() {
+                args.push(StepArg::Host(t));
+            }
+            let m = search.step_device(self.eng, &mut state, &args)?;
             steps_run += 1;
             if cfg.host_resident {
                 state.force_host_roundtrip()?;
@@ -1161,12 +1324,20 @@ impl<'a> Runner<'a> {
                     tau,
                     cfg,
                 )?;
+                // external runs report the host-computed normalized
+                // soft cost — the device metric slot belongs to the
+                // builtin regularizers
+                let cost_rec = if ext.is_some() {
+                    last_soft_cost
+                } else {
+                    m.get("cost")
+                };
                 history.push(Record {
                     phase: "search",
                     step,
                     loss: vl as f32,
                     acc: va as f32,
-                    cost: m.get("cost"),
+                    cost: cost_rec,
                 });
                 if cfg.verbose {
                     println!(
@@ -1174,7 +1345,7 @@ impl<'a> Runner<'a> {
                         cfg.model,
                         m.get("loss"),
                         va,
-                        m.get("cost")
+                        cost_rec
                     );
                 }
                 if va as f32 >= es.best() {
@@ -1223,24 +1394,27 @@ impl<'a> Runner<'a> {
             let epoch = step / cfg.steps_per_epoch;
             let lr_w_t = Tensor::scalar_f32(slr_w.at(epoch) * 0.5);
             let t_t = Tensor::scalar_f32((step + 1) as f32);
-            let m = search.step_device(
-                self.eng,
-                &mut state,
-                &[
-                    StepArg::Host(&x),
-                    StepArg::Host(&y),
-                    StepArg::Host(&lr_w_t),
-                    StepArg::Host(&ft_lr_th),
-                    StepArg::Host(&ft_tau),
-                    StepArg::Host(&ft_lambda),
-                    StepArg::Host(&ft_hard),
-                    StepArg::Host(&ft_noise),
-                    StepArg::Host(&ft_key),
-                    StepArg::Host(&t_t),
-                    StepArg::Device(&mask_bufs.pw),
-                    StepArg::Device(&mask_bufs.px),
-                ],
-            )?;
+            let mut args = vec![
+                StepArg::Host(&x),
+                StepArg::Host(&y),
+                StepArg::Host(&lr_w_t),
+                StepArg::Host(&ft_lr_th),
+                StepArg::Host(&ft_tau),
+                StepArg::Host(&ft_lambda),
+                StepArg::Host(&ft_hard),
+                StepArg::Host(&ft_noise),
+                StepArg::Host(&ft_key),
+                StepArg::Host(&t_t),
+                StepArg::Device(&mask_bufs.pw),
+                StepArg::Device(&mask_bufs.px),
+            ];
+            // the artifact signature is fixed: feed a zero gradient
+            // during finetune (lr_th = 0 and lambda = 0 make it inert;
+            // not counted as a grad upload)
+            if let Some(e) = &ext {
+                args.push(StepArg::Host(&e.zero));
+            }
+            let m = search.step_device(self.eng, &mut state, &args)?;
             steps_run += 1;
             if cfg.host_resident {
                 state.force_host_roundtrip()?;
@@ -1279,6 +1453,14 @@ impl<'a> Runner<'a> {
             cfg,
         )?;
 
+        // external driver: the final assignment's discrete cost under
+        // the driving model (native unit) — what `cost_of` reports for
+        // its metric name
+        let ext_cost = match &ext {
+            Some(e) => e.model.cost(self.graph, &asg),
+            None => f64::NAN,
+        };
+
         Ok(RunResult {
             model: cfg.model.clone(),
             reg: cfg.reg.clone(),
@@ -1296,6 +1478,88 @@ impl<'a> Runner<'a> {
             steps_run,
             transfer: state.stats,
             alloc: state.alloc,
+            reg_driver: driver.kind(),
+            soft_evals,
+            grad_uploads,
+            ext_cost,
         })
+    }
+}
+
+/// Host-side state of the [`RegDriver::External`] path for one run.
+struct ExternalReg {
+    model: SharedModel,
+    /// Memoized w8a8 reference cost (the normalization constant every
+    /// uploaded gradient and recorded soft cost is scaled by, matching
+    /// the built-in artifacts' normalized regularizers).
+    max: f64,
+    /// Zero gradient in the extgrad input shape, built once and fed to
+    /// every finetune step.
+    zero: Tensor,
+}
+
+impl ExternalReg {
+    fn new(model: SharedModel, graph: &ModelGraph) -> Self {
+        let max = model.max_cost(graph);
+        let len: usize = graph.gamma_groups.iter().map(|&n| n * 4).sum::<usize>()
+            + graph.num_deltas * 3;
+        ExternalReg {
+            model,
+            max,
+            zero: Tensor::f32(vec![len], vec![0.0; len]),
+        }
+    }
+
+    /// One host-side regularizer evaluation: mirror theta from the
+    /// device (read-only partial sync), softmax it at the current
+    /// temperature, run the model's [`CostModel::soft_eval`], and
+    /// chain the softmax Jacobian row-by-row:
+    ///
+    /// ```text
+    /// dC/dtheta_j = (P_j / tau) * (g_j - sum_k g_k * P_k)
+    /// ```
+    ///
+    /// with `g` the soft-cost gradient normalized by the w8a8
+    /// reference. Layout matches the theta sections: gamma groups in
+    /// order (rows of 4 over PW_SET), then delta rows of 3 over
+    /// PX_SET. Masked-out precisions have zero probability and thus a
+    /// zero gradient entry. Returns the normalized soft cost and the
+    /// upload-ready tensor.
+    fn theta_grad(
+        &self,
+        graph: &ModelGraph,
+        state: &mut DeviceState,
+        leaves: &ResolvedLeaves,
+        masks: &PrecisionMasks,
+        tau: f32,
+    ) -> Result<(f32, Tensor)> {
+        let view = assignment::theta_view(state.host_view_partial(&["theta"])?, leaves)?;
+        let gprobs = assignment::gamma_probs(&view, graph, masks, tau);
+        let dprobs = assignment::delta_probs(&view, masks, tau);
+        let soft = SoftAssignment::from_probs(&gprobs, &dprobs);
+        let (cost, grad) = self.model.soft_eval(graph, &soft);
+        let inv = 1.0 / self.max;
+        let tau = tau as f64;
+        let mut out = Vec::with_capacity(self.zero.len());
+        let chain_row = |g_row: &[f64], p_row: &[f32], out: &mut Vec<f32>| {
+            let mean: f64 = g_row
+                .iter()
+                .zip(p_row.iter())
+                .map(|(&g, &p)| g * inv * p as f64)
+                .sum();
+            for (j, &g) in g_row.iter().enumerate() {
+                let p = p_row[j] as f64;
+                out.push((p / tau * (g * inv - mean)) as f32);
+            }
+        };
+        for (g, rows) in grad.gamma.iter().enumerate() {
+            for c in 0..rows.len() / 4 {
+                chain_row(&rows[c * 4..c * 4 + 4], &gprobs[g][c * 4..c * 4 + 4], &mut out);
+            }
+        }
+        for d in 0..grad.delta.len() / 3 {
+            chain_row(&grad.delta[d * 3..d * 3 + 3], &dprobs[d * 3..d * 3 + 3], &mut out);
+        }
+        Ok(((cost * inv) as f32, Tensor::f32(vec![out.len()], out)))
     }
 }

@@ -16,7 +16,7 @@
 use std::sync::Arc;
 
 use crate::coordinator::pareto::{ParetoFront, Point};
-use crate::coordinator::phases::{PipelineConfig, RunResult, Runner, WarmStart};
+use crate::coordinator::phases::{PipelineConfig, RegDriverKind, RunResult, Runner, WarmStart};
 use crate::cost::{score_atlas, Atlas, AtlasPoint, CostRegistry, Normalizer};
 use crate::error::Result;
 use crate::graph::ModelGraph;
@@ -184,12 +184,58 @@ impl SweepResult {
         a
     }
 
+    /// Regularizer driver the sweep's runs used: `Artifact` for the
+    /// builtin four (compiled `search_{reg}` program), `External` when
+    /// the cost gradient was computed host-side from a registry model.
+    /// `Artifact` for an empty sweep.
+    pub fn reg_driver(&self) -> RegDriverKind {
+        self.runs
+            .first()
+            .map(|r| r.reg_driver)
+            .unwrap_or(RegDriverKind::Artifact)
+    }
+
+    /// Host-side `soft_eval` calls across every run of the sweep
+    /// (0 under the artifact driver).
+    pub fn soft_evals(&self) -> u64 {
+        self.runs.iter().map(|r| r.soft_evals).sum()
+    }
+
+    /// External-gradient tensors uploaded as step inputs across every
+    /// run of the sweep (0 under the artifact driver).
+    pub fn grad_uploads(&self) -> u64 {
+        self.runs.iter().map(|r| r.grad_uploads).sum()
+    }
+
     /// Pareto front in (normalized cost, val accuracy) space: every
     /// run's assignment scored by the sweep metric divided by the
     /// w8a8 reference, which [`Normalizer`] computes once for the
-    /// whole sweep instead of once per point.
+    /// whole sweep instead of once per point. Resolves the metric
+    /// against the default zoo; use [`Self::front_normalized_in`]
+    /// when the sweep ran under a registry carrying plugged-in
+    /// descriptor models.
     pub fn front_normalized(&self, graph: &ModelGraph) -> Option<ParetoFront> {
         let norm = Normalizer::by_name(&self.metric, graph)?;
+        Some(ParetoFront::from_points(self.runs.iter().map(|r| {
+            Point::new(
+                norm.normalized(graph, &r.assignment),
+                r.val_acc,
+                format!("lam={}", r.lambda),
+            )
+        })))
+    }
+
+    /// [`Self::front_normalized`] resolving the sweep metric against
+    /// an explicit registry, so fronts of sweeps driven by
+    /// `--hw-descriptor` plugins normalize under the model that drove
+    /// the search. `None` when the registry doesn't know the metric.
+    pub fn front_normalized_in(
+        &self,
+        graph: &ModelGraph,
+        reg: &CostRegistry,
+    ) -> Option<ParetoFront> {
+        let model = reg.get(&self.metric)?;
+        let norm = Normalizer::new(model, graph);
         Some(ParetoFront::from_points(self.runs.iter().map(|r| {
             Point::new(
                 norm.normalized(graph, &r.assignment),
@@ -354,12 +400,13 @@ mod tests {
     #[test]
     fn front_normalized_uses_memoized_max() {
         use crate::assignment::Assignment;
-        use crate::coordinator::phases::{RunResult, Sampling, Timing};
+        use crate::coordinator::phases::{RegDriverKind, RunResult, Sampling, Timing};
         use crate::cost::testutil::tiny_graph;
         let g = tiny_graph();
         let mk = |lam: f32, bits: u32, acc: f64| RunResult {
             model: "tiny".into(),
             reg: "size".into(),
+            reg_driver: RegDriverKind::Artifact,
             lambda: lam,
             sampling: Sampling::Softmax,
             val_acc: acc,
@@ -369,9 +416,12 @@ mod tests {
             mpic_cycles: 0.0,
             ne16_cycles: 0.0,
             bitops: 0.0,
+            ext_cost: f64::NAN,
             history: Vec::new(),
             timing: Timing::default(),
             steps_run: 0,
+            soft_evals: 0,
+            grad_uploads: 0,
             transfer: Default::default(),
             alloc: Default::default(),
         };

@@ -2,7 +2,7 @@
 //! hardware-agnostic latency proxy used by EdMIPS [7] and by the
 //! paper's Fig. 9 activation-precision study.
 
-use super::CostModel;
+use super::{CostModel, SoftAssignment, SoftGrad};
 use crate::assignment::Assignment;
 use crate::graph::{LayerKind, ModelGraph};
 
@@ -11,6 +11,12 @@ pub struct BitOps;
 impl CostModel for BitOps {
     fn name(&self) -> &str {
         "bitops"
+    }
+
+    /// Analytic multilinear surface (exact at one-hot vertices) —
+    /// see `cost::soft::bitops_eval`.
+    fn soft_eval(&self, graph: &ModelGraph, soft: &SoftAssignment) -> (f64, SoftGrad) {
+        super::soft::bitops_eval(graph, soft)
     }
 
     fn cost(&self, graph: &ModelGraph, asg: &Assignment) -> f64 {

@@ -208,6 +208,31 @@ impl CostModel for LutModel {
         &self.name
     }
 
+    /// Data-driven model: fold every descriptor field into the
+    /// identity hash, so two LUTs sharing a name never share cached
+    /// search state (soft gradients use the default interpolated
+    /// fallback, which probes this table).
+    fn fingerprint(&self) -> u64 {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"lut:");
+        bytes.extend_from_slice(self.name.as_bytes());
+        bytes.extend_from_slice(&self.freq_hz.to_bits().to_le_bytes());
+        bytes.extend_from_slice(&self.overhead_cycles.to_bits().to_le_bytes());
+        bytes.extend_from_slice(&self.default_macs_per_cycle.to_bits().to_le_bytes());
+        for e in &self.entries {
+            bytes.push(match e.kind {
+                LayerKind::Conv => 0,
+                LayerKind::Depthwise => 1,
+                LayerKind::Linear => 2,
+            });
+            bytes.extend_from_slice(&(e.k.map(|k| k as u64 + 1).unwrap_or(0)).to_le_bytes());
+            bytes.extend_from_slice(&e.px.to_le_bytes());
+            bytes.extend_from_slice(&e.pw.to_le_bytes());
+            bytes.extend_from_slice(&e.macs_per_cycle.to_bits().to_le_bytes());
+        }
+        super::soft::fnv1a64(&bytes)
+    }
+
     /// Execution cycles: per layer, MACs at each (px, pw) bucket over
     /// that bucket's throughput, with pruning credited exactly as in
     /// the built-in models (`C_in,eff` shrinks the MACs; a fully

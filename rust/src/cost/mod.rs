@@ -22,6 +22,7 @@ pub mod ne16;
 pub mod registry;
 pub mod roofline;
 pub mod size;
+pub mod soft;
 
 use std::sync::Arc;
 
@@ -46,6 +47,37 @@ pub trait CostModel {
     fn normalized(&self, graph: &ModelGraph, asg: &Assignment) -> f64 {
         self.cost(graph, asg) / self.max_cost(graph)
     }
+    /// Differentiable surface over a relaxed assignment: the soft cost
+    /// and its gradient with respect to every probability entry.
+    ///
+    /// The default is the piecewise-linear interpolated fallback
+    /// ([`soft::interpolated_eval`]): harden to the argmax assignment
+    /// and probe every single-coordinate flip through the discrete
+    /// `cost` — exact at one-hot vertices, one discrete evaluation per
+    /// (channel, precision) pair. The builtin four override this with
+    /// analytic gradients. Contract (validated against central finite
+    /// differences in `rust/tests/soft_grad.rs`): the returned
+    /// gradient must be the exact derivative of the returned scalar,
+    /// and lowering any precision / pruning mass must never raise the
+    /// soft cost.
+    fn soft_eval(&self, graph: &ModelGraph, soft: &SoftAssignment) -> (f64, SoftGrad) {
+        soft::interpolated_eval(self, graph, soft)
+    }
+    /// The scalar half of [`Self::soft_eval`].
+    fn soft_cost(&self, graph: &ModelGraph, soft: &SoftAssignment) -> f64 {
+        self.soft_eval(graph, soft).0
+    }
+    /// The gradient half of [`Self::soft_eval`].
+    fn soft_grad(&self, graph: &ModelGraph, soft: &SoftAssignment) -> SoftGrad {
+        self.soft_eval(graph, soft).1
+    }
+    /// Stable identity hash for warmup/fleet fingerprints. The default
+    /// hashes the name only — models whose behaviour is data-driven
+    /// (descriptor families) must fold their parameters in, so two
+    /// descriptors sharing a name never share cached search state.
+    fn fingerprint(&self) -> u64 {
+        soft::fnv1a64(self.name().as_bytes())
+    }
 }
 
 /// Shared handle to a registered cost model.
@@ -59,6 +91,7 @@ pub use ne16::Ne16;
 pub use registry::CostRegistry;
 pub use roofline::Roofline;
 pub use size::Size;
+pub use soft::{SoftAssignment, SoftGrad};
 
 /// Look up one of the four paper models by regularizer name (the
 /// pre-registry closed set; sweep metrics still come through here).
@@ -90,8 +123,13 @@ impl Normalizer {
         Normalizer { model, max }
     }
 
+    /// Resolve a metric name against the full zoo (not just the
+    /// builtin four) and build its normalizer. `None` only for names
+    /// no registered model carries — descriptor-registered models need
+    /// [`CostRegistry::normalizers`] or `Self::new` since they live in
+    /// a caller-owned registry.
     pub fn by_name(name: &str, graph: &ModelGraph) -> Option<Self> {
-        by_name(name).map(|m| Self::new(m, graph))
+        resolve(name).ok().map(|m| Self::new(m, graph))
     }
 
     pub fn name(&self) -> &str {

@@ -9,7 +9,7 @@
 //! Fig. 8 analysis depends on (weak pw differentiation at px=8 makes
 //! MPIC favour pruning over 2/4-bit channels).
 
-use super::CostModel;
+use super::{CostModel, SoftAssignment, SoftGrad};
 use crate::assignment::Assignment;
 use crate::graph::{LayerKind, ModelGraph};
 
@@ -42,6 +42,12 @@ pub struct Mpic;
 impl CostModel for Mpic {
     fn name(&self) -> &str {
         "mpic"
+    }
+
+    /// Analytic multilinear surface (exact at one-hot vertices) —
+    /// see `cost::soft::mpic_eval`.
+    fn soft_eval(&self, graph: &ModelGraph, soft: &SoftAssignment) -> (f64, SoftGrad) {
+        super::soft::mpic_eval(graph, soft)
     }
 
     /// Execution cycles (paper Eq. 10): per layer, MACs executed at

@@ -9,7 +9,7 @@
 //!    non-linearity drives the paper's Fig. 6/8 conclusions);
 //! 3. L1 store: output bytes / 8 bytes-per-cycle.
 
-use super::CostModel;
+use super::{CostModel, SoftAssignment, SoftGrad};
 use crate::assignment::Assignment;
 use crate::graph::{LayerKind, ModelGraph};
 
@@ -57,6 +57,13 @@ pub fn layer_cycles(
 impl CostModel for Ne16 {
     fn name(&self) -> &str {
         "ne16"
+    }
+
+    /// Relaxed surface: the `div_ceil` tiling steps become linear
+    /// ramps so the gradient is nonzero — NOT vertex-consistent, see
+    /// `cost::soft::ne16_eval`.
+    fn soft_eval(&self, graph: &ModelGraph, soft: &SoftAssignment) -> (f64, SoftGrad) {
+        super::soft::ne16_eval(graph, soft)
     }
 
     fn cost(&self, graph: &ModelGraph, asg: &Assignment) -> f64 {

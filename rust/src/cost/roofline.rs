@@ -84,6 +84,18 @@ impl CostModel for Roofline {
         &self.name
     }
 
+    /// Data-driven model: fold both roofline parameters into the
+    /// identity hash, so two descriptors sharing a name never share
+    /// cached search state.
+    fn fingerprint(&self) -> u64 {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"roofline:");
+        bytes.extend_from_slice(self.name.as_bytes());
+        bytes.extend_from_slice(&self.peak_macs_per_s.to_bits().to_le_bytes());
+        bytes.extend_from_slice(&self.dram_bytes_per_s.to_bits().to_le_bytes());
+        super::soft::fnv1a64(&bytes)
+    }
+
     /// End-to-end seconds: sum over layers of
     /// `max(compute_s, memory_s)` — each layer sits on its side of the
     /// roofline's compute/memory-bound crossover.

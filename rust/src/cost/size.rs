@@ -1,7 +1,7 @@
 //! Model-size cost (paper Eq. 9, exact integer form): parameter bits
 //! with pruning credited to downstream layers via `C_in,eff`.
 
-use super::CostModel;
+use super::{CostModel, SoftAssignment, SoftGrad};
 use crate::assignment::Assignment;
 use crate::graph::{LayerKind, ModelGraph};
 
@@ -10,6 +10,12 @@ pub struct Size;
 impl CostModel for Size {
     fn name(&self) -> &str {
         "size"
+    }
+
+    /// Analytic multilinear surface (exact at one-hot vertices) —
+    /// see `cost::soft::size_eval`.
+    fn soft_eval(&self, graph: &ModelGraph, soft: &SoftAssignment) -> (f64, SoftGrad) {
+        super::soft::size_eval(graph, soft)
     }
 
     fn cost(&self, graph: &ModelGraph, asg: &Assignment) -> f64 {

@@ -10,6 +10,8 @@
 //!   fixture  — write the offline stub fixture (CI / smoke testing)
 //!   info     — manifest/artifact inventory
 
+use std::sync::Arc;
+
 use mixprec::assignment::PrecisionMasks;
 use mixprec::baselines::Method;
 use mixprec::coordinator::{
@@ -27,7 +29,14 @@ fn usage() -> ! {
         "usage: mixprec <search|sweep|compare|worker|deploy|qdemo|fixture|info> [options]
   common options:
     --model resnet8|dscnn|resnet10   (default resnet8)
-    --reg size|mpic|ne16|bitops      (default size)
+    --reg <cost-model>    search regularizer: any registered cost
+                          model (default size). The builtin four
+                          (size|bitops|mpic|ne16) run on device via
+                          their dedicated artifacts; every other zoo
+                          or --hw-descriptor model drives the search
+                          through host-side soft-cost gradients
+                          (e.g. --reg edge-dsp). Typos die at parse
+                          time with the registered-name list.
     --sampling softmax|argmax|gumbel (default softmax)
     --lambda <f>          regularization strength (default 0.5)
     --lambdas a,b,c       sweep strengths (default log grid)
@@ -131,13 +140,16 @@ fn wants_atlas(a: &Args) -> bool {
 }
 
 /// The cost-model zoo plus any `--hw-descriptor` JSON files — the
-/// registry atlas scoring resolves targets against.
-fn build_cost_registry(a: &Args) -> mixprec::Result<CostRegistry> {
+/// registry `--reg` and atlas scoring resolve against. Validates
+/// `cfg.reg` immediately, so a `--reg` typo dies at parse time with
+/// the registered-name list instead of deep inside the first warmup.
+fn build_cost_registry(a: &Args, cfg: &PipelineConfig) -> mixprec::Result<Arc<CostRegistry>> {
     let mut reg = CostRegistry::zoo();
     for path in a.str_list("hw-descriptor", &[]) {
         reg.register_descriptor_file(std::path::Path::new(&path))?;
     }
-    Ok(reg)
+    reg.resolve(&cfg.reg)?;
+    Ok(Arc::new(reg))
 }
 
 fn build_sweep_opts(a: &Args) -> mixprec::Result<SweepOptions> {
@@ -251,20 +263,26 @@ fn run(cmd: &str, a: &Args) -> mixprec::Result<()> {
         }
         "search" => {
             let cfg = build_cfg(a);
+            let models = build_cost_registry(a, &cfg)?;
             let ctx = Context::load_default(cfg.data_frac)?;
-            let runner = build_runner(&ctx, a, &cfg.model)?;
+            let runner = build_runner(&ctx, a, &cfg.model)?.with_cost_models(models);
             let r = runner.run(&cfg)?;
             let rr = [(Method::Joint.label(), &r)];
             println!("{}", report::runs_table("search result", &rr).to_markdown());
+            println!(
+                "{}",
+                report::reg_driver_line(r.reg_driver, &cfg.reg, r.grad_uploads, r.soft_evals)
+            );
             println!("{}", report::alloc_line(&r.alloc));
             println!("{}", report::history_table(&r).to_markdown());
         }
         "sweep" => {
             let cfg = build_cfg(a);
+            let models = build_cost_registry(a, &cfg)?;
             let lambdas = a.f64_list("lambdas", &default_lambdas(a.usize_or("points", 5)));
             let opts = build_sweep_opts(a)?;
             let ctx = Context::load_default(cfg.data_frac)?;
-            let runner = build_runner(&ctx, a, &cfg.model)?;
+            let runner = build_runner(&ctx, a, &cfg.model)?.with_cost_models(models.clone());
             let sw = match fleet_options(a) {
                 Some(fleet) => {
                     let (sw, fs) = sweep_lambdas_fleet(
@@ -293,6 +311,15 @@ fn run(cmd: &str, a: &Args) -> mixprec::Result<()> {
             if sw.warmups_persisted > 0 {
                 println!("warm start persisted to cache dir");
             }
+            println!(
+                "{}",
+                report::reg_driver_line(
+                    sw.reg_driver(),
+                    &cfg.reg,
+                    sw.grad_uploads(),
+                    sw.soft_evals(),
+                )
+            );
             println!("{}", report::alloc_line(&sw.alloc()));
             let rows: Vec<(String, &_)> = sw
                 .runs
@@ -306,8 +333,10 @@ fn run(cmd: &str, a: &Args) -> mixprec::Result<()> {
                 report::front_table("pareto front (val acc)", &front, &cfg.reg).to_markdown()
             );
             // normalized view: every point scored against the memoized
-            // w8a8 reference (cost::Normalizer, computed once)
-            if let Some(nf) = sw.front_normalized(ctx.graph(&cfg.model)) {
+            // w8a8 reference (cost::Normalizer, computed once) — the
+            // process registry resolves the metric, so descriptor-
+            // plugged `--reg` names normalize under their own model
+            if let Some(nf) = sw.front_normalized_in(ctx.graph(&cfg.model), &models) {
                 println!(
                     "{}",
                     report::front_table(
@@ -319,9 +348,8 @@ fn run(cmd: &str, a: &Args) -> mixprec::Result<()> {
                 );
             }
             if wants_atlas(a) {
-                let reg = build_cost_registry(a)?;
                 let atlas =
-                    sw.atlas(ctx.graph(&cfg.model), &reg, &a.str_list("cost-models", &[]))?;
+                    sw.atlas(ctx.graph(&cfg.model), &models, &a.str_list("cost-models", &[]))?;
                 for t in report::atlas_tables(&atlas) {
                     println!("{}", t.to_markdown());
                 }
@@ -330,10 +358,11 @@ fn run(cmd: &str, a: &Args) -> mixprec::Result<()> {
         }
         "compare" => {
             let cfg = build_cfg(a);
+            let models = build_cost_registry(a, &cfg)?;
             let lambdas = a.f64_list("lambdas", &default_lambdas(a.usize_or("points", 3)));
             let opts = build_sweep_opts(a)?;
             let ctx = Context::load_default(cfg.data_frac)?;
-            let runner = build_runner(&ctx, a, &cfg.model)?;
+            let runner = build_runner(&ctx, a, &cfg.model)?.with_cost_models(models.clone());
             let cr = match fleet_options(a) {
                 Some(fleet) => {
                     let (cr, fs) = compare_methods_fleet(
@@ -367,13 +396,21 @@ fn run(cmd: &str, a: &Args) -> mixprec::Result<()> {
                 rows.push((format!("w{b}a8"), r));
             }
             println!("{}", report::runs_table("method comparison", &rows).to_markdown());
+            println!(
+                "{}",
+                report::reg_driver_line(
+                    cr.reg_driver(),
+                    &cfg.reg,
+                    cr.grad_uploads(),
+                    cr.soft_evals(),
+                )
+            );
             if wants_atlas(a) {
                 // pure post-pass over the finished comparison: the
                 // cache_line below reports the same counters an
                 // atlas-free run would
-                let reg = build_cost_registry(a)?;
                 let atlas =
-                    cr.atlas(ctx.graph(&cfg.model), &reg, &a.str_list("cost-models", &[]))?;
+                    cr.atlas(ctx.graph(&cfg.model), &models, &a.str_list("cost-models", &[]))?;
                 for t in report::atlas_tables(&atlas) {
                     println!("{}", t.to_markdown());
                 }
@@ -398,15 +435,17 @@ fn run(cmd: &str, a: &Args) -> mixprec::Result<()> {
                     "worker needs --fleet-dir (or MIXPREC_FLEET_DIR)".into(),
                 ));
             };
+            let models = build_cost_registry(a, &cfg)?;
             let ctx = Context::load_default(cfg.data_frac)?;
-            let runner = build_runner(&ctx, a, &cfg.model)?;
+            let runner = build_runner(&ctx, a, &cfg.model)?.with_cost_models(models);
             let fs = run_worker(&runner, &cfg, &lambdas, &cfg.reg.clone(), compare, &fleet)?;
             println!("{}", report::fleet_line(&fs));
         }
         "deploy" => {
             let cfg = build_cfg(a);
+            let models = build_cost_registry(a, &cfg)?;
             let ctx = Context::load_default(cfg.data_frac)?;
-            let runner = build_runner(&ctx, a, &cfg.model)?;
+            let runner = build_runner(&ctx, a, &cfg.model)?.with_cost_models(models);
             let r = runner.run(&cfg)?;
             let g = ctx.graph(&cfg.model);
             let mut asg = r.assignment.clone();

@@ -7,7 +7,7 @@ use crate::baselines::CompareResult;
 use crate::coordinator::fleet::FleetStats;
 use crate::coordinator::pareto::ParetoFront;
 use crate::cost::Atlas;
-use crate::coordinator::phases::RunResult;
+use crate::coordinator::phases::{RegDriverKind, RunResult};
 use crate::runtime::AllocStats;
 use crate::util::table::{f2, f4, Table};
 
@@ -43,6 +43,24 @@ pub fn cache_line(cr: &CompareResult) -> String {
         cr.evict_skipped_pinned,
         cr.rebuilds_after_evict
     )
+}
+
+/// One-line regularizer-driver summary. The CI e2e leg greps the
+/// exact "reg driver: artifact(<reg>)" / "reg driver: external(<reg>)"
+/// prefix and the "grad_uploads N soft_evals N" counters out of this
+/// line, so keep the format stable.
+pub fn reg_driver_line(
+    kind: RegDriverKind,
+    reg: &str,
+    grad_uploads: u64,
+    soft_evals: u64,
+) -> String {
+    match kind {
+        RegDriverKind::Artifact => format!("reg driver: artifact({reg})"),
+        RegDriverKind::External => format!(
+            "reg driver: external({reg}) grad_uploads {grad_uploads} soft_evals {soft_evals}"
+        ),
+    }
 }
 
 /// One-line fleet summary for a distributed sweep/compare. The CI
@@ -193,6 +211,21 @@ mod tests {
         assert_eq!(acc, 0.6);
         assert!((gain - 0.1).abs() < 1e-12);
         assert!(iso_accuracy_reduction(&f, 0.9, 40.0).is_none());
+    }
+
+    /// The e2e CI leg greps "reg driver: artifact(...)" /
+    /// "reg driver: external(...)" and the counters out of these
+    /// exact renderings.
+    #[test]
+    fn reg_driver_line_format() {
+        assert_eq!(
+            reg_driver_line(RegDriverKind::Artifact, "size", 0, 0),
+            "reg driver: artifact(size)"
+        );
+        assert_eq!(
+            reg_driver_line(RegDriverKind::External, "edge-dsp", 40, 40),
+            "reg driver: external(edge-dsp) grad_uploads 40 soft_evals 40"
+        );
     }
 
     /// The chaos CI leg greps "expired N", "retries N" and

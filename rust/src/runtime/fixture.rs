@@ -27,9 +27,13 @@ pub const STUB_MODEL: &str = "stubnet";
 /// binds. The `params`/`opt_w` ballast leaves are 64x64 so per-step
 /// marshalling is measurable; the `stem`/`head` leaves line up with
 /// `graph_stubnet.json` so `ResolvedLeaves`, Eq. 12 rescaling and
-/// discretization all resolve. `search` (legacy 6-input signature) and
-/// `search_size` (the pipeline's 12-input signature) share one stub
-/// program.
+/// discretization all resolve. `search` (legacy 6-input signature),
+/// `search_size` (the pipeline's 12-input signature) and
+/// `search_extgrad` (the external-regularizer signature: the same 12
+/// plus a host-computed per-entry theta-gradient tensor, 83 = 16*4 +
+/// 4*4 + 1*3 entries matching the `theta` section) share one stub
+/// program — the stub's affine update ignores non-state inputs, which
+/// is exactly what makes external-driver fixture runs deterministic.
 const MANIFEST_JSON: &str = r#"{
   "pw_set": [0, 2, 4, 8],
   "px_set": [2, 4, 8],
@@ -117,6 +121,27 @@ const MANIFEST_JSON: &str = r#"{
             {"name": "t", "shape": [], "dtype": "f32"},
             {"name": "pw_mask", "shape": [4], "dtype": "f32"},
             {"name": "px_mask", "shape": [3], "dtype": "f32"}
+          ],
+          "outputs": ["params", "opt_w", "theta", "opt_th"],
+          "metrics": ["loss", "acc", "cost"]
+        },
+        "search_extgrad": {
+          "file": "stub_search.hlo.txt",
+          "state_sections": ["params", "opt_w", "theta", "opt_th"],
+          "extra_inputs": [
+            {"name": "x", "shape": [8, 4, 4, 1], "dtype": "f32"},
+            {"name": "y", "shape": [8], "dtype": "i32"},
+            {"name": "lr_w", "shape": [], "dtype": "f32"},
+            {"name": "lr_th", "shape": [], "dtype": "f32"},
+            {"name": "tau", "shape": [], "dtype": "f32"},
+            {"name": "lambda", "shape": [], "dtype": "f32"},
+            {"name": "hard", "shape": [], "dtype": "f32"},
+            {"name": "noise", "shape": [], "dtype": "f32"},
+            {"name": "key", "shape": [], "dtype": "i32"},
+            {"name": "t", "shape": [], "dtype": "f32"},
+            {"name": "pw_mask", "shape": [4], "dtype": "f32"},
+            {"name": "px_mask", "shape": [3], "dtype": "f32"},
+            {"name": "extgrad", "shape": [83], "dtype": "f32"}
           ],
           "outputs": ["params", "opt_w", "theta", "opt_th"],
           "metrics": ["loss", "acc", "cost"]

@@ -1,0 +1,312 @@
+//! Finite-difference validation of the differentiable cost surface
+//! (the `CostModel::soft_eval` contract every regularizer driver
+//! relies on), via the hand-rolled `util::prop` harness:
+//!
+//! * every registry model's `soft_grad` matches a central finite
+//!   difference of its `soft_cost` at random interior points — the
+//!   analytic surfaces are per-coordinate polynomials of degree <= 2,
+//!   and the interpolated fallback is affine between argmax flips, so
+//!   the central difference is exact wherever the hardened argmax is
+//!   stable (near-tie rows are skipped);
+//! * zoo-wide sign/ordering invariants: within every gamma row the
+//!   gradient is smallest at the pruned column and nondecreasing along
+//!   the precision set, and every delta row is nondecreasing along the
+//!   activation set — "lowering precision or pruning never raises the
+//!   soft cost", the monotonicity the lambda sweep's cost axis needs;
+//! * the analytic builtin four additionally keep every gradient entry
+//!   nonnegative (their adjoints only accumulate nonnegative terms);
+//! * `size`/`bitops`/`mpic` and the fallback models agree with the
+//!   discrete `cost` at one-hot vertices (`ne16` deliberately does
+//!   not: its `div_ceil` tiling is relaxed to linear ramps).
+
+use mixprec::assignment::Assignment;
+use mixprec::cost::{CostModel, CostRegistry, Roofline, SoftAssignment};
+use mixprec::graph::ModelGraph;
+use mixprec::util::json::Json;
+use mixprec::util::prop::Prop;
+use mixprec::util::rng::Pcg64;
+
+fn tiny_graph() -> ModelGraph {
+    let text = r#"{
+      "model": "tiny", "in_shape": [8,8,3], "num_classes": 4, "batch": 2,
+      "layers": [
+        {"name":"c0","kind":"conv","cin":3,"cout":8,"k":3,"stride":1,
+         "out_h":8,"out_w":8,"gamma_group":0,"in_group":-1,
+         "delta_idx":0,"in_delta":-1,"prunable":true,"macs":13824},
+        {"name":"dw0","kind":"dw","cin":8,"cout":8,"k":3,"stride":1,
+         "out_h":8,"out_w":8,"gamma_group":0,"in_group":0,
+         "delta_idx":1,"in_delta":0,"prunable":true,"macs":4608},
+        {"name":"fc","kind":"linear","cin":8,"cout":4,"k":1,"stride":1,
+         "out_h":1,"out_w":1,"gamma_group":1,"in_group":0,
+         "delta_idx":-1,"in_delta":1,"prunable":false,"macs":32}
+      ],
+      "gamma_groups": [8, 4], "num_deltas": 2,
+      "pw_set": [0,2,4,8], "px_set": [2,4,8]
+    }"#;
+    ModelGraph::from_json(&Json::parse(text).unwrap()).unwrap()
+}
+
+/// The full surface under test: the committed zoo plus one
+/// descriptor-registered roofline, so plugged-in models go through the
+/// same contract as the builtins.
+fn registry() -> CostRegistry {
+    let mut reg = CostRegistry::zoo();
+    let desc = Json::parse(
+        r#"{"type":"roofline","name":"plug-soc",
+            "peak_macs_per_s":1.0e9,"dram_bytes_per_s":1.0e8}"#,
+    )
+    .unwrap();
+    reg.register_descriptor(&desc).unwrap();
+    reg
+}
+
+fn softmax(logits: &[f64]) -> Vec<f64> {
+    let m = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let e: Vec<f64> = logits.iter().map(|&x| (x - m).exp()).collect();
+    let s: f64 = e.iter().sum();
+    e.iter().map(|&x| x / s).collect()
+}
+
+/// Random interior point: independent softmax rows (4-wide per
+/// channel, 3-wide per delta) from logits in [-2, 2].
+fn random_soft(rng: &mut Pcg64, graph: &ModelGraph) -> SoftAssignment {
+    let logit = |rng: &mut Pcg64| rng.below(4001) as f64 / 1000.0 - 2.0;
+    let gamma = graph
+        .gamma_groups
+        .iter()
+        .map(|&n| {
+            let mut rows = Vec::with_capacity(n * 4);
+            for _ in 0..n {
+                let l = [logit(rng), logit(rng), logit(rng), logit(rng)];
+                rows.extend(softmax(&l));
+            }
+            rows
+        })
+        .collect();
+    let mut delta = Vec::with_capacity(graph.num_deltas * 3);
+    for _ in 0..graph.num_deltas {
+        let l = [logit(rng), logit(rng), logit(rng)];
+        delta.extend(softmax(&l));
+    }
+    SoftAssignment { gamma, delta }
+}
+
+/// Top-2 margin of one probability row: perturbing a coordinate of a
+/// near-tie row can flip the interpolated fallback's hardened argmax,
+/// making the surface only piecewise — those rows are skipped.
+fn row_margin(row: &[f64]) -> f64 {
+    let mut a = f64::NEG_INFINITY;
+    let mut b = f64::NEG_INFINITY;
+    for &p in row {
+        if p > a {
+            b = a;
+            a = p;
+        } else if p > b {
+            b = p;
+        }
+    }
+    a - b
+}
+
+const FD_H: f64 = 1e-5;
+const MARGIN: f64 = 1e-3;
+
+/// Central finite difference of `soft_cost` along one flat coordinate
+/// (`gamma_group = Some(g)` or the delta block).
+fn central_fd(
+    model: &dyn CostModel,
+    graph: &ModelGraph,
+    soft: &SoftAssignment,
+    gamma_group: Option<usize>,
+    idx: usize,
+) -> f64 {
+    let mut lo = soft.clone();
+    let mut hi = soft.clone();
+    match gamma_group {
+        Some(g) => {
+            lo.gamma[g][idx] -= FD_H;
+            hi.gamma[g][idx] += FD_H;
+        }
+        None => {
+            lo.delta[idx] -= FD_H;
+            hi.delta[idx] += FD_H;
+        }
+    }
+    (model.soft_cost(graph, &hi) - model.soft_cost(graph, &lo)) / (2.0 * FD_H)
+}
+
+#[test]
+fn soft_grad_matches_central_differences() {
+    let g = tiny_graph();
+    let reg = registry();
+    Prop::new(24).check(
+        "soft_grad == central FD for every registered model",
+        |rng| random_soft(rng, &g),
+        |_| Vec::new(),
+        |soft| {
+            for m in reg.iter() {
+                let (cost, grad) = m.soft_eval(&g, soft);
+                if !cost.is_finite() {
+                    return Err(format!("{}: non-finite soft cost {cost}", m.name()));
+                }
+                let tol = 1e-9 * m.max_cost(&g).max(1.0);
+                for (gi, rows) in grad.gamma.iter().enumerate() {
+                    for (j, &an) in rows.iter().enumerate() {
+                        let row = &soft.gamma[gi][(j / 4) * 4..(j / 4) * 4 + 4];
+                        if row_margin(row) < MARGIN {
+                            continue;
+                        }
+                        let fd = central_fd(m.as_ref(), &g, soft, Some(gi), j);
+                        if (fd - an).abs() > tol {
+                            return Err(format!(
+                                "{}: gamma[{gi}][{j}] analytic {an} vs FD {fd} (tol {tol})",
+                                m.name()
+                            ));
+                        }
+                    }
+                }
+                for (j, &an) in grad.delta.iter().enumerate() {
+                    let row = &soft.delta[(j / 3) * 3..(j / 3) * 3 + 3];
+                    if row_margin(row) < MARGIN {
+                        continue;
+                    }
+                    let fd = central_fd(m.as_ref(), &g, soft, None, j);
+                    if (fd - an).abs() > tol {
+                        return Err(format!(
+                            "{}: delta[{j}] analytic {an} vs FD {fd} (tol {tol})",
+                            m.name()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn zoo_gradients_respect_cost_monotonicity() {
+    let g = tiny_graph();
+    let reg = registry();
+    let analytic = ["size", "bitops", "mpic", "ne16"];
+    Prop::new(32).check(
+        "gamma rows nondecreasing along PW, delta rows along PX, prune column minimal",
+        |rng| random_soft(rng, &g),
+        |_| Vec::new(),
+        |soft| {
+            for m in reg.iter() {
+                let grad = m.soft_grad(&g, soft);
+                let tol = 1e-9 * m.max_cost(&g).max(1.0);
+                for (gi, rows) in grad.gamma.iter().enumerate() {
+                    for c in 0..rows.len() / 4 {
+                        let r = &rows[c * 4..c * 4 + 4];
+                        // pruning a channel is never costlier than
+                        // keeping it at any precision...
+                        for (j, &v) in r.iter().enumerate().skip(1) {
+                            if r[0] > v + tol {
+                                return Err(format!(
+                                    "{}: gamma[{gi}] ch {c}: prune grad {} > col {j} grad {v}",
+                                    m.name(),
+                                    r[0]
+                                ));
+                            }
+                        }
+                        // ...and more weight bits never cost less
+                        for j in 1..3 {
+                            if r[j] > r[j + 1] + tol {
+                                return Err(format!(
+                                    "{}: gamma[{gi}] ch {c}: grad not monotone \
+                                     along PW: {:?}",
+                                    m.name(),
+                                    r
+                                ));
+                            }
+                        }
+                        if analytic.contains(&m.name()) && r.iter().any(|&v| v < -tol) {
+                            return Err(format!(
+                                "{}: negative analytic gamma grad {r:?}",
+                                m.name()
+                            ));
+                        }
+                    }
+                }
+                for d in 0..grad.delta.len() / 3 {
+                    let r = &grad.delta[d * 3..d * 3 + 3];
+                    for j in 0..2 {
+                        if r[j] > r[j + 1] + tol {
+                            return Err(format!(
+                                "{}: delta {d}: grad not monotone along PX: {r:?}",
+                                m.name()
+                            ));
+                        }
+                    }
+                    if analytic.contains(&m.name()) && r.iter().any(|&v| v < -tol) {
+                        return Err(format!(
+                            "{}: negative analytic delta grad {r:?}",
+                            m.name()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Vertex consistency across random *hard* assignments: at one-hot
+/// points the soft surface of every model except `ne16` reproduces the
+/// discrete cost exactly (the interpolated fallback by construction,
+/// the analytic `size`/`bitops`/`mpic` because their relaxations are
+/// multilinear).
+#[test]
+fn soft_cost_agrees_with_hard_cost_at_random_vertices() {
+    let g = tiny_graph();
+    let reg = registry();
+    Prop::new(48).check(
+        "soft == hard at one-hot vertices (zoo minus ne16)",
+        |rng| {
+            let gamma_bits = g
+                .gamma_groups
+                .iter()
+                .enumerate()
+                .map(|(gi, &n)| {
+                    let opts: &[u32] =
+                        if g.group_prunable(gi) { &[0, 2, 4, 8] } else { &[2, 4, 8] };
+                    (0..n).map(|_| opts[rng.below(opts.len() as u64) as usize]).collect()
+                })
+                .collect();
+            let delta_bits = (0..g.num_deltas)
+                .map(|_| [2u32, 4, 8][rng.below(3) as usize])
+                .collect();
+            Assignment { gamma_bits, delta_bits }
+        },
+        |_| Vec::new(),
+        |asg| {
+            let soft = SoftAssignment::from_hard(&g, asg);
+            for m in reg.iter().filter(|m| m.name() != "ne16") {
+                let hard = m.cost(&g, asg);
+                let s = m.soft_cost(&g, &soft);
+                let tol = 1e-9 * m.max_cost(&g).max(1.0);
+                if (s - hard).abs() > tol {
+                    return Err(format!(
+                        "{}: soft {s} != hard {hard} at a vertex",
+                        m.name()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The descriptor-registered model (default `soft_eval`) and a builtin
+/// with an analytic override expose the same fingerprint semantics:
+/// same content -> same hash, different content -> different hash.
+#[test]
+fn descriptor_fingerprints_track_content() {
+    let a = Roofline::new("soc", 1.0e9, 1.0e8);
+    let b = Roofline::new("soc", 1.0e9, 1.0e8);
+    let c = Roofline::new("soc", 2.0e9, 1.0e8);
+    assert_eq!(a.fingerprint(), b.fingerprint());
+    assert_ne!(a.fingerprint(), c.fingerprint());
+}

@@ -11,7 +11,9 @@ use std::path::PathBuf;
 use mixprec::assignment::Assignment;
 use mixprec::coordinator::checkpoint::{load_with_extras, save_with_extras_atomic};
 use mixprec::coordinator::fleet::{read_result_file, write_result_file, WorkUnit};
-use mixprec::coordinator::{PipelineConfig, Record, RunResult, Sampling, Timing};
+use mixprec::coordinator::{
+    PipelineConfig, Record, RegDriverKind, RunResult, Sampling, Timing,
+};
 use mixprec::runtime::{fixture, AllocStats, TrainState, TransferStats};
 use mixprec::util::tensor::Tensor;
 
@@ -82,7 +84,10 @@ fn every_checkpoint_prefix_fails_cleanly() {
 fn sample_run() -> RunResult {
     RunResult {
         model: fixture::STUB_MODEL.to_string(),
-        reg: "size".to_string(),
+        reg: "edge-dsp".to_string(),
+        // external driver with live counters: the roundtrip must carry
+        // the driver tag and both counters, not re-derive them
+        reg_driver: RegDriverKind::External,
         lambda: 0.5,
         sampling: Sampling::Gumbel,
         val_acc: 0.875,
@@ -95,6 +100,7 @@ fn sample_run() -> RunResult {
         mpic_cycles: 1.0e6,
         ne16_cycles: 2.0e5,
         bitops: 3.5e9,
+        ext_cost: 6.25e4,
         // a NaN cost rides in the warmup record on purpose: the
         // roundtrip must preserve it bitwise, not normalize it
         history: vec![
@@ -104,6 +110,8 @@ fn sample_run() -> RunResult {
         ],
         timing: Timing { warmup_s: 1.0, search_s: 2.0, finetune_s: 0.5 },
         steps_run: 30,
+        soft_evals: 30,
+        grad_uploads: 30,
         transfer: TransferStats { h2d_bytes: 1, d2h_bytes: 2, h2d_tensors: 3, d2h_tensors: 4 },
         alloc: AllocStats {
             donated: 5,
@@ -149,7 +157,11 @@ fn every_result_file_prefix_reads_as_none() {
     assert_eq!(back.mpic_cycles.to_bits(), run.mpic_cycles.to_bits());
     assert_eq!(back.ne16_cycles.to_bits(), run.ne16_cycles.to_bits());
     assert_eq!(back.bitops.to_bits(), run.bitops.to_bits());
+    assert_eq!(back.ext_cost.to_bits(), run.ext_cost.to_bits());
+    assert_eq!(back.reg_driver, run.reg_driver);
     assert_eq!(back.steps_run, run.steps_run);
+    assert_eq!(back.soft_evals, run.soft_evals);
+    assert_eq!(back.grad_uploads, run.grad_uploads);
     assert_eq!(back.history.len(), run.history.len());
     for (a, b) in back.history.iter().zip(&run.history) {
         assert_eq!((a.phase, a.step), (b.phase, b.step));

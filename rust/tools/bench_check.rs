@@ -419,6 +419,66 @@ const RULES: &[Rule] = &[
         tol: 0.0,
         env: None,
     },
+    // external regularizer driver (edge-dsp-driven search): the host
+    // side must evaluate the soft surface and upload a gradient every
+    // search step (counts are conservative lower bounds — the exact
+    // number tracks search_steps and early stopping), every soft eval
+    // pairs with exactly one upload, the builtin artifact drivers keep
+    // both counters at zero, the driving model's discrete cost is live
+    // on every external run, and the tailored search matches or beats
+    // the size-driven one under its own target
+    Rule {
+        bench: "sweep_fork",
+        path: &["extgrad", "grad_uploads"],
+        dir: Dir::HigherIsBetter,
+        tol: 0.0,
+        env: None,
+    },
+    Rule {
+        bench: "sweep_fork",
+        path: &["extgrad", "soft_evals"],
+        dir: Dir::HigherIsBetter,
+        tol: 0.0,
+        env: None,
+    },
+    Rule {
+        bench: "sweep_fork",
+        path: &["extgrad", "grads_match_evals"],
+        dir: Dir::Exact,
+        tol: 0.0,
+        env: None,
+    },
+    Rule {
+        bench: "sweep_fork",
+        path: &["extgrad", "artifact_counters_zero"],
+        dir: Dir::Exact,
+        tol: 0.0,
+        env: None,
+    },
+    Rule {
+        bench: "sweep_fork",
+        path: &["extgrad", "ext_cost_live"],
+        dir: Dir::Exact,
+        tol: 0.0,
+        env: None,
+    },
+    Rule {
+        bench: "sweep_fork",
+        path: &["extgrad", "front_matches_size_under_target"],
+        dir: Dir::Exact,
+        tol: 0.0,
+        env: None,
+    },
+    // opt-in wall-clock gate: per-step host grad + upload overhead of
+    // the external driver vs the artifact driver (quiet-runner CI leg,
+    // same opt-in as the step_marshal throughput gates)
+    Rule {
+        bench: "sweep_fork",
+        path: &["extgrad", "overhead_vs_artifact"],
+        dir: Dir::LowerIsBetter,
+        tol: 1.0,
+        env: Some("MIXPREC_GATE_THROUGHPUT"),
+    },
 ];
 
 const DEFAULT_BENCHES: [&str; 2] = ["step_marshal", "sweep_fork"];
